@@ -1,0 +1,69 @@
+//! Multi model group scenario (paper §6.4): two model groups — one
+//! lightweight (MediaPipe analogs), one heavy (YOLOv8 / Fast-SCNN /
+//! TCMonoDepth analogs) — competing for the same processors; inspect the
+//! Pareto trade-off between their makespans (the paper's Scenario 10).
+//!
+//! Run with: `cargo run --release --example multi_group`
+
+use puzzle::analyzer::{GaConfig, StaticAnalyzer};
+use puzzle::experiments::{saturation_of, score_at_alpha, solve_scenario_budgeted};
+use puzzle::perf::PerfModel;
+use puzzle::scenario::scenario10_analog;
+
+fn main() {
+    let pm = PerfModel::paper_calibrated();
+    let scenario = scenario10_analog();
+    println!("scenario {}:", scenario.name);
+    for (g, group) in scenario.groups.iter().enumerate() {
+        let names: Vec<&str> = group
+            .members
+            .iter()
+            .map(|&m| scenario.networks[m].name.as_str())
+            .collect();
+        println!(
+            "  group {}: {:?}, base period {:.2} ms",
+            g, names, scenario.base_period(g, &pm) * 1e3
+        );
+    }
+
+    // Run the Static Analyzer and show the makespan trade-off across the
+    // Pareto set (group 0 avg vs group 1 avg).
+    let analysis = StaticAnalyzer::new(&scenario, &pm, GaConfig::quick(210)).run();
+    println!(
+        "analyzer: {} generations, {} evaluations, {} pareto solutions",
+        analysis.generations_run, analysis.evaluations, analysis.pareto.len()
+    );
+    println!("{:>18} {:>18} {:>10}", "group0 avg (ms)", "group1 avg (ms)", "subgraphs");
+    let mut rows: Vec<(f64, f64, usize)> = analysis
+        .pareto
+        .iter()
+        .map(|s| {
+            let sg: usize = s.plans.iter().map(|p| p.tasks.len()).sum();
+            (s.objectives[0] * 1e3, s.objectives[2] * 1e3, sg)
+        })
+        .collect();
+    rows.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    for (g0, g1, sg) in rows {
+        println!("{:>18.2} {:>18.2} {:>10}", g0, g1, sg);
+    }
+
+    // Method comparison at lenient/tight periods (Fig 14/16 view).
+    let (pz, bm, npu) = solve_scenario_budgeted(&scenario, &pm, 20, 210);
+    println!("\nXRBench scores (median over solutions):");
+    println!("{:<8} {:>8} {:>14} {:>9}", "alpha", "puzzle", "best_mapping", "npu_only");
+    for alpha in [0.7, 0.9, 1.1, 1.4, 2.0, 3.0] {
+        let med = |sols: &Vec<Vec<puzzle::sim::ExecutionPlan>>| {
+            let mut s: Vec<f64> = sols
+                .iter()
+                .map(|p| score_at_alpha(p, &scenario, alpha, &pm, 20))
+                .collect();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            if s.is_empty() { 0.0 } else { s[s.len() / 2] }
+        };
+        println!("{:<8.1} {:>8.3} {:>14.3} {:>9.3}", alpha, med(&pz), med(&bm), med(&npu));
+    }
+    println!("\nsaturation multipliers (paper means: 0.95 / 2.24 / 3.45):");
+    println!("  puzzle       {:?}", saturation_of(&pz, &scenario, &pm, 20));
+    println!("  best mapping {:?}", saturation_of(&bm, &scenario, &pm, 20));
+    println!("  npu only     {:?}", saturation_of(&npu, &scenario, &pm, 20));
+}

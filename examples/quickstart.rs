@@ -1,0 +1,74 @@
+//! Quickstart: partition one model, inspect the plan, and serve a few
+//! requests through the runtime with the calibrated simulated device.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use std::sync::Arc;
+
+use puzzle::coordinator::{Coordinator, NetworkSolution, RuntimeOptions};
+use puzzle::engine::{Engine, SimEngine};
+use puzzle::ga::{decode_network, NetworkGenes};
+use puzzle::graph::LayerId;
+use puzzle::models::build_model;
+use puzzle::perf::PerfModel;
+use puzzle::Processor;
+
+fn main() {
+    let pm = PerfModel::paper_calibrated();
+
+    // 1. A model from the zoo: the YOLOv8-nano analog.
+    let net = build_model(0, 6);
+    println!("model {}: {} layers, {} edges, {:.1}M MACs", net.name, net.num_layers(), net.num_edges(), net.total_macs() as f64 / 1e6);
+
+    // 2. Profile it whole on each processor (Table 3 view).
+    let all: Vec<LayerId> = (0..net.num_layers()).map(LayerId).collect();
+    for p in Processor::ALL {
+        let (cfg, t) = pm.best_config_for(&net, &all, p);
+        println!("  whole on {p}: {:.2} ms under {cfg}", t * 1e3);
+    }
+
+    // 3. Partition it: cut after the CSP join (edge 7) and map the backbone
+    //    to the NPU, the heads to the GPU — the kind of solution the Static
+    //    Analyzer discovers automatically.
+    let mut genes = NetworkGenes::whole_on(&net, Processor::Npu);
+    genes.cuts[7] = true;
+    for l in 9..net.num_layers() {
+        genes.mapping[l] = Processor::Gpu;
+    }
+    let part = decode_network(&net, &genes);
+    println!("partitioned into {} subgraphs:", part.num_subgraphs());
+    for sg in &part.subgraphs {
+        let t = pm.subgraph_time(&net, &sg.layers, puzzle::ExecConfig::default_for(sg.processor));
+        println!(
+            "  {}: {} layers on {} ({:.2} ms), deps {:?}",
+            sg.id, sg.layers.len(), sg.processor, t * 1e3, sg.deps
+        );
+    }
+
+    // 4. Serve 10 requests through the real Coordinator/Worker stack.
+    let configs = part
+        .subgraphs
+        .iter()
+        .map(|sg| pm.best_config_for(&net, &sg.layers, sg.processor).0)
+        .collect();
+    let solution = NetworkSolution {
+        network: Arc::new(net),
+        partition: Arc::new(part),
+        configs,
+        priority: 0,
+    };
+    let time_scale = 0.1; // 1 simulated ms = 0.1 wall ms
+    let engine: Arc<dyn Engine> = Arc::new(SimEngine::new(Arc::new(pm), time_scale, true, 42));
+    let mut coord = Coordinator::new(vec![solution], engine, RuntimeOptions::default());
+    for _ in 0..10 {
+        coord.submit_group(0, &[0]);
+        coord.pump(std::time::Duration::from_secs(10));
+    }
+    let makespans: Vec<f64> = coord.served().iter().map(|s| s.makespan / time_scale).collect();
+    let (avg, sd) = puzzle::metrics::mean_sd(&makespans);
+    println!(
+        "served {} requests: simulated makespan {:.2} ± {:.2} ms",
+        makespans.len(), avg * 1e3, sd * 1e3
+    );
+    coord.shutdown();
+}

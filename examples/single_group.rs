@@ -1,0 +1,62 @@
+//! Single model group scenario (paper §6.3): run the Static Analyzer against
+//! the NPU-Only and Best-Mapping baselines on one randomly generated
+//! scenario, and report XRBench scores + saturation multipliers.
+//!
+//! Run with: `cargo run --release --example single_group [-- <scenario 1-10>]`
+
+use puzzle::baselines;
+use puzzle::experiments::{saturation_of, score_at_alpha, solve_scenario_budgeted};
+use puzzle::perf::PerfModel;
+use puzzle::scenario::single_group_scenarios;
+
+fn main() {
+    let which: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    let pm = PerfModel::paper_calibrated();
+    let scenarios = single_group_scenarios(23);
+    let scenario = &scenarios[(which - 1).min(9)];
+    println!("scenario {}: zoo models {:?}", scenario.name, scenario.zoo_indices);
+    println!("base period: {:.2} ms", scenario.base_period(0, &pm) * 1e3);
+
+    // Solve with all three methods.
+    let (puzzle_sols, bm_sols, npu_sols) = solve_scenario_budgeted(scenario, &pm, 24, 20 + which as u64);
+    println!(
+        "puzzle pareto: {} solutions, best mapping pareto: {}, npu-only: 1",
+        puzzle_sols.len(), bm_sols.len()
+    );
+
+    // Score each at a few period multipliers.
+    println!("{:<8} {:>8} {:>14} {:>9}", "alpha", "puzzle", "best_mapping", "npu_only");
+    for alpha in [0.6, 0.8, 1.0, 1.2, 1.6, 2.0] {
+        let med = |sols: &Vec<Vec<puzzle::sim::ExecutionPlan>>| {
+            let mut scores: Vec<f64> = sols
+                .iter()
+                .map(|p| score_at_alpha(p, scenario, alpha, &pm, 20))
+                .collect();
+            scores.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            if scores.is_empty() { 0.0 } else { scores[scores.len() / 2] }
+        };
+        println!(
+            "{:<8.1} {:>8.3} {:>14.3} {:>9.3}",
+            alpha, med(&puzzle_sols), med(&bm_sols), med(&npu_sols)
+        );
+    }
+
+    // Saturation multipliers (Fig 12's metric).
+    let a_puzzle = saturation_of(&puzzle_sols, scenario, &pm, 20);
+    let a_bm = saturation_of(&bm_sols, scenario, &pm, 20);
+    let a_npu = saturation_of(&npu_sols, scenario, &pm, 20);
+    println!("saturation multiplier α*:");
+    println!("  puzzle       {:?} (paper mean 0.78)", a_puzzle);
+    println!("  best mapping {:?} (paper mean 1.17)", a_bm);
+    println!("  npu only     {:?} (paper mean 1.56)", a_npu);
+
+    // Show what the baselines actually chose.
+    let npu = baselines::npu_only(scenario, &pm, 20);
+    println!(
+        "npu-only avg makespan objective: {:.2} ms",
+        npu.objectives[0] * 1e3
+    );
+}

@@ -1,0 +1,96 @@
+"""AOT lowering: jax → HLO **text** artifacts for the rust PJRT runtime.
+
+Emits, per zoo model:
+  * ``{name}.hlo.txt``           — whole-model lowering (fused; the Table 4
+                                   "measured" path and the quickstart demo);
+  * ``{name}.layer{NN}.hlo.txt`` — one artifact per layer (the units the
+                                   rust engine chains per subgraph);
+plus ``manifest.json`` describing every artifact's I/O shapes.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Python runs ONLY here (``make artifacts``); never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .graphs import model_zoo
+from .model import input_shape, layer_fn, whole_model_fn
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax-lowered computation to XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, arg_shapes) -> str:
+    specs = [jax.ShapeDtypeStruct(s, jax.numpy.float32) for s in arg_shapes]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def emit_model(g, out_dir: str, manifest: dict) -> None:
+    in_shape = input_shape(g)
+
+    # Whole model.
+    whole = lower_fn(whole_model_fn(g), [in_shape])
+    whole_path = os.path.join(out_dir, f"{g.name}.hlo.txt")
+    with open(whole_path, "w") as f:
+        f.write(whole)
+    manifest[g.name] = {
+        "input": list(in_shape),
+        "outputs": [[1, *g.layers[o].out_shape] for o in g.outputs()],
+        "layers": {},
+    }
+
+    # Per-layer artifacts.
+    for li in range(len(g.layers)):
+        fn, shapes = layer_fn(g, li)
+        hlo = lower_fn(fn, shapes)
+        path = os.path.join(out_dir, f"{g.name}.layer{li:02d}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(hlo)
+        manifest[g.name]["layers"][li] = {
+            "name": g.layers[li].name,
+            "kind": g.layers[li].kind,
+            "inputs": [list(s) for s in shapes],
+            "output": [1, *g.layers[li].out_shape],
+        }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--models", default="", help="comma-separated subset of model names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    wanted = {m for m in args.models.split(",") if m}
+    manifest: dict = {}
+    for g in model_zoo():
+        if wanted and g.name not in wanted:
+            continue
+        print(f"lowering {g.name} ({len(g.layers)} layers)...", flush=True)
+        emit_model(g, args.out, manifest)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    n_files = len(os.listdir(args.out))
+    print(f"wrote {n_files} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

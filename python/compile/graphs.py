@@ -1,0 +1,321 @@
+"""Model-zoo graph definitions — the python mirror of rust/src/models/zoo.rs.
+
+Layer indices and edge insertion order MUST match the rust side exactly:
+the rust runtime addresses per-layer artifacts as `{model}.layer{NN}.hlo.txt`
+where NN is the rust LayerId, and concat joins consume predecessors in edge
+insertion order.
+
+Layer spec fields:
+    kind   : conv | dwconv | pointwise | add | concat | upsample | pool | dense
+    size   : input spatial extent (square, NHWC with N=1)
+    in_c   : input channels (sum over inputs for concat)
+    out_c  : output channels
+    k, s   : kernel size / stride (conv kinds only)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    name: str
+    kind: str
+    size: int
+    in_c: int
+    out_c: int
+    k: int = 3
+    s: int = 1
+
+    @property
+    def out_size(self) -> int:
+        if self.kind in ("conv", "dwconv"):
+            return self.size // self.s
+        if self.kind == "pool":
+            return self.size // 2
+        if self.kind == "upsample":
+            return self.size * 2
+        if self.kind == "dense":
+            return 1
+        return self.size
+
+    @property
+    def out_shape(self) -> Tuple[int, int, int]:
+        return (self.out_size, self.out_size, self.out_c)
+
+
+@dataclass
+class GraphSpec:
+    name: str
+    layers: List[LayerSpec]
+    edges: List[Tuple[int, int]] = field(default_factory=list)
+
+    def predecessors(self, layer: int) -> List[int]:
+        """Predecessors in edge-insertion order (concat operand order)."""
+        return [src for (src, dst) in self.edges if dst == layer]
+
+    def successors(self, layer: int) -> List[int]:
+        return [dst for (src, dst) in self.edges if src == layer]
+
+    def inputs(self) -> List[int]:
+        return [i for i in range(len(self.layers)) if not self.predecessors(i)]
+
+    def outputs(self) -> List[int]:
+        return [i for i in range(len(self.layers)) if not self.successors(i)]
+
+    def topo_order(self) -> List[int]:
+        indeg = {i: len(self.predecessors(i)) for i in range(len(self.layers))}
+        ready = sorted(i for i, d in indeg.items() if d == 0)
+        order: List[int] = []
+        while ready:
+            ready.sort()
+            cur = ready.pop(0)
+            order.append(cur)
+            for nxt in self.successors(cur):
+                indeg[nxt] -= 1
+                if indeg[nxt] == 0:
+                    ready.append(nxt)
+        assert len(order) == len(self.layers), f"cycle in {self.name}"
+        return order
+
+
+def _conv(name, size, in_c, out_c, k=3, s=1):
+    return LayerSpec(name, "conv", size, in_c, out_c, k, s)
+
+
+def _dw(name, size, c, k=3, s=1):
+    return LayerSpec(name, "dwconv", size, c, c, k, s)
+
+
+def _pw(name, size, in_c, out_c):
+    return LayerSpec(name, "pointwise", size, in_c, out_c, 1, 1)
+
+
+def _add(name, size, c):
+    return LayerSpec(name, "add", size, c, c)
+
+
+def _cat(name, size, total_c):
+    return LayerSpec(name, "concat", size, total_c, total_c)
+
+
+def _up(name, size, c):
+    return LayerSpec(name, "upsample", size, c, c)
+
+
+def _pool(name, size, c):
+    return LayerSpec(name, "pool", size, c, c)
+
+
+def face_det() -> GraphSpec:
+    layers = [
+        _conv("stem", 32, 3, 8, s=2),
+        _dw("b1_dw", 16, 8),
+        _pw("b1_pw", 16, 8, 12),
+        _dw("b2_dw", 16, 12, s=2),
+        _pw("b2_pw", 8, 12, 16),
+        _conv("trunk", 8, 16, 16),
+        _conv("head_box", 8, 16, 8),
+        _conv("head_cls", 8, 16, 4),
+        _cat("out", 8, 12),
+    ]
+    edges = [(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 6), (5, 7), (6, 8), (7, 8)]
+    return GraphSpec("face_det", layers, edges)
+
+
+def selfie_seg() -> GraphSpec:
+    layers = [
+        _conv("stem", 32, 3, 8),
+        _conv("enc1", 32, 8, 12, s=2),
+        _conv("enc2", 16, 12, 16, s=2),
+        _conv("mid", 8, 16, 16),
+        _up("up1", 8, 16),
+        _pw("dec1", 16, 16, 12),
+        _add("skip", 16, 12),
+        _up("up2", 16, 12),
+        _pw("mask", 32, 12, 2),
+    ]
+    edges = [(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 6), (1, 6), (6, 7), (7, 8)]
+    return GraphSpec("selfie_seg", layers, edges)
+
+
+def hand_det() -> GraphSpec:
+    layers = [
+        _conv("stem", 32, 3, 16),
+        _conv("c1", 32, 16, 24, s=2),
+        _conv("c2", 16, 24, 24),
+        _add("res", 16, 24),
+        _conv("c3", 16, 24, 32, s=2),
+        _conv("c4", 8, 32, 32),
+        _conv("trunk", 8, 32, 32),
+        _conv("head_palm", 8, 32, 16),
+        _conv("head_lm", 8, 32, 16),
+        _cat("out", 8, 32),
+    ]
+    edges = [(0, 1), (1, 2), (2, 3), (1, 3), (3, 4), (4, 5), (5, 6), (6, 7), (6, 8), (7, 9), (8, 9)]
+    return GraphSpec("hand_det", layers, edges)
+
+
+def pose_det() -> GraphSpec:
+    layers = [
+        _conv("stem", 32, 3, 16),
+        _conv("c1", 32, 16, 24, s=2),
+        _conv("c2", 16, 24, 32),
+        _conv("c3", 16, 32, 32),
+        _add("res", 16, 32),
+        _conv("c4", 16, 32, 40, s=2),
+        _conv("c5", 8, 40, 40),
+        _conv("trunk", 8, 40, 40),
+        _conv("head_box", 8, 40, 16),
+        _conv("head_kp", 8, 40, 16),
+        _cat("out", 8, 32),
+    ]
+    edges = [
+        (0, 1), (1, 2), (2, 3), (3, 4), (2, 4), (4, 5), (5, 6), (6, 7),
+        (7, 8), (7, 9), (8, 10), (9, 10),
+    ]
+    return GraphSpec("pose_det", layers, edges)
+
+
+def tcmonodepth() -> GraphSpec:
+    layers = [
+        _conv("stem", 32, 3, 32),
+        _conv("enc1", 32, 32, 32, s=2),
+        _conv("enc2", 16, 32, 48),
+        _conv("enc3", 16, 48, 64, s=2),
+        _conv("mid1", 8, 64, 64),
+        _conv("mid2", 8, 64, 64),
+        _up("up1", 8, 64),
+        _conv("dec1", 16, 64, 32),
+        _add("skip1", 16, 32),
+        _up("up2", 16, 32),
+        _conv("dec2", 32, 32, 12),
+        _pw("depth", 32, 12, 1),
+    ]
+    edges = [
+        (0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 6), (6, 7), (7, 8),
+        (1, 8), (8, 9), (9, 10), (10, 11),
+    ]
+    return GraphSpec("tcmonodepth", layers, edges)
+
+
+def fast_scnn() -> GraphSpec:
+    layers = [
+        _conv("lds1", 32, 3, 32, s=2),
+        _dw("lds2_dw", 16, 32),
+        _pw("lds2_pw", 16, 32, 48),
+        _conv("gfe1", 16, 48, 96, s=2),
+        _conv("gfe2", 8, 96, 96),
+        _conv("gfe3", 8, 96, 96),
+        _up("gfe_up", 8, 96),
+        _pw("gfe_proj", 16, 96, 48),
+        _add("fuse", 16, 48),
+        _conv("fusion_conv", 16, 48, 64),
+        _up("up", 16, 64),
+        _pw("classifier", 32, 64, 4),
+    ]
+    edges = [
+        (0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 6), (6, 7), (7, 8),
+        (2, 8), (8, 9), (9, 10), (10, 11),
+    ]
+    return GraphSpec("fast_scnn", layers, edges)
+
+
+def yolov8n() -> GraphSpec:
+    layers = [
+        _conv("stem", 32, 3, 32),
+        _conv("c1", 32, 32, 64, s=2),
+        _pw("csp_a", 16, 64, 32),
+        _pw("csp_b", 16, 64, 32),
+        _conv("bneck1", 16, 32, 32),
+        _conv("bneck2", 16, 32, 32),
+        _cat("csp_join", 16, 64),
+        _conv("c2", 16, 64, 96, s=2),
+        _conv("c3", 8, 96, 96),
+        _conv("neck", 8, 96, 96),
+        _conv("head_p3", 16, 64, 16),
+        _conv("head_p4", 8, 96, 32),
+        _conv("head_p5", 8, 96, 32),
+        _cat("out_p45", 8, 64),
+    ]
+    edges = [
+        (0, 1), (1, 2), (1, 3), (2, 4), (4, 5), (5, 6), (3, 6), (6, 7),
+        (7, 8), (8, 9), (6, 10), (9, 11), (9, 12), (11, 13), (12, 13),
+    ]
+    return GraphSpec("yolov8n", layers, edges)
+
+
+def mosaic() -> GraphSpec:
+    layers = [
+        _conv("stem", 32, 3, 48),
+        _conv("enc1", 32, 48, 96, s=2),
+        _conv("enc2", 16, 96, 96),
+        _conv("enc3", 16, 96, 96),
+        _add("res1", 16, 96),
+        _conv("enc4", 16, 96, 128, s=2),
+        _conv("enc5", 8, 128, 128),
+        _conv("enc6", 8, 128, 128),
+        _add("res2", 8, 128),
+        _up("up1", 8, 128),
+        _pw("proj1", 16, 128, 96),
+        _add("agg", 16, 96),
+        _conv("dec1", 16, 96, 64),
+        _up("up2", 16, 64),
+        _conv("dec2", 32, 64, 32),
+        _pw("seg", 32, 32, 8),
+    ]
+    edges = [
+        (0, 1), (1, 2), (2, 3), (3, 4), (2, 4), (4, 5), (5, 6), (6, 7),
+        (7, 8), (6, 8), (8, 9), (9, 10), (10, 11), (4, 11), (11, 12),
+        (12, 13), (13, 14), (14, 15),
+    ]
+    return GraphSpec("mosaic", layers, edges)
+
+
+def fastsam() -> GraphSpec:
+    layers = [
+        _conv("stem", 32, 3, 48),
+        _conv("c1", 32, 48, 96, s=2),
+        _pw("csp_a", 16, 96, 64),
+        _pw("csp_b", 16, 96, 64),
+        _conv("bneck1", 16, 64, 64),
+        _conv("bneck2", 16, 64, 64),
+        _conv("bneck3", 16, 64, 64),
+        _cat("csp_join", 16, 128),
+        _conv("c2", 16, 128, 160, s=2),
+        _conv("c3", 8, 160, 160),
+        _conv("neck", 8, 160, 160),
+        _conv("head_det", 8, 160, 64),
+        _up("mask_up", 8, 160),
+        _conv("mask1", 16, 160, 64),
+        _conv("mask2", 16, 64, 32),
+        _cat("out", 8, 96),
+        _pool("mask_pool", 16, 32),
+    ]
+    edges = [
+        (0, 1), (1, 2), (1, 3), (2, 4), (4, 5), (5, 6), (6, 7), (3, 7),
+        (7, 8), (8, 9), (9, 10), (10, 11), (10, 12), (12, 13), (13, 14),
+        (14, 16), (11, 15), (16, 15),
+    ]
+    return GraphSpec("fastsam", layers, edges)
+
+
+#: Table 6 order — must match rust models::SPECS.
+ZOO = [
+    face_det, selfie_seg, hand_det, pose_det, tcmonodepth,
+    fast_scnn, yolov8n, mosaic, fastsam,
+]
+
+
+def model_zoo() -> List[GraphSpec]:
+    return [f() for f in ZOO]
+
+
+def by_name(name: str) -> GraphSpec:
+    for f in ZOO:
+        g = f()
+        if g.name == name:
+            return g
+    raise KeyError(name)

@@ -1,0 +1,156 @@
+"""L1 — the Pallas compute hot-spot: a fused, tiled matmul + bias +
+activation block.
+
+Every compute-heavy layer of the model zoo (conv via im2col, pointwise,
+dense head) lowers onto this kernel, so it is the system's MXU workload.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's kernels
+target a mobile GPU/NPU; here the same computation is structured for a
+TPU-like machine instead of being mechanically ported:
+
+* the conv is expressed as a *blocked matmul* — the MXU's native shape —
+  rather than a thread-per-pixel GPU kernel;
+* `BlockSpec`s express the HBM↔VMEM schedule (x-tile and w-tile streamed
+  per grid step, full-K accumulation in VMEM) that a CUDA kernel would
+  express with threadblock tiling and shared-memory staging;
+* block sizes are chosen so x-block + w-block + acc fit a conservative
+  VMEM budget (see `vmem_footprint_bytes`).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernel lowers to plain HLO; numerics are validated
+against `ref.py`, and TPU efficiency is *estimated* from the block schedule
+(EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-friendly tile sizes. The MXU is a 128x128 systolic array;
+# 128-multiples keep it saturated when shapes allow, while tiny zoo shapes
+# fall back to single-tile grids via padding.
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _matmul_bias_act_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    """One (BLOCK_M, BLOCK_N) output tile: full-K matmul + bias (+ ReLU).
+
+    K is not tiled: a (BLOCK_M, K) x-slab and (K, BLOCK_N) w-slab are staged
+    in VMEM per grid step and contracted in one MXU pass (preferred on TPU
+    when K fits — avoids accumulator revisits).
+    """
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    target = -(-size // multiple) * multiple
+    if target == size:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - size)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "block_m", "block_n"))
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    relu: bool = True,
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+) -> jax.Array:
+    """Fused `act(x @ w + b)` via the Pallas kernel.
+
+    x: [M, K] f32, w: [K, N] f32, b: [N] f32 -> [M, N] f32.
+    Shapes are padded up to tile multiples and the result sliced back.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert b.shape == (n,)
+
+    bm = min(block_m, -(-m // 8) * 8)  # shrink tiles for tiny inputs
+    bn = min(block_n, -(-n // 8) * 8)
+    xp = _pad_to(x, 0, bm)
+    wp = _pad_to(w, 1, bn)
+    bp = _pad_to(b, 0, bn)
+    mp, np_ = xp.shape[0], wp.shape[1]
+
+    grid = (mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        functools.partial(_matmul_bias_act_kernel, relu=relu),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def conv2d_bias_act(
+    x: jax.Array, w: jax.Array, b: jax.Array, stride: int = 1, relu: bool = True
+) -> jax.Array:
+    """KxK same-padded conv as im2col + the fused Pallas matmul.
+
+    x: [1, H, W, Cin], w: [K, K, Cin, Cout], b: [Cout] -> [1, H/s, W/s, Cout].
+    """
+    kh, kw, cin, cout = w.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # [1, H/s, W/s, K*K*Cin] with feature order (Cin, kh, kw)
+    _, ho, wo, feat = patches.shape
+    cols = patches.reshape(ho * wo, feat)
+    # conv_general_dilated_patches emits features as (Cin, kh, kw);
+    # reorder the weight tensor to match.
+    wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(feat, cout)
+    out = matmul_bias_act(cols, wmat, b, relu=relu)
+    return out.reshape(1, ho, wo, cout)
+
+
+def dense_bias(x_flat: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Dense head (no activation) on [1, F] features via the same kernel."""
+    return matmul_bias_act(x_flat, w, b, relu=False)
+
+
+def vmem_footprint_bytes(m: int, k: int, n: int, block_m: int = BLOCK_M, block_n: int = BLOCK_N) -> int:
+    """Estimated per-step VMEM residency of the kernel (f32): the x-slab,
+    w-slab, bias tile, and output accumulator. Used by the perf notes in
+    EXPERIMENTS.md §Perf (interpret mode gives no real TPU numbers)."""
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    return 4 * (bm * k + k * bn + bn + bm * bn)
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int, block_m: int = BLOCK_M, block_n: int = BLOCK_N) -> float:
+    """Fraction of MXU lanes kept busy by the tile shapes: the product of
+    each dimension's occupancy of its 128-lane tile, amortized over the
+    padded grid. 1.0 = perfectly aligned shapes."""
+    bm = min(block_m, max(8, m))
+    bn = min(block_n, max(8, n))
+    grid_m = -(-m // bm)
+    grid_n = -(-n // bn)
+    useful = m * k * n
+    padded = (grid_m * bm) * k * (grid_n * bn)
+    lane_m = min(m, 128) / 128.0 if m < 128 else 1.0
+    lane_n = min(n, 128) / 128.0 if n < 128 else 1.0
+    return (useful / padded) * lane_m * lane_n

@@ -1,0 +1,65 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest/hypothesis suites compare against:
+no Pallas, no custom tiling — just the obvious jnp expression of each op.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_bias_act_ref(x, w, b, relu: bool = True):
+    """act(x @ w + b) — the oracle for fused_block.matmul_bias_act."""
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def conv2d_bias_act_ref(x, w, b, stride: int = 1, relu: bool = True):
+    """Same-padded KxK conv + bias (+ ReLU) via lax.conv — the oracle for
+    fused_block.conv2d_bias_act. x: [1,H,W,Cin], w: [K,K,Cin,Cout]."""
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    out = out + b[None, None, None, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def dwconv2d_bias_act_ref(x, w, b, stride: int = 1, relu: bool = True):
+    """Depthwise same-padded conv + bias + ReLU.
+    x: [1,H,W,C], w: [K,K,C] per-channel filters, b: [C]."""
+    c = x.shape[-1]
+    # HWIO with feature_group_count=C: w shaped [K,K,1,C].
+    wf = w[:, :, None, :]
+    out = jax.lax.conv_general_dilated(
+        x,
+        wf,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    out = out + b[None, None, None, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def upsample2x_ref(x):
+    """Nearest-neighbour 2x upsample, NHWC."""
+    return jnp.repeat(jnp.repeat(x, 2, axis=1), 2, axis=2)
+
+
+def avgpool2x_ref(x):
+    """2x2 average pool, stride 2, NHWC."""
+    n, h, w, c = x.shape
+    return x.reshape(n, h // 2, 2, w // 2, 2, c).mean(axis=(2, 4))

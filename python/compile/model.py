@@ -1,0 +1,147 @@
+"""L2 — the jax compute graphs of the model zoo.
+
+Builds, for each `graphs.GraphSpec`:
+
+* a **whole-model** jax function `input -> (outputs...)`;
+* **per-layer** jax functions `(pred tensors...) -> (out,)` — the units the
+  rust runtime chains when a Static-Analyzer solution partitions a model.
+
+Compute-heavy layers (conv / pointwise / dense) lower onto the L1 Pallas
+fused block ([`kernels.fused_block`]); cheap memory-bound ops (depthwise
+conv, joins, resampling) stay in plain jnp/lax. Weights are deterministic
+per (model, layer) — baked into the lowered HLO as constants, so artifacts
+are self-contained and reproducible.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graphs import GraphSpec, LayerSpec, by_name, model_zoo  # noqa: F401
+from .kernels import fused_block, ref
+
+
+def _weight_rng(model: str, layer: str) -> np.random.Generator:
+    """Deterministic per-(model, layer) generator (stable artifact bytes)."""
+    seed = abs(hash((model, layer))) % (2**32)
+    # hash() is salted per-process; use a stable FNV instead.
+    h = 2166136261
+    for ch in f"{model}/{layer}".encode():
+        h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
+    del seed
+    return np.random.default_rng(h)
+
+
+def layer_weights(model: str, spec: LayerSpec) -> Dict[str, np.ndarray]:
+    """Materialize the weights of one layer (empty dict for weightless ops)."""
+    rng = _weight_rng(model, spec.name)
+    scale = lambda fan_in: 1.0 / np.sqrt(max(fan_in, 1))
+    if spec.kind == "conv":
+        fan = spec.k * spec.k * spec.in_c
+        return {
+            "w": rng.normal(0, scale(fan), (spec.k, spec.k, spec.in_c, spec.out_c)).astype(np.float32),
+            "b": rng.normal(0, 0.01, (spec.out_c,)).astype(np.float32),
+        }
+    if spec.kind == "dwconv":
+        return {
+            "w": rng.normal(0, scale(spec.k * spec.k), (spec.k, spec.k, spec.out_c)).astype(np.float32),
+            "b": rng.normal(0, 0.01, (spec.out_c,)).astype(np.float32),
+        }
+    if spec.kind == "pointwise":
+        return {
+            "w": rng.normal(0, scale(spec.in_c), (1, 1, spec.in_c, spec.out_c)).astype(np.float32),
+            "b": rng.normal(0, 0.01, (spec.out_c,)).astype(np.float32),
+        }
+    if spec.kind == "dense":
+        return {
+            "w": rng.normal(0, scale(spec.in_c), (spec.in_c, spec.out_c)).astype(np.float32),
+            "b": rng.normal(0, 0.01, (spec.out_c,)).astype(np.float32),
+        }
+    return {}
+
+
+def apply_layer(model: str, spec: LayerSpec, inputs: List[jax.Array], use_pallas: bool = True) -> jax.Array:
+    """Execute one layer on its input tensors (NHWC, N=1)."""
+    w = layer_weights(model, spec)
+    if spec.kind == "conv":
+        fn = fused_block.conv2d_bias_act if use_pallas else ref.conv2d_bias_act_ref
+        return fn(inputs[0], jnp.asarray(w["w"]), jnp.asarray(w["b"]), stride=spec.s)
+    if spec.kind == "pointwise":
+        fn = fused_block.conv2d_bias_act if use_pallas else ref.conv2d_bias_act_ref
+        return fn(inputs[0], jnp.asarray(w["w"]), jnp.asarray(w["b"]), stride=1)
+    if spec.kind == "dwconv":
+        return ref.dwconv2d_bias_act_ref(
+            inputs[0], jnp.asarray(w["w"]), jnp.asarray(w["b"]), stride=spec.s
+        )
+    if spec.kind == "add":
+        out = inputs[0]
+        for x in inputs[1:]:
+            out = out + x
+        return out
+    if spec.kind == "concat":
+        return jnp.concatenate(inputs, axis=-1)
+    if spec.kind == "upsample":
+        return ref.upsample2x_ref(inputs[0])
+    if spec.kind == "pool":
+        return ref.avgpool2x_ref(inputs[0])
+    if spec.kind == "dense":
+        feats = inputs[0].mean(axis=(1, 2))  # global average pool -> [1, C]
+        return fused_block.dense_bias(feats, jnp.asarray(w["w"]), jnp.asarray(w["b"]))
+    raise ValueError(f"unknown layer kind {spec.kind}")
+
+
+def input_shape(g: GraphSpec) -> Tuple[int, int, int, int]:
+    """Network input NHWC shape (all zoo models: one image input)."""
+    (first,) = g.inputs() if len(g.inputs()) == 1 else (g.inputs()[0],)
+    spec = g.layers[first]
+    return (1, spec.size, spec.size, spec.in_c)
+
+
+def whole_model_fn(g: GraphSpec, use_pallas: bool = True) -> Callable:
+    """The whole network as one jax function `input -> tuple(outputs)`."""
+
+    def fn(x: jax.Array):
+        produced: Dict[int, jax.Array] = {}
+        for li in g.topo_order():
+            preds = g.predecessors(li)
+            ins = [x] if not preds else [produced[p] for p in preds]
+            produced[li] = apply_layer(g.name, g.layers[li], ins, use_pallas)
+        return tuple(produced[o] for o in g.outputs())
+
+    return fn
+
+
+def layer_fn(g: GraphSpec, layer: int, use_pallas: bool = True) -> Tuple[Callable, List[Tuple[int, ...]]]:
+    """One layer as a jax function plus its input shapes (one per
+    predecessor, or the network input shape for root layers)."""
+    preds = g.predecessors(layer)
+    if preds:
+        shapes = [(1, *g.layers[p].out_shape) for p in preds]
+    else:
+        shapes = [input_shape(g)]
+
+    def fn(*ins):
+        return (apply_layer(g.name, g.layers[layer], list(ins), use_pallas),)
+
+    return fn, shapes
+
+
+def run_whole(g: GraphSpec, x: jax.Array, use_pallas: bool = True):
+    """Eager helper for tests."""
+    return whole_model_fn(g, use_pallas)(x)
+
+
+def run_layer_chain(g: GraphSpec, x: jax.Array, use_pallas: bool = True):
+    """Execute the model layer-by-layer through `layer_fn`s (the composition
+    the rust PjrtEngine performs); must equal `run_whole`."""
+    produced: Dict[int, jax.Array] = {}
+    for li in g.topo_order():
+        preds = g.predecessors(li)
+        ins = [x] if not preds else [produced[p] for p in preds]
+        fn, _ = layer_fn(g, li, use_pallas)
+        produced[li] = fn(*ins)[0]
+    return tuple(produced[o] for o in g.outputs())

@@ -1,0 +1,158 @@
+"""L1 correctness: the Pallas fused block vs the pure-jnp oracle.
+
+This is the CORE correctness signal of the compile path: hypothesis sweeps
+shapes/strides/dtypes and asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_block, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape).astype(np.float32))
+
+
+class TestMatmulKernel:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        m=st.integers(1, 200),
+        k=st.integers(1, 96),
+        n=st.integers(1, 96),
+        relu=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_across_shapes(self, m, k, n, relu, seed):
+        x = rand((m, k), seed)
+        w = rand((k, n), seed + 1)
+        b = rand((n,), seed + 2)
+        got = fused_block.matmul_bias_act(x, w, b, relu=relu)
+        want = ref.matmul_bias_act_ref(x, w, b, relu=relu)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_relu_clamps_negatives(self):
+        x = jnp.array([[-10.0, 10.0]], dtype=jnp.float32)
+        w = jnp.eye(2, dtype=jnp.float32)
+        b = jnp.zeros((2,), dtype=jnp.float32)
+        got = fused_block.matmul_bias_act(x, w, b, relu=True)
+        assert float(got[0, 0]) == 0.0
+        assert float(got[0, 1]) == 10.0
+
+    def test_no_relu_passes_negatives(self):
+        x = jnp.array([[-3.0]], dtype=jnp.float32)
+        w = jnp.ones((1, 1), dtype=jnp.float32)
+        b = jnp.zeros((1,), dtype=jnp.float32)
+        got = fused_block.matmul_bias_act(x, w, b, relu=False)
+        assert float(got[0, 0]) == -3.0
+
+    def test_bias_is_added(self):
+        x = jnp.zeros((4, 3), dtype=jnp.float32)
+        w = jnp.zeros((3, 5), dtype=jnp.float32)
+        b = jnp.arange(5, dtype=jnp.float32)
+        got = fused_block.matmul_bias_act(x, w, b, relu=False)
+        np.testing.assert_allclose(got, jnp.broadcast_to(b, (4, 5)))
+
+    @pytest.mark.parametrize("m,k,n", [(128, 64, 128), (129, 64, 127), (1, 1, 1), (256, 144, 160)])
+    def test_tile_boundary_shapes(self, m, k, n):
+        x = rand((m, k), 10)
+        w = rand((k, n), 11)
+        b = rand((n,), 12)
+        got = fused_block.matmul_bias_act(x, w, b)
+        want = ref.matmul_bias_act_ref(x, w, b)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_block_size_invariance(self):
+        # Different tile choices must not change the numerics.
+        x, w, b = rand((100, 48), 1), rand((48, 72), 2), rand((72,), 3)
+        a = fused_block.matmul_bias_act(x, w, b, block_m=32, block_n=32)
+        c = fused_block.matmul_bias_act(x, w, b, block_m=128, block_n=128)
+        # Different tilings reorder the f32 accumulation; allow ulp-scale drift.
+        np.testing.assert_allclose(a, c, rtol=1e-3, atol=1e-5)
+
+
+class TestConvKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        size=st.sampled_from([4, 8, 16, 32]),
+        cin=st.integers(1, 16),
+        cout=st.integers(1, 16),
+        stride=st.sampled_from([1, 2]),
+        k=st.sampled_from([1, 3]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_lax_conv(self, size, cin, cout, stride, k, seed):
+        x = rand((1, size, size, cin), seed)
+        w = rand((k, k, cin, cout), seed + 1)
+        b = rand((cout,), seed + 2)
+        got = fused_block.conv2d_bias_act(x, w, b, stride=stride)
+        want = ref.conv2d_bias_act_ref(x, w, b, stride=stride)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_identity_kernel(self):
+        # 1x1 conv with identity weights reproduces (relu of) the input.
+        x = rand((1, 8, 8, 4), 5)
+        w = jnp.eye(4, dtype=jnp.float32).reshape(1, 1, 4, 4)
+        b = jnp.zeros((4,), dtype=jnp.float32)
+        got = fused_block.conv2d_bias_act(x, w, b, relu=True)
+        np.testing.assert_allclose(got, jnp.maximum(x, 0.0), rtol=1e-6)
+
+    def test_stride_halves_spatial(self):
+        x = rand((1, 16, 16, 3), 6)
+        w = rand((3, 3, 3, 7), 7)
+        b = rand((7,), 8)
+        got = fused_block.conv2d_bias_act(x, w, b, stride=2)
+        assert got.shape == (1, 8, 8, 7)
+
+
+class TestAuxOps:
+    def test_dwconv_ref_shapes_and_channels_independent(self):
+        # Depthwise conv must not mix channels: zeroing one channel's filter
+        # zeroes exactly that output channel (bias 0).
+        x = rand((1, 8, 8, 3), 9)
+        w = np.random.default_rng(1).normal(size=(3, 3, 3)).astype(np.float32)
+        w[:, :, 1] = 0.0
+        b = jnp.zeros((3,), dtype=jnp.float32)
+        out = ref.dwconv2d_bias_act_ref(x, jnp.asarray(w), b)
+        assert float(jnp.abs(out[..., 1]).max()) == 0.0
+        assert float(jnp.abs(out[..., 0]).max()) > 0.0
+
+    def test_upsample_repeats(self):
+        x = jnp.arange(4, dtype=jnp.float32).reshape(1, 2, 2, 1)
+        up = ref.upsample2x_ref(x)
+        assert up.shape == (1, 4, 4, 1)
+        np.testing.assert_allclose(up[0, :2, :2, 0], jnp.full((2, 2), x[0, 0, 0, 0]))
+
+    def test_avgpool_means(self):
+        x = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4, 1)
+        p = ref.avgpool2x_ref(x)
+        assert p.shape == (1, 2, 2, 1)
+        np.testing.assert_allclose(p[0, 0, 0, 0], (0 + 1 + 4 + 5) / 4.0)
+
+    def test_pool_upsample_roundtrip_on_constant(self):
+        x = jnp.full((1, 8, 8, 2), 3.5, dtype=jnp.float32)
+        np.testing.assert_allclose(ref.upsample2x_ref(ref.avgpool2x_ref(x)), x)
+
+
+class TestVmemEstimates:
+    def test_footprint_scales_with_blocks(self):
+        small = fused_block.vmem_footprint_bytes(64, 64, 64)
+        big = fused_block.vmem_footprint_bytes(1024, 1024, 1024)
+        assert big > small
+
+    def test_footprint_within_vmem_budget_for_zoo_shapes(self):
+        # Largest zoo matmul: 256x(9*160) @ (9*160)x160 (mosaic/fastsam
+        # 8x8 layers are small; the 16x16x160 convs dominate).
+        fp = fused_block.vmem_footprint_bytes(256, 9 * 160, 160)
+        assert fp < 16 * 1024 * 1024, f"VMEM estimate {fp} exceeds 16 MiB"
+
+    def test_utilization_bounds(self):
+        for (m, k, n) in [(1, 1, 1), (128, 128, 128), (100, 37, 60), (1024, 512, 256)]:
+            u = fused_block.mxu_utilization_estimate(m, k, n)
+            assert 0.0 < u <= 1.0, (m, k, n, u)
+        assert fused_block.mxu_utilization_estimate(128, 128, 128) == 1.0

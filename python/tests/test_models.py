@@ -1,0 +1,99 @@
+"""L2 correctness: the jax model zoo graphs.
+
+Checks (a) whole-model vs layer-chain composition equality — the property
+the rust runtime relies on when executing partitioned subgraphs — and
+(b) structural agreement with the declared graph specs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import graphs, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+ZOO = graphs.model_zoo()
+NAMES = [g.name for g in ZOO]
+
+
+def rand_input(g, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=model.input_shape(g)).astype(np.float32)
+    )
+
+
+class TestGraphStructure:
+    def test_zoo_has_nine_models(self):
+        assert len(ZOO) == 9
+        assert NAMES[0] == "face_det" and NAMES[-1] == "fastsam"
+
+    @pytest.mark.parametrize("g", ZOO, ids=NAMES)
+    def test_single_input_dag(self, g):
+        assert len(g.inputs()) == 1
+        order = g.topo_order()
+        assert len(order) == len(g.layers)
+
+    @pytest.mark.parametrize("g", ZOO, ids=NAMES)
+    def test_channel_consistency(self, g):
+        for li, spec in enumerate(g.layers):
+            preds = g.predecessors(li)
+            if not preds:
+                continue
+            if spec.kind == "concat":
+                total = sum(g.layers[p].out_c for p in preds)
+                assert spec.in_c == total, f"{g.name}:{spec.name}"
+            elif spec.kind == "add":
+                for p in preds:
+                    assert g.layers[p].out_shape == spec.out_shape, f"{g.name}:{spec.name}"
+            else:
+                assert len(preds) == 1
+                assert spec.in_c == g.layers[preds[0]].out_c, f"{g.name}:{spec.name}"
+
+    @pytest.mark.parametrize("g", ZOO, ids=NAMES)
+    def test_every_model_has_a_join(self, g):
+        assert any(len(g.predecessors(i)) > 1 for i in range(len(g.layers))), g.name
+
+
+class TestModelExecution:
+    @pytest.mark.parametrize("g", ZOO, ids=NAMES)
+    def test_whole_model_runs_and_shapes_match(self, g):
+        outs = model.run_whole(g, rand_input(g))
+        assert len(outs) == len(g.outputs())
+        for o, li in zip(outs, g.outputs()):
+            assert o.shape == (1, *g.layers[li].out_shape), f"{g.name}:{g.layers[li].name}"
+            assert bool(jnp.isfinite(o).all()), g.name
+
+    @pytest.mark.parametrize("g", ZOO, ids=NAMES)
+    def test_layer_chain_equals_whole(self, g):
+        """The composition property the rust PjrtEngine depends on."""
+        x = rand_input(g, seed=1)
+        whole = model.run_whole(g, x)
+        chain = model.run_layer_chain(g, x)
+        for a, b in zip(whole, chain):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+    def test_pallas_path_equals_jnp_path(self):
+        """use_pallas toggles the L1 kernel; numerics must agree."""
+        for g in ZOO[:3]:
+            x = rand_input(g, seed=2)
+            with_pallas = model.run_whole(g, x, use_pallas=True)
+            without = model.run_whole(g, x, use_pallas=False)
+            for a, b in zip(with_pallas, without):
+                np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    def test_weights_are_deterministic(self):
+        g = ZOO[0]
+        w1 = model.layer_weights(g.name, g.layers[0])
+        w2 = model.layer_weights(g.name, g.layers[0])
+        np.testing.assert_array_equal(w1["w"], w2["w"])
+        # Different layer -> different weights.
+        w3 = model.layer_weights(g.name, g.layers[5])
+        assert w1["w"].shape != w3["w"].shape or not np.array_equal(w1["w"], w3["w"])
+
+    def test_outputs_differ_across_inputs(self):
+        g = ZOO[0]
+        o1 = model.run_whole(g, rand_input(g, seed=3))
+        o2 = model.run_whole(g, rand_input(g, seed=4))
+        assert float(jnp.abs(o1[0] - o2[0]).max()) > 0.0

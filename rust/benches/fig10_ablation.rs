@@ -1,0 +1,13 @@
+//! Bench: regenerate Figure 10 + Table 5 (tensor pool / zero-copy shared
+//! buffer ablation) through the real Coordinator/Worker runtime.
+
+use puzzle::experiments::{ablation, fig10_ablation, table5_breakdown};
+use puzzle::perf::PerfModel;
+
+fn main() {
+    let pm = PerfModel::paper_calibrated();
+    println!("=== Fig 10 + Table 5 reproduction (runtime ablation) ===");
+    let rows = fig10_ablation(&pm, 4, 10);
+    let t5 = table5_breakdown(&pm, 10);
+    ablation::print_ablation(&rows, &t5);
+}

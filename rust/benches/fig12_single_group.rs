@@ -1,0 +1,37 @@
+//! Bench: regenerate Figure 12 (single model group saturation multipliers,
+//! Puzzle vs Best Mapping vs NPU Only) plus Fig 13's score curves for two
+//! scenarios. Use PUZZLE_BENCH_FULL=1 for the full 10-scenario protocol.
+
+use puzzle::experiments::{fig12_single_group, fig13_score_curves, serving, ServingBudget};
+use puzzle::perf::PerfModel;
+
+fn main() {
+    let pm = PerfModel::paper_calibrated();
+    let budget = if std::env::var("PUZZLE_BENCH_FULL").is_ok() {
+        ServingBudget::full()
+    } else {
+        ServingBudget { scenarios: 4, ..ServingBudget::quick() }
+    };
+    println!("=== Fig 12 reproduction ({} scenarios) ===", budget.scenarios);
+    let rows = fig12_single_group(&pm, &budget);
+    serving::print_saturation(
+        "single model group saturation multipliers (paper: 0.78 / 1.17 / 1.56)",
+        &rows,
+    );
+    println!();
+    println!("=== Fig 13 reproduction (score-vs-alpha curves) ===");
+    let tight = ServingBudget { scenarios: 2, ..budget };
+    for mc in fig13_score_curves(&pm, &tight) {
+        println!("scenario {}:", mc.scenario);
+        for c in &mc.curves {
+            let knee = c
+                .alphas
+                .iter()
+                .zip(&c.scores)
+                .find(|(_, (_, med, _))| *med >= 0.995)
+                .map(|(a, _)| format!("{a:.1}"))
+                .unwrap_or_else(|| ">2.0".into());
+            println!("  {:<13} reaches score 1.0 at alpha {}", c.method, knee);
+        }
+    }
+}

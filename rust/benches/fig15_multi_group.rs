@@ -1,0 +1,57 @@
+//! Bench: regenerate Figures 14/15/16 (multi model group experiments) and
+//! the paper's headline request-frequency ratios.
+
+use puzzle::experiments::{
+    fig14_makespan_distribution, fig15_multi_group, fig16_multi_score_curves, headline_ratios,
+    serving, ServingBudget,
+};
+use puzzle::perf::PerfModel;
+
+fn main() {
+    let pm = PerfModel::paper_calibrated();
+    let budget = if std::env::var("PUZZLE_BENCH_FULL").is_ok() {
+        ServingBudget::full()
+    } else {
+        ServingBudget { scenarios: 4, ..ServingBudget::quick() }
+    };
+
+    println!("=== Fig 15 reproduction ({} scenarios) ===", budget.scenarios);
+    let rows = fig15_multi_group(&pm, &budget);
+    serving::print_saturation(
+        "multi model group saturation multipliers (paper: 0.95 / 2.24 / 3.45)",
+        &rows,
+    );
+    println!();
+
+    println!("=== Fig 14 reproduction (scenario 10 makespans) ===");
+    for (method, alpha, avgs) in fig14_makespan_distribution(&pm, &budget) {
+        println!(
+            "  {method:<13} alpha={alpha}: group avg makespans {:?}",
+            avgs.iter().map(|a| format!("{:.1}ms", a * 1e3)).collect::<Vec<_>>()
+        );
+    }
+    println!();
+
+    println!("=== Fig 16 reproduction (scenarios 6 & 10 score curves) ===");
+    let tight = ServingBudget { scenarios: 2, ..budget };
+    for mc in fig16_multi_score_curves(&pm, &tight) {
+        println!("scenario {}:", mc.scenario);
+        for c in &mc.curves {
+            let knee = c
+                .alphas
+                .iter()
+                .zip(&c.scores)
+                .find(|(_, (_, med, _))| *med >= 0.995)
+                .map(|(a, _)| format!("{a:.1}"))
+                .unwrap_or_else(|| ">3.0".into());
+            println!("  {:<13} reaches score 1.0 at alpha {}", c.method, knee);
+        }
+    }
+    println!();
+
+    println!("=== headline ===");
+    let (npu, bm) = headline_ratios(&rows);
+    println!(
+        "multi-group ratios vs puzzle: NPU Only {npu:.1}x, Best Mapping {bm:.1}x (paper combined: 3.7x / 2.2x)"
+    );
+}

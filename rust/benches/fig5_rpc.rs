@@ -1,0 +1,35 @@
+//! Bench: regenerate Figure 5 (RPC overhead microbenchmark + piecewise-
+//! linear regression) on this host, plus the STREAM bandwidth probe.
+
+use puzzle::comm;
+use puzzle::util::bench::bench;
+
+fn main() {
+    println!("=== Fig 5 reproduction: RPC overhead microbenchmark ===");
+    let sizes = comm::default_size_sweep();
+    let samples = comm::rpc_microbenchmark(&sizes, 9);
+    let fit = comm::PiecewiseLinear::fit(&samples, comm::KNEE_BYTES);
+    println!("{:>12} {:>14} {:>14}", "bytes", "measured (us)", "fit (us)");
+    for s in &samples {
+        println!(
+            "{:>12} {:>14.2} {:>14.2}",
+            s.bytes,
+            s.seconds * 1e6,
+            fit.predict(s.bytes as f64) * 1e6
+        );
+    }
+    println!(
+        "fit: below {:.2}us + {:.4}ns/B | above {:.2}us + {:.4}ns/B | r2 {:.4}",
+        fit.below_intercept * 1e6,
+        fit.below_slope * 1e9,
+        fit.above_intercept * 1e6,
+        fit.above_slope * 1e9,
+        fit.r_squared(&samples)
+    );
+    let bw = comm::stream_bandwidth(32 << 20, 5);
+    println!("STREAM copy bandwidth: {:.1} GB/s (paper device ~40 GB/s)", bw / 1e9);
+    println!();
+    bench("fig5/microbench_1MiB", 2.0, 20, || {
+        let _ = comm::rpc_microbenchmark(&[1 << 20], 3);
+    });
+}

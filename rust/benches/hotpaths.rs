@@ -1,0 +1,94 @@
+//! Micro-benchmarks of the system's hot paths (the §Perf targets):
+//! * the discrete-event simulator inner loop (the GA evaluates it ~10^4-10^5
+//!   times per search);
+//! * genome decode incl. partitioning + profile lookups;
+//! * one full GA generation;
+//! * NSGA-III selection;
+//! * tensor pool acquire/release;
+//! * Merkle hashing.
+
+use puzzle::analyzer::{GaConfig, StaticAnalyzer};
+use puzzle::comm::CommModel;
+use puzzle::ga::{decode, nsga3_select, Genome};
+use puzzle::graph::{merkle_hash_subgraph, partition};
+use puzzle::mem::TensorPool;
+use puzzle::perf::PerfModel;
+use puzzle::profiler::Profiler;
+use puzzle::scenario::Scenario;
+use puzzle::sim::{simulate, GroupSpec, SimOptions};
+use puzzle::util::bench::{bench, black_box};
+use puzzle::util::rng::Rng;
+use puzzle::Processor;
+
+fn main() {
+    let pm = PerfModel::paper_calibrated();
+    let comm = CommModel::paper_calibrated();
+    let scenario = Scenario::from_groups("bench", &[vec![0, 4, 6], vec![1, 5, 8]]);
+    let nets = &scenario.networks;
+    let mut rng = Rng::seed_from_u64(1);
+    let profiler = Profiler::new(&pm);
+
+    // Pre-decode a plan set for the simulator bench.
+    let genome = Genome::random(nets, 0.3, &mut rng);
+    let plans = decode(nets, &genome, &profiler, &comm);
+    let periods = scenario.periods(1.0, &pm);
+    let groups: Vec<GroupSpec> = scenario
+        .groups
+        .iter()
+        .zip(&periods)
+        .map(|(g, &p)| GroupSpec::periodic(g.members.clone(), p))
+        .collect();
+    let opts = SimOptions { requests_per_group: 20, ..Default::default() };
+
+    bench("sim/simulate_6models_20req", 3.0, 50, || {
+        black_box(simulate(&plans, &groups, &comm, &opts));
+    });
+
+    bench("ga/decode_genome(cached profiles)", 3.0, 50, || {
+        black_box(decode(nets, &genome, &profiler, &comm));
+    });
+
+    bench("ga/decode_fresh_genome", 3.0, 30, || {
+        let g = Genome::random(nets, 0.3, &mut rng);
+        black_box(decode(nets, &g, &profiler, &comm));
+    });
+
+    // Partition alone.
+    let net = &nets[5]; // fastsam analog
+    let cuts: Vec<bool> = (0..net.num_edges()).map(|i| i % 3 == 0).collect();
+    let mapping: Vec<Processor> = (0..net.num_layers())
+        .map(|i| Processor::from_index(i % 3))
+        .collect();
+    bench("graph/partition_17layer", 3.0, 200, || {
+        black_box(partition(net, &cuts, &mapping));
+    });
+
+    let part = partition(net, &cuts, &mapping);
+    bench("graph/merkle_hash", 3.0, 200, || {
+        for sg in &part.subgraphs {
+            black_box(merkle_hash_subgraph(net, sg));
+        }
+    });
+
+    // NSGA-III on a realistic pool.
+    let objs: Vec<Vec<f64>> = (0..96)
+        .map(|_| (0..4).map(|_| rng.gen_f64()).collect())
+        .collect();
+    bench("ga/nsga3_select_96to48_4obj", 3.0, 100, || {
+        black_box(nsga3_select(&objs, 48));
+    });
+
+    // Tensor pool.
+    let pool = TensorPool::new(true);
+    bench("mem/pool_acquire_release_16KiB", 2.0, 500, || {
+        let t = pool.acquire(16 * 1024);
+        black_box(t.len());
+    });
+
+    // One full (tiny) analyzer run for an end-to-end feel.
+    let tiny = Scenario::from_groups("tiny", &[vec![0, 1]]);
+    let cfg = GaConfig { population: 8, max_generations: 3, sim_requests: 8, measure_reps: 1, ..GaConfig::quick(3) };
+    bench("analyzer/tiny_ga_run", 5.0, 3, || {
+        black_box(StaticAnalyzer::new(&tiny, &pm, cfg.clone()).run());
+    });
+}

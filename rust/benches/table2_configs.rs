@@ -1,0 +1,16 @@
+//! Bench: regenerate Table 2 (CPU backend × dtype configuration sweep) and
+//! time the perf-model query path that backs it.
+
+use puzzle::experiments::tables;
+use puzzle::perf::PerfModel;
+use puzzle::util::bench::{bench, black_box};
+
+fn main() {
+    let pm = PerfModel::paper_calibrated();
+    println!("=== Table 2 reproduction ===");
+    tables::print_table2(&pm);
+    println!();
+    bench("table2/full_config_sweep", 2.0, 10, || {
+        black_box(tables::table2_configs(&pm));
+    });
+}

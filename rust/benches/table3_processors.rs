@@ -1,0 +1,26 @@
+//! Bench: regenerate Table 3 (best-config execution time per processor) and
+//! time the best-config search.
+
+use puzzle::experiments::tables;
+use puzzle::graph::LayerId;
+use puzzle::models::model_zoo;
+use puzzle::perf::PerfModel;
+use puzzle::util::bench::{bench, black_box};
+
+fn main() {
+    let pm = PerfModel::paper_calibrated();
+    println!("=== Table 3 reproduction ===");
+    tables::print_table3(&pm);
+    println!();
+    bench("table3/processor_sweep", 2.0, 10, || {
+        black_box(tables::table3_processors(&pm));
+    });
+    // Hot sub-path: best_config_for over the heaviest model.
+    let net = model_zoo().pop().unwrap();
+    let all: Vec<LayerId> = (0..net.num_layers()).map(LayerId).collect();
+    bench("table3/best_config_fastsam", 2.0, 100, || {
+        for p in puzzle::Processor::ALL {
+            black_box(pm.best_config_for(&net, &all, p));
+        }
+    });
+}

@@ -1,0 +1,88 @@
+//! Bench: regenerate Table 4 (measured vs layer-sum-estimated execution
+//! time — the non-linearity evidence), in both the calibrated model and,
+//! when artifacts exist, through *real XLA execution* (fused whole-model
+//! HLO vs per-layer chain on the PJRT CPU client).
+
+use std::time::Instant;
+
+use puzzle::experiments::tables;
+use puzzle::models::build_model;
+use puzzle::perf::PerfModel;
+use puzzle::runtime::{layer_artifact, model_artifact, PjrtRuntime};
+use puzzle::util::bench::{bench, black_box};
+
+fn main() {
+    let pm = PerfModel::paper_calibrated();
+    println!("=== Table 4 reproduction (calibrated model) ===");
+    tables::print_table4(&pm);
+    println!();
+    bench("table4/model_sweep", 2.0, 10, || {
+        black_box(tables::table4_nonlinearity(&pm));
+    });
+
+    // Real-XLA variant: fused whole-model execution vs summed per-layer
+    // executions, on the host CPU. XLA's inter-layer fusion is the actual
+    // mechanism the paper attributes the non-linearity to.
+    if model_artifact("face_det").exists() {
+        println!();
+        println!("=== real-XLA non-linearity (host CPU, fused vs layer-sum) ===");
+        let rt = PjrtRuntime::cpu().expect("client");
+        for idx in [0usize, 1, 6] {
+            let net = build_model(0, idx);
+            let whole = rt.load(&model_artifact(&net.name)).unwrap();
+            let input = vec![0.1f32; 32 * 32 * 3];
+            let time_it = |f: &mut dyn FnMut()| {
+                f(); // warm
+                let reps = 20;
+                let t0 = Instant::now();
+                for _ in 0..reps {
+                    f();
+                }
+                t0.elapsed().as_secs_f64() / reps as f64
+            };
+            let mut run_whole = || {
+                black_box(whole.run_f32(&[(&input, &[1, 32, 32, 3])]).unwrap());
+            };
+            let fused_t = time_it(&mut run_whole);
+
+            // Sum of isolated per-layer runs (with fresh dummy inputs of the
+            // right shapes — the naive estimator's measurement protocol).
+            let mut layer_sum = 0.0;
+            for l in 0..net.num_layers() {
+                let module = rt.load(&layer_artifact(&net.name, l)).unwrap();
+                let preds = net.predecessors(puzzle::graph::LayerId(l));
+                let shapes: Vec<Vec<usize>> = if preds.is_empty() {
+                    vec![vec![1, 32, 32, 3]]
+                } else {
+                    preds
+                        .iter()
+                        .map(|p| {
+                            let s = net.layer(*p).out_shape;
+                            vec![1, s.h, s.w, s.c]
+                        })
+                        .collect()
+                };
+                let datas: Vec<Vec<f32>> =
+                    shapes.iter().map(|s| vec![0.1f32; s.iter().product()]).collect();
+                let mut run_layer = || {
+                    let refs: Vec<(&[f32], &[usize])> = datas
+                        .iter()
+                        .zip(&shapes)
+                        .map(|(d, s)| (d.as_slice(), s.as_slice()))
+                        .collect();
+                    black_box(module.run_f32(&refs).unwrap());
+                };
+                layer_sum += time_it(&mut run_layer);
+            }
+            println!(
+                "{:<12} fused {:>8.1} us   layer-sum {:>8.1} us   est/meas {:.2}x",
+                net.name,
+                fused_t * 1e6,
+                layer_sum * 1e6,
+                layer_sum / fused_t
+            );
+        }
+    } else {
+        println!("(artifacts not built; skipping real-XLA variant)");
+    }
+}

@@ -1,0 +1,241 @@
+//! Solution serialization — the hand-off the paper's Fig 2 shows between
+//! the Static Analyzer and the Runtime ("the user selects the most
+//! appropriate solution based on the use-case scenario, and submits it to
+//! the Runtime").
+//!
+//! Format: a line-based text file (serde is unavailable offline), one
+//! solution per `solution` block:
+//!
+//! ```text
+//! puzzle-solution v1
+//! scenario <name>
+//! solution <index>
+//! objectives <o0> <o1> ...
+//! network <idx> zoo <zoo_idx> priority <p>
+//! cuts <0|1>...
+//! mapping <C|G|N>...
+//! end
+//! ```
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::ga::{Genome, NetworkGenes};
+use crate::scenario::Scenario;
+use crate::Processor;
+
+use super::Solution;
+
+fn proc_char(p: Processor) -> char {
+    match p {
+        Processor::Cpu => 'C',
+        Processor::Gpu => 'G',
+        Processor::Npu => 'N',
+    }
+}
+
+fn proc_from(c: char) -> Result<Processor> {
+    Ok(match c {
+        'C' => Processor::Cpu,
+        'G' => Processor::Gpu,
+        'N' => Processor::Npu,
+        other => bail!("bad processor char {other:?}"),
+    })
+}
+
+/// Serialize a set of analyzer solutions for a scenario.
+pub fn serialize_solutions(scenario: &Scenario, solutions: &[Solution]) -> String {
+    let mut out = String::from("puzzle-solution v1\n");
+    out.push_str(&format!("scenario {}\n", scenario.name));
+    for (si, sol) in solutions.iter().enumerate() {
+        out.push_str(&format!("solution {si}\n"));
+        out.push_str("objectives");
+        for o in &sol.objectives {
+            out.push_str(&format!(" {o}"));
+        }
+        out.push('\n');
+        for (ni, genes) in sol.genome.networks.iter().enumerate() {
+            out.push_str(&format!(
+                "network {ni} zoo {} priority {}\n",
+                scenario.zoo_indices[ni], sol.genome.priority[ni]
+            ));
+            out.push_str("cuts ");
+            out.extend(genes.cuts.iter().map(|&c| if c { '1' } else { '0' }));
+            out.push('\n');
+            out.push_str("mapping ");
+            out.extend(genes.mapping.iter().map(|&p| proc_char(p)));
+            out.push('\n');
+        }
+        out.push_str("end\n");
+    }
+    out
+}
+
+/// A deserialized solution: genomes + objectives (plans are re-derived by
+/// re-profiling at load time, keeping the file device-independent).
+#[derive(Debug, Clone)]
+pub struct LoadedSolution {
+    pub genome: Genome,
+    pub objectives: Vec<f64>,
+}
+
+/// Parse a solution file against a scenario (validates zoo indices and gene
+/// lengths, so a stale file cannot be applied to the wrong scenario).
+pub fn parse_solutions(text: &str, scenario: &Scenario) -> Result<Vec<LoadedSolution>> {
+    let mut lines = text.lines().peekable();
+    let header = lines.next().ok_or_else(|| anyhow!("empty solution file"))?;
+    if header != "puzzle-solution v1" {
+        bail!("unrecognized header {header:?}");
+    }
+    let mut out = Vec::new();
+    let mut current: Option<(Vec<NetworkGenes>, Vec<usize>, Vec<f64>)> = None;
+    for line in lines {
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("scenario") | None => {}
+            Some("solution") => {
+                if current.is_some() {
+                    bail!("nested solution block");
+                }
+                current = Some((Vec::new(), Vec::new(), Vec::new()));
+            }
+            Some("objectives") => {
+                let cur = current.as_mut().ok_or_else(|| anyhow!("objectives outside block"))?;
+                cur.2 = it
+                    .map(|t| t.parse::<f64>().context("bad objective"))
+                    .collect::<Result<_>>()?;
+            }
+            Some("network") => {
+                let cur = current.as_mut().ok_or_else(|| anyhow!("network outside block"))?;
+                let ni: usize = it.next().ok_or_else(|| anyhow!("missing idx"))?.parse()?;
+                let kw_zoo = it.next();
+                let zoo: usize = it.next().ok_or_else(|| anyhow!("missing zoo"))?.parse()?;
+                let kw_prio = it.next();
+                let prio: usize = it.next().ok_or_else(|| anyhow!("missing priority"))?.parse()?;
+                if kw_zoo != Some("zoo") || kw_prio != Some("priority") {
+                    bail!("malformed network line {line:?}");
+                }
+                if ni != cur.0.len() {
+                    bail!("network index {ni} out of order");
+                }
+                if scenario.zoo_indices.get(ni) != Some(&zoo) {
+                    bail!(
+                        "solution was made for zoo model {zoo} at slot {ni}, scenario has {:?}",
+                        scenario.zoo_indices.get(ni)
+                    );
+                }
+                cur.0.push(NetworkGenes { cuts: Vec::new(), mapping: Vec::new() });
+                cur.1.push(prio);
+            }
+            Some("cuts") => {
+                let cur = current.as_mut().ok_or_else(|| anyhow!("cuts outside block"))?;
+                let genes = cur.0.last_mut().ok_or_else(|| anyhow!("cuts before network"))?;
+                let bits = it.next().unwrap_or("");
+                genes.cuts = bits
+                    .chars()
+                    .map(|c| match c {
+                        '0' => Ok(false),
+                        '1' => Ok(true),
+                        other => Err(anyhow!("bad cut bit {other:?}")),
+                    })
+                    .collect::<Result<_>>()?;
+            }
+            Some("mapping") => {
+                let cur = current.as_mut().ok_or_else(|| anyhow!("mapping outside block"))?;
+                let genes = cur.0.last_mut().ok_or_else(|| anyhow!("mapping before network"))?;
+                let chars = it.next().unwrap_or("");
+                genes.mapping = chars.chars().map(proc_from).collect::<Result<_>>()?;
+            }
+            Some("end") => {
+                let (networks, priority, objectives) =
+                    current.take().ok_or_else(|| anyhow!("end outside block"))?;
+                let genome = Genome { networks, priority };
+                if !genome.is_valid(&scenario.networks) {
+                    bail!("solution genome invalid for scenario (gene lengths / priority)");
+                }
+                out.push(LoadedSolution { genome, objectives });
+            }
+            Some(other) => bail!("unknown directive {other:?}"),
+        }
+    }
+    if current.is_some() {
+        bail!("unterminated solution block");
+    }
+    Ok(out)
+}
+
+/// Save solutions to a file.
+pub fn save_solutions(path: &Path, scenario: &Scenario, solutions: &[Solution]) -> Result<()> {
+    std::fs::write(path, serialize_solutions(scenario, solutions))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Load solutions from a file, validated against the scenario.
+pub fn load_solutions(path: &Path, scenario: &Scenario) -> Result<Vec<LoadedSolution>> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    parse_solutions(&text, scenario)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::{GaConfig, StaticAnalyzer};
+    use crate::perf::PerfModel;
+
+    fn analyzed() -> (Scenario, Vec<Solution>) {
+        let scenario = Scenario::from_groups("io", &[vec![0, 2]]);
+        let pm = PerfModel::paper_calibrated();
+        let result = StaticAnalyzer::new(&scenario, &pm, GaConfig::quick(13)).run();
+        (scenario, result.pareto)
+    }
+
+    #[test]
+    fn roundtrip_preserves_genomes_and_objectives() {
+        let (scenario, sols) = analyzed();
+        let text = serialize_solutions(&scenario, &sols);
+        let loaded = parse_solutions(&text, &scenario).unwrap();
+        assert_eq!(loaded.len(), sols.len());
+        for (a, b) in sols.iter().zip(&loaded) {
+            assert_eq!(a.genome, b.genome);
+            assert_eq!(a.objectives, b.objectives);
+        }
+    }
+
+    #[test]
+    fn wrong_scenario_rejected() {
+        let (scenario, sols) = analyzed();
+        let text = serialize_solutions(&scenario, &sols);
+        // Different models in the slots.
+        let other = Scenario::from_groups("other", &[vec![5, 6]]);
+        let err = parse_solutions(&text, &other).unwrap_err();
+        assert!(err.to_string().contains("zoo model"), "{err}");
+    }
+
+    #[test]
+    fn corrupted_inputs_rejected() {
+        let (scenario, sols) = analyzed();
+        let text = serialize_solutions(&scenario, &sols);
+        for bad in [
+            "bogus header\nrest",
+            "puzzle-solution v1\nend\n",
+            &text.replace("mapping N", "mapping X"),
+            &text[..text.len() - 5], // truncated
+        ] {
+            assert!(parse_solutions(bad, &scenario).is_err(), "accepted: {bad:.60}");
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let (scenario, sols) = analyzed();
+        let dir = std::env::temp_dir().join("puzzle_sol_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.txt");
+        save_solutions(&path, &scenario, &sols).unwrap();
+        let loaded = load_solutions(&path, &scenario).unwrap();
+        assert_eq!(loaded.len(), sols.len());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,238 @@
+//! The two heuristic baselines of the evaluation (paper §6.1).
+//!
+//! * **NPU Only** — every model runs whole on the NPU ("highly optimized for
+//!   neural network inference and generally offers the best performance").
+//! * **Best Mapping** — a search-based heuristic: profile each model whole
+//!   on each processor, then search model→processor mappings for Pareto
+//!   points of a **profile-based estimate**. It accounts for which models
+//!   share a processor but performs **no partitioning**, no priority
+//!   exploration, no contention/fluctuation modeling — exactly the paper's
+//!   characterization (§6.1, §6.3).
+
+use crate::comm::CommModel;
+use crate::ga::{decode, fast_non_dominated_sort, Genome, NetworkGenes};
+use crate::perf::PerfModel;
+use crate::profiler::Profiler;
+use crate::scenario::Scenario;
+use crate::sim::{simulate, ExecutionPlan, GroupSpec, SimOptions};
+use crate::Processor;
+
+/// A baseline solution: plans ready for the simulator/runtime.
+#[derive(Debug, Clone)]
+pub struct BaselineSolution {
+    pub genome: Genome,
+    pub plans: Vec<ExecutionPlan>,
+    pub objectives: Vec<f64>,
+}
+
+fn eval_mapping(
+    scenario: &Scenario,
+    mapping: &[Processor],
+    profiler: &Profiler<'_>,
+    comm: &CommModel,
+    groups: &[GroupSpec],
+    sim_requests: usize,
+) -> BaselineSolution {
+    let mut genome = Genome::all_on(&scenario.networks, Processor::Npu);
+    for (i, net) in scenario.networks.iter().enumerate() {
+        genome.networks[i] = NetworkGenes::whole_on(net, mapping[i]);
+    }
+    let plans = decode(&scenario.networks, &genome, profiler, comm);
+    let opts = SimOptions { requests_per_group: sim_requests, ..Default::default() };
+    let result = simulate(&plans, groups, comm, &opts);
+    let mut objectives = Vec::with_capacity(groups.len() * 2);
+    for g in 0..groups.len() {
+        objectives.push(result.avg_makespan(g));
+        objectives.push(result.p90_makespan(g));
+    }
+    BaselineSolution { genome, plans, objectives }
+}
+
+fn group_specs(scenario: &Scenario, periods: &[f64]) -> Vec<GroupSpec> {
+    scenario
+        .groups
+        .iter()
+        .zip(periods)
+        .map(|(g, &p)| GroupSpec::periodic(g.members.clone(), p))
+        .collect()
+}
+
+/// NPU Only: all models whole on the NPU.
+pub fn npu_only(scenario: &Scenario, perf: &PerfModel, sim_requests: usize) -> BaselineSolution {
+    let comm = CommModel::paper_calibrated();
+    let profiler = Profiler::new(perf);
+    let periods = scenario.periods(1.0, perf);
+    let groups = group_specs(scenario, &periods);
+    let mapping = vec![Processor::Npu; scenario.networks.len()];
+    eval_mapping(scenario, &mapping, &profiler, &comm, &groups, sim_requests)
+}
+
+/// Profile-based makespan estimate for a mapping — Best Mapping's own view
+/// of the world. Per group: models on different processors overlap, models
+/// sharing a processor serialize, so the estimated group makespan is the
+/// largest per-processor sum of member model times. Cross-group contention,
+/// communication, and execution-time fluctuation are all ignored — exactly
+/// the blind spots the paper attributes to this baseline (§6.3: "relies
+/// solely on model profiling, neglecting potential contention for shared
+/// resources").
+fn estimate_mapping(
+    scenario: &Scenario,
+    mapping: &[Processor],
+    model_times: &[[f64; 3]],
+) -> Vec<f64> {
+    scenario
+        .groups
+        .iter()
+        .flat_map(|g| {
+            let mut load = [0.0f64; 3];
+            for &m in &g.members {
+                load[mapping[m].index()] += model_times[m][mapping[m].index()];
+            }
+            let makespan = load.iter().cloned().fold(0.0, f64::max);
+            // avg == p90 under the estimate (no queueing model).
+            [makespan, makespan]
+        })
+        .collect()
+}
+
+/// Best Mapping: exhaustive search over whole-model processor mappings,
+/// scored by the **profile-based estimate** above (NOT the simulator — the
+/// paper's baseline adjusts mappings "based on execution times" from
+/// profiling). The Pareto set under that estimate is then materialized into
+/// executable plans; its real performance is whatever the evaluation
+/// harness measures, contention and fluctuation included.
+pub fn best_mapping(
+    scenario: &Scenario,
+    perf: &PerfModel,
+    sim_requests: usize,
+) -> Vec<BaselineSolution> {
+    let comm = CommModel::paper_calibrated();
+    let profiler = Profiler::new(perf);
+    let periods = scenario.periods(1.0, perf);
+    let groups = group_specs(scenario, &periods);
+    let n = scenario.networks.len();
+
+    // Whole-model profile per processor (what the baseline measures).
+    let model_times: Vec<[f64; 3]> = scenario
+        .networks
+        .iter()
+        .map(|net| {
+            let all: Vec<crate::graph::LayerId> =
+                (0..net.num_layers()).map(crate::graph::LayerId).collect();
+            let mut t = [0.0f64; 3];
+            for p in Processor::ALL {
+                t[p.index()] = perf.best_config_for(net, &all, p).1;
+            }
+            t
+        })
+        .collect();
+
+    assert!(n <= 10, "exhaustive mapping search over 3^{n}");
+    let total = 3usize.pow(n as u32);
+    let mut mappings: Vec<Vec<Processor>> = Vec::with_capacity(total);
+    let mut estimates: Vec<Vec<f64>> = Vec::with_capacity(total);
+    for code in 0..total {
+        let mut c = code;
+        let mapping: Vec<Processor> = (0..n)
+            .map(|_| {
+                let p = Processor::from_index(c % 3);
+                c /= 3;
+                p
+            })
+            .collect();
+        estimates.push(estimate_mapping(scenario, &mapping, &model_times));
+        mappings.push(mapping);
+    }
+
+    // Pareto front under the baseline's own estimate.
+    let fronts = fast_non_dominated_sort(&estimates);
+    let mut front: Vec<usize> = fronts.first().cloned().unwrap_or_default();
+    // Deduplicate identical estimate vectors (symmetry: GPU/CPU swaps of
+    // idle processors produce equal estimates) and cap the set.
+    front.sort_by(|&a, &b| {
+        estimates[a]
+            .iter()
+            .sum::<f64>()
+            .partial_cmp(&estimates[b].iter().sum::<f64>())
+            .unwrap()
+    });
+    let mut seen: Vec<Vec<u64>> = Vec::new();
+    let mut chosen = Vec::new();
+    for &i in &front {
+        let key: Vec<u64> = estimates[i].iter().map(|v| v.to_bits()).collect();
+        if !seen.contains(&key) {
+            seen.push(key);
+            chosen.push(i);
+        }
+        if chosen.len() >= 8 {
+            break;
+        }
+    }
+
+    chosen
+        .into_iter()
+        .map(|i| eval_mapping(scenario, &mappings[i], &profiler, &comm, &groups, sim_requests))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::Scenario;
+
+    fn scen() -> Scenario {
+        Scenario::from_groups("b", &[vec![0, 4, 6]])
+    }
+
+    #[test]
+    fn npu_only_maps_everything_to_npu() {
+        let s = scen();
+        let pm = PerfModel::paper_calibrated();
+        let sol = npu_only(&s, &pm, 10);
+        for plan in &sol.plans {
+            assert_eq!(plan.tasks.len(), 1, "NPU Only must not partition");
+            assert_eq!(plan.tasks[0].processor, Processor::Npu);
+        }
+    }
+
+    #[test]
+    fn best_mapping_is_nonempty_and_unpartitioned() {
+        let s = scen();
+        let pm = PerfModel::paper_calibrated();
+        let front = best_mapping(&s, &pm, 10);
+        assert!(!front.is_empty() && front.len() <= 8);
+        // No partitioning: one task per model.
+        for sol in &front {
+            for plan in &sol.plans {
+                assert_eq!(plan.tasks.len(), 1);
+            }
+        }
+        // The front's best solution should spread load across processors
+        // (not everything on one processor) for this heavy scenario.
+        let procs: std::collections::HashSet<Processor> = front[0]
+            .plans
+            .iter()
+            .map(|p| p.tasks[0].processor)
+            .collect();
+        assert!(procs.len() >= 2, "best mapping put everything on {procs:?}");
+    }
+
+    #[test]
+    fn best_mapping_beats_npu_only_under_contention() {
+        // With three models contending, spreading across processors must
+        // achieve a lower or equal worst objective than NPU-only.
+        let s = scen();
+        let pm = PerfModel::paper_calibrated();
+        let npu = npu_only(&s, &pm, 10);
+        let front = best_mapping(&s, &pm, 10);
+        let best_avg = front
+            .iter()
+            .map(|sol| sol.objectives[0])
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            best_avg <= npu.objectives[0] + 1e-12,
+            "best mapping {best_avg} worse than npu-only {}",
+            npu.objectives[0]
+        );
+    }
+}

@@ -1,0 +1,121 @@
+//! Microbenchmarks backing the communication-cost model (paper §4.1).
+//!
+//! * [`rpc_microbenchmark`] — the marshalling probe: serialize + deserialize
+//!   payloads of varying sizes through an actual byte-copy round trip
+//!   (the mechanism ION-less Android RPC pays for), timing each size.
+//! * [`stream_bandwidth`] — a STREAM-style copy-bandwidth probe, the analog
+//!   of the paper's use of McCalpin's STREAM to find the S23U's ~40 GB/s.
+
+use std::time::Instant;
+
+/// One (payload size, measured seconds) observation.
+#[derive(Debug, Clone, Copy)]
+pub struct RpcSample {
+    pub bytes: usize,
+    pub seconds: f64,
+}
+
+/// Simulated RPC marshalling: length-prefix frame + payload copy out
+/// (marshal), then parse + copy back in (unmarshal). This is deliberately a
+/// real data movement, not a sleep — the measured cost scales with size the
+/// same way the paper's Fig 5 microbenchmark does.
+fn marshal_roundtrip(payload: &[u8], scratch: &mut Vec<u8>, out: &mut Vec<u8>) {
+    scratch.clear();
+    scratch.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    scratch.extend_from_slice(payload);
+    // "Unmarshal": validate the frame and copy the body out.
+    let len = u64::from_le_bytes(scratch[..8].try_into().unwrap()) as usize;
+    out.clear();
+    out.extend_from_slice(&scratch[8..8 + len]);
+}
+
+/// Run the RPC overhead microbenchmark over a log-spaced size sweep
+/// (default 1 KiB .. 32 MiB), `reps` repetitions per size, keeping the
+/// minimum (least-noise) observation, as microbenchmarks conventionally do.
+pub fn rpc_microbenchmark(sizes: &[usize], reps: usize) -> Vec<RpcSample> {
+    let max = sizes.iter().copied().max().unwrap_or(0);
+    let payload = vec![0xa5u8; max];
+    let mut scratch = Vec::with_capacity(max + 8);
+    let mut out = Vec::with_capacity(max);
+    let mut samples = Vec::with_capacity(sizes.len());
+    for &size in sizes {
+        // Warm-up to fault pages in.
+        marshal_roundtrip(&payload[..size], &mut scratch, &mut out);
+        let mut best = f64::INFINITY;
+        for _ in 0..reps.max(1) {
+            let t0 = Instant::now();
+            marshal_roundtrip(&payload[..size], &mut scratch, &mut out);
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        // Defeat dead-code elimination.
+        std::hint::black_box(&out);
+        samples.push(RpcSample { bytes: size, seconds: best });
+    }
+    samples
+}
+
+/// Default log-spaced sweep 1 KiB..32 MiB (doubling), matching Fig 5's range.
+pub fn default_size_sweep() -> Vec<usize> {
+    let mut sizes = Vec::new();
+    let mut s = 1024usize;
+    while s <= 32 << 20 {
+        sizes.push(s);
+        s *= 2;
+    }
+    sizes
+}
+
+/// STREAM-style copy bandwidth probe: large-array copy, bytes moved per
+/// second (counting read+write as 2x, as STREAM's Copy kernel does).
+pub fn stream_bandwidth(array_bytes: usize, reps: usize) -> f64 {
+    let n = array_bytes.max(1 << 20);
+    let src = vec![1.0f64; n / 8];
+    let mut dst = vec![0.0f64; n / 8];
+    // Warm-up.
+    dst.copy_from_slice(&src);
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        dst.copy_from_slice(&src);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    std::hint::black_box(&dst);
+    (2 * n) as f64 / best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn microbench_monotone_ish() {
+        // 4 KiB should marshal faster than 4 MiB; exact monotonicity is not
+        // guaranteed under noise, so compare endpoints with margin.
+        let samples = rpc_microbenchmark(&[4 * 1024, 4 * 1024 * 1024], 5);
+        assert!(samples[1].seconds > samples[0].seconds);
+    }
+
+    #[test]
+    fn sweep_covers_knee() {
+        let sweep = default_size_sweep();
+        assert!(sweep.contains(&(1 << 20)), "sweep must straddle the 1 MiB knee");
+        assert!(sweep.first().copied().unwrap() < 1 << 20);
+        assert!(sweep.last().copied().unwrap() > 1 << 20);
+    }
+
+    #[test]
+    fn bandwidth_positive_and_plausible() {
+        let bw = stream_bandwidth(8 << 20, 3);
+        // Any functioning host moves between 1 GB/s and 1 TB/s.
+        assert!(bw > 1e9 && bw < 1e12, "bandwidth {bw}");
+    }
+
+    #[test]
+    fn marshal_roundtrip_preserves_payload() {
+        let payload: Vec<u8> = (0..=255u8).collect();
+        let mut scratch = Vec::new();
+        let mut out = Vec::new();
+        marshal_roundtrip(&payload, &mut scratch, &mut out);
+        assert_eq!(out, payload);
+    }
+}

@@ -1,0 +1,141 @@
+//! Communication-cost modeling (paper §4.1, Fig 5).
+//!
+//! Cross-processor tensor transfer = **RPC overhead** (marshalling +
+//! unmarshalling, proportional to data size with a knee at 1 MiB) + **data
+//! transfer** bounded by main-memory bandwidth (~40 GB/s on the S23U per the
+//! STREAM benchmark).
+//!
+//! We reproduce both halves: [`microbench`] actually serializes buffers and
+//! measures host marshalling cost (and a STREAM-style bandwidth probe), and
+//! [`PiecewiseLinear`] fits the paper's two-segment regression to those
+//! samples. [`CommModel`] is the calibrated model the simulator and the
+//! Static Analyzer consume.
+
+pub mod microbench;
+mod regression;
+
+pub use microbench::{default_size_sweep, rpc_microbenchmark, stream_bandwidth, RpcSample};
+pub use regression::PiecewiseLinear;
+
+/// Knee between the two regression regions (paper: 1 MiB).
+pub const KNEE_BYTES: f64 = 1024.0 * 1024.0;
+
+/// Calibrated communication-cost model.
+///
+/// `cost(bytes) = rpc_overhead(bytes) + bytes / bandwidth`, with
+/// `rpc_overhead` the piecewise-linear fit of the marshalling microbenchmark.
+#[derive(Debug, Clone)]
+pub struct CommModel {
+    pub rpc: PiecewiseLinear,
+    /// Main-memory bandwidth in bytes/second.
+    pub bandwidth_bytes_per_s: f64,
+    /// Fixed per-call latency floor in seconds (queue + wakeup), present even
+    /// for tiny messages.
+    pub base_latency_s: f64,
+}
+
+impl CommModel {
+    /// The paper-calibrated model: knee at 1 MiB, ~40 GB/s memory bandwidth,
+    /// RPC overhead slopes chosen to reproduce Fig 5's shape (sub-millisecond
+    /// below the knee, growing steeply above it).
+    pub fn paper_calibrated() -> CommModel {
+        CommModel {
+            rpc: PiecewiseLinear {
+                knee: KNEE_BYTES,
+                // seconds = intercept + slope * bytes, per region.
+                below_intercept: 30e-6,          // 30 us fixed marshalling setup
+                below_slope: 120e-12,            // ~0.12 us per KiB
+                above_intercept: 80e-6,          // larger setup above the knee
+                above_slope: 260e-12,            // steeper marshalling slope
+            },
+            bandwidth_bytes_per_s: 40.0e9,
+            base_latency_s: 20e-6,
+        }
+    }
+
+    /// Fit a model from microbenchmark samples plus a measured bandwidth.
+    pub fn fit(samples: &[RpcSample], bandwidth_bytes_per_s: f64) -> CommModel {
+        CommModel {
+            rpc: PiecewiseLinear::fit(samples, KNEE_BYTES),
+            bandwidth_bytes_per_s,
+            base_latency_s: 20e-6,
+        }
+    }
+
+    /// Predicted cross-processor transfer cost, in seconds, for `bytes`.
+    /// Same-processor handoffs are free at this level (the runtime passes
+    /// buffers by reference; see `mem::SharedArena`).
+    pub fn transfer_cost(&self, bytes: usize, same_processor: bool) -> f64 {
+        if same_processor || bytes == 0 {
+            return 0.0;
+        }
+        self.base_latency_s + self.rpc.predict(bytes as f64) + bytes as f64 / self.bandwidth_bytes_per_s
+    }
+
+    /// Transfer cost when the zero-copy shared buffer is enabled: the
+    /// marshalling term disappears and only the base latency + a small
+    /// cache-coherence cost remains (paper §5.3).
+    pub fn transfer_cost_zero_copy(&self, bytes: usize, same_processor: bool) -> f64 {
+        if same_processor || bytes == 0 {
+            return 0.0;
+        }
+        // Coherence/ownership transfer still touches the data once.
+        self.base_latency_s + bytes as f64 / (2.0 * self.bandwidth_bytes_per_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_for_same_processor() {
+        let m = CommModel::paper_calibrated();
+        assert_eq!(m.transfer_cost(1 << 20, true), 0.0);
+        assert_eq!(m.transfer_cost(0, false), 0.0);
+    }
+
+    #[test]
+    fn monotone_in_size() {
+        let m = CommModel::paper_calibrated();
+        let mut prev = 0.0;
+        for kib in [1, 4, 16, 64, 256, 1024, 4096, 16384] {
+            let c = m.transfer_cost(kib * 1024, false);
+            assert!(c > prev, "cost not monotone at {kib} KiB");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn knee_changes_slope() {
+        let m = CommModel::paper_calibrated();
+        // Marginal cost per byte above the knee must exceed below it.
+        let below = m.rpc.predict(512.0 * 1024.0) - m.rpc.predict(256.0 * 1024.0);
+        let above = m.rpc.predict(4096.0 * 1024.0) - m.rpc.predict(3840.0 * 1024.0);
+        let per_byte_below = below / (256.0 * 1024.0);
+        let per_byte_above = above / (256.0 * 1024.0);
+        assert!(per_byte_above > per_byte_below);
+    }
+
+    #[test]
+    fn zero_copy_is_cheaper() {
+        let m = CommModel::paper_calibrated();
+        for kib in [8, 128, 2048, 16384] {
+            let b = kib * 1024;
+            assert!(
+                m.transfer_cost_zero_copy(b, false) < m.transfer_cost(b, false),
+                "zero-copy not cheaper at {kib} KiB"
+            );
+        }
+    }
+
+    #[test]
+    fn magnitude_sanity_vs_paper_fig5() {
+        // Fig 5 shows sub-ms RPC overhead below 1 MiB and a few ms at tens
+        // of MiB on the S23U.
+        let m = CommModel::paper_calibrated();
+        assert!(m.transfer_cost(64 * 1024, false) < 1e-3);
+        let big = m.transfer_cost(32 << 20, false);
+        assert!(big > 1e-3 && big < 50e-3, "32 MiB cost {big}");
+    }
+}

@@ -1,0 +1,153 @@
+//! Piecewise-linear regression for the RPC overhead (paper §4.1).
+//!
+//! The paper observes the size→overhead relationship differs below and above
+//! 1 MiB, and fits one linear segment per region. We do the same with
+//! ordinary least squares per region.
+
+use super::microbench::RpcSample;
+
+/// Two-segment linear model `seconds = intercept + slope * bytes`, split at
+/// `knee` bytes.
+#[derive(Debug, Clone)]
+pub struct PiecewiseLinear {
+    pub knee: f64,
+    pub below_intercept: f64,
+    pub below_slope: f64,
+    pub above_intercept: f64,
+    pub above_slope: f64,
+}
+
+impl PiecewiseLinear {
+    /// Ordinary least squares on each side of the knee. Falls back to a flat
+    /// fit when a region has <2 samples.
+    pub fn fit(samples: &[RpcSample], knee: f64) -> PiecewiseLinear {
+        let below: Vec<(f64, f64)> = samples
+            .iter()
+            .filter(|s| (s.bytes as f64) < knee)
+            .map(|s| (s.bytes as f64, s.seconds))
+            .collect();
+        let above: Vec<(f64, f64)> = samples
+            .iter()
+            .filter(|s| (s.bytes as f64) >= knee)
+            .map(|s| (s.bytes as f64, s.seconds))
+            .collect();
+        let (bi, bs) = ols(&below);
+        let (ai, as_) = ols(&above);
+        PiecewiseLinear {
+            knee,
+            below_intercept: bi,
+            below_slope: bs,
+            above_intercept: ai,
+            above_slope: as_,
+        }
+    }
+
+    /// Predicted RPC overhead (seconds) for a payload of `bytes`.
+    /// Negative predictions (possible from a noisy fit near zero) clamp to 0.
+    pub fn predict(&self, bytes: f64) -> f64 {
+        let v = if bytes < self.knee {
+            self.below_intercept + self.below_slope * bytes
+        } else {
+            self.above_intercept + self.above_slope * bytes
+        };
+        v.max(0.0)
+    }
+
+    /// Coefficient of determination (R²) of the fit over a sample set.
+    pub fn r_squared(&self, samples: &[RpcSample]) -> f64 {
+        if samples.is_empty() {
+            return 0.0;
+        }
+        let mean = samples.iter().map(|s| s.seconds).sum::<f64>() / samples.len() as f64;
+        let ss_tot: f64 = samples.iter().map(|s| (s.seconds - mean).powi(2)).sum();
+        let ss_res: f64 = samples
+            .iter()
+            .map(|s| (s.seconds - self.predict(s.bytes as f64)).powi(2))
+            .sum();
+        if ss_tot == 0.0 {
+            return 1.0;
+        }
+        1.0 - ss_res / ss_tot
+    }
+}
+
+/// Least-squares `y = a + b x`; degenerate inputs fall back to the mean.
+fn ols(points: &[(f64, f64)]) -> (f64, f64) {
+    let n = points.len() as f64;
+    if points.is_empty() {
+        return (0.0, 0.0);
+    }
+    if points.len() == 1 {
+        return (points[0].1, 0.0);
+    }
+    let sx: f64 = points.iter().map(|p| p.0).sum();
+    let sy: f64 = points.iter().map(|p| p.1).sum();
+    let sxx: f64 = points.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = points.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < f64::EPSILON {
+        return (sy / n, 0.0);
+    }
+    let b = (n * sxy - sx * sy) / denom;
+    let a = (sy - b * sx) / n;
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth(knee: f64) -> Vec<RpcSample> {
+        // Ground truth: below = 10us + 0.1ns/B, above = 50us + 0.3ns/B.
+        let mut out = Vec::new();
+        for i in 1..=40 {
+            let bytes = (i * 64 * 1024) as f64; // 64 KiB .. 2.5 MiB
+            let s = if bytes < knee {
+                10e-6 + 0.1e-9 * bytes
+            } else {
+                50e-6 + 0.3e-9 * bytes
+            };
+            out.push(RpcSample { bytes: bytes as usize, seconds: s });
+        }
+        out
+    }
+
+    #[test]
+    fn recovers_synthetic_coefficients() {
+        let knee = 1024.0 * 1024.0;
+        let fit = PiecewiseLinear::fit(&synth(knee), knee);
+        assert!((fit.below_slope - 0.1e-9).abs() < 1e-12, "below slope {}", fit.below_slope);
+        assert!((fit.above_slope - 0.3e-9).abs() < 1e-12, "above slope {}", fit.above_slope);
+        assert!((fit.below_intercept - 10e-6).abs() < 1e-7);
+        assert!((fit.above_intercept - 50e-6).abs() < 1e-7);
+    }
+
+    #[test]
+    fn r_squared_near_one_for_clean_data() {
+        let knee = 1024.0 * 1024.0;
+        let s = synth(knee);
+        let fit = PiecewiseLinear::fit(&s, knee);
+        assert!(fit.r_squared(&s) > 0.999);
+    }
+
+    #[test]
+    fn predict_clamps_negative() {
+        let pl = PiecewiseLinear {
+            knee: 100.0,
+            below_intercept: -1.0,
+            below_slope: 0.0,
+            above_intercept: 0.0,
+            above_slope: 0.0,
+        };
+        assert_eq!(pl.predict(10.0), 0.0);
+    }
+
+    #[test]
+    fn ols_degenerate_inputs() {
+        assert_eq!(ols(&[]), (0.0, 0.0));
+        assert_eq!(ols(&[(5.0, 3.0)]), (3.0, 0.0));
+        let (a, b) = ols(&[(2.0, 7.0), (2.0, 9.0)]); // vertical line
+        assert_eq!(b, 0.0);
+        assert!((a - 8.0).abs() < 1e-12);
+    }
+}

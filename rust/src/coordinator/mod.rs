@@ -1,0 +1,453 @@
+//! The Coordinator (paper §5.1–5.2, Fig 9): external interface of the
+//! Runtime. It queues client inference requests, finds schedulable subgraphs
+//! whose data dependencies are resolved, dispatches tasks to the per-
+//! processor Workers (in priority order — the pseudo-preemption mechanism),
+//! collects completions, and returns results when every subgraph of a
+//! request has finished.
+
+mod request;
+
+pub use request::{CompletionMsg, GroupRequest, RequestId, TaskMsg, TensorInput};
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use std::sync::mpsc::{Receiver, Sender};
+
+use crate::engine::Engine;
+use crate::graph::{Network, Partition, Subgraph, SubgraphId};
+use crate::mem::{SharedArena, TensorPool};
+use crate::worker::Worker;
+use crate::{DataType, ExecConfig};
+
+/// A registered solution for one network: its partition and per-subgraph
+/// exec configs (from the Static Analyzer).
+#[derive(Clone)]
+pub struct NetworkSolution {
+    pub network: Arc<Network>,
+    pub partition: Arc<Partition>,
+    pub configs: Vec<ExecConfig>,
+    pub priority: usize,
+}
+
+impl NetworkSolution {
+    pub fn subgraph(&self, id: SubgraphId) -> &Subgraph {
+        &self.partition.subgraphs[id.0]
+    }
+}
+
+/// Options mirroring the runtime ablation (paper §5.3).
+#[derive(Debug, Clone)]
+pub struct RuntimeOptions {
+    pub tensor_pool: bool,
+    pub zero_copy: bool,
+}
+
+impl Default for RuntimeOptions {
+    fn default() -> Self {
+        RuntimeOptions { tensor_pool: true, zero_copy: true }
+    }
+}
+
+/// Per-request live state.
+struct LiveRequest {
+    /// Remaining dependency count per subgraph.
+    pending_deps: Vec<usize>,
+    /// Completed subgraphs.
+    done: Vec<bool>,
+    remaining: usize,
+}
+
+/// Record of one served group request (all member networks done).
+#[derive(Debug, Clone)]
+pub struct ServedRequest {
+    pub group: usize,
+    pub request: u64,
+    /// Makespan: max finish over member networks − submission, seconds.
+    pub makespan: f64,
+}
+
+/// The Coordinator. Owns the workers and the dispatch loop state.
+pub struct Coordinator {
+    solutions: Vec<NetworkSolution>,
+    workers: Vec<Worker>,
+    completion_rx: Receiver<CompletionMsg>,
+    completion_tx: Sender<CompletionMsg>,
+    pool: TensorPool,
+    pub arena: SharedArena,
+    options: RuntimeOptions,
+    /// request key = (group, request_seq, network) -> live state.
+    live: HashMap<(usize, u64, usize), LiveRequest>,
+    /// group request -> (outstanding networks, submit instant, last finish).
+    group_progress: HashMap<(usize, u64), (usize, Instant, Option<Instant>)>,
+    /// Cross-subgraph tensors in flight: (group, seq, network, src layer) ->
+    /// published slice. Entries are dropped when the request completes.
+    tensors: HashMap<(usize, u64, usize, usize), crate::mem::SharedSlice>,
+    served: Vec<ServedRequest>,
+    next_request: u64,
+}
+
+impl Coordinator {
+    /// Initialize the runtime: register solutions, spawn workers
+    /// (paper §5.2 "Initialization").
+    pub fn new(
+        solutions: Vec<NetworkSolution>,
+        engine: Arc<dyn Engine>,
+        options: RuntimeOptions,
+    ) -> Coordinator {
+        let (completion_tx, completion_rx) = std::sync::mpsc::channel();
+        let pool = TensorPool::new(options.tensor_pool);
+        // Pre-allocate pool buffers for every cut-edge tensor (paper:
+        // "initially pre-allocate buffers").
+        if options.tensor_pool {
+            for sol in &solutions {
+                for &e in &sol.partition.cut_edges {
+                    let edge = sol.network.edge(e);
+                    let bytes = sol.network.layer(edge.src).out_bytes(DataType::Fp16);
+                    pool.preallocate(bytes, 2);
+                }
+            }
+        }
+        let workers = crate::worker::spawn_all(&engine, &pool, &completion_tx);
+        let arena = SharedArena::new(options.zero_copy);
+        Coordinator {
+            solutions,
+            workers,
+            completion_rx,
+            completion_tx,
+            pool,
+            arena,
+            options,
+            live: HashMap::new(),
+            group_progress: HashMap::new(),
+            tensors: HashMap::new(),
+            served: Vec::new(),
+            next_request: 0,
+        }
+    }
+
+    /// Submit one synchronized group request: every network in `members`
+    /// gets an inference request with the same input timestamp (paper's
+    /// model-group semantics). Returns the request sequence number.
+    pub fn submit_group(&mut self, group: usize, members: &[usize]) -> u64 {
+        let seq = self.next_request;
+        self.next_request += 1;
+        let now = Instant::now();
+        self.group_progress.insert((group, seq), (members.len(), now, None));
+        for &net_idx in members {
+            let sol = self.solutions[net_idx].clone();
+            let n_sg = sol.partition.subgraphs.len();
+            let mut pending: Vec<usize> = vec![0; n_sg];
+            for sg in &sol.partition.subgraphs {
+                pending[sg.id.0] = sg.deps.len();
+            }
+            let live = LiveRequest {
+                pending_deps: pending,
+                done: vec![false; n_sg],
+                remaining: n_sg,
+            };
+            self.live.insert((group, seq, net_idx), live);
+            // Dispatch all root subgraphs immediately (paper Fig 9 step ③).
+            for sg in &sol.partition.subgraphs {
+                if sg.deps.is_empty() {
+                    self.dispatch(&sol, group, seq, net_idx, sg.id);
+                }
+            }
+        }
+        seq
+    }
+
+    fn dispatch(&self, sol: &NetworkSolution, group: usize, seq: u64, net_idx: usize, sg: SubgraphId) {
+        let subgraph = Arc::new(sol.subgraph(sg).clone());
+        let config = sol.configs[sg.0];
+        // Gather input tensors in the engine's consumption order: for each
+        // member layer (subgraph order), each predecessor outside the
+        // subgraph contributes one external input; root layers with no
+        // predecessors consume the network input.
+        let net = &sol.network;
+        let mut inputs: Vec<TensorInput> = Vec::new();
+        for &l in &subgraph.layers {
+            let preds = net.predecessors(l);
+            if preds.is_empty() {
+                // Synthesize the network input (a camera frame stand-in).
+                let shape = crate::engine::input_shape(net, l, None);
+                let elements: usize = shape.iter().product();
+                let (bytes, scale) =
+                    crate::quant::quantize(&vec![0.1f32; elements], DataType::Fp16);
+                inputs.push(TensorInput::from_vec(bytes, DataType::Fp16, scale));
+                continue;
+            }
+            for &pred in preds {
+                if subgraph.contains(pred) {
+                    continue; // internal edge; the engine chains it itself
+                }
+                let key = (group, seq, net_idx, pred.0);
+                let slice = match self.tensors.get(&key) {
+                    Some(s) => {
+                        if self.options.zero_copy {
+                            s.clone() // view moves, no bytes
+                        } else {
+                            // Unmarshal: a real copy through the arena.
+                            crate::mem::SharedSlice::from_vec(self.arena.consume(s))
+                        }
+                    }
+                    None => {
+                        // Producer output unavailable (time-only engine that
+                        // reported no tensors): synthesize a zero buffer of
+                        // the right size so staging costs stay faithful.
+                        let bytes = net.layer(pred).out_bytes(DataType::Fp16);
+                        crate::mem::SharedSlice::from_vec(vec![0u8; bytes])
+                    }
+                };
+                inputs.push(TensorInput { slice, dtype: DataType::Fp16, scale: 1.0 });
+            }
+        }
+        let task = TaskMsg {
+            request: pack_request(group, seq, net_idx),
+            network: sol.network.clone(),
+            network_idx: net_idx,
+            subgraph,
+            config,
+            inputs,
+        };
+        self.workers[config.processor.index()].submit(task);
+    }
+
+    /// Pump completions until all outstanding requests are served or the
+    /// timeout elapses. Returns the number of completions processed.
+    pub fn pump(&mut self, timeout: std::time::Duration) -> usize {
+        let deadline = Instant::now() + timeout;
+        let mut processed = 0;
+        while !self.live.is_empty() && Instant::now() < deadline {
+            match self.completion_rx.recv_timeout(std::time::Duration::from_millis(20)) {
+                Ok(msg) => {
+                    self.handle_completion(msg);
+                    processed += 1;
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        processed
+    }
+
+    fn handle_completion(&mut self, msg: CompletionMsg) {
+        let (group, seq, net_idx) = unpack_request(msg.request);
+        let now = Instant::now();
+        let Some(live) = self.live.get_mut(&(group, seq, net_idx)) else {
+            return;
+        };
+        if live.done[msg.subgraph.0] {
+            return; // duplicate (should not happen; defensive)
+        }
+        live.done[msg.subgraph.0] = true;
+        live.remaining -= 1;
+
+        let sol = self.solutions[net_idx].clone();
+
+        // Publish this subgraph's boundary tensors into the shared arena
+        // (Fig 9 ⑤): real engine outputs when available (PjrtEngine), or
+        // synthesized buffers of the correct size (SimEngine). Zero-copy
+        // publishes views; copying mode pays real marshalling memcpy.
+        {
+            let completed = sol.subgraph(msg.subgraph);
+            // Engine outputs come in subgraph-layer order for boundary
+            // layers (network outputs or layers with external consumers) —
+            // this filter must match PjrtEngine's is_boundary rule.
+            let sink_layers: Vec<usize> = completed
+                .layers
+                .iter()
+                .filter(|l| {
+                    let succs = sol.network.successors(**l);
+                    succs.is_empty() || succs.iter().any(|s| !completed.contains(*s))
+                })
+                .map(|l| l.0)
+                .collect();
+            for (i, &layer) in sink_layers.iter().enumerate() {
+                // Only keep tensors some other subgraph will consume.
+                let consumed_elsewhere = sol
+                    .network
+                    .successors(crate::graph::LayerId(layer))
+                    .iter()
+                    .any(|s| sol.partition.owner_of(*s) != msg.subgraph);
+                if !consumed_elsewhere {
+                    continue;
+                }
+                let payload = match msg.outputs.get(i) {
+                    Some(t) if !t.is_empty() => crate::quant::quantize(t, DataType::Fp16).0,
+                    _ => vec![0u8; sol.network.layer(crate::graph::LayerId(layer)).out_bytes(DataType::Fp16)],
+                };
+                let slice = self.arena.publish(payload);
+                self.tensors.insert((group, seq, net_idx, layer), slice);
+            }
+        }
+
+        // Resolve dependents; dispatch the newly schedulable (Fig 9 ② → ③).
+        let mut to_dispatch: Vec<SubgraphId> = Vec::new();
+        for sg in &sol.partition.subgraphs {
+            if sg.deps.contains(&msg.subgraph) {
+                let live = self.live.get_mut(&(group, seq, net_idx)).unwrap();
+                live.pending_deps[sg.id.0] -= 1;
+                if live.pending_deps[sg.id.0] == 0 {
+                    to_dispatch.push(sg.id);
+                }
+            }
+        }
+        for &sg in &to_dispatch {
+            self.dispatch(&sol, group, seq, net_idx, sg);
+        }
+
+        let live = self.live.get_mut(&(group, seq, net_idx)).unwrap();
+        if live.remaining == 0 {
+            self.live.remove(&(group, seq, net_idx));
+            // Return this request's in-flight tensors (pool/arena reuse).
+            self.tensors.retain(|k, _| !(k.0 == group && k.1 == seq && k.2 == net_idx));
+            // Group bookkeeping: when the last member network finishes,
+            // record the group makespan (paper §6.2: max Tf − min Ts).
+            let entry = self.group_progress.get_mut(&(group, seq)).unwrap();
+            entry.0 -= 1;
+            entry.2 = Some(entry.2.map_or(now, |f| f.max(now)));
+            if entry.0 == 0 {
+                let (_, start, finish) = self.group_progress.remove(&(group, seq)).unwrap();
+                self.served.push(ServedRequest {
+                    group,
+                    request: seq,
+                    makespan: finish.unwrap().duration_since(start).as_secs_f64(),
+                });
+            }
+        }
+    }
+
+    /// Served request records so far.
+    pub fn served(&self) -> &[ServedRequest] {
+        &self.served
+    }
+
+    /// Outstanding (unfinished) network-requests.
+    pub fn outstanding(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Tensor-pool statistics (Table 5 columns).
+    pub fn pool_stats(&self) -> (f64, u64, f64, f64) {
+        self.pool.stats().snapshot()
+    }
+
+    /// Shut workers down and join their threads.
+    pub fn shutdown(self) {
+        for w in self.workers {
+            w.shutdown();
+        }
+        drop(self.completion_tx);
+    }
+}
+
+/// Pack (group, seq, network) into the u64 request tag carried by tasks.
+fn pack_request(group: usize, seq: u64, network: usize) -> u64 {
+    ((group as u64) << 48) | ((network as u64) << 40) | (seq & 0xff_ffff_ffff)
+}
+
+fn unpack_request(tag: u64) -> (usize, u64, usize) {
+    (
+        (tag >> 48) as usize,
+        tag & 0xff_ffff_ffff,
+        ((tag >> 40) & 0xff) as usize,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::SimEngine;
+    use crate::ga::decode_network;
+    use crate::graph::Network;
+    use crate::models::build_model;
+    use crate::perf::PerfModel;
+    use crate::Processor;
+
+    fn solution_for(net: Network, priority: usize, cuts: Option<Vec<bool>>) -> NetworkSolution {
+        let cuts = cuts.unwrap_or_else(|| vec![false; net.num_edges()]);
+        let genes = crate::ga::NetworkGenes {
+            cuts,
+            mapping: vec![Processor::Npu; net.num_layers()],
+        };
+        let part = decode_network(&net, &genes);
+        let configs = part
+            .subgraphs
+            .iter()
+            .map(|sg| ExecConfig::default_for(sg.processor))
+            .collect();
+        NetworkSolution {
+            network: Arc::new(net),
+            partition: Arc::new(part),
+            configs,
+            priority,
+        }
+    }
+
+    fn sim_coordinator(solutions: Vec<NetworkSolution>, opts: RuntimeOptions) -> Coordinator {
+        let pm = Arc::new(PerfModel::paper_calibrated());
+        let engine: Arc<dyn Engine> = Arc::new(SimEngine::new(pm, 0.0, false, 7));
+        Coordinator::new(solutions, engine, opts)
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let sol = solution_for(build_model(0, 0), 0, None);
+        let mut coord = sim_coordinator(vec![sol], RuntimeOptions::default());
+        coord.submit_group(0, &[0]);
+        coord.pump(std::time::Duration::from_secs(5));
+        assert_eq!(coord.served().len(), 1);
+        assert_eq!(coord.outstanding(), 0);
+        assert!(coord.served()[0].makespan > 0.0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn partitioned_request_respects_dependencies() {
+        // Cut the first edge: at least two subgraphs in sequence.
+        let net = build_model(0, 1);
+        let mut cuts = vec![false; net.num_edges()];
+        cuts[0] = true;
+        let sol = solution_for(net, 0, Some(cuts));
+        assert!(sol.partition.subgraphs.len() >= 2);
+        let mut coord = sim_coordinator(vec![sol], RuntimeOptions::default());
+        coord.submit_group(0, &[0]);
+        coord.pump(std::time::Duration::from_secs(5));
+        assert_eq!(coord.served().len(), 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn group_makespan_spans_all_members() {
+        let sols = vec![
+            solution_for(build_model(0, 0), 0, None),
+            solution_for(build_model(1, 6), 1, None), // heavier
+        ];
+        let mut coord = sim_coordinator(sols, RuntimeOptions::default());
+        coord.submit_group(0, &[0, 1]);
+        coord.pump(std::time::Duration::from_secs(10));
+        assert_eq!(coord.served().len(), 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn multiple_requests_all_served() {
+        let sol = solution_for(build_model(0, 0), 0, None);
+        let mut coord = sim_coordinator(vec![sol], RuntimeOptions::default());
+        for _ in 0..5 {
+            coord.submit_group(0, &[0]);
+        }
+        coord.pump(std::time::Duration::from_secs(10));
+        assert_eq!(coord.served().len(), 5);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn request_tag_roundtrip() {
+        for (g, s, n) in [(0usize, 0u64, 0usize), (1, 12345, 5), (3, 999_999, 8)] {
+            assert_eq!(unpack_request(pack_request(g, s, n)), (g, s, n));
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! Request/task/completion message types flowing between the Coordinator
+//! and the Workers (paper Fig 9).
+
+use std::sync::Arc;
+
+use crate::graph::{Network, Subgraph, SubgraphId};
+use crate::{DataType, ExecConfig};
+
+/// Identifies one network's inference inside a group request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RequestId {
+    pub group: usize,
+    pub seq: u64,
+    pub network: usize,
+}
+
+/// A client-visible group request (all networks fed by the same input).
+#[derive(Debug, Clone)]
+pub struct GroupRequest {
+    pub group: usize,
+    pub members: Vec<usize>,
+}
+
+/// An input tensor handed to a worker (possibly needing dtype conversion on
+/// the worker's quant thread). Carried as a [`SharedSlice`] so the zero-copy
+/// path moves a view, never bytes.
+#[derive(Clone)]
+pub struct TensorInput {
+    pub slice: crate::mem::SharedSlice,
+    pub dtype: DataType,
+    pub scale: f32,
+}
+
+impl TensorInput {
+    pub fn from_vec(bytes: Vec<u8>, dtype: DataType, scale: f32) -> TensorInput {
+        TensorInput { slice: crate::mem::SharedSlice::from_vec(bytes), dtype, scale }
+    }
+}
+
+/// A subgraph execution task dispatched to a worker queue.
+pub struct TaskMsg {
+    /// Packed (group, seq, network) tag.
+    pub request: u64,
+    pub network: Arc<Network>,
+    pub network_idx: usize,
+    pub subgraph: Arc<Subgraph>,
+    pub config: ExecConfig,
+    pub inputs: Vec<TensorInput>,
+}
+
+/// Worker → coordinator completion notification.
+pub struct CompletionMsg {
+    pub request: u64,
+    pub network: usize,
+    pub subgraph: SubgraphId,
+    /// Engine-reported execution duration, seconds.
+    pub elapsed: f64,
+    pub outputs: Vec<Vec<f32>>,
+    pub error: Option<String>,
+}

@@ -1,0 +1,328 @@
+//! Engine abstraction (paper §5.1): "a thin abstraction layer over DL
+//! runtime frameworks … providing a unified interface that hides the details
+//! of DL runtime frameworks".
+//!
+//! Two engines ship:
+//! * [`SimEngine`] — the calibrated simulated device: spends the profiled
+//!   duration (scaled by a configurable time factor so scenarios replay fast)
+//!   with processor-dependent execution noise. Used by the Runtime Evaluator
+//!   and the serving experiments.
+//! * [`PjrtEngine`] — real execution: runs the model's AOT HLO artifacts on
+//!   the PJRT CPU client (layer chains per subgraph). Used by the e2e
+//!   example and hardware-mode tests.
+//!
+//! New backends (paper: QNN, ORT, TVM) slot in by implementing [`Engine`].
+
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+use std::sync::Mutex;
+
+use crate::graph::{LayerId, Network, Subgraph};
+use crate::perf::PerfModel;
+use crate::runtime::{layer_artifact, PjrtRuntime};
+use crate::ExecConfig;
+
+/// A unit of engine work: one subgraph of one network, with input tensors.
+pub struct EngineTask<'a> {
+    pub network: &'a Network,
+    pub subgraph: &'a Subgraph,
+    pub config: ExecConfig,
+    /// Flat f32 input tensors (one per network input feeding this subgraph;
+    /// engines that only model time may ignore these).
+    pub inputs: Vec<Vec<f32>>,
+}
+
+/// Result of one engine execution.
+pub struct EngineOutput {
+    /// Flat f32 outputs (empty for time-only engines).
+    pub tensors: Vec<Vec<f32>>,
+    /// Wall-clock duration of the execution, seconds (unscaled).
+    pub elapsed: f64,
+}
+
+/// The unified engine interface.
+pub trait Engine: Send + Sync {
+    /// Execute a subgraph task synchronously on the calling worker thread.
+    fn execute(&self, task: &EngineTask<'_>) -> Result<EngineOutput>;
+
+    /// Engine name for logs/metrics.
+    fn name(&self) -> &str;
+}
+
+/// Simulated engine: consumes simulated time according to the calibrated
+/// performance model. `time_scale` compresses simulated seconds into wall
+/// seconds (0.0 = don't sleep at all, just account).
+pub struct SimEngine {
+    perf: Arc<PerfModel>,
+    pub time_scale: f64,
+    /// Noise applied per execution (device fluctuation); deterministic rng.
+    rng: Mutex<Rng>,
+    noisy: bool,
+    /// Accumulated simulated busy time, ns.
+    sim_busy_ns: AtomicU64,
+}
+
+impl SimEngine {
+    pub fn new(perf: Arc<PerfModel>, time_scale: f64, noisy: bool, seed: u64) -> SimEngine {
+        SimEngine {
+            perf,
+            time_scale,
+            rng: Mutex::new(Rng::seed_from_u64(seed)),
+            noisy,
+            sim_busy_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Total simulated busy seconds this engine has executed.
+    pub fn simulated_busy(&self) -> f64 {
+        self.sim_busy_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+}
+
+impl Engine for SimEngine {
+    fn execute(&self, task: &EngineTask<'_>) -> Result<EngineOutput> {
+        let nominal = self
+            .perf
+            .subgraph_time(task.network, &task.subgraph.layers, task.config);
+        let duration = if self.noisy {
+            let mut rng = self.rng.lock().unwrap();
+            self.perf.sample(nominal, task.config.processor, &mut rng)
+        } else {
+            nominal
+        };
+        self.sim_busy_ns
+            .fetch_add((duration * 1e9) as u64, Ordering::Relaxed);
+        if self.time_scale > 0.0 {
+            let wall = duration * self.time_scale;
+            // Hybrid sleep: OS sleep for the bulk, spin for the tail, so the
+            // scaled schedule stays faithful at sub-millisecond scale.
+            let t0 = Instant::now();
+            if wall > 200e-6 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(wall - 100e-6));
+            }
+            while t0.elapsed().as_secs_f64() < wall {
+                std::hint::spin_loop();
+            }
+        }
+        Ok(EngineOutput { tensors: Vec::new(), elapsed: duration })
+    }
+
+    fn name(&self) -> &str {
+        "sim"
+    }
+}
+
+/// Real-execution engine: runs each layer of the subgraph through its AOT
+/// HLO artifact on the PJRT CPU client, chaining outputs to inputs.
+///
+/// Join layers (add/concat) consume multiple predecessor tensors; the
+/// artifact for each layer was lowered with the right arity by `aot.py`.
+/// Thread-safety: the `xla` crate's client/executable handles are `Rc`-based
+/// and not `Send`. All PJRT state therefore lives behind one mutex and every
+/// call — load, compile, execute — happens while holding it, so `Rc`
+/// refcounts are only ever touched by one thread at a time and no handle
+/// escapes the lock. That makes the `unsafe impl Send + Sync` below sound.
+pub struct PjrtEngine {
+    runtime: Mutex<PjrtRuntime>,
+}
+
+unsafe impl Send for PjrtEngine {}
+unsafe impl Sync for PjrtEngine {}
+
+impl PjrtEngine {
+    pub fn new(runtime: PjrtRuntime) -> PjrtEngine {
+        PjrtEngine { runtime: Mutex::new(runtime) }
+    }
+
+    /// Pre-compile all layer artifacts of a network (done at registration,
+    /// paper §5.2 "Workers load the model libraries embedded in the
+    /// solution").
+    pub fn preload(&self, net: &Network) -> Result<()> {
+        let runtime = self.runtime.lock().unwrap();
+        for l in 0..net.num_layers() {
+            runtime.load(&layer_artifact(&net.name, l))?;
+        }
+        Ok(())
+    }
+
+    /// Number of compiled executables held.
+    pub fn cached_modules(&self) -> usize {
+        self.runtime.lock().unwrap().cached_modules()
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn execute(&self, task: &EngineTask<'_>) -> Result<EngineOutput> {
+        let t0 = Instant::now();
+        let runtime = self.runtime.lock().unwrap();
+        let net = task.network;
+        // Tensor store: layer id -> produced tensor, seeded with subgraph
+        // inputs in predecessor order.
+        let mut produced: std::collections::HashMap<usize, Vec<f32>> = std::collections::HashMap::new();
+        let mut ext_inputs = task.inputs.iter();
+        let mut outputs = Vec::new();
+        for &l in &task.subgraph.layers {
+            let module = runtime.load(&layer_artifact(&net.name, l.0))?;
+            let preds = net.predecessors(l);
+            // Gather inputs: internal predecessors from `produced`,
+            // external ones from the task's input list.
+            let mut in_tensors: Vec<Vec<f32>> = Vec::with_capacity(preds.len().max(1));
+            if preds.is_empty() {
+                let ext = ext_inputs
+                    .next()
+                    .cloned()
+                    .unwrap_or_else(|| default_input(net, l));
+                in_tensors.push(ext);
+            } else {
+                for &p in preds {
+                    if let Some(t) = produced.get(&p.0) {
+                        in_tensors.push(t.clone());
+                    } else {
+                        let ext = ext_inputs
+                            .next()
+                            .cloned()
+                            .unwrap_or_else(|| default_pred_input(net, p));
+                        in_tensors.push(ext);
+                    }
+                }
+            }
+            let shaped: Vec<(&[f32], Vec<usize>)> = in_tensors
+                .iter()
+                .enumerate()
+                .map(|(i, t)| {
+                    let shape = input_shape(net, l, preds.get(i).copied());
+                    (t.as_slice(), shape)
+                })
+                .collect();
+            let refs: Vec<(&[f32], &[usize])> =
+                shaped.iter().map(|(d, s)| (*d, s.as_slice())).collect();
+            let mut out = module.run_f32(&refs)?;
+            let tensor = out.remove(0);
+            // Boundary layer: a network output, or consumed by another
+            // subgraph (even if also consumed internally).
+            let succs = net.successors(l);
+            let is_boundary =
+                succs.is_empty() || succs.iter().any(|s| !task.subgraph.contains(*s));
+            if is_boundary {
+                outputs.push(tensor.clone());
+            }
+            produced.insert(l.0, tensor);
+        }
+        Ok(EngineOutput { tensors: outputs, elapsed: t0.elapsed().as_secs_f64() })
+    }
+
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+}
+
+/// Input tensor shape for layer `l` coming from predecessor `p` (or the
+/// network input when `p` is None): NHWC with N=1.
+pub fn input_shape(net: &Network, l: LayerId, p: Option<LayerId>) -> Vec<usize> {
+    match p {
+        Some(pred) => {
+            let s = net.layer(pred).out_shape;
+            vec![1, s.h, s.w, s.c]
+        }
+        None => {
+            // Network input: infer from the layer's declared input channels
+            // and its output spatial size × stride.
+            let layer = net.layer(l);
+            let (h, w) = match layer.kind {
+                crate::graph::LayerKind::Conv { stride, .. }
+                | crate::graph::LayerKind::DepthwiseConv { stride, .. } => {
+                    (layer.out_shape.h * stride, layer.out_shape.w * stride)
+                }
+                crate::graph::LayerKind::Pool => (layer.out_shape.h * 2, layer.out_shape.w * 2),
+                crate::graph::LayerKind::Upsample => (layer.out_shape.h / 2, layer.out_shape.w / 2),
+                _ => (layer.out_shape.h, layer.out_shape.w),
+            };
+            vec![1, h, w, layer.in_channels]
+        }
+    }
+}
+
+fn default_input(net: &Network, l: LayerId) -> Vec<f32> {
+    let s = input_shape(net, l, None);
+    vec![0.1f32; s.iter().product()]
+}
+
+fn default_pred_input(net: &Network, p: LayerId) -> Vec<f32> {
+    let s = net.layer(p).out_shape;
+    vec![0.1f32; s.elements()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::partition;
+    use crate::models::build_model;
+    use crate::{Backend, DataType, Processor};
+
+    fn npu_cfg() -> ExecConfig {
+        ExecConfig::new(Processor::Npu, Backend::Qnn, DataType::Fp16)
+    }
+
+    #[test]
+    fn sim_engine_accounts_time() {
+        let pm = Arc::new(PerfModel::paper_calibrated());
+        let engine = SimEngine::new(pm.clone(), 0.0, false, 1);
+        let net = build_model(0, 0);
+        let part = partition(&net, &vec![false; net.num_edges()], &vec![Processor::Npu; net.num_layers()]);
+        let task = EngineTask {
+            network: &net,
+            subgraph: &part.subgraphs[0],
+            config: npu_cfg(),
+            inputs: vec![],
+        };
+        let out = engine.execute(&task).unwrap();
+        let expected = pm.subgraph_time(&net, &part.subgraphs[0].layers, npu_cfg());
+        assert!((out.elapsed - expected).abs() < 1e-12);
+        assert!((engine.simulated_busy() - expected).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sim_engine_noise_varies_but_deterministic_per_seed() {
+        let pm = Arc::new(PerfModel::paper_calibrated());
+        let net = build_model(0, 1);
+        let part = partition(&net, &vec![false; net.num_edges()], &vec![Processor::Cpu; net.num_layers()]);
+        let run = |seed: u64| -> Vec<f64> {
+            let engine = SimEngine::new(pm.clone(), 0.0, true, seed);
+            (0..5)
+                .map(|_| {
+                    let task = EngineTask {
+                        network: &net,
+                        subgraph: &part.subgraphs[0],
+                        config: ExecConfig::new(Processor::Cpu, Backend::Xnnpack, DataType::Fp32),
+                        inputs: vec![],
+                    };
+                    engine.execute(&task).unwrap().elapsed
+                })
+                .collect()
+        };
+        let a = run(7);
+        let b = run(7);
+        let c = run(8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        // Noise actually varies across calls.
+        assert!(a.windows(2).any(|w| (w[0] - w[1]).abs() > 1e-9));
+    }
+
+    #[test]
+    fn sim_engine_time_scale_sleeps() {
+        let pm = Arc::new(PerfModel::paper_calibrated());
+        // face_det on NPU is 0.3 ms nominal; at scale 10 it must take ≥3 ms wall.
+        let engine = SimEngine::new(pm, 10.0, false, 1);
+        let net = build_model(0, 0);
+        let part = partition(&net, &vec![false; net.num_edges()], &vec![Processor::Npu; net.num_layers()]);
+        let task = EngineTask { network: &net, subgraph: &part.subgraphs[0], config: npu_cfg(), inputs: vec![] };
+        let t0 = Instant::now();
+        engine.execute(&task).unwrap();
+        assert!(t0.elapsed().as_secs_f64() >= 0.5 * 10.0 * 0.3e-3);
+    }
+}

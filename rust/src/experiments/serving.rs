@@ -1,0 +1,328 @@
+//! Serving experiments: Figures 12–16 and the headline request-frequency
+//! ratios (paper §6.3–6.4).
+
+use crate::analyzer::{GaConfig, StaticAnalyzer};
+use crate::baselines;
+use crate::metrics::mean_sd;
+use crate::perf::PerfModel;
+use crate::scenario::{multi_group_scenarios, scenario10_analog, single_group_scenarios, Scenario};
+use crate::sim::ExecutionPlan;
+
+use super::{saturation_of, score_at_alpha};
+
+/// Per-scenario saturation multipliers for the three methods.
+#[derive(Debug, Clone)]
+pub struct SaturationRow {
+    pub scenario: String,
+    pub puzzle: Option<f64>,
+    pub best_mapping: Option<f64>,
+    pub npu_only: Option<f64>,
+}
+
+/// Budget knobs for the serving experiments (the full paper protocol is
+/// expensive; benches use the reduced budget).
+#[derive(Debug, Clone, Copy)]
+pub struct ServingBudget {
+    pub ga: GaSize,
+    pub sim_requests: usize,
+    pub scenarios: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub enum GaSize {
+    Quick,
+    Full,
+}
+
+impl ServingBudget {
+    pub fn full() -> Self {
+        ServingBudget { ga: GaSize::Full, sim_requests: 30, scenarios: 10 }
+    }
+
+    pub fn quick() -> Self {
+        ServingBudget { ga: GaSize::Quick, sim_requests: 12, scenarios: 3 }
+    }
+
+    fn ga_config(&self, seed: u64) -> GaConfig {
+        match self.ga {
+            GaSize::Quick => GaConfig::quick(seed),
+            GaSize::Full => GaConfig { seed, ..Default::default() },
+        }
+    }
+}
+
+/// Convenience wrapper for examples: solve with a quick budget at a given
+/// sim-request count and seed.
+pub fn solve_scenario_budgeted(
+    scenario: &Scenario,
+    pm: &PerfModel,
+    sim_requests: usize,
+    seed: u64,
+) -> (Vec<Vec<ExecutionPlan>>, Vec<Vec<ExecutionPlan>>, Vec<Vec<ExecutionPlan>>) {
+    let budget = ServingBudget { sim_requests, ..ServingBudget::quick() };
+    solve_scenario(scenario, pm, &budget, seed)
+}
+
+/// Run the three methods on one scenario; return their Pareto plan sets.
+pub fn solve_scenario(
+    scenario: &Scenario,
+    pm: &PerfModel,
+    budget: &ServingBudget,
+    seed: u64,
+) -> (Vec<Vec<ExecutionPlan>>, Vec<Vec<ExecutionPlan>>, Vec<Vec<ExecutionPlan>>) {
+    let analysis = StaticAnalyzer::new(scenario, pm, budget.ga_config(seed)).run();
+    let puzzle: Vec<Vec<ExecutionPlan>> =
+        analysis.pareto.iter().map(|s| s.plans.clone()).collect();
+    let bm: Vec<Vec<ExecutionPlan>> = baselines::best_mapping(scenario, pm, budget.sim_requests)
+        .into_iter()
+        .map(|s| s.plans)
+        .collect();
+    let npu = vec![baselines::npu_only(scenario, pm, budget.sim_requests).plans];
+    (puzzle, bm, npu)
+}
+
+/// Figure 12 / 15 core: saturation multiplier per scenario per method.
+fn saturation_sweep(scenarios: &[Scenario], pm: &PerfModel, budget: &ServingBudget) -> Vec<SaturationRow> {
+    scenarios
+        .iter()
+        .take(budget.scenarios)
+        .enumerate()
+        .map(|(i, s)| {
+            let (puzzle, bm, npu) = solve_scenario(s, pm, budget, 23 + i as u64);
+            SaturationRow {
+                scenario: s.name.clone(),
+                puzzle: saturation_of(&puzzle, s, pm, budget.sim_requests),
+                best_mapping: saturation_of(&bm, s, pm, budget.sim_requests),
+                npu_only: saturation_of(&npu, s, pm, budget.sim_requests),
+            }
+        })
+        .collect()
+}
+
+/// Figure 12 — single model group saturation multipliers
+/// (paper: Puzzle 0.78±0.08, Best Mapping 1.17±0.27, NPU Only 1.56±0.35).
+pub fn fig12_single_group(pm: &PerfModel, budget: &ServingBudget) -> Vec<SaturationRow> {
+    saturation_sweep(&single_group_scenarios(23), pm, budget)
+}
+
+/// Figure 15 — multi model group saturation multipliers
+/// (paper: 0.95±0.27 / 2.24±1.90 / 3.45±2.12).
+pub fn fig15_multi_group(pm: &PerfModel, budget: &ServingBudget) -> Vec<SaturationRow> {
+    saturation_sweep(&multi_group_scenarios(23), pm, budget)
+}
+
+/// XRBench score as a function of the period multiplier for one method.
+#[derive(Debug, Clone)]
+pub struct ScoreCurve {
+    pub method: String,
+    pub alphas: Vec<f64>,
+    /// (min, median, max) score across the method's solutions at each α.
+    pub scores: Vec<(f64, f64, f64)>,
+}
+
+/// Curves for the three methods on one scenario (Figures 13 & 16).
+#[derive(Debug, Clone)]
+pub struct MethodCurve {
+    pub scenario: String,
+    pub curves: Vec<ScoreCurve>,
+}
+
+fn score_band(
+    solutions: &[Vec<ExecutionPlan>],
+    scenario: &Scenario,
+    alpha: f64,
+    pm: &PerfModel,
+    requests: usize,
+) -> (f64, f64, f64) {
+    let mut scores: Vec<f64> = solutions
+        .iter()
+        .map(|p| score_at_alpha(p, scenario, alpha, pm, requests))
+        .collect();
+    scores.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if scores.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    (scores[0], scores[scores.len() / 2], scores[scores.len() - 1])
+}
+
+/// Score-vs-α curves for a scenario (Figure 13 for single-group scenarios,
+/// Figure 16 for multi-group).
+pub fn score_curves(
+    scenario: &Scenario,
+    pm: &PerfModel,
+    budget: &ServingBudget,
+    alphas: &[f64],
+    seed: u64,
+) -> MethodCurve {
+    let (puzzle, bm, npu) = solve_scenario(scenario, pm, budget, seed);
+    let make = |name: &str, sols: &[Vec<ExecutionPlan>]| ScoreCurve {
+        method: name.to_string(),
+        alphas: alphas.to_vec(),
+        scores: alphas
+            .iter()
+            .map(|&a| score_band(sols, scenario, a, pm, budget.sim_requests))
+            .collect(),
+    };
+    MethodCurve {
+        scenario: scenario.name.clone(),
+        curves: vec![
+            make("puzzle", &puzzle),
+            make("best_mapping", &bm),
+            make("npu_only", &npu),
+        ],
+    }
+}
+
+/// Figure 13 — two single-group scenarios' score curves.
+pub fn fig13_score_curves(pm: &PerfModel, budget: &ServingBudget) -> Vec<MethodCurve> {
+    let scenarios = single_group_scenarios(23);
+    let alphas: Vec<f64> = (2..=20).map(|i| i as f64 * 0.1).collect();
+    vec![
+        score_curves(&scenarios[0], pm, budget, &alphas, 101),
+        score_curves(&scenarios[7], pm, budget, &alphas, 108),
+    ]
+}
+
+/// Figure 16 — scenarios 6 & 10 analogs' score curves (multi-group).
+pub fn fig16_multi_score_curves(pm: &PerfModel, budget: &ServingBudget) -> Vec<MethodCurve> {
+    let alphas: Vec<f64> = (2..=30).map(|i| i as f64 * 0.1).collect();
+    vec![
+        score_curves(&crate::scenario::scenario6_analog(), pm, budget, &alphas, 206),
+        score_curves(&scenario10_analog(), pm, budget, &alphas, 210),
+    ]
+}
+
+/// Figure 14 — per-group average makespan of scenario 10's solutions at a
+/// lenient (α=1.4) and tight (α=0.9) period. Returns
+/// `(method, alpha, [group avg makespans])` rows.
+pub fn fig14_makespan_distribution(
+    pm: &PerfModel,
+    budget: &ServingBudget,
+) -> Vec<(String, f64, Vec<f64>)> {
+    let scenario = scenario10_analog();
+    let (puzzle, bm, npu) = solve_scenario(&scenario, pm, budget, 210);
+    let comm = crate::comm::CommModel::paper_calibrated();
+    let mut rows = Vec::new();
+    for &alpha in &[1.4, 0.9] {
+        let periods = scenario.periods(alpha, pm);
+        let groups: Vec<crate::sim::GroupSpec> = scenario
+            .groups
+            .iter()
+            .zip(&periods)
+            .map(|(g, &p)| crate::sim::GroupSpec::periodic(g.members.clone(), p))
+            .collect();
+        let opts = crate::sim::SimOptions {
+            requests_per_group: budget.sim_requests,
+            ..Default::default()
+        };
+        let methods: Vec<(&str, Option<&Vec<ExecutionPlan>>)> = vec![
+            ("puzzle", puzzle.first()),
+            ("best_mapping", bm.first()),
+            // Paper omits NPU Only at tight periods (system failure from
+            // accumulated tasks); we keep it at the lenient period only.
+            ("npu_only", if alpha >= 1.0 { npu.first() } else { None }),
+        ];
+        for (name, plans) in methods {
+            if let Some(plans) = plans {
+                let r = crate::sim::simulate(plans, &groups, &comm, &opts);
+                let avgs: Vec<f64> = (0..groups.len()).map(|g| r.avg_makespan(g)).collect();
+                rows.push((name.to_string(), alpha, avgs));
+            }
+        }
+    }
+    rows
+}
+
+/// Headline: mean saturation-multiplier ratios vs Puzzle
+/// (paper: NPU Only 3.7×, Best Mapping 2.2× over single+multi combined).
+pub fn headline_ratios(rows: &[SaturationRow]) -> (f64, f64) {
+    let ratios = |get: fn(&SaturationRow) -> Option<f64>| -> Vec<f64> {
+        rows.iter()
+            .filter_map(|r| match (get(r), r.puzzle) {
+                (Some(x), Some(p)) if p > 0.0 => Some(x / p),
+                _ => None,
+            })
+            .collect()
+    };
+    let npu = ratios(|r| r.npu_only);
+    let bm = ratios(|r| r.best_mapping);
+    (mean_sd(&npu).0, mean_sd(&bm).0)
+}
+
+/// Pretty-print a saturation table with mean ± SD.
+pub fn print_saturation(title: &str, rows: &[SaturationRow]) {
+    println!("{title}");
+    println!("{:<12} {:>8} {:>13} {:>9}", "scenario", "puzzle", "best_mapping", "npu_only");
+    let fmt = |v: Option<f64>| v.map(|x| format!("{x:.2}")).unwrap_or_else(|| ">6".into());
+    for r in rows {
+        println!(
+            "{:<12} {:>8} {:>13} {:>9}",
+            r.scenario, fmt(r.puzzle), fmt(r.best_mapping), fmt(r.npu_only)
+        );
+    }
+    let collect = |get: fn(&SaturationRow) -> Option<f64>| -> Vec<f64> {
+        rows.iter().filter_map(get).collect()
+    };
+    let (pm_, ps) = mean_sd(&collect(|r| r.puzzle));
+    let (bm, bs) = mean_sd(&collect(|r| r.best_mapping));
+    let (nm, ns) = mean_sd(&collect(|r| r.npu_only));
+    println!(
+        "{:<12} {:>5.2}±{:.2} {:>9.2}±{:.2} {:>6.2}±{:.2}",
+        "mean±sd", pm_, ps, bm, bs, nm, ns
+    );
+    let (r_npu, r_bm) = headline_ratios(rows);
+    println!("headline ratios vs puzzle: npu_only {r_npu:.1}x, best_mapping {r_bm:.1}x");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_single_group_puzzle_wins() {
+        let pm = PerfModel::paper_calibrated();
+        let budget = ServingBudget { scenarios: 2, ..ServingBudget::quick() };
+        let rows = fig12_single_group(&pm, &budget);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            let p = r.puzzle.expect("puzzle saturates");
+            if let Some(n) = r.npu_only {
+                assert!(p <= n + 0.05, "{}: puzzle {p} vs npu {n}", r.scenario);
+            }
+            if let Some(b) = r.best_mapping {
+                assert!(p <= b + 0.05, "{}: puzzle {p} vs bm {b}", r.scenario);
+            }
+        }
+    }
+
+    #[test]
+    fn fig14_rows_have_two_groups() {
+        let pm = PerfModel::paper_calibrated();
+        let budget = ServingBudget::quick();
+        let rows = fig14_makespan_distribution(&pm, &budget);
+        assert!(rows.len() >= 4);
+        for (_m, _a, avgs) in &rows {
+            assert_eq!(avgs.len(), 2);
+            assert!(avgs.iter().all(|&x| x > 0.0));
+        }
+        // NPU-only row exists at 1.4 but not at 0.9.
+        assert!(rows.iter().any(|(m, a, _)| m == "npu_only" && *a == 1.4));
+        assert!(!rows.iter().any(|(m, a, _)| m == "npu_only" && *a == 0.9));
+    }
+
+    #[test]
+    fn score_curves_are_monotone_ish() {
+        // Median score should not decrease significantly as alpha grows.
+        let pm = PerfModel::paper_calibrated();
+        let budget = ServingBudget::quick();
+        let scenario = crate::scenario::scenario6_analog();
+        let alphas = [0.5, 1.0, 2.0, 3.0];
+        let mc = score_curves(&scenario, &pm, &budget, &alphas, 5);
+        for curve in &mc.curves {
+            let med: Vec<f64> = curve.scores.iter().map(|s| s.1).collect();
+            for w in med.windows(2) {
+                assert!(w[1] >= w[0] - 0.1, "{}: {med:?}", curve.method);
+            }
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Chromosome encoding and decoding (paper §4.2, Figs 6–7).
+
+use crate::util::rng::Rng;
+use crate::comm::CommModel;
+use crate::graph::{partition, Network, Partition};
+use crate::profiler::Profiler;
+use crate::sim::{ExecutionPlan, PlannedTask, PlannedTransfer};
+use crate::{DataType, Processor};
+
+/// Genes for one network: the partition bit-vector (one per edge) and the
+/// mapping vector (one processor per layer).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkGenes {
+    pub cuts: Vec<bool>,
+    pub mapping: Vec<Processor>,
+}
+
+impl NetworkGenes {
+    /// Random genes for a network: each edge cut with probability
+    /// `cut_prob`, each layer mapped uniformly.
+    pub fn random(net: &Network, cut_prob: f64, rng: &mut Rng) -> NetworkGenes {
+        NetworkGenes {
+            cuts: (0..net.num_edges()).map(|_| rng.gen_bool(cut_prob)).collect(),
+            mapping: (0..net.num_layers())
+                .map(|_| Processor::from_index(rng.gen_range(0, 3)))
+                .collect(),
+        }
+    }
+
+    /// Uncut genes pinned to one processor (seeds; also the baselines'
+    /// representation).
+    pub fn whole_on(net: &Network, p: Processor) -> NetworkGenes {
+        NetworkGenes {
+            cuts: vec![false; net.num_edges()],
+            mapping: vec![p; net.num_layers()],
+        }
+    }
+}
+
+/// A complete GA individual: per-network genes + the priority permutation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Genome {
+    pub networks: Vec<NetworkGenes>,
+    /// `priority[i]` = dispatch precedence of network `i` (0 = highest).
+    pub priority: Vec<usize>,
+}
+
+impl Genome {
+    pub fn random(nets: &[Network], cut_prob: f64, rng: &mut Rng) -> Genome {
+        let mut priority: Vec<usize> = (0..nets.len()).collect();
+        // Fisher–Yates.
+        for i in (1..priority.len()).rev() {
+            let j = rng.gen_range_inclusive(0, i);
+            priority.swap(i, j);
+        }
+        Genome {
+            networks: nets.iter().map(|n| NetworkGenes::random(n, cut_prob, rng)).collect(),
+            priority,
+        }
+    }
+
+    /// Seed individual: every network whole on a single processor.
+    pub fn all_on(nets: &[Network], p: Processor) -> Genome {
+        Genome {
+            networks: nets.iter().map(|n| NetworkGenes::whole_on(n, p)).collect(),
+            priority: (0..nets.len()).collect(),
+        }
+    }
+
+    /// Validity: gene lengths match, priority is a permutation.
+    pub fn is_valid(&self, nets: &[Network]) -> bool {
+        if self.networks.len() != nets.len() || self.priority.len() != nets.len() {
+            return false;
+        }
+        let mut seen = vec![false; nets.len()];
+        for &p in &self.priority {
+            if p >= nets.len() || seen[p] {
+                return false;
+            }
+            seen[p] = true;
+        }
+        self.networks
+            .iter()
+            .zip(nets)
+            .all(|(g, n)| g.cuts.len() == n.num_edges() && g.mapping.len() == n.num_layers())
+    }
+}
+
+/// Decode one network's genes into a [`Partition`].
+pub fn decode_network(net: &Network, genes: &NetworkGenes) -> Partition {
+    partition(net, &genes.cuts, &genes.mapping)
+}
+
+/// Decode a genome into simulator-ready [`ExecutionPlan`]s, profiling each
+/// subgraph at its mapped processor's best (backend, dtype) via the
+/// device-in-the-loop profiler. Transfer bytes use the producing subgraph's
+/// chosen dtype (fp16 default for tensors in flight).
+pub fn decode(
+    nets: &[Network],
+    genome: &Genome,
+    profiler: &Profiler<'_>,
+    _comm: &CommModel,
+) -> Vec<ExecutionPlan> {
+    nets.iter()
+        .zip(&genome.networks)
+        .enumerate()
+        .map(|(i, (net, genes))| {
+            let part = decode_network(net, genes);
+            let tasks: Vec<PlannedTask> = part
+                .subgraphs
+                .iter()
+                .map(|sg| {
+                    let (_cfg, t) = profiler.profile_best(net, sg);
+                    PlannedTask { duration: t, processor: sg.processor }
+                })
+                .collect();
+            // Cross-subgraph transfers from cut edges; bytes at fp16 (the
+            // in-flight representation of activations on the device).
+            let mut transfers = Vec::new();
+            for &e in &part.cut_edges {
+                let edge = net.edge(e);
+                let from = part.owner_of(edge.src);
+                let to = part.owner_of(edge.dst);
+                if from != to {
+                    transfers.push(PlannedTransfer {
+                        from: from.0,
+                        to: to.0,
+                        bytes: net.layer(edge.src).out_bytes(DataType::Fp16),
+                    });
+                }
+            }
+            ExecutionPlan { tasks, transfers, priority: genome.priority[i] }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::build_model;
+    use crate::perf::PerfModel;
+    
+    fn nets() -> Vec<Network> {
+        vec![build_model(0, 0), build_model(1, 2)]
+    }
+
+    #[test]
+    fn random_genomes_are_valid() {
+        let nets = nets();
+        let mut rng = Rng::seed_from_u64(1);
+        for _ in 0..50 {
+            let g = Genome::random(&nets, 0.2, &mut rng);
+            assert!(g.is_valid(&nets));
+        }
+    }
+
+    #[test]
+    fn all_on_is_single_subgraph_each() {
+        let nets = nets();
+        let g = Genome::all_on(&nets, Processor::Npu);
+        for (net, genes) in nets.iter().zip(&g.networks) {
+            let p = decode_network(net, genes);
+            assert_eq!(p.num_subgraphs(), 1);
+            assert_eq!(p.subgraphs[0].processor, Processor::Npu);
+        }
+    }
+
+    #[test]
+    fn decode_produces_acyclic_plans() {
+        // The transfer graph must be a DAG (the convexity repair in
+        // `partition` guarantees it) with positive finite durations.
+        let nets = nets();
+        let pm = PerfModel::paper_calibrated();
+        let prof = Profiler::new(&pm);
+        let comm = CommModel::paper_calibrated();
+        let mut rng = Rng::seed_from_u64(5);
+        for _ in 0..20 {
+            let g = Genome::random(&nets, 0.4, &mut rng);
+            let plans = decode(&nets, &g, &prof, &comm);
+            for plan in &plans {
+                // Kahn: all tasks must drain if acyclic.
+                let n = plan.tasks.len();
+                let mut indeg = vec![0usize; n];
+                for tr in &plan.transfers {
+                    assert!(tr.bytes > 0);
+                    indeg[tr.to] += 1;
+                }
+                let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+                let mut seen = 0;
+                while let Some(i) = ready.pop() {
+                    seen += 1;
+                    for tr in plan.transfers.iter().filter(|t| t.from == i) {
+                        indeg[tr.to] -= 1;
+                        if indeg[tr.to] == 0 {
+                            ready.push(tr.to);
+                        }
+                    }
+                }
+                assert_eq!(seen, n, "cyclic transfer graph");
+                for t in &plan.tasks {
+                    assert!(t.duration.is_finite() && t.duration > 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_priority_detected() {
+        let nets = nets();
+        let mut g = Genome::all_on(&nets, Processor::Cpu);
+        g.priority = vec![0, 0];
+        assert!(!g.is_valid(&nets));
+        g.priority = vec![0, 5];
+        assert!(!g.is_valid(&nets));
+    }
+}

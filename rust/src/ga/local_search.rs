@@ -1,0 +1,165 @@
+//! Local-search moves (paper §4.3): applied with some probability to newly
+//! generated individuals, accepted only if they improve *all* objectives.
+//!
+//! 1. **Merge neighbouring subgraphs** — pick a cut edge, uncut it (the two
+//!    subgraphs compile together, regaining fusion).
+//! 2. **Reposition adjacent layers** — move a layer at a subgraph boundary
+//!    across it: flip the boundary edge's cut state pattern so the layer
+//!    changes sides, and adopt the neighbour subgraph's processor
+//!    preference for that layer.
+
+
+use crate::util::rng::Rng;
+use super::chromosome::{decode_network, Genome};
+use crate::graph::Network;
+
+/// All candidate "merge" moves for a genome: (network, edge) pairs whose
+/// edge is currently cut.
+fn cut_edges(genome: &Genome) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for (n, genes) in genome.networks.iter().enumerate() {
+        for (e, &cut) in genes.cuts.iter().enumerate() {
+            if cut {
+                out.push((n, e));
+            }
+        }
+    }
+    out
+}
+
+/// Merge move: uncut one randomly chosen cut edge. Returns the mutated
+/// clone, or `None` if nothing is cut.
+pub fn merge_neighbors(genome: &Genome, rng: &mut Rng) -> Option<Genome> {
+    let cands = cut_edges(genome);
+    if cands.is_empty() {
+        return None;
+    }
+    let (n, e) = cands[rng.gen_range(0, cands.len())];
+    let mut child = genome.clone();
+    child.networks[n].cuts[e] = false;
+    Some(child)
+}
+
+/// Reposition move: pick a cut edge `src -> dst`; pull `dst`'s layer into
+/// `src`'s side by uncutting that edge and cutting `dst`'s outgoing edges
+/// instead (or symmetrically push `src` forward). The moved layer adopts
+/// the processor preference of the side it joins, so the majority vote
+/// follows the move.
+pub fn reposition_adjacent(nets: &[Network], genome: &Genome, rng: &mut Rng) -> Option<Genome> {
+    let cands = cut_edges(genome);
+    if cands.is_empty() {
+        return None;
+    }
+    let (n, e) = cands[rng.gen_range(0, cands.len())];
+    let net = &nets[n];
+    let edge = net.edge(crate::graph::EdgeId(e));
+    let mut child = genome.clone();
+    let genes = &mut child.networks[n];
+
+    if rng.gen_bool(0.5) {
+        // Pull dst back: attach dst to src's subgraph, detach it from its
+        // current one by cutting dst's other incident edges.
+        genes.cuts[e] = false;
+        for eid in net.incident_edges(edge.dst) {
+            if eid.0 != e {
+                genes.cuts[eid.0] = true;
+            }
+        }
+        genes.mapping[edge.dst.0] = genes.mapping[edge.src.0];
+    } else {
+        // Push src forward: attach src to dst's subgraph.
+        genes.cuts[e] = false;
+        for eid in net.incident_edges(edge.src) {
+            if eid.0 != e {
+                genes.cuts[eid.0] = true;
+            }
+        }
+        genes.mapping[edge.src.0] = genes.mapping[edge.dst.0];
+    }
+    Some(child)
+}
+
+/// Sanity helper used by the analyzer: a local-search child must still
+/// decode (always true by construction, asserted in debug builds).
+pub fn debug_check(nets: &[Network], genome: &Genome) {
+    debug_assert!(genome.is_valid(nets));
+    if cfg!(debug_assertions) {
+        for (net, genes) in nets.iter().zip(&genome.networks) {
+            let p = decode_network(net, genes);
+            debug_assert!(p.num_subgraphs() >= 1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ga::chromosome::decode_network;
+    use crate::models::build_model;
+        
+
+    fn nets() -> Vec<Network> {
+        vec![build_model(0, 4), build_model(1, 6)]
+    }
+
+    #[test]
+    fn merge_reduces_subgraph_count_or_keeps() {
+        let nets = nets();
+        let mut rng = Rng::seed_from_u64(21);
+        for _ in 0..50 {
+            let g = Genome::random(&nets, 0.5, &mut rng);
+            let before: usize = nets
+                .iter()
+                .zip(&g.networks)
+                .map(|(n, ge)| decode_network(n, ge).num_subgraphs())
+                .sum();
+            if let Some(child) = merge_neighbors(&g, &mut rng) {
+                assert!(child.is_valid(&nets));
+                let after: usize = nets
+                    .iter()
+                    .zip(&child.networks)
+                    .map(|(n, ge)| decode_network(n, ge).num_subgraphs())
+                    .sum();
+                assert!(after <= before, "merge grew partition: {before} -> {after}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_none_when_uncut() {
+        let nets = nets();
+        let g = Genome::all_on(&nets, crate::Processor::Npu);
+        let mut rng = Rng::seed_from_u64(1);
+        assert!(merge_neighbors(&g, &mut rng).is_none());
+    }
+
+    #[test]
+    fn reposition_keeps_validity() {
+        let nets = nets();
+        let mut rng = Rng::seed_from_u64(33);
+        for _ in 0..100 {
+            let g = Genome::random(&nets, 0.4, &mut rng);
+            if let Some(child) = reposition_adjacent(&nets, &g, &mut rng) {
+                assert!(child.is_valid(&nets));
+                debug_check(&nets, &child);
+            }
+        }
+    }
+
+    #[test]
+    fn reposition_changes_partition() {
+        let nets = nets();
+        let mut rng = Rng::seed_from_u64(55);
+        let mut changed = false;
+        for _ in 0..50 {
+            let g = Genome::random(&nets, 0.4, &mut rng);
+            if let Some(child) = reposition_adjacent(&nets, &g, &mut rng) {
+                if child != g {
+                    changed = true;
+                    break;
+                }
+            }
+        }
+        assert!(changed);
+    }
+}

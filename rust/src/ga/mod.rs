@@ -1,0 +1,25 @@
+//! Genetic-algorithm optimizer of the Static Analyzer (paper §4.2–4.3).
+//!
+//! Three chromosome types are explored simultaneously (Fig 6):
+//!
+//! * **partition** — per network, one bit per edge (cut / keep);
+//! * **mapping** — per network, one processor preference per layer, resolved
+//!   to subgraph processors by majority vote;
+//! * **priority** — a permutation over networks giving dispatch precedence.
+//!
+//! Operators (Fig 8): one-point crossover on partition and mapping, Uniform
+//! Partially-Matched Crossover (UPMX) on priority, bit/gene mutation, two
+//! local-search moves (merge neighbouring subgraphs; reposition adjacent
+//! layers), NSGA-III replacement, and a stop rule of 3 generations without
+//! average-score improvement. All parents reproduce (no elite selection) to
+//! avoid premature convergence, as in the paper.
+
+mod chromosome;
+mod local_search;
+mod nsga3;
+mod operators;
+
+pub use chromosome::{decode, decode_network, Genome, NetworkGenes};
+pub use local_search::{debug_check, merge_neighbors, reposition_adjacent};
+pub use nsga3::{fast_non_dominated_sort, nsga3_select, reference_points, Dominance};
+pub use operators::{mutate, one_point_crossover, upmx};

@@ -1,0 +1,306 @@
+//! NSGA-III environmental selection (Deb & Jain 2013), the population
+//! replacement the paper uses ("the population is updated using the NSGA3
+//! algorithm", §4.3).
+//!
+//! Pipeline: fast non-dominated sort → fill whole fronts while they fit →
+//! for the splitting front, normalize objectives, associate individuals with
+//! Das–Dennis reference directions, and fill by niche count (preferring
+//! under-represented directions, closest-distance first).
+
+/// Pareto dominance for minimization objectives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dominance {
+    Dominates,
+    DominatedBy,
+    Incomparable,
+}
+
+/// Compare two objective vectors (all objectives minimized).
+pub fn dominance(a: &[f64], b: &[f64]) -> Dominance {
+    let mut a_better = false;
+    let mut b_better = false;
+    for (&x, &y) in a.iter().zip(b) {
+        if x < y {
+            a_better = true;
+        } else if y < x {
+            b_better = true;
+        }
+    }
+    match (a_better, b_better) {
+        (true, false) => Dominance::Dominates,
+        (false, true) => Dominance::DominatedBy,
+        _ => Dominance::Incomparable,
+    }
+}
+
+/// Fast non-dominated sort: returns fronts (vectors of indices), best first.
+pub fn fast_non_dominated_sort(objs: &[Vec<f64>]) -> Vec<Vec<usize>> {
+    let n = objs.len();
+    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // i dominates these
+    let mut dom_count = vec![0usize; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            match dominance(&objs[i], &objs[j]) {
+                Dominance::Dominates => {
+                    dominated_by[i].push(j);
+                    dom_count[j] += 1;
+                }
+                Dominance::DominatedBy => {
+                    dominated_by[j].push(i);
+                    dom_count[i] += 1;
+                }
+                Dominance::Incomparable => {}
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> = (0..n).filter(|&i| dom_count[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            for &j in &dominated_by[i] {
+                dom_count[j] -= 1;
+                if dom_count[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        fronts.push(std::mem::take(&mut current));
+        current = next;
+    }
+    fronts
+}
+
+/// Das–Dennis reference directions on the unit simplex with `divisions`
+/// gaps per objective (`m` objectives).
+pub fn reference_points(m: usize, divisions: usize) -> Vec<Vec<f64>> {
+    let mut out = Vec::new();
+    let mut point = vec![0usize; m];
+    fn recurse(m: usize, left: usize, dim: usize, point: &mut Vec<usize>, out: &mut Vec<Vec<f64>>, divisions: usize) {
+        if dim == m - 1 {
+            point[dim] = left;
+            out.push(point.iter().map(|&x| x as f64 / divisions as f64).collect());
+            return;
+        }
+        for v in 0..=left {
+            point[dim] = v;
+            recurse(m, left - v, dim + 1, point, out, divisions);
+        }
+    }
+    recurse(m, divisions, 0, &mut point, &mut out, divisions);
+    out
+}
+
+/// Perpendicular distance from (normalized) objective vector `f` to the ray
+/// through reference direction `w`.
+fn perpendicular_distance(f: &[f64], w: &[f64]) -> f64 {
+    let wdotf: f64 = w.iter().zip(f).map(|(a, b)| a * b).sum();
+    let wnorm2: f64 = w.iter().map(|a| a * a).sum();
+    if wnorm2 <= 0.0 {
+        return f.iter().map(|a| a * a).sum::<f64>().sqrt();
+    }
+    let t = wdotf / wnorm2;
+    f.iter()
+        .zip(w)
+        .map(|(fi, wi)| (fi - t * wi).powi(2))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// NSGA-III environmental selection: choose `k` survivors from `objs`
+/// (minimization). Deterministic given input order (ties broken by index;
+/// niching picks the closest individual rather than a random one — a common
+/// deterministic variant).
+pub fn nsga3_select(objs: &[Vec<f64>], k: usize) -> Vec<usize> {
+    let n = objs.len();
+    if k >= n {
+        return (0..n).collect();
+    }
+    let m = objs.first().map(|o| o.len()).unwrap_or(0);
+    let fronts = fast_non_dominated_sort(objs);
+
+    let mut chosen: Vec<usize> = Vec::with_capacity(k);
+    let mut split_front: Option<Vec<usize>> = None;
+    for front in &fronts {
+        if chosen.len() + front.len() <= k {
+            chosen.extend_from_slice(front);
+        } else {
+            split_front = Some(front.clone());
+            break;
+        }
+    }
+    let Some(split) = split_front else {
+        return chosen;
+    };
+    let need = k - chosen.len();
+
+    // Normalize over the union of chosen + split using ideal/nadir estimates.
+    let pool: Vec<usize> = chosen.iter().chain(&split).copied().collect();
+    let mut ideal = vec![f64::INFINITY; m];
+    let mut nadir = vec![f64::NEG_INFINITY; m];
+    for &i in &pool {
+        for d in 0..m {
+            ideal[d] = ideal[d].min(objs[i][d]);
+            nadir[d] = nadir[d].max(objs[i][d]);
+        }
+    }
+    let normalize = |i: usize| -> Vec<f64> {
+        (0..m)
+            .map(|d| {
+                let range = (nadir[d] - ideal[d]).max(1e-12);
+                (objs[i][d] - ideal[d]) / range
+            })
+            .collect()
+    };
+
+    // Das–Dennis directions sized to the population (>= need niches).
+    let mut divisions = 4;
+    while reference_points(m, divisions).len() < need.max(4) && divisions < 32 {
+        divisions += 1;
+    }
+    let refs = reference_points(m, divisions);
+
+    // Associate: everyone already chosen contributes to niche counts.
+    let associate = |i: usize| -> (usize, f64) {
+        let f = normalize(i);
+        let mut best = (0usize, f64::INFINITY);
+        for (r, w) in refs.iter().enumerate() {
+            let d = perpendicular_distance(&f, w);
+            if d < best.1 {
+                best = (r, d);
+            }
+        }
+        best
+    };
+    let mut niche_count = vec![0usize; refs.len()];
+    for &i in &chosen {
+        let (r, _) = associate(i);
+        niche_count[r] += 1;
+    }
+    // Candidates from the split front with their (ref, dist).
+    let cands: Vec<(usize, usize, f64)> = split.iter().map(|&i| {
+        let (r, d) = associate(i);
+        (i, r, d)
+    }).collect();
+
+    // Niching: repeatedly take from the least-crowded niche.
+    let mut taken = vec![false; cands.len()];
+    for _ in 0..need {
+        // Find the niche with minimal count that still has candidates.
+        let mut best_niche: Option<usize> = None;
+        for (ci, &(_, r, _)) in cands.iter().enumerate() {
+            if taken[ci] {
+                continue;
+            }
+            match best_niche {
+                None => best_niche = Some(r),
+                Some(bn) => {
+                    if niche_count[r] < niche_count[bn] {
+                        best_niche = Some(r);
+                    }
+                }
+            }
+        }
+        let Some(niche) = best_niche else { break };
+        // Closest candidate in that niche.
+        let mut pick: Option<(usize, f64)> = None;
+        for (ci, &(_, r, d)) in cands.iter().enumerate() {
+            if taken[ci] || r != niche {
+                continue;
+            }
+            if pick.map(|(_, pd)| d < pd).unwrap_or(true) {
+                pick = Some((ci, d));
+            }
+        }
+        let (ci, _) = pick.expect("niche had a candidate");
+        taken[ci] = true;
+        niche_count[cands[ci].1] += 1;
+        chosen.push(cands[ci].0);
+    }
+    chosen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_basics() {
+        assert_eq!(dominance(&[1.0, 1.0], &[2.0, 2.0]), Dominance::Dominates);
+        assert_eq!(dominance(&[2.0, 2.0], &[1.0, 1.0]), Dominance::DominatedBy);
+        assert_eq!(dominance(&[1.0, 2.0], &[2.0, 1.0]), Dominance::Incomparable);
+        assert_eq!(dominance(&[1.0, 1.0], &[1.0, 1.0]), Dominance::Incomparable);
+    }
+
+    #[test]
+    fn sort_layers_fronts() {
+        let objs = vec![
+            vec![1.0, 1.0], // front 0
+            vec![2.0, 2.0], // front 1 (dominated by 0)
+            vec![0.5, 3.0], // front 0 (incomparable with 0)
+            vec![3.0, 3.0], // front 2
+        ];
+        let fronts = fast_non_dominated_sort(&objs);
+        assert_eq!(fronts[0], vec![0, 2]);
+        assert_eq!(fronts[1], vec![1]);
+        assert_eq!(fronts[2], vec![3]);
+    }
+
+    #[test]
+    fn reference_points_simplex() {
+        let refs = reference_points(2, 4);
+        assert_eq!(refs.len(), 5); // C(4+1, 1)
+        for r in &refs {
+            let s: f64 = r.iter().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+        let refs3 = reference_points(3, 4);
+        assert_eq!(refs3.len(), 15); // C(6,2)
+    }
+
+    #[test]
+    fn select_never_drops_first_front_when_it_fits() {
+        let objs = vec![
+            vec![1.0, 5.0],
+            vec![5.0, 1.0],
+            vec![3.0, 3.0],
+            vec![6.0, 6.0], // dominated
+            vec![7.0, 7.0], // dominated
+        ];
+        let sel = nsga3_select(&objs, 3);
+        assert!(sel.contains(&0) && sel.contains(&1) && sel.contains(&2), "{sel:?}");
+    }
+
+    #[test]
+    fn select_respects_k() {
+        let objs: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64, (20 - i) as f64]).collect();
+        let sel = nsga3_select(&objs, 7);
+        assert_eq!(sel.len(), 7);
+        // All on one front; niching must spread across the extremes.
+        assert!(sel.contains(&0) || sel.contains(&1));
+        assert!(sel.contains(&19) || sel.contains(&18));
+    }
+
+    #[test]
+    fn select_everything_when_k_ge_n() {
+        let objs = vec![vec![1.0], vec![2.0]];
+        assert_eq!(nsga3_select(&objs, 5), vec![0, 1]);
+    }
+
+    #[test]
+    fn split_front_prefers_diversity() {
+        // Front 0: one point. Front 1: a cluster near (1,10) and one
+        // outlier near (10,1); selecting 2 from front 1 must include the
+        // outlier for spread.
+        let objs = vec![
+            vec![0.5, 0.5],   // front 0
+            vec![1.0, 10.0],  // cluster
+            vec![1.1, 10.1],  // cluster
+            vec![1.2, 10.2],  // cluster
+            vec![10.0, 1.0],  // outlier
+        ];
+        let sel = nsga3_select(&objs, 3);
+        assert!(sel.contains(&0));
+        assert!(sel.contains(&4), "outlier dropped: {sel:?}");
+    }
+}

@@ -1,0 +1,195 @@
+//! Crossover and mutation operators (paper §4.3, Fig 8):
+//! one-point crossover for partition/mapping genes, UPMX for priority,
+//! per-gene mutation.
+
+
+use super::chromosome::{Genome, NetworkGenes};
+use crate::util::rng::Rng;
+
+/// One-point crossover on two equal-length gene slices. Returns the cut
+/// point used (for tests).
+fn one_point_slice<T: Clone>(a: &mut [T], b: &mut [T], rng: &mut Rng) -> usize {
+    if a.len() < 2 {
+        return 0;
+    }
+    let cut = rng.gen_range(1, a.len());
+    for i in cut..a.len() {
+        std::mem::swap(&mut a[i], &mut b[i]);
+    }
+    cut
+}
+
+/// One-point crossover applied per network to both the partition bits and
+/// the mapping genes of two genomes, in place (paper: "one-point crossover
+/// is applied to the partition and mapping chromosomes").
+pub fn one_point_crossover(a: &mut Genome, b: &mut Genome, rng: &mut Rng) {
+    for (ga, gb) in a.networks.iter_mut().zip(b.networks.iter_mut()) {
+        one_point_slice(&mut ga.cuts, &mut gb.cuts, rng);
+        one_point_slice(&mut ga.mapping, &mut gb.mapping, rng);
+    }
+    upmx(&mut a.priority, &mut b.priority, rng, 0.5);
+}
+
+/// Uniform Partially-Matched Crossover on two permutations, in place.
+///
+/// For each position, with probability `swap_prob`, the values at that
+/// position are exchanged *within each parent* via the partial-matching
+/// repair (swap the value with wherever the partner's value currently sits),
+/// preserving permutation validity — the standard UPMX of DEAP's
+/// `cxUniformPartialyMatched`.
+pub fn upmx(a: &mut [usize], b: &mut [usize], rng: &mut Rng, swap_prob: f64) {
+    let n = a.len();
+    if n < 2 {
+        return;
+    }
+    // Position-of-value indices for O(1) repair.
+    let mut pos_a = vec![0usize; n];
+    let mut pos_b = vec![0usize; n];
+    for i in 0..n {
+        pos_a[a[i]] = i;
+        pos_b[b[i]] = i;
+    }
+    for i in 0..n {
+        if rng.gen_bool(swap_prob) {
+            let va = a[i];
+            let vb = b[i];
+            // In `a`, swap value va (at i) with value vb (at pos_a[vb]).
+            let j = pos_a[vb];
+            a.swap(i, j);
+            pos_a[va] = j;
+            pos_a[vb] = i;
+            // Mirror in `b`.
+            let k = pos_b[va];
+            b.swap(i, k);
+            pos_b[vb] = k;
+            pos_b[va] = i;
+        }
+    }
+}
+
+/// Mutation: each partition bit flips with `p_cut`, each mapping gene
+/// re-draws with `p_map`, and the priority permutation swaps a random pair
+/// with `p_prio`.
+pub fn mutate(g: &mut Genome, p_cut: f64, p_map: f64, p_prio: f64, rng: &mut Rng) {
+    for genes in &mut g.networks {
+        mutate_network(genes, p_cut, p_map, rng);
+    }
+    if g.priority.len() >= 2 && rng.gen_bool(p_prio) {
+        let i = rng.gen_range(0, g.priority.len());
+        let j = rng.gen_range(0, g.priority.len());
+        g.priority.swap(i, j);
+    }
+}
+
+fn mutate_network(genes: &mut NetworkGenes, p_cut: f64, p_map: f64, rng: &mut Rng) {
+    for c in &mut genes.cuts {
+        if rng.gen_bool(p_cut) {
+            *c = !*c;
+        }
+    }
+    for m in &mut genes.mapping {
+        if rng.gen_bool(p_map) {
+            *m = crate::Processor::from_index(rng.gen_range(0, 3));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::build_model;
+    use crate::Processor;
+    
+    fn is_permutation(p: &[usize]) -> bool {
+        let mut seen = vec![false; p.len()];
+        p.iter().all(|&v| {
+            if v >= seen.len() || seen[v] {
+                false
+            } else {
+                seen[v] = true;
+                true
+            }
+        })
+    }
+
+    #[test]
+    fn upmx_preserves_permutations() {
+        let mut rng = Rng::seed_from_u64(3);
+        for _ in 0..200 {
+            let n = rng.gen_range(2, 12);
+            let mut a: Vec<usize> = (0..n).collect();
+            let mut b: Vec<usize> = (0..n).rev().collect();
+            upmx(&mut a, &mut b, &mut rng, 0.5);
+            assert!(is_permutation(&a), "{a:?}");
+            assert!(is_permutation(&b), "{b:?}");
+        }
+    }
+
+    #[test]
+    fn upmx_actually_mixes() {
+        let mut rng = Rng::seed_from_u64(4);
+        let orig: Vec<usize> = (0..8).collect();
+        let mut mixed = false;
+        for _ in 0..20 {
+            let mut a = orig.clone();
+            let mut b: Vec<usize> = (0..8).rev().collect();
+            upmx(&mut a, &mut b, &mut rng, 0.5);
+            if a != orig {
+                mixed = true;
+            }
+        }
+        assert!(mixed);
+    }
+
+    #[test]
+    fn crossover_keeps_genomes_valid() {
+        let nets = vec![build_model(0, 1), build_model(1, 6), build_model(2, 4)];
+        let mut rng = Rng::seed_from_u64(9);
+        for _ in 0..100 {
+            let mut a = Genome::random(&nets, 0.3, &mut rng);
+            let mut b = Genome::random(&nets, 0.3, &mut rng);
+            one_point_crossover(&mut a, &mut b, &mut rng);
+            assert!(a.is_valid(&nets));
+            assert!(b.is_valid(&nets));
+        }
+    }
+
+    #[test]
+    fn crossover_exchanges_tails() {
+        // With a fixed seed, children must contain genes from both parents.
+        let nets = vec![build_model(0, 8)];
+        let mut rng = Rng::seed_from_u64(2);
+        let mut a = Genome::all_on(&nets, Processor::Cpu);
+        let mut b = Genome::all_on(&nets, Processor::Npu);
+        one_point_crossover(&mut a, &mut b, &mut rng);
+        let cpus = a.networks[0].mapping.iter().filter(|&&p| p == Processor::Cpu).count();
+        assert!(cpus > 0 && cpus < a.networks[0].mapping.len(), "no tail exchanged");
+    }
+
+    #[test]
+    fn mutation_keeps_validity_and_perturbs() {
+        let nets = vec![build_model(0, 3), build_model(1, 5)];
+        let mut rng = Rng::seed_from_u64(11);
+        let mut any_changed = false;
+        for _ in 0..50 {
+            let mut g = Genome::random(&nets, 0.2, &mut rng);
+            let before = g.clone();
+            mutate(&mut g, 0.1, 0.1, 0.5, &mut rng);
+            assert!(g.is_valid(&nets));
+            if g != before {
+                any_changed = true;
+            }
+        }
+        assert!(any_changed);
+    }
+
+    #[test]
+    fn zero_rate_mutation_is_identity() {
+        let nets = vec![build_model(0, 2)];
+        let mut rng = Rng::seed_from_u64(12);
+        let mut g = Genome::random(&nets, 0.2, &mut rng);
+        let before = g.clone();
+        mutate(&mut g, 0.0, 0.0, 0.0, &mut rng);
+        assert_eq!(g, before);
+    }
+}

@@ -1,0 +1,275 @@
+//! Layers: the nodes of the DNN graph IR.
+//!
+//! Layer kinds cover the operator vocabulary of the nine model analogs
+//! (DESIGN.md §4): convolution blocks (stride 1/2), depthwise blocks,
+//! pointwise convolutions, joins (add/concat), upsampling, pooling, and dense
+//! heads. Every compute-heavy kind lowers (at the python L2 layer) onto the
+//! L1 Pallas fused-block kernel.
+
+/// Index of a layer within its [`super::Network`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LayerId(pub usize);
+
+impl std::fmt::Display for LayerId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "L{}", self.0)
+    }
+}
+
+/// Activation tensor shape (NHWC with N=1, as is standard for mobile
+/// single-frame inference).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TensorShape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl TensorShape {
+    pub fn new(h: usize, w: usize, c: usize) -> Self {
+        Self { h, w, c }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    /// Bytes at a given kernel precision.
+    pub fn bytes(&self, dtype: crate::DataType) -> usize {
+        self.elements() * dtype.size()
+    }
+}
+
+impl std::fmt::Display for TensorShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.h, self.w, self.c)
+    }
+}
+
+/// Operator vocabulary of the model zoo.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    /// KxK convolution + bias + activation (the Pallas fused block).
+    Conv { kernel: usize, stride: usize },
+    /// Depthwise KxK convolution + bias + activation.
+    DepthwiseConv { kernel: usize, stride: usize },
+    /// 1x1 convolution (projection).
+    Pointwise,
+    /// Elementwise addition of 2+ inputs (residual join).
+    Add,
+    /// Channel concatenation of 2+ inputs.
+    Concat,
+    /// Nearest-neighbour 2x upsample.
+    Upsample,
+    /// 2x2 average pool.
+    Pool,
+    /// Global-average-pool + dense head.
+    Dense,
+}
+
+impl LayerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayerKind::Conv { .. } => "conv",
+            LayerKind::DepthwiseConv { .. } => "dwconv",
+            LayerKind::Pointwise => "pointwise",
+            LayerKind::Add => "add",
+            LayerKind::Concat => "concat",
+            LayerKind::Upsample => "upsample",
+            LayerKind::Pool => "pool",
+            LayerKind::Dense => "dense",
+        }
+    }
+
+    /// Whether the kind is a matmul-shaped op that the NPU's systolic array
+    /// (or the paper's Hexagon tensor units) accelerates well. Used by the
+    /// performance model to shape per-processor affinity.
+    pub fn is_tensor_op(&self) -> bool {
+        matches!(
+            self,
+            LayerKind::Conv { .. } | LayerKind::Pointwise | LayerKind::Dense
+        )
+    }
+}
+
+/// A node in the network DAG.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Output activation shape.
+    pub out_shape: TensorShape,
+    /// Input channel count (sum over inputs for Concat).
+    pub in_channels: usize,
+    /// Multiply-accumulate count for this layer (drives the perf model).
+    pub macs: u64,
+    /// Parameter count (weights + biases).
+    pub params: u64,
+}
+
+impl Layer {
+    /// KxK conv producing a `size x size x out_c` output from `in_c` channels.
+    pub fn conv(name: &str, size: usize, in_c: usize, out_c: usize, kernel: usize, stride: usize) -> Layer {
+        let out = TensorShape::new(size / stride, size / stride, out_c);
+        let macs = (out.elements() as u64) * (in_c as u64) * (kernel * kernel) as u64;
+        let params = (in_c * out_c * kernel * kernel + out_c) as u64;
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Conv { kernel, stride },
+            out_shape: out,
+            in_channels: in_c,
+            macs,
+            params,
+        }
+    }
+
+    /// Depthwise KxK conv (channel-preserving).
+    pub fn dwconv(name: &str, size: usize, c: usize, kernel: usize, stride: usize) -> Layer {
+        let out = TensorShape::new(size / stride, size / stride, c);
+        let macs = (out.elements() as u64) * (kernel * kernel) as u64;
+        let params = (c * kernel * kernel + c) as u64;
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::DepthwiseConv { kernel, stride },
+            out_shape: out,
+            in_channels: c,
+            macs,
+            params,
+        }
+    }
+
+    /// 1x1 projection conv.
+    pub fn pointwise(name: &str, size: usize, in_c: usize, out_c: usize) -> Layer {
+        let out = TensorShape::new(size, size, out_c);
+        let macs = (out.elements() as u64) * in_c as u64;
+        let params = (in_c * out_c + out_c) as u64;
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Pointwise,
+            out_shape: out,
+            in_channels: in_c,
+            macs,
+            params,
+        }
+    }
+
+    /// Residual add join.
+    pub fn add(name: &str, size: usize, c: usize) -> Layer {
+        let out = TensorShape::new(size, size, c);
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Add,
+            out_shape: out,
+            in_channels: c,
+            macs: out.elements() as u64,
+            params: 0,
+        }
+    }
+
+    /// Channel concat join.
+    pub fn concat(name: &str, size: usize, total_c: usize) -> Layer {
+        let out = TensorShape::new(size, size, total_c);
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Concat,
+            out_shape: out,
+            in_channels: total_c,
+            macs: out.elements() as u64,
+            params: 0,
+        }
+    }
+
+    /// 2x nearest-neighbour upsample.
+    pub fn upsample(name: &str, in_size: usize, c: usize) -> Layer {
+        let out = TensorShape::new(in_size * 2, in_size * 2, c);
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Upsample,
+            out_shape: out,
+            in_channels: c,
+            macs: out.elements() as u64,
+            params: 0,
+        }
+    }
+
+    /// 2x2 average pool.
+    pub fn pool(name: &str, in_size: usize, c: usize) -> Layer {
+        let out = TensorShape::new(in_size / 2, in_size / 2, c);
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Pool,
+            out_shape: out,
+            in_channels: c,
+            macs: (in_size * in_size * c) as u64,
+            params: 0,
+        }
+    }
+
+    /// Global-average-pool + dense classification/regression head.
+    pub fn dense(name: &str, in_c: usize, out_features: usize) -> Layer {
+        let out = TensorShape::new(1, 1, out_features);
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Dense,
+            out_shape: out,
+            in_channels: in_c,
+            macs: (in_c * out_features) as u64,
+            params: (in_c * out_features + out_features) as u64,
+        }
+    }
+
+    /// Output tensor bytes at a precision.
+    pub fn out_bytes(&self, dtype: crate::DataType) -> usize {
+        self.out_shape.bytes(dtype)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_macs_params() {
+        // 3x3 conv, 16x16 spatial, 8 -> 16 channels, stride 1.
+        let l = Layer::conv("c", 16, 8, 16, 3, 1);
+        assert_eq!(l.out_shape, TensorShape::new(16, 16, 16));
+        assert_eq!(l.macs, 16 * 16 * 16 * 8 * 9);
+        assert_eq!(l.params, (8 * 16 * 9 + 16) as u64);
+    }
+
+    #[test]
+    fn strided_conv_halves_spatial() {
+        let l = Layer::conv("c", 16, 8, 16, 3, 2);
+        assert_eq!(l.out_shape, TensorShape::new(8, 8, 16));
+    }
+
+    #[test]
+    fn dwconv_macs() {
+        let l = Layer::dwconv("d", 16, 32, 3, 1);
+        assert_eq!(l.macs, 16 * 16 * 32 * 9);
+        assert_eq!(l.params, (32 * 9 + 32) as u64);
+    }
+
+    #[test]
+    fn dense_shape() {
+        let l = Layer::dense("h", 64, 10);
+        assert_eq!(l.out_shape.elements(), 10);
+        assert_eq!(l.macs, 640);
+    }
+
+    #[test]
+    fn tensor_bytes_by_dtype() {
+        let s = TensorShape::new(4, 4, 8);
+        assert_eq!(s.bytes(crate::DataType::Fp32), 512);
+        assert_eq!(s.bytes(crate::DataType::Fp16), 256);
+        assert_eq!(s.bytes(crate::DataType::Int8), 128);
+    }
+
+    #[test]
+    fn tensor_op_classification() {
+        assert!(LayerKind::Conv { kernel: 3, stride: 1 }.is_tensor_op());
+        assert!(LayerKind::Pointwise.is_tensor_op());
+        assert!(!LayerKind::Add.is_tensor_op());
+        assert!(!LayerKind::DepthwiseConv { kernel: 3, stride: 1 }.is_tensor_op());
+    }
+}

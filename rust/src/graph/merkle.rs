@@ -1,0 +1,163 @@
+//! Merkle hashing of subgraphs for the profile database (paper §4.3).
+//!
+//! The paper caches device-in-the-loop profiling results keyed by a Merkle
+//! hash of the subgraph, so structurally identical subgraphs (same layers,
+//! same internal wiring, same config) hit the cache across GA generations.
+//!
+//! We hash each layer's structural description into a leaf, then fold leaves
+//! pairwise into a tree root (classic Merkle construction) together with the
+//! internal edge list. The hash is position-independent across networks: two
+//! subgraphs with isomorphic layer sequences and identical internal edges
+//! collide intentionally, which is exactly the reuse the paper exploits.
+
+use super::layer::LayerId;
+use super::network::Network;
+use super::partition::Subgraph;
+
+/// 64-bit Merkle root (FNV-1a-based; this is a cache key, not a security
+/// boundary, and 64 bits keeps the profile DB index compact).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MerkleHash(pub u64);
+
+impl std::fmt::Display for MerkleHash {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+fn fnv1a(bytes: &[u8], mut h: u64) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn hash_u64(v: u64, h: u64) -> u64 {
+    fnv1a(&v.to_le_bytes(), h)
+}
+
+fn combine(a: u64, b: u64) -> u64 {
+    hash_u64(b, hash_u64(a, FNV_OFFSET))
+}
+
+/// Structural leaf hash of a single layer (kind + shapes + MACs; name is
+/// deliberately excluded so renames don't bust the cache).
+fn leaf(net: &Network, l: LayerId) -> u64 {
+    let layer = net.layer(l);
+    let mut h = FNV_OFFSET;
+    h = fnv1a(layer.kind.name().as_bytes(), h);
+    if let super::layer::LayerKind::Conv { kernel, stride }
+    | super::layer::LayerKind::DepthwiseConv { kernel, stride } = layer.kind
+    {
+        h = hash_u64(kernel as u64, h);
+        h = hash_u64(stride as u64, h);
+    }
+    h = hash_u64(layer.out_shape.h as u64, h);
+    h = hash_u64(layer.out_shape.w as u64, h);
+    h = hash_u64(layer.out_shape.c as u64, h);
+    h = hash_u64(layer.in_channels as u64, h);
+    h = hash_u64(layer.macs, h);
+    h
+}
+
+/// Merkle root over a subgraph's layers (leaf per layer, folded pairwise)
+/// plus its internal edges in canonical (local-index) form.
+pub fn merkle_hash_subgraph(net: &Network, sg: &Subgraph) -> MerkleHash {
+    // Leaves in the subgraph's canonical layer order.
+    let mut level: Vec<u64> = sg.layers.iter().map(|&l| leaf(net, l)).collect();
+    if level.is_empty() {
+        return MerkleHash(FNV_OFFSET);
+    }
+    // Pairwise fold to the root.
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        for pair in level.chunks(2) {
+            next.push(if pair.len() == 2 { combine(pair[0], pair[1]) } else { pair[0] });
+        }
+        level = next;
+    }
+    let mut root = level[0];
+
+    // Internal edges, re-indexed to subgraph-local positions so the hash is
+    // network-position independent.
+    let local_index = |l: LayerId| sg.layers.binary_search(&l).ok();
+    let mut internal: Vec<(usize, usize)> = net
+        .edges()
+        .iter()
+        .filter_map(|e| match (local_index(e.src), local_index(e.dst)) {
+            (Some(a), Some(b)) => Some((a, b)),
+            _ => None,
+        })
+        .collect();
+    internal.sort();
+    for (a, b) in internal {
+        root = combine(root, combine(a as u64, b as u64));
+    }
+    MerkleHash(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::layer::Layer;
+    use crate::graph::partition::partition;
+    use crate::Processor;
+
+    fn two_chains() -> (Network, Network) {
+        let build = |id: usize, prefix: &str| {
+            let mut n = Network::new(id, prefix);
+            let a = n.add_layer(Layer::conv(&format!("{prefix}a"), 8, 8, 16, 3, 1));
+            let b = n.add_layer(Layer::conv(&format!("{prefix}b"), 8, 16, 16, 3, 1));
+            let c = n.add_layer(Layer::pointwise(&format!("{prefix}c"), 8, 16, 8));
+            n.connect(a, b);
+            n.connect(b, c);
+            n.finalize();
+            n
+        };
+        (build(0, "x"), build(1, "y"))
+    }
+
+    #[test]
+    fn isomorphic_subgraphs_collide() {
+        let (n1, n2) = two_chains();
+        let p1 = partition(&n1, &[false, false], &[Processor::Cpu; 3]);
+        let p2 = partition(&n2, &[false, false], &[Processor::Cpu; 3]);
+        assert_eq!(
+            merkle_hash_subgraph(&n1, &p1.subgraphs[0]),
+            merkle_hash_subgraph(&n2, &p2.subgraphs[0]),
+            "structurally identical subgraphs must share a cache key"
+        );
+    }
+
+    #[test]
+    fn different_partitions_differ() {
+        let (n1, _) = two_chains();
+        let whole = partition(&n1, &[false, false], &[Processor::Cpu; 3]);
+        let split = partition(&n1, &[true, false], &[Processor::Cpu; 3]);
+        assert_ne!(
+            merkle_hash_subgraph(&n1, &whole.subgraphs[0]),
+            merkle_hash_subgraph(&n1, &split.subgraphs[0]),
+        );
+    }
+
+    #[test]
+    fn name_changes_do_not_bust_cache() {
+        let mut n1 = Network::new(0, "a");
+        let l1 = n1.add_layer(Layer::conv("first", 8, 8, 8, 3, 1));
+        let _ = l1;
+        n1.finalize();
+        let mut n2 = Network::new(1, "b");
+        let _ = n2.add_layer(Layer::conv("renamed", 8, 8, 8, 3, 1));
+        n2.finalize();
+        let p1 = partition(&n1, &[], &[Processor::Cpu]);
+        let p2 = partition(&n2, &[], &[Processor::Cpu]);
+        assert_eq!(
+            merkle_hash_subgraph(&n1, &p1.subgraphs[0]),
+            merkle_hash_subgraph(&n2, &p2.subgraphs[0]),
+        );
+    }
+}

@@ -1,0 +1,92 @@
+//! DNN graph intermediate representation.
+//!
+//! Networks are DAGs of [`Layer`]s connected by [`Edge`]s carrying tensors.
+//! The Static Analyzer partitions a network by *cutting edges* (paper §4.2,
+//! Fig 7): the partition chromosome is one bit per edge, and the connected
+//! components of the uncut graph become [`Subgraph`]s — the units of
+//! compilation, profiling, and execution.
+
+mod layer;
+mod merkle;
+mod network;
+mod partition;
+
+pub use layer::{Layer, LayerId, LayerKind, TensorShape};
+pub use merkle::{merkle_hash_subgraph, MerkleHash};
+pub use network::{Edge, EdgeId, Network, NetworkId};
+pub use partition::{partition, Partition, Subgraph, SubgraphId};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::Processor;
+
+    /// The diamond network of paper Fig 3/7: L0 -> {L1, L2} -> L3.
+    pub(crate) fn diamond() -> Network {
+        let mut n = Network::new(0, "diamond");
+        let l0 = n.add_layer(Layer::conv("l0", 8, 8, 16, 3, 1));
+        let l1 = n.add_layer(Layer::conv("l1", 8, 16, 16, 3, 1));
+        let l2 = n.add_layer(Layer::conv("l2", 8, 16, 16, 3, 1));
+        let l3 = n.add_layer(Layer::add("l3", 8, 16));
+        n.connect(l0, l1);
+        n.connect(l0, l2);
+        n.connect(l1, l3);
+        n.connect(l2, l3);
+        n.finalize();
+        n
+    }
+
+    #[test]
+    fn diamond_structure() {
+        let n = diamond();
+        assert_eq!(n.num_layers(), 4);
+        assert_eq!(n.num_edges(), 4);
+        assert_eq!(n.inputs(), &[LayerId(0)]);
+        assert_eq!(n.outputs(), &[LayerId(3)]);
+        let topo = n.topological_order();
+        assert_eq!(topo[0], LayerId(0));
+        assert_eq!(topo[3], LayerId(3));
+    }
+
+    #[test]
+    fn no_cuts_single_subgraph() {
+        let n = diamond();
+        let cuts = vec![false; n.num_edges()];
+        let p = partition(&n, &cuts, &[Processor::Npu; 4]);
+        assert_eq!(p.subgraphs.len(), 1);
+        assert_eq!(p.subgraphs[0].layers.len(), 4);
+        assert_eq!(p.subgraphs[0].processor, Processor::Npu);
+    }
+
+    #[test]
+    fn all_cuts_per_layer_subgraphs() {
+        let n = diamond();
+        let cuts = vec![true; n.num_edges()];
+        let p = partition(&n, &cuts, &[Processor::Cpu; 4]);
+        assert_eq!(p.subgraphs.len(), 4);
+        for sg in &p.subgraphs {
+            assert_eq!(sg.layers.len(), 1);
+        }
+    }
+
+    #[test]
+    fn paper_fig7_partition() {
+        // Fig 7: edges [2],[3] cut on a 5-layer chain-with-branch network
+        // gives two subgraphs; mapping majority vote picks the processor.
+        let n = diamond();
+        // Cut the two edges into l3 => {l0,l1,l2} and {l3}.
+        let mut cuts = vec![false; n.num_edges()];
+        let e_l1_l3 = n.edge_between(LayerId(1), LayerId(3)).unwrap();
+        let e_l2_l3 = n.edge_between(LayerId(2), LayerId(3)).unwrap();
+        cuts[e_l1_l3.0] = true;
+        cuts[e_l2_l3.0] = true;
+        let mapping = [Processor::Npu, Processor::Npu, Processor::Cpu, Processor::Gpu];
+        let p = partition(&n, &cuts, &mapping);
+        assert_eq!(p.subgraphs.len(), 2);
+        // Majority vote of {NPU, NPU, CPU} is NPU.
+        let big = p.subgraphs.iter().find(|s| s.layers.len() == 3).unwrap();
+        assert_eq!(big.processor, Processor::Npu);
+        let small = p.subgraphs.iter().find(|s| s.layers.len() == 1).unwrap();
+        assert_eq!(small.processor, Processor::Gpu);
+    }
+}

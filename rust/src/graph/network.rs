@@ -1,0 +1,252 @@
+//! Networks: DAGs of layers with explicitly indexed edges.
+//!
+//! Edge indices matter: the GA's partition chromosome is a bit-vector over
+//! `Network::edges` in insertion order (paper Fig 6/7), so edge ordering must
+//! be stable and deterministic.
+
+use super::layer::{Layer, LayerId};
+
+/// Index of a network within a scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NetworkId(pub usize);
+
+impl std::fmt::Display for NetworkId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "N{}", self.0)
+    }
+}
+
+/// Index of an edge within its network (chromosome position).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct EdgeId(pub usize);
+
+/// A directed data edge `src -> dst`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Edge {
+    pub src: LayerId,
+    pub dst: LayerId,
+}
+
+/// A DNN as a DAG of [`Layer`]s.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub id: NetworkId,
+    pub name: String,
+    layers: Vec<Layer>,
+    edges: Vec<Edge>,
+    /// Adjacency: successors / predecessors per layer (built by `finalize`).
+    succs: Vec<Vec<LayerId>>,
+    preds: Vec<Vec<LayerId>>,
+    inputs: Vec<LayerId>,
+    outputs: Vec<LayerId>,
+    topo: Vec<LayerId>,
+    finalized: bool,
+}
+
+impl Network {
+    pub fn new(id: usize, name: &str) -> Network {
+        Network {
+            id: NetworkId(id),
+            name: name.to_string(),
+            layers: Vec::new(),
+            edges: Vec::new(),
+            succs: Vec::new(),
+            preds: Vec::new(),
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+            topo: Vec::new(),
+            finalized: false,
+        }
+    }
+
+    /// Add a layer, returning its id. Layers must be added before edges that
+    /// reference them.
+    pub fn add_layer(&mut self, layer: Layer) -> LayerId {
+        assert!(!self.finalized, "network already finalized");
+        let id = LayerId(self.layers.len());
+        self.layers.push(layer);
+        self.succs.push(Vec::new());
+        self.preds.push(Vec::new());
+        id
+    }
+
+    /// Connect `src -> dst`. Edges must be added in deterministic order; their
+    /// insertion index is the chromosome position.
+    pub fn connect(&mut self, src: LayerId, dst: LayerId) -> EdgeId {
+        assert!(!self.finalized, "network already finalized");
+        assert!(src.0 < self.layers.len() && dst.0 < self.layers.len());
+        assert!(src != dst, "self edge");
+        let id = EdgeId(self.edges.len());
+        self.edges.push(Edge { src, dst });
+        self.succs[src.0].push(dst);
+        self.preds[dst.0].push(src);
+        id
+    }
+
+    /// Compute inputs/outputs/topological order; must be called once after
+    /// construction. Panics if the graph has a cycle.
+    pub fn finalize(&mut self) {
+        assert!(!self.finalized);
+        self.inputs = (0..self.layers.len())
+            .map(LayerId)
+            .filter(|l| self.preds[l.0].is_empty())
+            .collect();
+        self.outputs = (0..self.layers.len())
+            .map(LayerId)
+            .filter(|l| self.succs[l.0].is_empty())
+            .collect();
+        // Kahn's algorithm. Ties broken by layer index for determinism.
+        let mut indeg: Vec<usize> = self.preds.iter().map(|p| p.len()).collect();
+        let mut ready: std::collections::BinaryHeap<std::cmp::Reverse<usize>> = self
+            .inputs
+            .iter()
+            .map(|l| std::cmp::Reverse(l.0))
+            .collect();
+        let mut topo = Vec::with_capacity(self.layers.len());
+        while let Some(std::cmp::Reverse(l)) = ready.pop() {
+            topo.push(LayerId(l));
+            for &s in &self.succs[l] {
+                indeg[s.0] -= 1;
+                if indeg[s.0] == 0 {
+                    ready.push(std::cmp::Reverse(s.0));
+                }
+            }
+        }
+        assert_eq!(topo.len(), self.layers.len(), "network {} has a cycle", self.name);
+        self.topo = topo;
+        self.finalized = true;
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn layer(&self, id: LayerId) -> &Layer {
+        &self.layers[id.0]
+    }
+
+    pub fn layers(&self) -> &[Layer] {
+        &self.layers
+    }
+
+    pub fn edge(&self, id: EdgeId) -> Edge {
+        self.edges[id.0]
+    }
+
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    pub fn successors(&self, id: LayerId) -> &[LayerId] {
+        &self.succs[id.0]
+    }
+
+    pub fn predecessors(&self, id: LayerId) -> &[LayerId] {
+        &self.preds[id.0]
+    }
+
+    pub fn inputs(&self) -> &[LayerId] {
+        assert!(self.finalized);
+        &self.inputs
+    }
+
+    pub fn outputs(&self) -> &[LayerId] {
+        assert!(self.finalized);
+        &self.outputs
+    }
+
+    /// Deterministic topological order (Kahn, index-tiebroken).
+    pub fn topological_order(&self) -> &[LayerId] {
+        assert!(self.finalized);
+        &self.topo
+    }
+
+    /// Find the edge id connecting `src -> dst`, if any.
+    pub fn edge_between(&self, src: LayerId, dst: LayerId) -> Option<EdgeId> {
+        self.edges
+            .iter()
+            .position(|e| e.src == src && e.dst == dst)
+            .map(EdgeId)
+    }
+
+    /// All edge ids incident (either direction) to a layer.
+    pub fn incident_edges(&self, l: LayerId) -> Vec<EdgeId> {
+        self.edges
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.src == l || e.dst == l)
+            .map(|(i, _)| EdgeId(i))
+            .collect()
+    }
+
+    /// Total multiply-accumulates of the whole network.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    /// Total parameter count of the whole network.
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain(n: usize) -> Network {
+        let mut net = Network::new(0, "chain");
+        let ids: Vec<LayerId> = (0..n)
+            .map(|i| net.add_layer(Layer::conv(&format!("l{i}"), 8, 8, 8, 3, 1)))
+            .collect();
+        for w in ids.windows(2) {
+            net.connect(w[0], w[1]);
+        }
+        net.finalize();
+        net
+    }
+
+    #[test]
+    fn chain_topology() {
+        let n = chain(5);
+        assert_eq!(n.num_edges(), 4);
+        assert_eq!(n.inputs(), &[LayerId(0)]);
+        assert_eq!(n.outputs(), &[LayerId(4)]);
+        let topo: Vec<usize> = n.topological_order().iter().map(|l| l.0).collect();
+        assert_eq!(topo, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle")]
+    fn cycle_detected() {
+        let mut net = Network::new(0, "cyclic");
+        let a = net.add_layer(Layer::add("a", 4, 4));
+        let b = net.add_layer(Layer::add("b", 4, 4));
+        net.connect(a, b);
+        net.connect(b, a);
+        net.finalize();
+    }
+
+    #[test]
+    fn incident_edges_of_join() {
+        let mut net = Network::new(0, "join");
+        let a = net.add_layer(Layer::conv("a", 8, 8, 8, 3, 1));
+        let b = net.add_layer(Layer::conv("b", 8, 8, 8, 3, 1));
+        let c = net.add_layer(Layer::add("c", 8, 8));
+        net.connect(a, c);
+        net.connect(b, c);
+        net.finalize();
+        assert_eq!(net.incident_edges(c).len(), 2);
+        assert_eq!(net.predecessors(c), &[a, b]);
+    }
+
+    #[test]
+    fn macs_sum() {
+        let n = chain(3);
+        assert_eq!(n.total_macs(), 3 * (8 * 8 * 8 * 8 * 9) as u64);
+    }
+}

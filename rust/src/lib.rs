@@ -1,0 +1,235 @@
+//! # Puzzle — multi-model scheduling on heterogeneous processors
+//!
+//! A reproduction of *"Puzzle: Scheduling Multiple Deep Learning Models on
+//! Mobile Device with Heterogeneous Processors"* (Kang, Lee, Kim — Qualcomm AI
+//! Research, 2025) as a three-layer rust + JAX + Pallas stack.
+//!
+//! The crate contains both halves of the paper's system:
+//!
+//! * the **Static Analyzer** ([`analyzer`], [`ga`], [`sim`], [`profiler`],
+//!   [`comm`]) — a genetic algorithm that jointly explores graph partitioning,
+//!   processor mapping, and network priority, evaluated through a
+//!   discrete-event simulator fed by device-in-the-loop profiling and a
+//!   piecewise-linear communication-cost model; and
+//! * the **Runtime** ([`coordinator`], [`worker`], [`engine`], [`mem`]) — a
+//!   Coordinator/Worker/Engine serving stack with tensor-pool and zero-copy
+//!   shared-buffer optimizations, executing AOT-compiled XLA artifacts through
+//!   the PJRT C API ([`runtime`]).
+//!
+//! Substrates the paper relied on (DEAP, SimPy, the Snapdragon 8 Gen 2's
+//! CPU/GPU/NPU and their SDKs) are rebuilt from scratch: see `DESIGN.md` for
+//! the substitution table.
+
+pub mod analyzer;
+pub mod baselines;
+pub mod comm;
+pub mod coordinator;
+pub mod engine;
+pub mod experiments;
+pub mod ga;
+pub mod graph;
+pub mod mem;
+pub mod metrics;
+pub mod models;
+pub mod perf;
+pub mod profiler;
+pub mod quant;
+pub mod runtime;
+pub mod scenario;
+pub mod sim;
+pub mod util;
+pub mod worker;
+
+/// The three logical processors of the simulated mobile SoC.
+///
+/// The paper's testbed is a Snapdragon 8 Gen 2 (8-core CPU, Adreno GPU,
+/// Hexagon NPU). Our substrate keeps the same three-way split; per-processor
+/// cost comes from [`perf::PerfModel`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Processor {
+    Cpu,
+    Gpu,
+    Npu,
+}
+
+impl Processor {
+    pub const ALL: [Processor; 3] = [Processor::Cpu, Processor::Gpu, Processor::Npu];
+
+    pub fn index(self) -> usize {
+        match self {
+            Processor::Cpu => 0,
+            Processor::Gpu => 1,
+            Processor::Npu => 2,
+        }
+    }
+
+    pub fn from_index(i: usize) -> Processor {
+        Self::ALL[i % 3]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Processor::Cpu => "CPU",
+            Processor::Gpu => "GPU",
+            Processor::Npu => "NPU",
+        }
+    }
+}
+
+impl std::fmt::Display for Processor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Kernel data types available per backend (paper §2.1.1, Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DataType {
+    Fp32,
+    Fp16,
+    Int8,
+}
+
+impl DataType {
+    pub const ALL: [DataType; 3] = [DataType::Fp32, DataType::Fp16, DataType::Int8];
+
+    /// Bytes per element.
+    pub fn size(self) -> usize {
+        match self {
+            DataType::Fp32 => 4,
+            DataType::Fp16 => 2,
+            DataType::Int8 => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DataType::Fp32 => "fp32",
+            DataType::Fp16 => "fp16",
+            DataType::Int8 => "int8",
+        }
+    }
+}
+
+impl std::fmt::Display for DataType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Backend kernel implementations (paper Table 2: ORT default CPU, XNNPACK,
+/// NNAPI for the CPU; QNN-CPU/GPU/HTP analogs for GPU/NPU).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Backend {
+    /// ORT default CPU execution provider analog.
+    OrtCpu,
+    /// XNNPACK execution provider analog.
+    Xnnpack,
+    /// NNAPI execution provider analog (consistently worst in the paper).
+    Nnapi,
+    /// Qualcomm AI Engine Direct analog (GPU / NPU backends).
+    Qnn,
+}
+
+impl Backend {
+    pub const ALL: [Backend; 4] = [Backend::OrtCpu, Backend::Xnnpack, Backend::Nnapi, Backend::Qnn];
+
+    /// Backends selectable for a given processor.
+    pub fn for_processor(p: Processor) -> &'static [Backend] {
+        match p {
+            Processor::Cpu => &[Backend::OrtCpu, Backend::Xnnpack, Backend::Nnapi],
+            Processor::Gpu | Processor::Npu => &[Backend::Qnn],
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::OrtCpu => "ort-cpu",
+            Backend::Xnnpack => "xnnpack",
+            Backend::Nnapi => "nnapi",
+            Backend::Qnn => "qnn",
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A full execution configuration for a subgraph: where it runs, with which
+/// kernel library, at which precision (paper's `M × T × BE` search space).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ExecConfig {
+    pub processor: Processor,
+    pub backend: Backend,
+    pub dtype: DataType,
+}
+
+impl ExecConfig {
+    pub fn new(processor: Processor, backend: Backend, dtype: DataType) -> Self {
+        Self { processor, backend, dtype }
+    }
+
+    /// Every valid (processor, backend, dtype) combination.
+    pub fn enumerate() -> Vec<ExecConfig> {
+        let mut out = Vec::new();
+        for p in Processor::ALL {
+            for &b in Backend::for_processor(p) {
+                for d in DataType::ALL {
+                    out.push(ExecConfig::new(p, b, d));
+                }
+            }
+        }
+        out
+    }
+
+    /// Default best-effort config for a processor (fp16 on the native backend,
+    /// matching the paper's Table 3 methodology: "all models are run in fp16").
+    pub fn default_for(p: Processor) -> ExecConfig {
+        let backend = match p {
+            Processor::Cpu => Backend::Xnnpack,
+            _ => Backend::Qnn,
+        };
+        ExecConfig::new(p, backend, DataType::Fp16)
+    }
+}
+
+impl std::fmt::Display for ExecConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}/{}", self.processor, self.backend, self.dtype)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn processor_roundtrip() {
+        for p in Processor::ALL {
+            assert_eq!(Processor::from_index(p.index()), p);
+        }
+    }
+
+    #[test]
+    fn backend_sets_are_valid() {
+        assert_eq!(Backend::for_processor(Processor::Cpu).len(), 3);
+        assert_eq!(Backend::for_processor(Processor::Gpu), &[Backend::Qnn]);
+        assert_eq!(Backend::for_processor(Processor::Npu), &[Backend::Qnn]);
+    }
+
+    #[test]
+    fn enumerate_configs_counts() {
+        // CPU: 3 backends x 3 dtypes, GPU: 1 x 3, NPU: 1 x 3 = 15.
+        assert_eq!(ExecConfig::enumerate().len(), 15);
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DataType::Fp32.size(), 4);
+        assert_eq!(DataType::Fp16.size(), 2);
+        assert_eq!(DataType::Int8.size(), 1);
+    }
+}

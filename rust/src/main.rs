@@ -1,0 +1,398 @@
+//! Puzzle CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//! * `analyze`     — run the Static Analyzer on a scenario, print the Pareto set
+//! * `serve`       — serve a scenario through the runtime (simulated engine)
+//! * `profile`     — profile the model zoo on the simulated device
+//! * `comm-bench`  — run the RPC/STREAM microbenchmarks and print the fit
+//! * `scenario-gen`— print the random scenario configurations (Fig 11)
+//! * `experiment`  — regenerate a paper table/figure (`all` for everything)
+//!
+//! Argument parsing is hand-rolled (`--key value` / `--flag`): the build
+//! environment is offline and clap is not vendored.
+
+use anyhow::Result;
+
+use puzzle::analyzer::{GaConfig, StaticAnalyzer};
+use puzzle::experiments::{self, ServingBudget};
+use puzzle::graph::LayerId;
+use puzzle::models;
+use puzzle::perf::PerfModel;
+use puzzle::scenario::{multi_group_scenarios, single_group_scenarios, Scenario};
+use puzzle::Processor;
+
+/// Parsed `--key value` options and `--flag` switches.
+struct Args {
+    positional: Vec<String>,
+    options: std::collections::HashMap<String, String>,
+    flags: std::collections::HashSet<String>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut args = Args {
+        positional: Vec::new(),
+        options: std::collections::HashMap::new(),
+        flags: std::collections::HashSet::new(),
+    };
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                args.options.insert(key.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                args.flags.insert(key.to_string());
+                i += 1;
+            }
+        } else {
+            args.positional.push(a.clone());
+            i += 1;
+        }
+    }
+    args
+}
+
+impl Args {
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.options
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+const USAGE: &str = "usage: puzzle <analyze|serve|profile|comm-bench|scenario-gen|experiment> [options]
+  analyze      --models 0,1,6 --population 48 --generations 40 --seed 23 [--save sol.txt]
+  serve        --models 0,1,6 --requests 30 --time-scale 0.05 [--solution sol.txt]
+  profile
+  comm-bench
+  scenario-gen --seed 23
+  experiment   <table2|table3|table4|table5|fig5|fig10|fig12|fig13|fig14|fig15|fig16|headline|all> [--full]";
+
+fn parse_models(s: &str) -> Vec<usize> {
+    s.split(',')
+        .filter_map(|t| t.trim().parse::<usize>().ok())
+        .filter(|&i| i < models::MODEL_COUNT)
+        .collect()
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let args = parse_args(&argv[1..]);
+    let pm = PerfModel::paper_calibrated();
+    match cmd.as_str() {
+        "analyze" => {
+            let idx = parse_models(&args.get_str("models", "0,1,6"));
+            let scenario = Scenario::from_groups("cli", &[idx]);
+            let config = GaConfig {
+                population: args.get("population", 48),
+                max_generations: args.get("generations", 40),
+                seed: args.get("seed", 23),
+                ..Default::default()
+            };
+            let result = StaticAnalyzer::new(&scenario, &pm, config).run();
+            if let Some(path) = args.options.get("save") {
+                puzzle::analyzer::solution_io::save_solutions(
+                    std::path::Path::new(path), &scenario, &result.pareto,
+                )?;
+                println!("saved {} solutions to {path}", result.pareto.len());
+            }
+            println!(
+                "analyzer: {} generations, {} evaluations, profile cache {} hits / {} measures",
+                result.generations_run, result.evaluations,
+                result.profile_cache_hits, result.profile_measurements
+            );
+            println!("pareto solutions: {}", result.pareto.len());
+            for (i, sol) in result.pareto.iter().enumerate() {
+                let subgraphs: usize = sol.plans.iter().map(|p| p.tasks.len()).sum();
+                println!(
+                    "  #{i}: objectives {:?} ({} subgraphs total)",
+                    sol.objectives.iter().map(|o| format!("{:.2}ms", o * 1e3)).collect::<Vec<_>>(),
+                    subgraphs
+                );
+            }
+        }
+        "serve" => {
+            let idx = parse_models(&args.get_str("models", "0,1,6"));
+            let solution_file = args.options.get("solution").cloned();
+            serve_cmd(
+                &pm, &idx, args.get("requests", 30), args.get("time-scale", 0.05),
+                solution_file.as_deref(),
+            )?;
+        }
+        "profile" => profile_zoo(&pm),
+        "comm-bench" => {
+            let (samples, fit, bw) = experiments::fig5_rpc_regression();
+            println!("STREAM bandwidth: {:.1} GB/s (paper device: ~40 GB/s)", bw / 1e9);
+            println!("piecewise-linear RPC fit (knee at 1 MiB):");
+            println!(
+                "  below: {:.1}us + {:.3}ns/B   above: {:.1}us + {:.3}ns/B   r2={:.4}",
+                fit.below_intercept * 1e6, fit.below_slope * 1e9,
+                fit.above_intercept * 1e6, fit.above_slope * 1e9,
+                fit.r_squared(&samples)
+            );
+            for s in &samples {
+                println!("  {:>10} B  {:>10.2} us", s.bytes, s.seconds * 1e6);
+            }
+        }
+        "scenario-gen" => {
+            let seed = args.get("seed", 23u64);
+            println!("single model group scenarios (Fig 11 top):");
+            for s in single_group_scenarios(seed) {
+                println!("  {:<10} models {:?}", s.name, s.zoo_indices);
+            }
+            println!("multi model group scenarios (Fig 11 bottom):");
+            for s in multi_group_scenarios(seed) {
+                let g1: Vec<usize> = s.groups[0].members.iter().map(|&m| s.zoo_indices[m]).collect();
+                let g2: Vec<usize> = s.groups[1].members.iter().map(|&m| s.zoo_indices[m]).collect();
+                println!("  {:<10} group1 {:?} group2 {:?}", s.name, g1, g2);
+            }
+        }
+        "experiment" => {
+            let id = args.positional.first().cloned().unwrap_or_else(|| "all".into());
+            let budget = if args.flags.contains("full") {
+                ServingBudget::full()
+            } else {
+                ServingBudget::quick()
+            };
+            run_experiment(&pm, &id, &budget)?;
+        }
+        other => {
+            println!("unknown command: {other}\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+fn serve_cmd(
+    pm: &PerfModel,
+    idx: &[usize],
+    requests: usize,
+    time_scale: f64,
+    solution_file: Option<&str>,
+) -> Result<()> {
+    use puzzle::coordinator::{Coordinator, NetworkSolution, RuntimeOptions};
+    use puzzle::engine::{Engine, SimEngine};
+    use puzzle::ga::decode_network;
+    use std::sync::Arc;
+
+    let scenario = Scenario::from_groups("serve", &[idx.to_vec()]);
+    // Either load a saved Static-Analyzer solution (the paper's Fig 2
+    // hand-off) or run a fresh quick analysis.
+    let (genome, priorities) = match solution_file {
+        Some(path) => {
+            let loaded = puzzle::analyzer::solution_io::load_solutions(
+                std::path::Path::new(path), &scenario,
+            )?;
+            let best = loaded
+                .into_iter()
+                .min_by(|a, b| {
+                    let ma = a.objectives.iter().cloned().fold(0.0, f64::max);
+                    let mb = b.objectives.iter().cloned().fold(0.0, f64::max);
+                    ma.partial_cmp(&mb).unwrap()
+                })
+                .ok_or_else(|| anyhow::anyhow!("no solutions in {path}"))?;
+            println!("loaded solution from {path}");
+            (best.genome.clone(), best.genome.priority)
+        }
+        None => {
+            let analysis = StaticAnalyzer::new(&scenario, pm, GaConfig::quick(23)).run();
+            let best = analysis.best_by_max_makespan();
+            (best.genome.clone(), best.genome.priority.clone())
+        }
+    };
+    let best_networks = genome.networks;
+    let solutions: Vec<NetworkSolution> = scenario
+        .networks
+        .iter()
+        .zip(&best_networks)
+        .enumerate()
+        .map(|(i, (net, genes))| {
+            let part = decode_network(net, genes);
+            let configs = part
+                .subgraphs
+                .iter()
+                .map(|sg| pm.best_config_for(net, &sg.layers, sg.processor).0)
+                .collect();
+            NetworkSolution {
+                network: Arc::new(net.clone()),
+                partition: Arc::new(part),
+                configs,
+                priority: priorities[i],
+            }
+        })
+        .collect();
+    let engine: Arc<dyn Engine> = Arc::new(SimEngine::new(
+        Arc::new(PerfModel::paper_calibrated()),
+        time_scale,
+        true,
+        7,
+    ));
+    let members: Vec<usize> = (0..idx.len()).collect();
+    let mut coord = Coordinator::new(solutions, engine, RuntimeOptions::default());
+    let t0 = std::time::Instant::now();
+    for _ in 0..requests {
+        coord.submit_group(0, &members);
+        coord.pump(std::time::Duration::from_secs(30));
+    }
+    let served = coord.served().to_vec();
+    let wall = t0.elapsed().as_secs_f64();
+    let makespans: Vec<f64> = served.iter().map(|s| s.makespan / time_scale.max(1e-9)).collect();
+    let (avg, sd) = puzzle::metrics::mean_sd(&makespans);
+    println!(
+        "served {} requests in {:.2}s wall; simulated makespan avg {:.2}ms ± {:.2}ms, p90 {:.2}ms",
+        served.len(), wall,
+        avg * 1e3, sd * 1e3,
+        puzzle::sim::percentile(&makespans, 0.9) * 1e3
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn run_experiment(pm: &PerfModel, id: &str, budget: &ServingBudget) -> Result<()> {
+    match id {
+        "table2" => experiments::tables::print_table2(pm),
+        "table3" => experiments::tables::print_table3(pm),
+        "table4" => experiments::tables::print_table4(pm),
+        "fig5" => {
+            let (samples, fit, bw) = experiments::fig5_rpc_regression();
+            println!("bandwidth {:.1} GB/s, r2 {:.4}", bw / 1e9, fit.r_squared(&samples));
+            println!(
+                "below-knee: {:.1}us + {:.3}ns/B; above: {:.1}us + {:.3}ns/B",
+                fit.below_intercept * 1e6, fit.below_slope * 1e9,
+                fit.above_intercept * 1e6, fit.above_slope * 1e9
+            );
+        }
+        "energy" => {
+            // The paper's deferred extension: energy per group request for
+            // each method on the scenario-10 analog.
+            use puzzle::perf::energy;
+            use puzzle::sim::{simulate, GroupSpec, SimOptions};
+            let scenario = puzzle::scenario::scenario10_analog();
+            let (pz, bm, npu) =
+                puzzle::experiments::solve_scenario_budgeted(&scenario, pm, budget.sim_requests, 210);
+            let comm = puzzle::comm::CommModel::paper_calibrated();
+            let periods = scenario.periods(1.2, pm);
+            let groups: Vec<GroupSpec> = scenario
+                .groups
+                .iter()
+                .zip(&periods)
+                .map(|(g, &p)| GroupSpec::periodic(g.members.clone(), p))
+                .collect();
+            let opts = SimOptions { requests_per_group: 30, ..Default::default() };
+            println!("energy per group request at alpha=1.2 (scenario-10 analog):");
+            for (name, sols) in [("puzzle", &pz), ("best_mapping", &bm), ("npu_only", &npu)] {
+                if let Some(plans) = sols.first() {
+                    let r = simulate(plans, &groups, &comm, &opts);
+                    println!(
+                        "  {:<13} {:.1} mJ/request ({:.2} J total, busy CPU/GPU/NPU = {:.0}/{:.0}/{:.0} ms)",
+                        name,
+                        energy::energy_per_request(&r) * 1e3,
+                        energy::schedule_energy(&r),
+                        r.busy[0] * 1e3, r.busy[1] * 1e3, r.busy[2] * 1e3
+                    );
+                }
+            }
+        }
+        "ablation-ga" => {
+            println!("GA design-choice ablation (scenario-10 analog):");
+            println!("{:<18} {:>18} {:>8}", "variant", "worst avg (ms)", "alpha*");
+            for (name, worst, sat) in
+                puzzle::experiments::ga_ablation(&puzzle::scenario::scenario10_analog(), pm, 7)
+            {
+                println!(
+                    "{:<18} {:>18.2} {:>8}",
+                    name,
+                    worst * 1e3,
+                    sat.map(|a| format!("{a:.2}")).unwrap_or_else(|| ">6".into())
+                );
+            }
+        }
+        "fig10" | "table5" => {
+            let rows = experiments::fig10_ablation(pm, budget.scenarios.min(5), 12);
+            let t5 = experiments::table5_breakdown(pm, 12);
+            experiments::ablation::print_ablation(&rows, &t5);
+        }
+        "fig12" => {
+            let rows = experiments::fig12_single_group(pm, budget);
+            experiments::serving::print_saturation("Fig 12 — single model group saturation multipliers", &rows);
+        }
+        "fig13" => {
+            for mc in experiments::fig13_score_curves(pm, budget) {
+                print_curves(&mc);
+            }
+        }
+        "fig14" => {
+            for (method, alpha, avgs) in experiments::fig14_makespan_distribution(pm, budget) {
+                println!(
+                    "{method:<13} α={alpha}: group makespans {:?}",
+                    avgs.iter().map(|a| format!("{:.1}ms", a * 1e3)).collect::<Vec<_>>()
+                );
+            }
+        }
+        "fig15" => {
+            let rows = experiments::fig15_multi_group(pm, budget);
+            experiments::serving::print_saturation("Fig 15 — multi model group saturation multipliers", &rows);
+        }
+        "fig16" => {
+            for mc in experiments::fig16_multi_score_curves(pm, budget) {
+                print_curves(&mc);
+            }
+        }
+        "headline" => {
+            let mut rows = experiments::fig12_single_group(pm, budget);
+            rows.extend(experiments::fig15_multi_group(pm, budget));
+            let (npu, bm) = experiments::headline_ratios(&rows);
+            println!("headline: NPU Only {npu:.1}x (paper 3.7x), Best Mapping {bm:.1}x (paper 2.2x)");
+        }
+        "all" => {
+            for id in [
+                "table2", "table3", "table4", "fig5", "fig10", "ablation-ga", "fig12",
+                "fig13", "fig14", "fig15", "fig16", "headline", "energy",
+            ] {
+                println!("==== {id} ====");
+                run_experiment(pm, id, budget)?;
+                println!();
+            }
+        }
+        other => anyhow::bail!("unknown experiment id: {other}"),
+    }
+    Ok(())
+}
+
+fn print_curves(mc: &puzzle::experiments::MethodCurve) {
+    println!("scenario {}", mc.scenario);
+    for c in &mc.curves {
+        let pts: Vec<String> = c
+            .alphas
+            .iter()
+            .zip(&c.scores)
+            .map(|(a, (lo, med, hi))| format!("{a:.1}:{lo:.2}/{med:.2}/{hi:.2}"))
+            .collect();
+        println!("  {:<13} {}", c.method, pts.join(" "));
+    }
+}
+
+fn profile_zoo(pm: &PerfModel) {
+    for net in models::model_zoo() {
+        let all: Vec<LayerId> = (0..net.num_layers()).map(LayerId).collect();
+        let times: Vec<String> = Processor::ALL
+            .iter()
+            .map(|&p| {
+                let (cfg, t) = pm.best_config_for(&net, &all, p);
+                format!("{}: {:.2}ms ({})", p, t * 1e3, cfg)
+            })
+            .collect();
+        println!("{:<14} {}", net.name, times.join("  "));
+    }
+}

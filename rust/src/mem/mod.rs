@@ -1,0 +1,84 @@
+//! Memory optimizations of the Puzzle Runtime (paper §5.3, Fig 10, Table 5):
+//! the **tensor pool** (chunked buffer reuse) and the **zero-copy shared
+//! buffer** (ION/DMA-BUF analog: a reference-counted arena whose slices move
+//! between workers without serialization).
+//!
+//! Both keep the accounting the paper's Table 5 reports — malloc time and
+//! count, memcpy time, free time — so the ablation experiment can print the
+//! same breakdown.
+
+mod pool;
+mod shared;
+
+pub use pool::{PooledTensor, TensorPool, CHUNK_BYTES};
+pub use shared::{SharedArena, SharedSlice};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Nanosecond-granularity counters for the Table 5 breakdown.
+#[derive(Debug, Default)]
+pub struct MemStats {
+    pub malloc_ns: AtomicU64,
+    pub malloc_count: AtomicU64,
+    pub memcpy_ns: AtomicU64,
+    pub memcpy_bytes: AtomicU64,
+    pub free_ns: AtomicU64,
+    pub free_count: AtomicU64,
+}
+
+impl MemStats {
+    pub fn record_malloc(&self, ns: u64) {
+        self.malloc_ns.fetch_add(ns, Ordering::Relaxed);
+        self.malloc_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_memcpy(&self, ns: u64, bytes: u64) {
+        self.memcpy_ns.fetch_add(ns, Ordering::Relaxed);
+        self.memcpy_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn record_free(&self, ns: u64) {
+        self.free_ns.fetch_add(ns, Ordering::Relaxed);
+        self.free_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// (malloc ms, malloc count, memcpy ms, free ms) — Table 5's columns.
+    pub fn snapshot(&self) -> (f64, u64, f64, f64) {
+        (
+            self.malloc_ns.load(Ordering::Relaxed) as f64 / 1e6,
+            self.malloc_count.load(Ordering::Relaxed),
+            self.memcpy_ns.load(Ordering::Relaxed) as f64 / 1e6,
+            self.free_ns.load(Ordering::Relaxed) as f64 / 1e6,
+        )
+    }
+
+    pub fn reset(&self) {
+        self.malloc_ns.store(0, Ordering::Relaxed);
+        self.malloc_count.store(0, Ordering::Relaxed);
+        self.memcpy_ns.store(0, Ordering::Relaxed);
+        self.memcpy_bytes.store(0, Ordering::Relaxed);
+        self.free_ns.store(0, Ordering::Relaxed);
+        self.free_count.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_accumulate_and_reset() {
+        let s = MemStats::default();
+        s.record_malloc(1_000_000);
+        s.record_malloc(2_000_000);
+        s.record_memcpy(500_000, 1024);
+        s.record_free(100_000);
+        let (m_ms, m_n, c_ms, f_ms) = s.snapshot();
+        assert!((m_ms - 3.0).abs() < 1e-9);
+        assert_eq!(m_n, 2);
+        assert!((c_ms - 0.5).abs() < 1e-9);
+        assert!((f_ms - 0.1).abs() < 1e-9);
+        s.reset();
+        assert_eq!(s.snapshot().1, 0);
+    }
+}

@@ -1,0 +1,242 @@
+//! The tensor pool (paper §5.3): buffers are allocated in 2048-byte chunks
+//! and recycled, so one memory buffer serves many tensors of different
+//! sizes across requests. Table 5 attributes a 76.8% malloc-time and 99.4%
+//! free-time reduction to this reuse, plus a 65.9% memcpy reduction from
+//! already-faulted pages.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use std::sync::Mutex;
+
+use super::MemStats;
+
+/// Pool chunk granularity (paper: 2048 B).
+pub const CHUNK_BYTES: usize = 2048;
+
+/// Round a size up to whole chunks.
+fn chunks_for(bytes: usize) -> usize {
+    bytes.div_ceil(CHUNK_BYTES).max(1)
+}
+
+/// A tensor buffer lent out by the pool. Returned on drop.
+pub struct PooledTensor {
+    buf: Option<Vec<u8>>,
+    len: usize,
+    pool: Arc<PoolInner>,
+}
+
+impl PooledTensor {
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf.as_ref().unwrap()[..self.len]
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        let len = self.len;
+        &mut self.buf.as_mut().unwrap()[..len]
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Capacity in bytes (whole chunks).
+    pub fn capacity(&self) -> usize {
+        self.buf.as_ref().unwrap().len()
+    }
+
+    /// Copy data in, with memcpy accounting.
+    pub fn fill_from(&mut self, src: &[u8]) {
+        assert!(src.len() <= self.len, "fill over tensor length");
+        let t0 = Instant::now();
+        self.as_mut_slice()[..src.len()].copy_from_slice(src);
+        self.pool.stats.record_memcpy(t0.elapsed().as_nanos() as u64, src.len() as u64);
+    }
+}
+
+impl Drop for PooledTensor {
+    fn drop(&mut self) {
+        if let Some(buf) = self.buf.take() {
+            let t0 = Instant::now();
+            if self.pool.enabled {
+                self.pool.free_lists.lock().unwrap().entry(buf.len()).or_default().push(buf);
+            } else {
+                drop(buf); // real free
+            }
+            self.pool.stats.record_free(t0.elapsed().as_nanos() as u64);
+        }
+    }
+}
+
+struct PoolInner {
+    enabled: bool,
+    /// Free buffers bucketed by capacity (chunk-rounded).
+    free_lists: Mutex<HashMap<usize, Vec<Vec<u8>>>>,
+    stats: MemStats,
+}
+
+/// The tensor pool. With `enabled = false` it degrades to plain
+/// malloc/free (the ablation baseline) while keeping identical accounting.
+#[derive(Clone)]
+pub struct TensorPool {
+    inner: Arc<PoolInner>,
+}
+
+impl TensorPool {
+    pub fn new(enabled: bool) -> TensorPool {
+        TensorPool {
+            inner: Arc::new(PoolInner {
+                enabled,
+                free_lists: Mutex::new(HashMap::new()),
+                stats: MemStats::default(),
+            }),
+        }
+    }
+
+    /// Pre-allocate `count` buffers of `bytes` each (paper: "initially
+    /// pre-allocate buffers"). No-op when pooling is disabled.
+    pub fn preallocate(&self, bytes: usize, count: usize) {
+        if !self.inner.enabled {
+            return;
+        }
+        let cap = chunks_for(bytes) * CHUNK_BYTES;
+        let mut lists = self.inner.free_lists.lock().unwrap();
+        let list = lists.entry(cap).or_default();
+        for _ in 0..count {
+            let mut b = vec![0u8; cap];
+            // Touch pages so later use doesn't fault.
+            for i in (0..cap).step_by(4096) {
+                b[i] = 0;
+            }
+            list.push(b);
+        }
+    }
+
+    /// Acquire a tensor buffer of at least `bytes`.
+    pub fn acquire(&self, bytes: usize) -> PooledTensor {
+        let cap = chunks_for(bytes) * CHUNK_BYTES;
+        let t0 = Instant::now();
+        let buf = if self.inner.enabled {
+            self.inner
+                .free_lists
+                .lock().unwrap()
+                .get_mut(&cap)
+                .and_then(|l| l.pop())
+                .unwrap_or_else(|| vec![0u8; cap])
+        } else {
+            vec![0u8; cap]
+        };
+        self.inner.stats.record_malloc(t0.elapsed().as_nanos() as u64);
+        PooledTensor { buf: Some(buf), len: bytes, pool: self.inner.clone() }
+    }
+
+    /// Distinct *fresh* allocations made so far (Table 5's "# of Alloc"
+    /// equivalent is malloc_count; fresh-vs-recycled is observable through
+    /// the free-list length before/after).
+    pub fn stats(&self) -> &MemStats {
+        &self.inner.stats
+    }
+
+    /// Total buffers currently idle in the pool.
+    pub fn idle_buffers(&self) -> usize {
+        self.inner.free_lists.lock().unwrap().values().map(|v| v.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_rounding() {
+        assert_eq!(chunks_for(1), 1);
+        assert_eq!(chunks_for(2048), 1);
+        assert_eq!(chunks_for(2049), 2);
+        assert_eq!(chunks_for(10_000), 5);
+    }
+
+    #[test]
+    fn buffers_are_recycled() {
+        let pool = TensorPool::new(true);
+        {
+            let t = pool.acquire(1000);
+            assert_eq!(t.capacity(), CHUNK_BYTES);
+        } // drop returns it
+        assert_eq!(pool.idle_buffers(), 1);
+        let _t2 = pool.acquire(2000); // same 1-chunk bucket
+        assert_eq!(pool.idle_buffers(), 0, "buffer not reused");
+    }
+
+    #[test]
+    fn different_sizes_share_chunked_buckets() {
+        let pool = TensorPool::new(true);
+        {
+            let _a = pool.acquire(100);
+        }
+        {
+            // 100 B and 1.9 KiB round to the same single chunk.
+            let _b = pool.acquire(1900);
+        }
+        let (_, malloc_count, _, _) = pool.stats().snapshot();
+        assert_eq!(malloc_count, 2);
+        assert_eq!(pool.idle_buffers(), 1, "single buffer should serve both");
+    }
+
+    #[test]
+    fn disabled_pool_never_retains() {
+        let pool = TensorPool::new(false);
+        {
+            let _t = pool.acquire(4096);
+        }
+        assert_eq!(pool.idle_buffers(), 0);
+    }
+
+    #[test]
+    fn preallocation_avoids_fresh_allocs() {
+        let pool = TensorPool::new(true);
+        pool.preallocate(8192, 4);
+        assert_eq!(pool.idle_buffers(), 4);
+        let a = pool.acquire(8192);
+        let b = pool.acquire(8000);
+        assert_eq!(pool.idle_buffers(), 2);
+        drop(a);
+        drop(b);
+        assert_eq!(pool.idle_buffers(), 4);
+    }
+
+    #[test]
+    fn fill_accounts_memcpy() {
+        let pool = TensorPool::new(true);
+        let mut t = pool.acquire(64);
+        t.fill_from(&[7u8; 64]);
+        assert_eq!(t.as_slice(), &[7u8; 64]);
+        assert_eq!(pool.stats().memcpy_bytes.load(std::sync::atomic::Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn pool_is_thread_safe() {
+        let pool = TensorPool::new(true);
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let p = pool.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        let mut t = p.acquire(3000);
+                        t.as_mut_slice()[0] = 1;
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let (_, count, _, _) = pool.stats().snapshot();
+        assert_eq!(count, 800);
+        assert!(pool.idle_buffers() <= 8);
+    }
+}

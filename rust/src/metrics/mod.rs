@@ -1,0 +1,173 @@
+//! XRBench-style scoring (paper §6.2).
+//!
+//! * **Makespan** Θ — time from a group's request to its last model
+//!   finishing (produced by the simulator / runtime).
+//! * **QoE score** — fraction of requests meeting the deadline (= period).
+//! * **Realtime score** — sigmoid sensitivity to the deadline, k = 15.
+//! * **Score(α, S)** — mean over groups of (mean RtScore · QoE).
+//! * **Saturation multiplier** α* — the smallest α with Score = 1.0; the
+//!   paper's headline metric ("how much load each method can handle").
+//!
+//! Accuracy score is omitted (partitioning never alters the computation;
+//! the paper assumes 1.0) and the energy score is out of scope, as in the
+//! paper.
+
+/// Sigmoid sensitivity constant (paper: k = 15, from XRBench).
+pub const K_SENSITIVITY: f64 = 15.0;
+
+/// QoE score: fraction of requests whose makespan meets the deadline.
+pub fn qoe_score(makespans: &[f64], deadline: f64) -> f64 {
+    if makespans.is_empty() {
+        return 0.0;
+    }
+    let ok = makespans.iter().filter(|&&m| m <= deadline).count();
+    ok as f64 / makespans.len() as f64
+}
+
+/// Per-request realtime score: `1 / (1 + e^{k (Θ - Φ)})`.
+///
+/// Θ and Φ are in **seconds**; the paper's k = 15 is tuned for makespans on
+/// the order of the period, so we scale the argument by the deadline to stay
+/// unit-consistent (XRBench normalizes per-request slack the same way).
+pub fn rt_score(makespan: f64, deadline: f64) -> f64 {
+    let slack = if deadline > 0.0 { (makespan - deadline) / deadline } else { f64::INFINITY };
+    1.0 / (1.0 + (K_SENSITIVITY * slack).exp())
+}
+
+/// Mean realtime score over a request series.
+pub fn mean_rt_score(makespans: &[f64], deadline: f64) -> f64 {
+    if makespans.is_empty() {
+        return 0.0;
+    }
+    makespans.iter().map(|&m| rt_score(m, deadline)).sum::<f64>() / makespans.len() as f64
+}
+
+/// Scenario score at one period setting:
+/// `Score = (1/N) Σ_G [ mean_j RtScore^{(j)} · QoE(G) ]`.
+pub fn scenario_score(group_makespans: &[Vec<f64>], deadlines: &[f64]) -> f64 {
+    assert_eq!(group_makespans.len(), deadlines.len());
+    if group_makespans.is_empty() {
+        return 0.0;
+    }
+    let n = group_makespans.len() as f64;
+    group_makespans
+        .iter()
+        .zip(deadlines)
+        .map(|(ms, &d)| mean_rt_score(ms, d) * qoe_score(ms, d))
+        .sum::<f64>()
+        / n
+}
+
+/// Score threshold treated as "1.0" for saturation search. The sigmoid never
+/// quite reaches 1; XRBench's own aggregation rounds at two decimals.
+pub const SATURATION_THRESHOLD: f64 = 0.995;
+
+/// Find the saturation multiplier α* = min { α : Score(α) ≥ threshold } by
+/// scanning a caller-supplied evaluator over a grid and refining by
+/// bisection. Returns `None` if even `alpha_max` fails.
+pub fn saturation_multiplier(
+    mut eval: impl FnMut(f64) -> f64,
+    alpha_min: f64,
+    alpha_max: f64,
+    tolerance: f64,
+) -> Option<f64> {
+    if eval(alpha_max) < SATURATION_THRESHOLD {
+        return None;
+    }
+    let (mut lo, mut hi) = (alpha_min, alpha_max);
+    if eval(lo) >= SATURATION_THRESHOLD {
+        return Some(lo);
+    }
+    while hi - lo > tolerance {
+        let mid = 0.5 * (lo + hi);
+        if eval(mid) >= SATURATION_THRESHOLD {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Some(hi)
+}
+
+/// Mean ± population standard deviation of a sample (reported throughout the
+/// paper's evaluation as `Mean±SD`).
+pub fn mean_sd(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qoe_counts_deadline_hits() {
+        assert_eq!(qoe_score(&[0.5, 1.0, 1.5, 2.0], 1.0), 0.5);
+        assert_eq!(qoe_score(&[], 1.0), 0.0);
+        assert_eq!(qoe_score(&[0.1], 1.0), 1.0);
+    }
+
+    #[test]
+    fn rt_score_sigmoid_shape() {
+        // At the deadline: exactly 0.5. Well under: ~1. Well over: ~0.
+        assert!((rt_score(1.0, 1.0) - 0.5).abs() < 1e-12);
+        assert!(rt_score(0.5, 1.0) > 0.99);
+        assert!(rt_score(2.0, 1.0) < 0.01);
+    }
+
+    #[test]
+    fn rt_score_monotone_decreasing() {
+        let mut prev = 1.0;
+        for i in 1..20 {
+            let s = rt_score(i as f64 * 0.2, 1.0);
+            assert!(s < prev);
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn scenario_score_perfect_and_zero() {
+        let fast = vec![vec![0.1, 0.2, 0.1], vec![0.2, 0.1, 0.2]];
+        let s = scenario_score(&fast, &[1.0, 1.0]);
+        assert!(s > 0.99, "score {s}");
+        let slow = vec![vec![5.0; 3], vec![5.0; 3]];
+        assert!(scenario_score(&slow, &[1.0, 1.0]) < 0.01);
+    }
+
+    #[test]
+    fn scenario_score_averages_groups() {
+        let mixed = vec![vec![0.1; 4], vec![9.0; 4]];
+        let s = scenario_score(&mixed, &[1.0, 1.0]);
+        assert!((s - 0.5).abs() < 0.01, "score {s}");
+    }
+
+    #[test]
+    fn saturation_bisection_finds_knee() {
+        // Score = 1 when alpha >= 1.3, else 0.
+        let f = |a: f64| if a >= 1.3 { 1.0 } else { 0.0 };
+        let a = saturation_multiplier(f, 0.1, 3.0, 1e-3).unwrap();
+        assert!((a - 1.3).abs() < 2e-3, "alpha {a}");
+    }
+
+    #[test]
+    fn saturation_none_when_unreachable() {
+        assert!(saturation_multiplier(|_| 0.5, 0.1, 3.0, 1e-3).is_none());
+    }
+
+    #[test]
+    fn saturation_clamps_at_min() {
+        let a = saturation_multiplier(|_| 1.0, 0.2, 3.0, 1e-3).unwrap();
+        assert_eq!(a, 0.2);
+    }
+
+    #[test]
+    fn mean_sd_basic() {
+        let (m, s) = mean_sd(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-12);
+        assert!((s - 2.0).abs() < 1e-12);
+    }
+}

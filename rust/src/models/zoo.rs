@@ -1,0 +1,418 @@
+//! Construction of the nine model analogs.
+//!
+//! Spatial sizes are kept small (input 32x32) so AOT compilation and real
+//! PJRT execution stay fast; MAC ratios across models track Table 6.
+
+use crate::graph::{Layer, Network};
+
+/// Number of models in the zoo (paper Table 6).
+pub const MODEL_COUNT: usize = 9;
+
+/// Static description of a zoo entry.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelSpec {
+    /// Stable snake_case name (used for artifact paths).
+    pub name: &'static str,
+    /// Human name from the paper.
+    pub paper_name: &'static str,
+    /// Paper MAC count (millions) — for documentation / ratio checks.
+    pub paper_macs_m: f64,
+}
+
+/// Specs in Table 6 order.
+pub const SPECS: [ModelSpec; MODEL_COUNT] = [
+    ModelSpec { name: "face_det", paper_name: "MediaPipe Face Det.", paper_macs_m: 39.2 },
+    ModelSpec { name: "selfie_seg", paper_name: "MediaPipe Selfie Seg.", paper_macs_m: 72.3 },
+    ModelSpec { name: "hand_det", paper_name: "MediaPipe Hand Det.", paper_macs_m: 410.8 },
+    ModelSpec { name: "pose_det", paper_name: "MediaPipe Pose Det.", paper_macs_m: 444.2 },
+    ModelSpec { name: "tcmonodepth", paper_name: "TCMonoDepth", paper_macs_m: 2313.2 },
+    ModelSpec { name: "fast_scnn", paper_name: "Fast-SCNN", paper_macs_m: 2358.9 },
+    ModelSpec { name: "yolov8n", paper_name: "YOLO v8 nano", paper_macs_m: 4891.3 },
+    ModelSpec { name: "mosaic", paper_name: "MOSAIC (Seg.)", paper_macs_m: 22055.1 },
+    ModelSpec { name: "fastsam", paper_name: "FastSAM small (Seg.)", paper_macs_m: 22325.1 },
+];
+
+/// Names of all zoo models in Table 6 order.
+pub fn model_names() -> Vec<&'static str> {
+    SPECS.iter().map(|s| s.name).collect()
+}
+
+/// Build model `zoo_index` (0..9) with a given network id.
+pub fn build_model(network_id: usize, zoo_index: usize) -> Network {
+    match zoo_index {
+        0 => face_det(network_id),
+        1 => selfie_seg(network_id),
+        2 => hand_det(network_id),
+        3 => pose_det(network_id),
+        4 => tcmonodepth(network_id),
+        5 => fast_scnn(network_id),
+        6 => yolov8n(network_id),
+        7 => mosaic(network_id),
+        8 => fastsam(network_id),
+        _ => panic!("zoo index {zoo_index} out of range (0..{MODEL_COUNT})"),
+    }
+}
+
+/// Build all nine models with network ids 0..9.
+pub fn model_zoo() -> Vec<Network> {
+    (0..MODEL_COUNT).map(|i| build_model(i, i)).collect()
+}
+
+/// Analog 1 — MediaPipe Face Det. (BlazeFace): small conv backbone, two
+/// detection heads (boxes + scores). Lightest model.
+fn face_det(id: usize) -> Network {
+    let mut n = Network::new(id, "face_det");
+    let stem = n.add_layer(Layer::conv("stem", 32, 3, 8, 3, 2)); // 16x16x8
+    let b1 = n.add_layer(Layer::dwconv("b1_dw", 16, 8, 3, 1));
+    let b1p = n.add_layer(Layer::pointwise("b1_pw", 16, 8, 12));
+    let b2 = n.add_layer(Layer::dwconv("b2_dw", 16, 12, 3, 2)); // 8x8
+    let b2p = n.add_layer(Layer::pointwise("b2_pw", 8, 12, 16));
+    let trunk = n.add_layer(Layer::conv("trunk", 8, 16, 16, 3, 1));
+    let head_box = n.add_layer(Layer::conv("head_box", 8, 16, 8, 3, 1));
+    let head_cls = n.add_layer(Layer::conv("head_cls", 8, 16, 4, 3, 1));
+    let join = n.add_layer(Layer::concat("out", 8, 12));
+    n.connect(stem, b1);
+    n.connect(b1, b1p);
+    n.connect(b1p, b2);
+    n.connect(b2, b2p);
+    n.connect(b2p, trunk);
+    n.connect(trunk, head_box);
+    n.connect(trunk, head_cls);
+    n.connect(head_box, join);
+    n.connect(head_cls, join);
+    n.finalize();
+    n
+}
+
+/// Analog 2 — MediaPipe Selfie Seg.: encoder–decoder with a skip connection.
+fn selfie_seg(id: usize) -> Network {
+    let mut n = Network::new(id, "selfie_seg");
+    let stem = n.add_layer(Layer::conv("stem", 32, 3, 8, 3, 1)); // 32x32x8
+    let e1 = n.add_layer(Layer::conv("enc1", 32, 8, 12, 3, 2)); // 16x16x12
+    let e2 = n.add_layer(Layer::conv("enc2", 16, 12, 16, 3, 2)); // 8x8x16
+    let mid = n.add_layer(Layer::conv("mid", 8, 16, 16, 3, 1));
+    let up1 = n.add_layer(Layer::upsample("up1", 8, 16)); // 16x16x16
+    let d1 = n.add_layer(Layer::pointwise("dec1", 16, 16, 12));
+    let skip = n.add_layer(Layer::add("skip", 16, 12)); // + enc1
+    let up2 = n.add_layer(Layer::upsample("up2", 16, 12)); // 32x32x12
+    let out = n.add_layer(Layer::pointwise("mask", 32, 12, 2));
+    n.connect(stem, e1);
+    n.connect(e1, e2);
+    n.connect(e2, mid);
+    n.connect(mid, up1);
+    n.connect(up1, d1);
+    n.connect(d1, skip);
+    n.connect(e1, skip);
+    n.connect(skip, up2);
+    n.connect(up2, out);
+    n.finalize();
+    n
+}
+
+/// Analog 3 — MediaPipe Hand Det.: deeper backbone + palm/landmark heads.
+fn hand_det(id: usize) -> Network {
+    let mut n = Network::new(id, "hand_det");
+    let stem = n.add_layer(Layer::conv("stem", 32, 3, 16, 3, 1)); // 32x32x16
+    let c1 = n.add_layer(Layer::conv("c1", 32, 16, 24, 3, 2)); // 16x16x24
+    let c2 = n.add_layer(Layer::conv("c2", 16, 24, 24, 3, 1));
+    let r = n.add_layer(Layer::add("res", 16, 24)); // c1 + c2
+    let c3 = n.add_layer(Layer::conv("c3", 16, 24, 32, 3, 2)); // 8x8x32
+    let c4 = n.add_layer(Layer::conv("c4", 8, 32, 32, 3, 1));
+    let trunk = n.add_layer(Layer::conv("trunk", 8, 32, 32, 3, 1));
+    let head_palm = n.add_layer(Layer::conv("head_palm", 8, 32, 16, 3, 1));
+    let head_lm = n.add_layer(Layer::conv("head_lm", 8, 32, 16, 3, 1));
+    let join = n.add_layer(Layer::concat("out", 8, 32));
+    n.connect(stem, c1);
+    n.connect(c1, c2);
+    n.connect(c2, r);
+    n.connect(c1, r);
+    n.connect(r, c3);
+    n.connect(c3, c4);
+    n.connect(c4, trunk);
+    n.connect(trunk, head_palm);
+    n.connect(trunk, head_lm);
+    n.connect(head_palm, join);
+    n.connect(head_lm, join);
+    n.finalize();
+    n
+}
+
+/// Analog 4 — MediaPipe Pose Det.: like hand but slightly heavier.
+fn pose_det(id: usize) -> Network {
+    let mut n = Network::new(id, "pose_det");
+    let stem = n.add_layer(Layer::conv("stem", 32, 3, 16, 3, 1));
+    let c1 = n.add_layer(Layer::conv("c1", 32, 16, 24, 3, 2)); // 16x16
+    let c2 = n.add_layer(Layer::conv("c2", 16, 24, 32, 3, 1));
+    let c3 = n.add_layer(Layer::conv("c3", 16, 32, 32, 3, 1));
+    let r = n.add_layer(Layer::add("res", 16, 32));
+    let c4 = n.add_layer(Layer::conv("c4", 16, 32, 40, 3, 2)); // 8x8x40
+    let c5 = n.add_layer(Layer::conv("c5", 8, 40, 40, 3, 1));
+    let trunk = n.add_layer(Layer::conv("trunk", 8, 40, 40, 3, 1));
+    let head_box = n.add_layer(Layer::conv("head_box", 8, 40, 16, 3, 1));
+    let head_kp = n.add_layer(Layer::conv("head_kp", 8, 40, 16, 3, 1));
+    let join = n.add_layer(Layer::concat("out", 8, 32));
+    n.connect(stem, c1);
+    n.connect(c1, c2);
+    n.connect(c2, c3);
+    n.connect(c3, r);
+    n.connect(c2, r);
+    n.connect(r, c4);
+    n.connect(c4, c5);
+    n.connect(c5, trunk);
+    n.connect(trunk, head_box);
+    n.connect(trunk, head_kp);
+    n.connect(head_box, join);
+    n.connect(head_kp, join);
+    n.finalize();
+    n
+}
+
+/// Analog 5 — TCMonoDepth: encoder–decoder depth net, medium-heavy.
+fn tcmonodepth(id: usize) -> Network {
+    let mut n = Network::new(id, "tcmonodepth");
+    let stem = n.add_layer(Layer::conv("stem", 32, 3, 32, 3, 1)); // 32x32x32
+    let e1 = n.add_layer(Layer::conv("enc1", 32, 32, 32, 3, 2)); // 16x16x32
+    let e2 = n.add_layer(Layer::conv("enc2", 16, 32, 48, 3, 1));
+    let e3 = n.add_layer(Layer::conv("enc3", 16, 48, 64, 3, 2)); // 8x8x64
+    let mid1 = n.add_layer(Layer::conv("mid1", 8, 64, 64, 3, 1));
+    let mid2 = n.add_layer(Layer::conv("mid2", 8, 64, 64, 3, 1));
+    let up1 = n.add_layer(Layer::upsample("up1", 8, 64)); // 16x16x64
+    let d1 = n.add_layer(Layer::conv("dec1", 16, 64, 32, 3, 1));
+    let skip1 = n.add_layer(Layer::add("skip1", 16, 32)); // + enc1
+    let up2 = n.add_layer(Layer::upsample("up2", 16, 32)); // 32x32x32
+    let d2 = n.add_layer(Layer::conv("dec2", 32, 32, 12, 3, 1));
+    let out = n.add_layer(Layer::pointwise("depth", 32, 12, 1));
+    n.connect(stem, e1);
+    n.connect(e1, e2);
+    n.connect(e2, e3);
+    n.connect(e3, mid1);
+    n.connect(mid1, mid2);
+    n.connect(mid2, up1);
+    n.connect(up1, d1);
+    n.connect(d1, skip1);
+    n.connect(e1, skip1);
+    n.connect(skip1, up2);
+    n.connect(up2, d2);
+    n.connect(d2, out);
+    n.finalize();
+    n
+}
+
+/// Analog 6 — Fast-SCNN: learning-to-downsample + global branch + fusion.
+fn fast_scnn(id: usize) -> Network {
+    let mut n = Network::new(id, "fast_scnn");
+    let lds1 = n.add_layer(Layer::conv("lds1", 32, 3, 32, 3, 2)); // 16x16x32
+    let lds2 = n.add_layer(Layer::dwconv("lds2_dw", 16, 32, 3, 1));
+    let lds3 = n.add_layer(Layer::pointwise("lds2_pw", 16, 32, 48));
+    // Global feature branch (deeper, lower-res).
+    let g1 = n.add_layer(Layer::conv("gfe1", 16, 48, 96, 3, 2)); // 8x8x96
+    let g2 = n.add_layer(Layer::conv("gfe2", 8, 96, 96, 3, 1));
+    let g3 = n.add_layer(Layer::conv("gfe3", 8, 96, 96, 3, 1));
+    let gup = n.add_layer(Layer::upsample("gfe_up", 8, 96)); // 16x16x96
+    let gproj = n.add_layer(Layer::pointwise("gfe_proj", 16, 96, 48));
+    // Fusion of the two branches.
+    let fuse = n.add_layer(Layer::add("fuse", 16, 48));
+    let f1 = n.add_layer(Layer::conv("fusion_conv", 16, 48, 64, 3, 1));
+    let up = n.add_layer(Layer::upsample("up", 16, 64)); // 32x32x64
+    let cls = n.add_layer(Layer::pointwise("classifier", 32, 64, 4));
+    n.connect(lds1, lds2);
+    n.connect(lds2, lds3);
+    n.connect(lds3, g1);
+    n.connect(g1, g2);
+    n.connect(g2, g3);
+    n.connect(g3, gup);
+    n.connect(gup, gproj);
+    n.connect(gproj, fuse);
+    n.connect(lds3, fuse); // high-res branch skips straight to fusion
+    n.connect(fuse, f1);
+    n.connect(f1, up);
+    n.connect(up, cls);
+    n.finalize();
+    n
+}
+
+/// Analog 7 — YOLOv8-nano: CSP-ish backbone with three detection heads.
+fn yolov8n(id: usize) -> Network {
+    let mut n = Network::new(id, "yolov8n");
+    let stem = n.add_layer(Layer::conv("stem", 32, 3, 32, 3, 1)); // 32x32x32
+    let c1 = n.add_layer(Layer::conv("c1", 32, 32, 64, 3, 2)); // 16x16x64
+    // CSP split: half goes through bottleneck, half bypasses.
+    let csp_a = n.add_layer(Layer::pointwise("csp_a", 16, 64, 32));
+    let csp_b = n.add_layer(Layer::pointwise("csp_b", 16, 64, 32));
+    let bn1 = n.add_layer(Layer::conv("bneck1", 16, 32, 32, 3, 1));
+    let bn2 = n.add_layer(Layer::conv("bneck2", 16, 32, 32, 3, 1));
+    let csp_j = n.add_layer(Layer::concat("csp_join", 16, 64));
+    let c2 = n.add_layer(Layer::conv("c2", 16, 64, 96, 3, 2)); // 8x8x96
+    let c3 = n.add_layer(Layer::conv("c3", 8, 96, 96, 3, 1));
+    let neck = n.add_layer(Layer::conv("neck", 8, 96, 96, 3, 1));
+    // Three scale heads (P3 from csp_join, P4/P5 from the neck).
+    let p3 = n.add_layer(Layer::conv("head_p3", 16, 64, 16, 3, 1));
+    let p4 = n.add_layer(Layer::conv("head_p4", 8, 96, 32, 3, 1));
+    let p5 = n.add_layer(Layer::conv("head_p5", 8, 96, 32, 3, 1));
+    let out45 = n.add_layer(Layer::concat("out_p45", 8, 64));
+    n.connect(stem, c1);
+    n.connect(c1, csp_a);
+    n.connect(c1, csp_b);
+    n.connect(csp_a, bn1);
+    n.connect(bn1, bn2);
+    n.connect(bn2, csp_j);
+    n.connect(csp_b, csp_j);
+    n.connect(csp_j, c2);
+    n.connect(c2, c3);
+    n.connect(c3, neck);
+    n.connect(csp_j, p3);
+    n.connect(neck, p4);
+    n.connect(neck, p5);
+    n.connect(p4, out45);
+    n.connect(p5, out45);
+    n.finalize();
+    n
+}
+
+/// Analog 8 — MOSAIC: heavy encoder–decoder with multi-scale aggregation.
+fn mosaic(id: usize) -> Network {
+    let mut n = Network::new(id, "mosaic");
+    let stem = n.add_layer(Layer::conv("stem", 32, 3, 48, 3, 1)); // 32x32x48
+    let e1 = n.add_layer(Layer::conv("enc1", 32, 48, 96, 3, 2)); // 16x16x96
+    let e2 = n.add_layer(Layer::conv("enc2", 16, 96, 96, 3, 1));
+    let e3 = n.add_layer(Layer::conv("enc3", 16, 96, 96, 3, 1));
+    let r1 = n.add_layer(Layer::add("res1", 16, 96));
+    let e4 = n.add_layer(Layer::conv("enc4", 16, 96, 128, 3, 2)); // 8x8x128
+    let e5 = n.add_layer(Layer::conv("enc5", 8, 128, 128, 3, 1));
+    let e6 = n.add_layer(Layer::conv("enc6", 8, 128, 128, 3, 1));
+    let r2 = n.add_layer(Layer::add("res2", 8, 128));
+    let up1 = n.add_layer(Layer::upsample("up1", 8, 128)); // 16x16x128
+    let proj1 = n.add_layer(Layer::pointwise("proj1", 16, 128, 96));
+    let agg = n.add_layer(Layer::add("agg", 16, 96)); // + res1
+    let d1 = n.add_layer(Layer::conv("dec1", 16, 96, 64, 3, 1));
+    let up2 = n.add_layer(Layer::upsample("up2", 16, 64)); // 32x32x64
+    let d2 = n.add_layer(Layer::conv("dec2", 32, 64, 32, 3, 1));
+    let out = n.add_layer(Layer::pointwise("seg", 32, 32, 8));
+    n.connect(stem, e1);
+    n.connect(e1, e2);
+    n.connect(e2, e3);
+    n.connect(e3, r1);
+    n.connect(e2, r1);
+    n.connect(r1, e4);
+    n.connect(e4, e5);
+    n.connect(e5, e6);
+    n.connect(e6, r2);
+    n.connect(e5, r2);
+    n.connect(r2, up1);
+    n.connect(up1, proj1);
+    n.connect(proj1, agg);
+    n.connect(r1, agg);
+    n.connect(agg, d1);
+    n.connect(d1, up2);
+    n.connect(up2, d2);
+    n.connect(d2, out);
+    n.finalize();
+    n
+}
+
+/// Analog 9 — FastSAM-small: heaviest; YOLO-style backbone + mask branch.
+fn fastsam(id: usize) -> Network {
+    let mut n = Network::new(id, "fastsam");
+    let stem = n.add_layer(Layer::conv("stem", 32, 3, 48, 3, 1)); // 32x32x48
+    let c1 = n.add_layer(Layer::conv("c1", 32, 48, 96, 3, 2)); // 16x16x96
+    let csp_a = n.add_layer(Layer::pointwise("csp_a", 16, 96, 64));
+    let csp_b = n.add_layer(Layer::pointwise("csp_b", 16, 96, 64));
+    let bn1 = n.add_layer(Layer::conv("bneck1", 16, 64, 64, 3, 1));
+    let bn2 = n.add_layer(Layer::conv("bneck2", 16, 64, 64, 3, 1));
+    let bn3 = n.add_layer(Layer::conv("bneck3", 16, 64, 64, 3, 1));
+    let csp_j = n.add_layer(Layer::concat("csp_join", 16, 128));
+    let c2 = n.add_layer(Layer::conv("c2", 16, 128, 160, 3, 2)); // 8x8x160
+    let c3 = n.add_layer(Layer::conv("c3", 8, 160, 160, 3, 1));
+    let neck = n.add_layer(Layer::conv("neck", 8, 160, 160, 3, 1));
+    // Detection heads + mask prototype branch.
+    let det = n.add_layer(Layer::conv("head_det", 8, 160, 64, 3, 1));
+    let mask_up = n.add_layer(Layer::upsample("mask_up", 8, 160)); // 16x16x160
+    let mask1 = n.add_layer(Layer::conv("mask1", 16, 160, 64, 3, 1));
+    let mask2 = n.add_layer(Layer::conv("mask2", 16, 64, 32, 3, 1));
+    let join = n.add_layer(Layer::concat("out", 8, 96)); // det + pooled mask
+    let mask_pool = n.add_layer(Layer::pool("mask_pool", 16, 32)); // 8x8x32
+    n.connect(stem, c1);
+    n.connect(c1, csp_a);
+    n.connect(c1, csp_b);
+    n.connect(csp_a, bn1);
+    n.connect(bn1, bn2);
+    n.connect(bn2, bn3);
+    n.connect(bn3, csp_j);
+    n.connect(csp_b, csp_j);
+    n.connect(csp_j, c2);
+    n.connect(c2, c3);
+    n.connect(c3, neck);
+    n.connect(neck, det);
+    n.connect(neck, mask_up);
+    n.connect(mask_up, mask1);
+    n.connect(mask1, mask2);
+    n.connect(mask2, mask_pool);
+    n.connect(det, join);
+    n.connect(mask_pool, join);
+    n.finalize();
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_mac_ratio_spans() {
+        // The analogs must preserve Table 6's rough magnitude ordering; check
+        // a few spot ratios (paper: hand/face ~ 10.5x, fastsam/face ~ 570x).
+        let zoo = model_zoo();
+        let m: Vec<f64> = zoo.iter().map(|n| n.total_macs() as f64).collect();
+        assert!(m[2] / m[0] > 3.0, "hand/face ratio too small");
+        assert!(m[8] / m[0] > 100.0, "fastsam/face ratio too small");
+        assert!(m[7] / m[6] > 1.5, "mosaic/yolo ratio too small");
+    }
+
+    #[test]
+    fn spec_names_match_networks() {
+        for (i, spec) in SPECS.iter().enumerate() {
+            assert_eq!(build_model(0, i).name, spec.name);
+        }
+    }
+
+    #[test]
+    fn layer_shapes_consistent_along_edges() {
+        // For conv-like layers the declared in_channels must equal the sum
+        // (concat) or the value (others) of predecessor output channels.
+        use crate::graph::LayerKind;
+        for net in model_zoo() {
+            for l in 0..net.num_layers() {
+                let lid = LayerId(l);
+                let preds = net.predecessors(lid);
+                if preds.is_empty() {
+                    continue;
+                }
+                let layer = net.layer(lid);
+                match layer.kind {
+                    LayerKind::Concat => {
+                        let total: usize = preds.iter().map(|&p| net.layer(p).out_shape.c).sum();
+                        assert_eq!(layer.in_channels, total, "{}:{}", net.name, layer.name);
+                    }
+                    LayerKind::Add => {
+                        for &p in preds {
+                            assert_eq!(
+                                net.layer(p).out_shape, layer.out_shape,
+                                "{}:{} add operand shape mismatch", net.name, layer.name
+                            );
+                        }
+                    }
+                    _ => {
+                        assert_eq!(preds.len(), 1, "{}:{} non-join with {} preds", net.name, layer.name, preds.len());
+                        assert_eq!(
+                            layer.in_channels,
+                            net.layer(preds[0]).out_shape.c,
+                            "{}:{} channel mismatch", net.name, layer.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    use crate::graph::LayerId;
+}

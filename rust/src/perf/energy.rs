@@ -1,0 +1,128 @@
+//! Energy model — the extension the paper defers ("Extending Puzzle to
+//! cover energy consumption is left for future work", §6.2).
+//!
+//! Per-processor power draw is modeled with mobile-SoC-typical figures
+//! (active power while executing + idle floor), so every simulated or
+//! served schedule can be scored for energy alongside latency. The XRBench
+//! energy score the paper omits is implemented in [`energy_score`]:
+//! `min(1, budget / consumed)` per group request, the same normalized [0,1]
+//! shape as the other XRBench components.
+
+use crate::sim::SimResult;
+use crate::Processor;
+
+/// Active power draw while executing, watts (mobile-SoC magnitudes: big-core
+/// CPU burst ~3.5 W, Adreno-class GPU ~2.5 W, Hexagon-class NPU ~1.2 W —
+/// the NPU's efficiency is why NPU-heavy schedules win on energy even when
+/// the GPU wins on latency).
+pub fn active_power_w(p: Processor) -> f64 {
+    match p {
+        Processor::Cpu => 3.5,
+        Processor::Gpu => 2.5,
+        Processor::Npu => 1.2,
+    }
+}
+
+/// Idle floor, watts, paid for the whole schedule span per processor.
+pub fn idle_power_w(p: Processor) -> f64 {
+    match p {
+        Processor::Cpu => 0.15,
+        Processor::Gpu => 0.08,
+        Processor::Npu => 0.05,
+    }
+}
+
+/// Energy (joules) consumed by a simulated schedule: active power over busy
+/// time plus the idle floor over the span.
+pub fn schedule_energy(result: &SimResult) -> f64 {
+    Processor::ALL
+        .iter()
+        .map(|&p| {
+            let busy = result.busy[p.index()];
+            let idle = (result.span - busy).max(0.0);
+            active_power_w(p) * busy + idle_power_w(p) * idle
+        })
+        .sum()
+}
+
+/// Average energy per group request, joules.
+pub fn energy_per_request(result: &SimResult) -> f64 {
+    let requests: usize = result.makespans.iter().map(|m| m.len()).sum();
+    if requests == 0 {
+        0.0
+    } else {
+        schedule_energy(result) / requests as f64
+    }
+}
+
+/// XRBench-style energy score: `min(1, budget / consumed)` — 1.0 while the
+/// schedule stays within its energy budget per request, degrading
+/// proportionally beyond it.
+pub fn energy_score(consumed_j: f64, budget_j: f64) -> f64 {
+    if consumed_j <= 0.0 {
+        return 1.0;
+    }
+    (budget_j / consumed_j).min(1.0).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CommModel;
+    use crate::sim::{simulate, ExecutionPlan, GroupSpec, PlannedTask, SimOptions};
+
+    fn run_on(p: Processor, duration: f64, requests: usize) -> SimResult {
+        let plans = [ExecutionPlan {
+            tasks: vec![PlannedTask { duration, processor: p }],
+            transfers: vec![],
+            priority: 0,
+        }];
+        let groups = [GroupSpec::periodic(vec![0], duration * 2.0)];
+        let opts = SimOptions {
+            requests_per_group: requests,
+            dispatch_overhead: 0.0,
+            ..Default::default()
+        };
+        simulate(&plans, &groups, &CommModel::paper_calibrated(), &opts)
+    }
+
+    #[test]
+    fn npu_schedule_uses_less_energy_than_cpu() {
+        let cpu = schedule_energy(&run_on(Processor::Cpu, 0.01, 10));
+        let npu = schedule_energy(&run_on(Processor::Npu, 0.01, 10));
+        assert!(npu < cpu, "npu {npu} J >= cpu {cpu} J");
+    }
+
+    #[test]
+    fn energy_scales_with_work() {
+        let little = schedule_energy(&run_on(Processor::Gpu, 0.005, 5));
+        let lots = schedule_energy(&run_on(Processor::Gpu, 0.005, 20));
+        assert!(lots > little * 2.0, "{lots} vs {little}");
+    }
+
+    #[test]
+    fn per_request_energy_is_stable_across_request_counts() {
+        let a = energy_per_request(&run_on(Processor::Npu, 0.01, 5));
+        let b = energy_per_request(&run_on(Processor::Npu, 0.01, 20));
+        // Same per-request work → similar per-request energy (idle tail of
+        // the last period differs slightly).
+        assert!((a / b - 1.0).abs() < 0.5, "{a} vs {b}");
+    }
+
+    #[test]
+    fn energy_score_shape() {
+        assert_eq!(energy_score(0.5, 1.0), 1.0); // under budget
+        assert!((energy_score(2.0, 1.0) - 0.5).abs() < 1e-12); // 2x over
+        assert_eq!(energy_score(0.0, 1.0), 1.0);
+    }
+
+    #[test]
+    fn idle_floor_counts() {
+        // A mostly-idle schedule still consumes the floor across all three
+        // processors over its span.
+        let r = run_on(Processor::Npu, 0.001, 2);
+        let e = schedule_energy(&r);
+        let floor: f64 = Processor::ALL.iter().map(|&p| idle_power_w(p)).sum::<f64>() * r.span;
+        assert!(e >= floor * 0.9, "energy {e} below idle floor {floor}");
+    }
+}

@@ -1,0 +1,171 @@
+//! Device-in-the-loop profiling (paper §4.3).
+//!
+//! The Static Analyzer never sums layer times; it asks the *device* how long
+//! each subgraph takes when compiled as a unit. Results are cached in a
+//! profile database keyed by the subgraph's Merkle hash plus the execution
+//! config, so structurally identical subgraphs — which the GA re-proposes
+//! constantly across generations — hit the cache ("significantly speeding up
+//! the profiling process", §4.3).
+//!
+//! The "device" is abstracted behind [`DeviceProbe`]: the calibrated
+//! [`crate::perf::PerfModel`] in analysis mode, or real PJRT execution of the
+//! AOT artifacts via [`crate::engine::PjrtEngine`] in hardware mode.
+
+use std::collections::HashMap;
+
+use std::sync::RwLock;
+
+use crate::graph::{merkle_hash_subgraph, LayerId, MerkleHash, Network, Subgraph};
+use crate::perf::PerfModel;
+use crate::{ExecConfig, Processor};
+
+/// Anything that can measure a subgraph's execution time.
+pub trait DeviceProbe: Send + Sync {
+    /// Measured execution time (seconds) of `layers` of `net`, compiled as a
+    /// unit under `cfg`.
+    fn measure(&self, net: &Network, layers: &[LayerId], cfg: ExecConfig) -> f64;
+}
+
+/// The calibrated performance model as a probe (analysis mode).
+impl DeviceProbe for PerfModel {
+    fn measure(&self, net: &Network, layers: &[LayerId], cfg: ExecConfig) -> f64 {
+        self.subgraph_time(net, layers, cfg)
+    }
+}
+
+/// Key of one profile-database entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct ProfileKey {
+    merkle: MerkleHash,
+    cfg: ExecConfig,
+}
+
+/// The profiler with its Merkle-keyed cache.
+pub struct Profiler<'d> {
+    probe: &'d dyn DeviceProbe,
+    db: RwLock<HashMap<ProfileKey, f64>>,
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+}
+
+impl<'d> Profiler<'d> {
+    pub fn new(probe: &'d dyn DeviceProbe) -> Self {
+        Profiler {
+            probe,
+            db: RwLock::new(HashMap::new()),
+            hits: std::sync::atomic::AtomicU64::new(0),
+            misses: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Profile one subgraph under a config (cached).
+    pub fn profile(&self, net: &Network, sg: &Subgraph, cfg: ExecConfig) -> f64 {
+        let key = ProfileKey { merkle: merkle_hash_subgraph(net, sg), cfg };
+        if let Some(&t) = self.db.read().unwrap().get(&key) {
+            self.hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            return t;
+        }
+        let t = self.probe.measure(net, &sg.layers, cfg);
+        self.misses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.db.write().unwrap().insert(key, t);
+        t
+    }
+
+    /// Profile a subgraph at its mapped processor's best (backend, dtype)
+    /// pair — the paper's representative profiling datum ("we identify the
+    /// optimal pair for each subgraph", §4).
+    pub fn profile_best(&self, net: &Network, sg: &Subgraph) -> (ExecConfig, f64) {
+        self.best_on(net, sg, sg.processor)
+    }
+
+    /// Best config for a subgraph on an explicit processor.
+    pub fn best_on(&self, net: &Network, sg: &Subgraph, p: Processor) -> (ExecConfig, f64) {
+        let mut best = (ExecConfig::default_for(p), f64::INFINITY);
+        for &b in crate::Backend::for_processor(p) {
+            for d in [crate::DataType::Fp32, crate::DataType::Fp16] {
+                let cfg = ExecConfig::new(p, b, d);
+                let t = self.profile(net, sg, cfg);
+                if t < best.1 {
+                    best = (cfg, t);
+                }
+            }
+        }
+        best
+    }
+
+    /// (cache hits, probe measurements).
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.hits.load(std::sync::atomic::Ordering::Relaxed),
+            self.misses.load(std::sync::atomic::Ordering::Relaxed),
+        )
+    }
+
+    /// Number of distinct (subgraph, config) profiles stored.
+    pub fn db_len(&self) -> usize {
+        self.db.read().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::partition;
+    use crate::models::build_model;
+
+    #[test]
+    fn cache_hits_on_repeat_profile() {
+        let pm = PerfModel::paper_calibrated();
+        let prof = Profiler::new(&pm);
+        let net = build_model(0, 0);
+        let p = partition(&net, &vec![false; net.num_edges()], &vec![Processor::Npu; net.num_layers()]);
+        let cfg = ExecConfig::default_for(Processor::Npu);
+        let t1 = prof.profile(&net, &p.subgraphs[0], cfg);
+        let t2 = prof.profile(&net, &p.subgraphs[0], cfg);
+        assert_eq!(t1, t2);
+        let (hits, misses) = prof.stats();
+        assert_eq!(hits, 1);
+        assert_eq!(misses, 1);
+    }
+
+    #[test]
+    fn different_configs_are_distinct_entries() {
+        let pm = PerfModel::paper_calibrated();
+        let prof = Profiler::new(&pm);
+        let net = build_model(0, 1);
+        let p = partition(&net, &vec![false; net.num_edges()], &vec![Processor::Cpu; net.num_layers()]);
+        let _ = prof.profile(&net, &p.subgraphs[0], ExecConfig::new(Processor::Cpu, crate::Backend::OrtCpu, crate::DataType::Fp32));
+        let _ = prof.profile(&net, &p.subgraphs[0], ExecConfig::new(Processor::Cpu, crate::Backend::OrtCpu, crate::DataType::Fp16));
+        assert_eq!(prof.db_len(), 2);
+    }
+
+    #[test]
+    fn best_config_finite_for_all_processors() {
+        let pm = PerfModel::paper_calibrated();
+        let prof = Profiler::new(&pm);
+        for idx in 0..crate::models::MODEL_COUNT {
+            let net = build_model(idx, idx);
+            let p = partition(&net, &vec![false; net.num_edges()], &vec![Processor::Cpu; net.num_layers()]);
+            for proc in Processor::ALL {
+                let (_, t) = prof.best_on(&net, &p.subgraphs[0], proc);
+                assert!(t.is_finite(), "{} on {}", net.name, proc);
+            }
+        }
+    }
+
+    #[test]
+    fn isomorphic_subgraphs_share_profiles_across_networks() {
+        // Two copies of the same model share every profile entry.
+        let pm = PerfModel::paper_calibrated();
+        let prof = Profiler::new(&pm);
+        let a = build_model(0, 3);
+        let b = build_model(1, 3);
+        let pa = partition(&a, &vec![false; a.num_edges()], &vec![Processor::Npu; a.num_layers()]);
+        let pb = partition(&b, &vec![false; b.num_edges()], &vec![Processor::Npu; b.num_layers()]);
+        let cfg = ExecConfig::default_for(Processor::Npu);
+        let _ = prof.profile(&a, &pa.subgraphs[0], cfg);
+        let _ = prof.profile(&b, &pb.subgraphs[0], cfg);
+        let (hits, misses) = prof.stats();
+        assert_eq!((hits, misses), (1, 1), "second profile should hit the cache");
+    }
+}

@@ -1,0 +1,194 @@
+//! Data-type conversion ((de)quantization) between subgraphs (paper §5.1:
+//! "Before executing tasks, (de-)quantization may be required if the data
+//! type of subgraph's input does not match the output of the preceding
+//! subgraph").
+//!
+//! fp16 here is IEEE 754 binary16, converted manually (no external dep);
+//! int8 uses symmetric per-tensor scaling.
+
+use crate::DataType;
+
+/// f32 -> f16 bit conversion (round-to-nearest-even).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x7f_ffff;
+
+    if exp == 255 {
+        // Inf / NaN.
+        let m = if mant != 0 { 0x200 } else { 0 };
+        return sign | 0x7c00 | m as u16;
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // Normal.
+        let half_exp = ((unbiased + 15) as u32) << 10;
+        let half_mant = mant >> 13;
+        // Round to nearest even.
+        let round_bit = (mant >> 12) & 1;
+        let sticky = mant & 0xfff;
+        let mut h = half_exp | half_mant;
+        if round_bit == 1 && (sticky != 0 || (half_mant & 1) == 1) {
+            h += 1;
+        }
+        return sign | h as u16;
+    }
+    if unbiased >= -24 {
+        // Subnormal.
+        let shift = (-unbiased - 14 + 13) as u32 + 1;
+        let full_mant = mant | 0x80_0000;
+        let half_mant = full_mant >> shift;
+        let round_bit = (full_mant >> (shift - 1)) & 1;
+        let mut h = half_mant;
+        if round_bit == 1 {
+            h += 1;
+        }
+        return sign | h as u16;
+    }
+    sign // underflow -> zero
+}
+
+/// f16 bits -> f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = match (exp, mant) {
+        (0, 0) => sign,
+        (0, m) => {
+            // Subnormal: normalize.
+            let mut e = -14i32;
+            let mut m = m;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3ff;
+            sign | (((e + 127) as u32) << 23) | (m << 13)
+        }
+        (0x1f, 0) => sign | 0x7f80_0000,
+        (0x1f, m) => sign | 0x7f80_0000 | (m << 13),
+        (e, m) => sign | ((e + 127 - 15) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Quantize an f32 tensor to a target dtype's byte representation.
+/// Returns (bytes, scale); scale is 1.0 except for int8.
+pub fn quantize(data: &[f32], dtype: DataType) -> (Vec<u8>, f32) {
+    match dtype {
+        DataType::Fp32 => {
+            let mut out = Vec::with_capacity(data.len() * 4);
+            for &x in data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            (out, 1.0)
+        }
+        DataType::Fp16 => {
+            let mut out = Vec::with_capacity(data.len() * 2);
+            for &x in data {
+                out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+            }
+            (out, 1.0)
+        }
+        DataType::Int8 => {
+            let max_abs = data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let scale = if max_abs > 0.0 { max_abs / 127.0 } else { 1.0 };
+            let out = data
+                .iter()
+                .map(|&x| (x / scale).round().clamp(-127.0, 127.0) as i8 as u8)
+                .collect();
+            (out, scale)
+        }
+    }
+}
+
+/// Dequantize back to f32.
+pub fn dequantize(bytes: &[u8], dtype: DataType, scale: f32) -> Vec<f32> {
+    match dtype {
+        DataType::Fp32 => bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect(),
+        DataType::Fp16 => bytes
+            .chunks_exact(2)
+            .map(|c| f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
+            .collect(),
+        DataType::Int8 => bytes.iter().map(|&b| (b as i8) as f32 * scale).collect(),
+    }
+}
+
+/// Whether a dtype boundary requires conversion work on the worker's
+/// dequant thread.
+pub fn needs_conversion(from: DataType, to: DataType) -> bool {
+    from != to
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_roundtrip_exact_values() {
+        for &x in &[0.0f32, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.000061035156] {
+            let h = f32_to_f16_bits(x);
+            assert_eq!(f16_bits_to_f32(h), x, "roundtrip failed for {x}");
+        }
+    }
+
+    #[test]
+    fn f16_overflow_to_inf() {
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e6)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-1e6)), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn f16_nan_preserved() {
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn f16_precision_bound() {
+        // Relative error of normal-range f16 is <= 2^-11.
+        for i in 1..1000 {
+            let x = i as f32 * 0.37;
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert!(((y - x) / x).abs() <= 1.0 / 2048.0, "{x} -> {y}");
+        }
+    }
+
+    #[test]
+    fn fp32_quantize_is_identity() {
+        let data = vec![1.5f32, -2.25, 0.0, 3.75];
+        let (bytes, scale) = quantize(&data, DataType::Fp32);
+        assert_eq!(dequantize(&bytes, DataType::Fp32, scale), data);
+    }
+
+    #[test]
+    fn int8_quantize_bounded_error() {
+        let data: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.1).collect();
+        let (bytes, scale) = quantize(&data, DataType::Int8);
+        let back = dequantize(&bytes, DataType::Int8, scale);
+        let max_abs = data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        for (a, b) in data.iter().zip(&back) {
+            assert!((a - b).abs() <= scale * 0.5 + 1e-6, "{a} vs {b} (scale {scale}, max {max_abs})");
+        }
+    }
+
+    #[test]
+    fn int8_all_zero_tensor() {
+        let (bytes, scale) = quantize(&[0.0; 8], DataType::Int8);
+        assert_eq!(scale, 1.0);
+        assert!(dequantize(&bytes, DataType::Int8, scale).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn conversion_predicate() {
+        assert!(!needs_conversion(DataType::Fp16, DataType::Fp16));
+        assert!(needs_conversion(DataType::Fp16, DataType::Fp32));
+    }
+}

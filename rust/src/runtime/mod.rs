@@ -1,0 +1,137 @@
+//! PJRT runtime bridge: loads AOT-compiled HLO-text artifacts (produced by
+//! `python/compile/aot.py`) and executes them from the rust hot path.
+//!
+//! Interchange is HLO **text**, not serialized `HloModuleProto`: jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects
+//! (`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+//! cleanly (see /opt/xla-example/README.md).
+//!
+//! One [`PjrtRuntime`] owns the CPU PJRT client and a cache of compiled
+//! executables keyed by artifact path; Python never runs at serving time.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+use std::sync::Mutex;
+
+/// A loaded, compiled executable plus its I/O metadata.
+pub struct LoadedModule {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+impl LoadedModule {
+    /// Execute with f32 input buffers (shape handled by the artifact). The
+    /// lowering uses `return_tuple=True`, so outputs come back as a tuple
+    /// of however many results the jax function returned.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let lit = xla::Literal::vec1(data);
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // Outputs are a tuple (return_tuple=True at lowering).
+        let elems = out.to_tuple().map_err(|e| anyhow!("decompose: {e:?}"))?;
+        elems
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+/// The PJRT client + executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<LoadedModule>>>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client (the only plugin available in this image;
+    /// real NPU/GPU PJRT plugins would slot in here on hardware).
+    pub fn cpu() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(PjrtRuntime { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<LoadedModule>> {
+        if let Some(m) = self.cache.lock().unwrap().get(path) {
+            return Ok(m.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))
+        .context("loading HLO text artifact")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        let module = std::sync::Arc::new(LoadedModule { exe, path: path.to_path_buf() });
+        self.cache.lock().unwrap().insert(path.to_path_buf(), module.clone());
+        Ok(module)
+    }
+
+    /// Number of compiled modules held.
+    pub fn cached_modules(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// Locate the artifacts directory: `$PUZZLE_ARTIFACTS`, else `artifacts/`
+/// relative to the crate root / current dir.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("PUZZLE_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if manifest.exists() {
+        return manifest;
+    }
+    PathBuf::from("artifacts")
+}
+
+/// Artifact path for a model's whole-graph lowering.
+pub fn model_artifact(model: &str) -> PathBuf {
+    artifacts_dir().join(format!("{model}.hlo.txt"))
+}
+
+/// Artifact path for one layer of a model.
+pub fn layer_artifact(model: &str, layer: usize) -> PathBuf {
+    artifacts_dir().join(format!("{model}.layer{layer:02}.hlo.txt"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT integration tests live in rust/tests/pjrt_integration.rs (they
+    // need artifacts built); here we only check path plumbing.
+
+    #[test]
+    fn artifact_paths() {
+        std::env::set_var("PUZZLE_ARTIFACTS", "/tmp/zzz");
+        assert_eq!(model_artifact("face_det"), PathBuf::from("/tmp/zzz/face_det.hlo.txt"));
+        assert_eq!(
+            layer_artifact("face_det", 3),
+            PathBuf::from("/tmp/zzz/face_det.layer03.hlo.txt")
+        );
+        std::env::remove_var("PUZZLE_ARTIFACTS");
+    }
+}

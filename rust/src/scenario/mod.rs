@@ -1,0 +1,207 @@
+//! Scenarios: model groups, periods, and the random scenario generator
+//! (paper §6.1, Fig 11).
+//!
+//! A scenario is a set of *model groups* — models fed by one synchronized
+//! input source (camera, microphone) and requested periodically. The paper
+//! evaluates 10 single-group scenarios (6 random models each) and 10
+//! two-group scenarios (3 + 3 models), with each group's **base period**
+//!
+//! ```text
+//! φ̄_Gi = Σ_{m∈Gi} min_p τ_p(m) · N · (1 + ε)        (ε = 0.1)
+//! ```
+//!
+//! scaled by a *period multiplier* α to tighten/relax the SLO.
+
+use crate::util::rng::Rng;
+use crate::graph::{LayerId, Network};
+use crate::perf::PerfModel;
+use crate::{models, Processor};
+
+/// Slack constant ε in the base-period formula (paper: 0.1).
+pub const EPSILON: f64 = 0.1;
+
+/// One model group: zoo indices + which scenario networks belong to it.
+#[derive(Debug, Clone)]
+pub struct ModelGroup {
+    /// Indices into the scenario's `networks`.
+    pub members: Vec<usize>,
+}
+
+/// A full evaluation scenario.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    /// Instantiated networks (network ids = position).
+    pub networks: Vec<Network>,
+    /// Zoo index of each network (for reporting).
+    pub zoo_indices: Vec<usize>,
+    pub groups: Vec<ModelGroup>,
+}
+
+impl Scenario {
+    /// Build a scenario from zoo indices grouped into model groups.
+    pub fn from_groups(name: &str, groups: &[Vec<usize>]) -> Scenario {
+        let mut networks = Vec::new();
+        let mut zoo_indices = Vec::new();
+        let mut out_groups = Vec::new();
+        for group in groups {
+            let mut members = Vec::new();
+            for &zoo in group {
+                members.push(networks.len());
+                networks.push(models::build_model(networks.len(), zoo));
+                zoo_indices.push(zoo);
+            }
+            out_groups.push(ModelGroup { members });
+        }
+        Scenario { name: name.to_string(), networks, zoo_indices, groups: out_groups }
+    }
+
+    /// Base period φ̄ for one group (seconds): sum over members of the
+    /// fastest-processor whole-model time, times N·(1+ε).
+    pub fn base_period(&self, group: usize, pm: &PerfModel) -> f64 {
+        let n_groups = self.groups.len() as f64;
+        let sum: f64 = self.groups[group]
+            .members
+            .iter()
+            .map(|&m| {
+                let net = &self.networks[m];
+                let all: Vec<LayerId> = (0..net.num_layers()).map(LayerId).collect();
+                Processor::ALL
+                    .iter()
+                    .map(|&p| pm.best_config_for(net, &all, p).1)
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .sum();
+        sum * n_groups * (1.0 + EPSILON)
+    }
+
+    /// Period Φ(α, Gi) = α · φ̄ for every group.
+    pub fn periods(&self, alpha: f64, pm: &PerfModel) -> Vec<f64> {
+        (0..self.groups.len()).map(|g| alpha * self.base_period(g, pm)).collect()
+    }
+
+    pub fn num_models(&self) -> usize {
+        self.networks.len()
+    }
+}
+
+/// Generate the paper's 10 single-group scenarios: each draws 6 distinct
+/// models from the nine-model zoo (Fig 11 top). Deterministic in `seed`.
+pub fn single_group_scenarios(seed: u64) -> Vec<Scenario> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..10)
+        .map(|i| {
+            let mut idx: Vec<usize> = (0..models::MODEL_COUNT).collect();
+            rng.shuffle(&mut idx);
+            let chosen: Vec<usize> = idx[..6].to_vec();
+            Scenario::from_groups(&format!("single-{}", i + 1), &[chosen])
+        })
+        .collect()
+}
+
+/// Generate the paper's 10 multi-group scenarios: two groups of 3 models
+/// (Fig 11 bottom; "maintaining the same settings as in the single model
+/// group experiments" — same total of six models per scenario).
+pub fn multi_group_scenarios(seed: u64) -> Vec<Scenario> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..10)
+        .map(|i| {
+            let mut idx: Vec<usize> = (0..models::MODEL_COUNT).collect();
+            rng.shuffle(&mut idx);
+            let g1: Vec<usize> = idx[..3].to_vec();
+            let g2: Vec<usize> = idx[3..6].to_vec();
+            Scenario::from_groups(&format!("multi-{}", i + 1), &[g1, g2])
+        })
+        .collect()
+}
+
+/// The paper's Scenario 6 analog (§6.4): five MediaPipe models + YOLOv8 in
+/// two groups — all models NPU-friendly and lightweight except YOLOv8.
+pub fn scenario6_analog() -> Scenario {
+    Scenario::from_groups("scenario-6", &[vec![0, 1, 2], vec![3, 0, 6]])
+}
+
+/// The paper's Scenario 10 analog (§6.4): one lightweight group (MediaPipe
+/// series) and one heavy group (YOLOv8, Fast-SCNN, TCMonoDepth).
+pub fn scenario10_analog() -> Scenario {
+    Scenario::from_groups("scenario-10", &[vec![0, 1, 3], vec![6, 5, 4]])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_group_shapes() {
+        let ss = single_group_scenarios(23);
+        assert_eq!(ss.len(), 10);
+        for s in &ss {
+            assert_eq!(s.groups.len(), 1);
+            assert_eq!(s.num_models(), 6);
+            // Distinct zoo models per scenario.
+            let mut z = s.zoo_indices.clone();
+            z.sort();
+            z.dedup();
+            assert_eq!(z.len(), 6);
+        }
+    }
+
+    #[test]
+    fn multi_group_shapes() {
+        let ss = multi_group_scenarios(23);
+        assert_eq!(ss.len(), 10);
+        for s in &ss {
+            assert_eq!(s.groups.len(), 2);
+            assert_eq!(s.groups[0].members.len(), 3);
+            assert_eq!(s.groups[1].members.len(), 3);
+        }
+    }
+
+    #[test]
+    fn determinism_in_seed() {
+        let a = single_group_scenarios(7);
+        let b = single_group_scenarios(7);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.zoo_indices, y.zoo_indices);
+        }
+        let c = single_group_scenarios(8);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.zoo_indices != y.zoo_indices));
+    }
+
+    #[test]
+    fn base_period_formula() {
+        // Single network, single group: φ̄ = min_p τ_p(m) · 1 · 1.1.
+        let pm = PerfModel::paper_calibrated();
+        let s = Scenario::from_groups("t", &[vec![0]]);
+        let net = &s.networks[0];
+        let all: Vec<LayerId> = (0..net.num_layers()).map(LayerId).collect();
+        let fastest = Processor::ALL
+            .iter()
+            .map(|&p| pm.best_config_for(net, &all, p).1)
+            .fold(f64::INFINITY, f64::min);
+        let expected = fastest * 1.1;
+        assert!((s.base_period(0, &pm) - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multi_group_period_scales_with_n() {
+        let pm = PerfModel::paper_calibrated();
+        let single = Scenario::from_groups("a", &[vec![0, 1, 2]]);
+        let multi = Scenario::from_groups("b", &[vec![0, 1, 2], vec![3, 4, 5]]);
+        // Same members in group 0, but N=2 doubles the slack multiplier.
+        let p1 = single.base_period(0, &pm);
+        let p2 = multi.base_period(0, &pm);
+        assert!((p2 / p1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn alpha_scales_periods() {
+        let pm = PerfModel::paper_calibrated();
+        let s = scenario10_analog();
+        let p1 = s.periods(1.0, &pm);
+        let p2 = s.periods(0.5, &pm);
+        for (a, b) in p1.iter().zip(&p2) {
+            assert!((b / a - 0.5).abs() < 1e-9);
+        }
+    }
+}

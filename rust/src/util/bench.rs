@@ -1,0 +1,100 @@
+//! Micro bench harness (criterion is unavailable offline). Each bench
+//! binary (`harness = false`) builds a [`Harness`], registers closures, and
+//! prints per-iteration statistics. Warm-up + trimmed timing keeps the
+//! numbers stable enough for before/after comparisons in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+/// Timing result of one registered bench.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iterations: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+    pub p90_s: f64,
+}
+
+/// Run a closure repeatedly and collect stats. `target_s` bounds the total
+/// measuring time; at least `min_iters` iterations always run.
+pub fn run_bench<F: FnMut()>(name: &str, target_s: f64, min_iters: usize, mut f: F) -> BenchStats {
+    // Warm-up.
+    f();
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || (start.elapsed().as_secs_f64() < target_s && samples.len() < 10_000) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    BenchStats {
+        name: name.to_string(),
+        iterations: n,
+        mean_s: mean,
+        min_s: samples[0],
+        p50_s: samples[n / 2],
+        p90_s: samples[(n * 9 / 10).min(n - 1)],
+    }
+}
+
+/// Human-friendly duration.
+pub fn fmt_duration(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Print one stats row.
+pub fn report(stats: &BenchStats) {
+    println!(
+        "{:<44} {:>10} iters  mean {:>12}  min {:>12}  p50 {:>12}  p90 {:>12}",
+        stats.name,
+        stats.iterations,
+        fmt_duration(stats.mean_s),
+        fmt_duration(stats.min_s),
+        fmt_duration(stats.p50_s),
+        fmt_duration(stats.p90_s),
+    );
+}
+
+/// Convenience: run + report.
+pub fn bench<F: FnMut()>(name: &str, target_s: f64, min_iters: usize, f: F) -> BenchStats {
+    let stats = run_bench(name, target_s, min_iters, f);
+    report(&stats);
+    stats
+}
+
+/// Prevent the optimizer from discarding a value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_at_least_min_iters() {
+        let s = run_bench("noop", 0.0, 7, || {});
+        assert!(s.iterations >= 7);
+        assert!(s.min_s <= s.p50_s && s.p50_s <= s.p90_s);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(2.0), "2.000s");
+        assert_eq!(fmt_duration(0.0025), "2.500ms");
+        assert_eq!(fmt_duration(2.5e-6), "2.500us");
+        assert!(fmt_duration(3e-9).ends_with("ns"));
+    }
+}

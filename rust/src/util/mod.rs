@@ -1,0 +1,10 @@
+//! In-tree utility substrates.
+//!
+//! The build environment is offline, so the usual helper crates (rand,
+//! criterion, proptest, clap, crossbeam) are rebuilt here at the size this
+//! project needs: a deterministic PRNG ([`rng`]), a micro bench harness
+//! ([`bench`]), and a tiny property-testing loop ([`prop`]).
+
+pub mod bench;
+pub mod prop;
+pub mod rng;

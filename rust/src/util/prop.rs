@@ -1,0 +1,58 @@
+//! Minimal property-testing loop (proptest is unavailable offline):
+//! run a closure over `n` seeded random cases; on failure, report the seed
+//! so the case reproduces exactly.
+
+use super::rng::Rng;
+
+/// Run `cases` random test cases. The closure returns `Err(msg)` to fail;
+/// the panic message includes the failing seed for reproduction.
+pub fn check<F>(name: &str, cases: usize, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case as u64;
+        let mut rng = Rng::seed_from_u64(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{name}' failed at seed {seed:#x}: {msg}");
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            return Err(format!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 25, |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 5, |rng| {
+            let x = rng.gen_range(0, 10);
+            if x < 100 {
+                Err(format!("x = {x}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

@@ -1,0 +1,243 @@
+//! Workers (paper §5.1): one per processor, executing that processor's
+//! subgraph tasks serially, with a *separate* (de)quantization thread so
+//! conversion overlaps execution ("To run task execution and
+//! (de-)quantization in parallel, we use two separate threads, each polling
+//! items from its dedicated queue").
+
+use std::sync::Arc;
+
+use std::sync::mpsc::{Receiver, Sender};
+
+use crate::coordinator::{CompletionMsg, TaskMsg};
+use crate::engine::{Engine, EngineTask};
+use crate::mem::TensorPool;
+use crate::quant;
+use crate::Processor;
+
+/// A running worker: the quant thread feeds the exec thread.
+pub struct Worker {
+    pub processor: Processor,
+    quant_tx: Sender<TaskMsg>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Worker {
+    /// Spawn the two worker threads. `completion_tx` reports finished tasks
+    /// back to the coordinator.
+    pub fn spawn(
+        processor: Processor,
+        engine: Arc<dyn Engine>,
+        pool: TensorPool,
+        completion_tx: Sender<CompletionMsg>,
+    ) -> Worker {
+        let (quant_tx, quant_rx) = std::sync::mpsc::channel::<TaskMsg>();
+        let (exec_tx, exec_rx) = std::sync::mpsc::channel::<TaskMsg>();
+
+        // Dequantization thread: convert inputs whose dtype mismatches the
+        // task's config, then forward to the execution queue.
+        let quant_handle = {
+            std::thread::Builder::new()
+                .name(format!("{}-quant", processor.name().to_lowercase()))
+                .spawn(move || {
+                    while let Ok(mut task) = quant_rx.recv() {
+                        for input in &mut task.inputs {
+                            if quant::needs_conversion(input.dtype, task.config.dtype) {
+                                // Convert through f32 (engines consume f32).
+                                let f32s = quant::dequantize(
+                                    input.slice.as_slice(), input.dtype, input.scale,
+                                );
+                                let (bytes, scale) = quant::quantize(&f32s, task.config.dtype);
+                                input.slice = crate::mem::SharedSlice::from_vec(bytes);
+                                input.scale = scale;
+                                input.dtype = task.config.dtype;
+                            }
+                        }
+                        if exec_tx.send(task).is_err() {
+                            break;
+                        }
+                    }
+                })
+                .expect("spawn quant thread")
+        };
+
+        // Execution thread: run tasks serially on the engine.
+        let exec_handle = {
+            let completion_tx = completion_tx.clone();
+            std::thread::Builder::new()
+                .name(format!("{}-exec", processor.name().to_lowercase()))
+                .spawn(move || {
+                    while let Ok(task) = exec_rx.recv() {
+                        // Stage inputs through the tensor pool (the pool's
+                        // accounting is what Table 5 reports).
+                        let staged: Vec<Vec<f32>> = task
+                            .inputs
+                            .iter()
+                            .map(|i| {
+                                let bytes = i.slice.as_slice();
+                                let mut t = pool.acquire(bytes.len());
+                                t.fill_from(bytes);
+                                quant::dequantize(t.as_slice(), i.dtype, i.scale)
+                            })
+                            .collect();
+                        let engine_task = EngineTask {
+                            network: &task.network,
+                            subgraph: &task.subgraph,
+                            config: task.config,
+                            inputs: staged,
+                        };
+                        let result = engine.execute(&engine_task);
+                        let msg = match result {
+                            Ok(out) => CompletionMsg {
+                                request: task.request,
+                                network: task.network_idx,
+                                subgraph: task.subgraph.id,
+                                elapsed: out.elapsed,
+                                outputs: out.tensors,
+                                error: None,
+                            },
+                            Err(e) => CompletionMsg {
+                                request: task.request,
+                                network: task.network_idx,
+                                subgraph: task.subgraph.id,
+                                elapsed: 0.0,
+                                outputs: Vec::new(),
+                                error: Some(e.to_string()),
+                            },
+                        };
+                        if completion_tx.send(msg).is_err() {
+                            break;
+                        }
+                    }
+                })
+                .expect("spawn exec thread")
+        };
+
+        Worker {
+            processor,
+            quant_tx,
+            handles: vec![quant_handle, exec_handle],
+        }
+    }
+
+    /// Queue a task on this worker (enters via the quant thread).
+    pub fn submit(&self, task: TaskMsg) {
+        let _ = self.quant_tx.send(task);
+    }
+
+    /// Close the queues and join both threads.
+    pub fn shutdown(self) {
+        drop(self.quant_tx);
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Convenience: spawn one worker per processor with a shared engine.
+pub fn spawn_all(
+    engine: &Arc<dyn Engine>,
+    pool: &TensorPool,
+    completion_tx: &Sender<CompletionMsg>,
+) -> Vec<Worker> {
+    Processor::ALL
+        .into_iter()
+        .map(|p| Worker::spawn(p, engine.clone(), pool.clone(), completion_tx.clone()))
+        .collect()
+}
+
+/// Receiver side for tests: drain completions with a deadline.
+pub fn drain_completions(
+    rx: &Receiver<CompletionMsg>,
+    n: usize,
+    timeout: std::time::Duration,
+) -> Vec<CompletionMsg> {
+    let deadline = std::time::Instant::now() + timeout;
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n && std::time::Instant::now() < deadline {
+        if let Ok(msg) = rx.recv_timeout(std::time::Duration::from_millis(50)) {
+            out.push(msg);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::TensorInput;
+    use crate::engine::SimEngine;
+    use crate::graph::partition;
+    use crate::models::build_model;
+    use crate::perf::PerfModel;
+    use crate::{Backend, DataType, ExecConfig};
+    use std::sync::Arc;
+
+    fn mk_task(net: Arc<crate::graph::Network>, idx: usize, request: u64) -> TaskMsg {
+        let part = partition(
+            &net,
+            &vec![false; net.num_edges()],
+            &vec![Processor::Npu; net.num_layers()],
+        );
+        TaskMsg {
+            request,
+            network: net.clone(),
+            network_idx: idx,
+            subgraph: Arc::new(part.subgraphs[0].clone()),
+            config: ExecConfig::new(Processor::Npu, Backend::Qnn, DataType::Fp16),
+            inputs: vec![],
+        }
+    }
+
+    #[test]
+    fn worker_executes_and_reports() {
+        let pm = Arc::new(PerfModel::paper_calibrated());
+        let engine: Arc<dyn Engine> = Arc::new(SimEngine::new(pm, 0.0, false, 1));
+        let pool = TensorPool::new(true);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let worker = Worker::spawn(Processor::Npu, engine, pool, tx);
+        let net = Arc::new(build_model(0, 0));
+        worker.submit(mk_task(net, 0, 42));
+        let done = drain_completions(&rx, 1, std::time::Duration::from_secs(5));
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].request, 42);
+        assert!(done[0].error.is_none());
+        assert!(done[0].elapsed > 0.0);
+        worker.shutdown();
+    }
+
+    #[test]
+    fn worker_serializes_tasks_in_order() {
+        let pm = Arc::new(PerfModel::paper_calibrated());
+        let engine: Arc<dyn Engine> = Arc::new(SimEngine::new(pm, 0.0, false, 2));
+        let pool = TensorPool::new(true);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let worker = Worker::spawn(Processor::Npu, engine, pool, tx);
+        let net = Arc::new(build_model(0, 0));
+        for i in 0..5 {
+            worker.submit(mk_task(net.clone(), 0, i));
+        }
+        let done = drain_completions(&rx, 5, std::time::Duration::from_secs(5));
+        let ids: Vec<u64> = done.iter().map(|d| d.request).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4], "FIFO violated");
+        worker.shutdown();
+    }
+
+    #[test]
+    fn quant_thread_converts_dtypes() {
+        let pm = Arc::new(PerfModel::paper_calibrated());
+        let engine: Arc<dyn Engine> = Arc::new(SimEngine::new(pm, 0.0, false, 3));
+        let pool = TensorPool::new(true);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let worker = Worker::spawn(Processor::Npu, engine, pool, tx);
+        let net = Arc::new(build_model(0, 0));
+        let mut task = mk_task(net, 0, 1);
+        // fp32 input into an fp16 task: the quant thread must convert.
+        let (bytes, scale) = quant::quantize(&[1.0f32, 2.0, 3.0], DataType::Fp32);
+        task.inputs.push(TensorInput::from_vec(bytes, DataType::Fp32, scale));
+        worker.submit(task);
+        let done = drain_completions(&rx, 1, std::time::Duration::from_secs(5));
+        assert_eq!(done.len(), 1);
+        assert!(done[0].error.is_none());
+        worker.shutdown();
+    }
+}

@@ -1,0 +1,197 @@
+//! Integration tests over the PJRT bridge: load the AOT HLO artifacts
+//! produced by `make artifacts` and execute them through the real runtime.
+//!
+//! These tests are skipped (with a notice) when `artifacts/` has not been
+//! built, so `cargo test` stays green on a fresh checkout; `make test`
+//! always builds artifacts first.
+
+use std::sync::Arc;
+
+use puzzle::engine::{Engine, EngineTask, PjrtEngine};
+use puzzle::graph::partition;
+use puzzle::models::build_model;
+use puzzle::runtime::{artifacts_dir, layer_artifact, model_artifact, PjrtRuntime};
+use puzzle::{Backend, DataType, ExecConfig, Processor};
+
+fn artifacts_available() -> bool {
+    model_artifact("face_det").exists()
+}
+
+#[test]
+fn load_and_execute_whole_model() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let rt = PjrtRuntime::cpu().expect("pjrt cpu client");
+    let module = rt.load(&model_artifact("face_det")).expect("load artifact");
+    let input = vec![0.1f32; 32 * 32 * 3];
+    let outputs = module
+        .run_f32(&[(&input, &[1, 32, 32, 3])])
+        .expect("execute face_det");
+    // face_det's single output: concat of the two heads, 8x8x12.
+    assert_eq!(outputs.len(), 1);
+    assert_eq!(outputs[0].len(), 8 * 8 * 12);
+    assert!(outputs[0].iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn layer_chain_matches_whole_model() {
+    // The core numerics check at the rust level: executing the model
+    // layer-by-layer through per-layer artifacts must reproduce the fused
+    // whole-model artifact's output.
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let rt = PjrtRuntime::cpu().expect("client");
+    let net = build_model(0, 0); // face_det
+    let input = {
+        // Deterministic pseudo-input.
+        let mut v = Vec::with_capacity(32 * 32 * 3);
+        let mut x = 0.123f32;
+        for _ in 0..(32 * 32 * 3) {
+            x = (x * 1.7 + 0.31) % 1.0;
+            v.push(x - 0.5);
+        }
+        v
+    };
+
+    // Whole model.
+    let whole = rt.load(&model_artifact("face_det")).unwrap();
+    let whole_out = whole.run_f32(&[(&input, &[1, 32, 32, 3])]).unwrap();
+
+    // Layer chain.
+    let mut produced: std::collections::HashMap<usize, Vec<f32>> = Default::default();
+    for &l in net.topological_order() {
+        let module = rt.load(&layer_artifact("face_det", l.0)).unwrap();
+        let preds = net.predecessors(l);
+        let out = if preds.is_empty() {
+            module.run_f32(&[(&input, &[1, 32, 32, 3])]).unwrap()
+        } else {
+            let shaped: Vec<(&[f32], Vec<usize>)> = preds
+                .iter()
+                .map(|p| {
+                    let s = net.layer(*p).out_shape;
+                    (produced[&p.0].as_slice(), vec![1, s.h, s.w, s.c])
+                })
+                .collect();
+            let refs: Vec<(&[f32], &[usize])> =
+                shaped.iter().map(|(d, s)| (*d, s.as_slice())).collect();
+            module.run_f32(&refs).unwrap()
+        };
+        produced.insert(l.0, out.into_iter().next().unwrap());
+    }
+    let last = net.outputs()[0];
+    let chain_out = &produced[&last.0];
+
+    assert_eq!(whole_out[0].len(), chain_out.len());
+    for (a, b) in whole_out[0].iter().zip(chain_out) {
+        assert!((a - b).abs() < 1e-4, "layer chain diverged: {a} vs {b}");
+    }
+}
+
+#[test]
+fn pjrt_engine_runs_subgraphs() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let rt = PjrtRuntime::cpu().expect("client");
+    let engine = PjrtEngine::new(rt);
+    let net = build_model(0, 0);
+    engine.preload(&net).expect("preload");
+    assert_eq!(engine.cached_modules(), net.num_layers());
+
+    // Whole network as one subgraph.
+    let part = partition(
+        &net,
+        &vec![false; net.num_edges()],
+        &vec![Processor::Npu; net.num_layers()],
+    );
+    let task = EngineTask {
+        network: &net,
+        subgraph: &part.subgraphs[0],
+        config: ExecConfig::new(Processor::Npu, Backend::Qnn, DataType::Fp16),
+        inputs: vec![vec![0.1f32; 32 * 32 * 3]],
+    };
+    let out = engine.execute(&task).expect("execute");
+    assert_eq!(out.tensors.len(), 1, "one sink tensor");
+    assert_eq!(out.tensors[0].len(), 8 * 8 * 12);
+    assert!(out.elapsed > 0.0);
+
+    // Split into two subgraphs at the first edge; run both, chaining.
+    let mut cuts = vec![false; net.num_edges()];
+    cuts[4] = true; // between b2_pw and trunk
+    let part2 = partition(&net, &cuts, &vec![Processor::Npu; net.num_layers()]);
+    assert!(part2.subgraphs.len() >= 2);
+    for sg in &part2.subgraphs {
+        let task = EngineTask {
+            network: &net,
+            subgraph: sg,
+            config: ExecConfig::new(Processor::Npu, Backend::Qnn, DataType::Fp16),
+            inputs: vec![],
+        };
+        let out = engine.execute(&task).expect("execute split");
+        assert!(!out.tensors.is_empty());
+    }
+}
+
+#[test]
+fn artifact_manifest_is_consistent_with_rust_zoo() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let manifest_path = artifacts_dir().join("manifest.json");
+    let text = std::fs::read_to_string(manifest_path).expect("manifest");
+    for idx in 0..puzzle::models::MODEL_COUNT {
+        let net = build_model(0, idx);
+        assert!(
+            text.contains(&format!("\"{}\"", net.name)),
+            "manifest missing {}",
+            net.name
+        );
+        // Every layer artifact exists.
+        for l in 0..net.num_layers() {
+            assert!(
+                layer_artifact(&net.name, l).exists(),
+                "{} layer {} artifact missing",
+                net.name,
+                l
+            );
+        }
+    }
+}
+
+#[test]
+fn all_models_whole_artifacts_execute() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let rt = Arc::new(PjrtRuntime::cpu().expect("client"));
+    for idx in 0..puzzle::models::MODEL_COUNT {
+        let net = build_model(0, idx);
+        let module = rt.load(&model_artifact(&net.name)).expect("load");
+        let (h, w, c) = {
+            let first = net.inputs()[0];
+            let layer = net.layer(first);
+            let (h, w) = match layer.kind {
+                puzzle::graph::LayerKind::Conv { stride, .. } => {
+                    (layer.out_shape.h * stride, layer.out_shape.w * stride)
+                }
+                _ => (layer.out_shape.h, layer.out_shape.w),
+            };
+            (h, w, layer.in_channels)
+        };
+        let input = vec![0.05f32; h * w * c];
+        let out = module
+            .run_f32(&[(&input, &[1, h, w, c])])
+            .unwrap_or_else(|e| panic!("{}: {e}", net.name));
+        assert!(!out.is_empty(), "{}", net.name);
+        for t in &out {
+            assert!(t.iter().all(|v| v.is_finite()), "{} non-finite output", net.name);
+        }
+    }
+}

