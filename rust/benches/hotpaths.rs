@@ -1,26 +1,33 @@
 //! Micro-benchmarks of the system's hot paths (the §Perf targets):
 //! * the discrete-event simulator inner loop (the GA evaluates it ~10^4-10^5
-//!   times per search);
-//! * genome decode incl. partitioning + profile lookups;
-//! * one full GA generation;
+//!   times per search) — fresh-allocation vs reused-workspace;
+//! * genome decode incl. partitioning + profile lookups, and the
+//!   genome-fingerprint memo hit path;
+//! * one full GA generation at population 96, serial vs parallel (the
+//!   headline case for the batch evaluation engine);
 //! * NSGA-III selection;
 //! * tensor pool acquire/release;
 //! * Merkle hashing.
+//!
+//! All stats are also written to `BENCH_hotpaths.json` at the repo root
+//! (name → ns/iter) so future PRs can regress against this trajectory.
 
 use puzzle::analyzer::{GaConfig, StaticAnalyzer};
 use puzzle::comm::CommModel;
-use puzzle::ga::{decode, nsga3_select, Genome};
+use puzzle::ga::{decode, nsga3_select, DecodedPlanCache, Genome};
 use puzzle::graph::{merkle_hash_subgraph, partition};
 use puzzle::mem::TensorPool;
 use puzzle::perf::PerfModel;
 use puzzle::profiler::Profiler;
 use puzzle::scenario::Scenario;
-use puzzle::sim::{simulate, GroupSpec, SimOptions};
-use puzzle::util::bench::{bench, black_box};
+use puzzle::sim::{compile_plans, simulate, GroupSpec, SimOptions, SimWorkspace};
+use puzzle::util::bench::{bench, black_box, write_json, BenchStats};
 use puzzle::util::rng::Rng;
 use puzzle::Processor;
 
 fn main() {
+    let mut all: Vec<BenchStats> = Vec::new();
+
     let pm = PerfModel::paper_calibrated();
     let comm = CommModel::paper_calibrated();
     let scenario = Scenario::from_groups("bench", &[vec![0, 4, 6], vec![1, 5, 8]]);
@@ -40,18 +47,35 @@ fn main() {
         .collect();
     let opts = SimOptions { requests_per_group: 20, ..Default::default() };
 
-    bench("sim/simulate_6models_20req", 3.0, 50, || {
+    all.push(bench("sim/simulate_6models_20req", 3.0, 50, || {
         black_box(simulate(&plans, &groups, &comm, &opts));
-    });
+    }));
 
-    bench("ga/decode_genome(cached profiles)", 3.0, 50, || {
+    // Same workload, compiled once + workspace reused: the GA's actual
+    // steady-state inner loop (zero allocation per call).
+    let compiled = compile_plans(&plans);
+    let mut ws = SimWorkspace::new();
+    all.push(bench("sim/simulate_reused_workspace", 3.0, 50, || {
+        ws.run(&plans, &compiled, &groups, &comm, &opts);
+        black_box(ws.tasks_run());
+    }));
+
+    all.push(bench("ga/decode_genome(cached profiles)", 3.0, 50, || {
         black_box(decode(nets, &genome, &profiler, &comm));
-    });
+    }));
 
-    bench("ga/decode_fresh_genome", 3.0, 30, || {
+    // Memoized decode: the re-evaluated-survivor path (elites, measure-tier
+    // reps) that skips partition + profiling entirely.
+    let plan_cache = DecodedPlanCache::new();
+    let _ = plan_cache.decode(nets, &genome, &profiler, &comm); // prime
+    all.push(bench("ga/decode_memoized", 3.0, 200, || {
+        black_box(plan_cache.decode(nets, &genome, &profiler, &comm));
+    }));
+
+    all.push(bench("ga/decode_fresh_genome", 3.0, 30, || {
         let g = Genome::random(nets, 0.3, &mut rng);
         black_box(decode(nets, &g, &profiler, &comm));
-    });
+    }));
 
     // Partition alone.
     let net = &nets[5]; // fastsam analog
@@ -59,36 +83,75 @@ fn main() {
     let mapping: Vec<Processor> = (0..net.num_layers())
         .map(|i| Processor::from_index(i % 3))
         .collect();
-    bench("graph/partition_17layer", 3.0, 200, || {
+    all.push(bench("graph/partition_17layer", 3.0, 200, || {
         black_box(partition(net, &cuts, &mapping));
-    });
+    }));
 
     let part = partition(net, &cuts, &mapping);
-    bench("graph/merkle_hash", 3.0, 200, || {
+    all.push(bench("graph/merkle_hash", 3.0, 200, || {
         for sg in &part.subgraphs {
             black_box(merkle_hash_subgraph(net, sg));
         }
-    });
+    }));
 
     // NSGA-III on a realistic pool.
     let objs: Vec<Vec<f64>> = (0..96)
         .map(|_| (0..4).map(|_| rng.gen_f64()).collect())
         .collect();
-    bench("ga/nsga3_select_96to48_4obj", 3.0, 100, || {
+    all.push(bench("ga/nsga3_select_96to48_4obj", 3.0, 100, || {
         black_box(nsga3_select(&objs, 48));
-    });
+    }));
 
     // Tensor pool.
     let pool = TensorPool::new(true);
-    bench("mem/pool_acquire_release_16KiB", 2.0, 500, || {
+    all.push(bench("mem/pool_acquire_release_16KiB", 2.0, 500, || {
         let t = pool.acquire(16 * 1024);
         black_box(t.len());
-    });
+    }));
 
     // One full (tiny) analyzer run for an end-to-end feel.
     let tiny = Scenario::from_groups("tiny", &[vec![0, 1]]);
     let cfg = GaConfig { population: 8, max_generations: 3, sim_requests: 8, measure_reps: 1, ..GaConfig::quick(3) };
-    bench("analyzer/tiny_ga_run", 5.0, 3, || {
+    all.push(bench("analyzer/tiny_ga_run", 5.0, 3, || {
         black_box(StaticAnalyzer::new(&tiny, &pm, cfg.clone()).run());
+    }));
+
+    // The headline before/after pair: one full GA generation at population
+    // 96 (init evaluation + offspring evaluation + local search + measure
+    // tier), serial (threads = 1) vs parallel (threads = cores). The
+    // acceptance bar for the batch evaluation engine is >= 2x on a
+    // multi-core runner.
+    let gen_scenario = Scenario::from_groups("gen96", &[vec![0, 4, 6], vec![1, 5, 8]]);
+    let gen_cfg = |threads: usize| GaConfig {
+        population: 96,
+        max_generations: 1,
+        patience: 1,
+        sim_requests: 8,
+        measure_reps: 1,
+        seed: 5,
+        threads,
+        ..Default::default()
+    };
+    let serial = bench("analyzer/serial_generation", 8.0, 3, || {
+        black_box(StaticAnalyzer::new(&gen_scenario, &pm, gen_cfg(1)).run());
     });
+    let parallel = bench("analyzer/parallel_generation", 8.0, 3, || {
+        black_box(StaticAnalyzer::new(&gen_scenario, &pm, gen_cfg(0)).run());
+    });
+    println!(
+        "analyzer/parallel_generation speedup over serial: {:.2}x ({} logical cores)",
+        serial.mean_s / parallel.mean_s,
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    all.push(serial);
+    all.push(parallel);
+
+    // Machine-readable trajectory for future PRs.
+    let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_hotpaths.json");
+    match write_json(&json_path, &all) {
+        Ok(()) => println!("wrote {}", json_path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", json_path.display()),
+    }
 }

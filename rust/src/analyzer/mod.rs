@@ -15,21 +15,40 @@
 //!   the real runtime in hardware mode) that demotes candidates whose
 //!   simulated promise does not survive device fluctuation (the paper's
 //!   Scenario-6 observation).
+//!
+//! ## Batch evaluation engine (§Perf, this PR)
+//!
+//! Candidate scoring — the search's entire cost — runs through a **batch
+//! evaluator**: each generation's offspring become [`EvalJob`]s (genome +
+//! a per-job RNG seed derived *sequentially* from the master stream), which
+//! a `std::thread::scope` fan-out scores in parallel. Each worker thread
+//! owns one reusable [`SimWorkspace`] (zero steady-state allocation) and
+//! shares the [`DecodedPlanCache`] genome→plan memo and the merkle-keyed
+//! profile DB. Because every job's outcome depends only on its genome and
+//! its derived seed — never on cross-thread state — results gathered back
+//! by index are **bit-identical for any thread count**, including
+//! `threads = 1` (tested by `deterministic_across_thread_counts`). Only the
+//! profiler/memo hit-miss *counters* may vary under concurrency (two
+//! threads can race the same miss); objectives, Pareto fronts, and
+//! evaluation counts never do.
 
 pub mod solution_io;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use crate::util::rng::Rng;
 
 use crate::comm::CommModel;
 use crate::ga::{
     decode, fast_non_dominated_sort, merge_neighbors, mutate, nsga3_select, one_point_crossover,
-    reposition_adjacent, Genome,
+    reposition_adjacent, DecodedPlanCache, Genome, PlanSet,
 };
 
 use crate::perf::PerfModel;
 use crate::profiler::Profiler;
 use crate::scenario::Scenario;
-use crate::sim::{simulate, ExecutionPlan, GroupSpec, SimOptions};
+use crate::sim::{simulate, ExecutionPlan, GroupSpec, SimOptions, SimWorkspace};
 use crate::Processor;
 
 /// Analyzer hyper-parameters.
@@ -58,6 +77,10 @@ pub struct GaConfig {
     pub explore_partition: bool,
     /// Explore the priority chromosome (off pins the identity order).
     pub explore_priority: bool,
+    /// Evaluator threads for batch candidate scoring. `0` = one per
+    /// available core. Results are identical for every value (the
+    /// determinism contract above); `1` forces the serial path.
+    pub threads: usize,
 }
 
 impl Default for GaConfig {
@@ -76,6 +99,7 @@ impl Default for GaConfig {
             measure_reps: 3,
             explore_partition: true,
             explore_priority: true,
+            threads: 0,
         }
     }
 }
@@ -113,6 +137,10 @@ pub struct AnalysisResult {
     pub evaluations: usize,
     pub profile_cache_hits: u64,
     pub profile_measurements: u64,
+    /// Genome→plan memo hits (decodes skipped entirely).
+    pub plan_cache_hits: u64,
+    /// Actual decode + compile executions.
+    pub plan_cache_misses: u64,
 }
 
 impl AnalysisResult {
@@ -129,6 +157,27 @@ impl AnalysisResult {
             })
             .expect("non-empty pareto set")
     }
+}
+
+/// One unit of batch-evaluation work: a candidate genome plus the RNG seed
+/// that drives its local-search decisions and measurement-tier noise. Seeds
+/// are drawn sequentially from the master stream *before* the parallel
+/// fan-out, which is what makes results thread-count independent.
+struct EvalJob {
+    genome: Genome,
+    seed: u64,
+    local_search: bool,
+    measure: bool,
+}
+
+/// Shared, thread-safe evaluation context: the profile DB, the genome→plan
+/// memo, the group specs, and the evaluation counter. Everything here is
+/// value-deterministic under concurrent access (see module docs).
+struct EvalCtx<'a, 'd> {
+    profiler: &'a Profiler<'d>,
+    cache: &'a DecodedPlanCache,
+    groups: &'a [GroupSpec],
+    evals: &'a AtomicUsize,
 }
 
 /// The Static Analyzer.
@@ -153,7 +202,8 @@ impl<'a> StaticAnalyzer<'a> {
         }
     }
 
-    fn groups(&self) -> Vec<GroupSpec> {
+    /// Group specs at the search-time periods.
+    pub fn groups(&self) -> Vec<GroupSpec> {
         self.scenario
             .groups
             .iter()
@@ -162,18 +212,17 @@ impl<'a> StaticAnalyzer<'a> {
             .collect()
     }
 
-    /// Simulate a genome → flattened `[avg, p90]` objectives per group.
-    fn evaluate(
+    /// Simulate one genome → flattened `[avg, p90]` objectives per group.
+    /// Serial convenience path (tests, one-off scoring); the search itself
+    /// goes through [`Self::run`]'s batch evaluator.
+    pub fn evaluate(
         &self,
         genome: &Genome,
         profiler: &Profiler<'_>,
         groups: &[GroupSpec],
     ) -> (Vec<f64>, Vec<ExecutionPlan>) {
         let plans = decode(&self.scenario.networks, genome, profiler, &self.comm);
-        let opts = SimOptions {
-            requests_per_group: self.config.sim_requests,
-            ..Default::default()
-        };
+        let opts = self.sim_opts();
         let result = simulate(&plans, groups, &self.comm, &opts);
         let mut objectives = Vec::with_capacity(groups.len() * 2);
         for g in 0..groups.len() {
@@ -183,39 +232,148 @@ impl<'a> StaticAnalyzer<'a> {
         (objectives, plans)
     }
 
+    fn sim_opts(&self) -> SimOptions {
+        SimOptions { requests_per_group: self.config.sim_requests, ..Default::default() }
+    }
+
+    /// Memoized evaluation through the shared plan cache and a reusable
+    /// per-thread workspace: decode (or memo-hit), simulate allocation-free,
+    /// read objectives out of the workspace.
+    fn evaluate_cached(
+        &self,
+        genome: &Genome,
+        ctx: &EvalCtx<'_, '_>,
+        ws: &mut SimWorkspace,
+    ) -> (Vec<f64>, Arc<PlanSet>) {
+        let set = ctx.cache.decode(&self.scenario.networks, genome, ctx.profiler, &self.comm);
+        let opts = self.sim_opts();
+        ws.run(&set.plans, &set.compiled, ctx.groups, &self.comm, &opts);
+        let mut objectives = Vec::with_capacity(ctx.groups.len() * 2);
+        ws.objectives_into(&mut objectives);
+        ctx.evals.fetch_add(1, Ordering::Relaxed);
+        (objectives, set)
+    }
+
     /// Measurement tier: re-evaluate with execution-time noise, and score by
     /// the worst observed repetition. Candidates that only look good in the
-    /// noiseless simulation get demoted here.
-    fn measure(
+    /// noiseless simulation get demoted here. Durations are perturbed in a
+    /// reusable scratch plan set; the structural compilation is shared with
+    /// the noiseless plans (noise never changes dependencies).
+    fn measure_with(
         &self,
-        plans: &[ExecutionPlan],
-        groups: &[GroupSpec],
+        set: &PlanSet,
+        ctx: &EvalCtx<'_, '_>,
         rng: &mut Rng,
+        ws: &mut SimWorkspace,
+        scratch: &mut Vec<ExecutionPlan>,
     ) -> Vec<f64> {
-        let opts = SimOptions {
-            requests_per_group: self.config.sim_requests,
-            ..Default::default()
-        };
-        let mut worst: Vec<f64> = vec![0.0; groups.len() * 2];
+        let opts = self.sim_opts();
+        let mut worst: Vec<f64> = vec![0.0; ctx.groups.len() * 2];
+        scratch.clear();
+        scratch.extend(set.plans.iter().cloned());
         for _ in 0..self.config.measure_reps.max(1) {
-            // Perturb durations with processor-dependent noise.
-            let noisy: Vec<ExecutionPlan> = plans
-                .iter()
-                .map(|p| {
-                    let mut p2 = p.clone();
-                    for t in &mut p2.tasks {
-                        t.duration = self.perf.sample(t.duration, t.processor, rng);
-                    }
-                    p2
-                })
-                .collect();
-            let result = simulate(&noisy, groups, &self.comm, &opts);
-            for g in 0..groups.len() {
-                worst[g * 2] = worst[g * 2].max(result.avg_makespan(g));
-                worst[g * 2 + 1] = worst[g * 2 + 1].max(result.p90_makespan(g));
+            for (noisy, nominal) in scratch.iter_mut().zip(&set.plans) {
+                for (nt, t) in noisy.tasks.iter_mut().zip(&nominal.tasks) {
+                    nt.duration = self.perf.sample(t.duration, t.processor, rng);
+                }
+            }
+            ws.run(scratch, &set.compiled, ctx.groups, &self.comm, &opts);
+            for g in 0..ctx.groups.len() {
+                worst[g * 2] = worst[g * 2].max(ws.avg_makespan(g));
+                worst[g * 2 + 1] = worst[g * 2 + 1].max(ws.p90_makespan(g));
             }
         }
         worst
+    }
+
+    /// Score one job end-to-end: memoized evaluation, seed-driven local
+    /// search, measurement tier. Everything the job touches is either its
+    /// own (`rng` from the derived seed, the thread-local workspace and
+    /// scratch) or value-deterministic shared state (profile DB, plan memo),
+    /// so the result is a pure function of (genome, seed).
+    fn eval_one(
+        &self,
+        job: &EvalJob,
+        ctx: &EvalCtx<'_, '_>,
+        ws: &mut SimWorkspace,
+        scratch: &mut Vec<ExecutionPlan>,
+    ) -> Solution {
+        let (objectives, mut set) = self.evaluate_cached(&job.genome, ctx, ws);
+        let mut sol =
+            Solution { genome: job.genome.clone(), objectives, plans: set.plans.clone() };
+        if job.local_search || job.measure {
+            let mut rng = Rng::seed_from_u64(job.seed);
+            if job.local_search && rng.gen_bool(self.config.p_local_search) {
+                let nets = &self.scenario.networks;
+                for _ in 0..2 {
+                    let cand = if rng.gen_bool(0.5) {
+                        merge_neighbors(&sol.genome, &mut rng)
+                    } else {
+                        reposition_adjacent(nets, &sol.genome, &mut rng)
+                    };
+                    if let Some(cand) = cand {
+                        let (cobjs, cset) = self.evaluate_cached(&cand, ctx, ws);
+                        let better_all = cobjs
+                            .iter()
+                            .zip(&sol.objectives)
+                            .all(|(c, o)| c <= o)
+                            && cobjs.iter().zip(&sol.objectives).any(|(c, o)| c < o);
+                        if better_all {
+                            sol = Solution {
+                                genome: cand,
+                                objectives: cobjs,
+                                plans: cset.plans.clone(),
+                            };
+                            set = cset;
+                        }
+                    }
+                }
+            }
+            if job.measure {
+                sol.objectives = self.measure_with(&set, ctx, &mut rng, ws, scratch);
+            }
+        }
+        sol
+    }
+
+    /// Batch evaluation: score a whole job slice, fanning out across
+    /// `config.threads` scoped threads (0 = available cores). Jobs are
+    /// chunked contiguously and results written back by index — never by
+    /// completion order — so output is independent of scheduling.
+    fn evaluate_batch(&self, jobs: &[EvalJob], ctx: &EvalCtx<'_, '_>) -> Vec<Solution> {
+        let threads = self.effective_threads(jobs.len());
+        let mut out: Vec<Option<Solution>> = Vec::with_capacity(jobs.len());
+        out.resize_with(jobs.len(), || None);
+        if threads <= 1 {
+            let mut ws = SimWorkspace::new();
+            let mut scratch: Vec<ExecutionPlan> = Vec::new();
+            for (slot, job) in out.iter_mut().zip(jobs) {
+                *slot = Some(self.eval_one(job, ctx, &mut ws, &mut scratch));
+            }
+        } else {
+            let chunk = jobs.len().div_ceil(threads);
+            std::thread::scope(|scope| {
+                for (job_chunk, out_chunk) in jobs.chunks(chunk).zip(out.chunks_mut(chunk)) {
+                    scope.spawn(move || {
+                        let mut ws = SimWorkspace::new();
+                        let mut scratch: Vec<ExecutionPlan> = Vec::new();
+                        for (slot, job) in out_chunk.iter_mut().zip(job_chunk) {
+                            *slot = Some(self.eval_one(job, ctx, &mut ws, &mut scratch));
+                        }
+                    });
+                }
+            });
+        }
+        out.into_iter().map(|s| s.expect("every job evaluated")).collect()
+    }
+
+    fn effective_threads(&self, jobs: usize) -> usize {
+        let configured = if self.config.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.config.threads
+        };
+        configured.clamp(1, jobs.max(1))
     }
 
     /// Run the full GA search.
@@ -224,7 +382,15 @@ impl<'a> StaticAnalyzer<'a> {
         let nets = &self.scenario.networks;
         let pm_probe: &dyn crate::profiler::DeviceProbe = self.perf;
         let profiler = Profiler::new(pm_probe);
+        let plan_cache = DecodedPlanCache::new();
         let groups = self.groups();
+        let evals = AtomicUsize::new(0);
+        let ctx = EvalCtx {
+            profiler: &profiler,
+            cache: &plan_cache,
+            groups: &groups,
+            evals: &evals,
+        };
 
         // Initial population: random genomes plus structured seeds — all-NPU
         // / all-GPU / all-CPU, the per-model-fastest mapping, and the
@@ -251,15 +417,19 @@ impl<'a> StaticAnalyzer<'a> {
             self.enforce_ablation_switches(g);
         }
 
-        let mut evaluations = 0usize;
-        let mut evaluated: Vec<Solution> = population
-            .iter()
-            .map(|g| {
-                let (objectives, plans) = self.evaluate(g, &profiler, &groups);
-                evaluations += 1;
-                Solution { genome: g.clone(), objectives, plans }
+        // Initial population: batch-evaluated, no local search / measurement
+        // (as in the seed). Seeds are drawn for every job regardless so the
+        // master stream advances identically whatever the flags.
+        let init_jobs: Vec<EvalJob> = population
+            .into_iter()
+            .map(|g| EvalJob {
+                seed: rng.next_u64(),
+                genome: g,
+                local_search: false,
+                measure: false,
             })
             .collect();
+        let mut evaluated: Vec<Solution> = self.evaluate_batch(&init_jobs, &ctx);
 
         let avg_score = |sols: &[Solution]| -> f64 {
             sols.iter()
@@ -294,43 +464,20 @@ impl<'a> StaticAnalyzer<'a> {
             }
             offspring.truncate(evaluated.len());
 
-            // Local search on some children (simulator-evaluated; keep the
-            // neighbour only if it improves every objective).
-            let mut children: Vec<Solution> = Vec::with_capacity(offspring.len());
-            for child in offspring {
-                let (objs, plans) = self.evaluate(&child, &profiler, &groups);
-                evaluations += 1;
-                let mut sol = Solution { genome: child, objectives: objs, plans };
-                if rng.gen_bool(self.config.p_local_search) {
-                    for _ in 0..2 {
-                        let cand = if rng.gen_bool(0.5) {
-                            merge_neighbors(&sol.genome, &mut rng)
-                        } else {
-                            reposition_adjacent(nets, &sol.genome, &mut rng)
-                        };
-                        if let Some(cand) = cand {
-                            let (cobjs, cplans) = self.evaluate(&cand, &profiler, &groups);
-                            evaluations += 1;
-                            let better_all = cobjs
-                                .iter()
-                                .zip(&sol.objectives)
-                                .all(|(c, o)| c <= o)
-                                && cobjs.iter().zip(&sol.objectives).any(|(c, o)| c < o);
-                            if better_all {
-                                sol = Solution { genome: cand, objectives: cobjs, plans: cplans };
-                            }
-                        }
-                    }
-                }
-                children.push(sol);
-            }
-
-            // Measurement tier (brief noisy execution) before replacement.
-            if self.config.measure_reps > 0 {
-                for sol in &mut children {
-                    sol.objectives = self.measure(&sol.plans, &groups, &mut rng);
-                }
-            }
+            // Batch-evaluate the offspring: per-child derived seeds drive
+            // probabilistic local search (simulator-scored, kept only on
+            // all-objective improvement) and the measurement tier (brief
+            // noisy execution) before replacement.
+            let jobs: Vec<EvalJob> = offspring
+                .into_iter()
+                .map(|g| EvalJob {
+                    seed: rng.next_u64(),
+                    genome: g,
+                    local_search: true,
+                    measure: self.config.measure_reps > 0,
+                })
+                .collect();
+            let children = self.evaluate_batch(&jobs, &ctx);
 
             // NSGA-III replacement over parents + children.
             let mut pool = std::mem::take(&mut evaluated);
@@ -363,12 +510,15 @@ impl<'a> StaticAnalyzer<'a> {
             .map(|f| f.iter().map(|&i| evaluated[i].clone()).collect())
             .unwrap_or_default();
         let (hits, misses) = profiler.stats();
+        let (plan_hits, plan_misses) = plan_cache.stats();
         AnalysisResult {
             pareto,
             generations_run,
-            evaluations,
+            evaluations: evals.load(Ordering::Relaxed),
             profile_cache_hits: hits,
             profile_measurements: misses,
+            plan_cache_hits: plan_hits,
+            plan_cache_misses: plan_misses,
         }
     }
 

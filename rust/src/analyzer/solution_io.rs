@@ -19,7 +19,8 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
 
 use crate::ga::{Genome, NetworkGenes};
 use crate::scenario::Scenario;

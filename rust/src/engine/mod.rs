@@ -18,7 +18,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use crate::util::error::Result;
 use std::sync::Mutex;
 
 use crate::graph::{LayerId, Network, Subgraph};

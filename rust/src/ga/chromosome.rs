@@ -1,10 +1,18 @@
-//! Chromosome encoding and decoding (paper §4.2, Figs 6–7).
+//! Chromosome encoding and decoding (paper §4.2, Figs 6–7), plus the
+//! genome-fingerprint decode memo ([`DecodedPlanCache`]) that lets
+//! re-evaluated survivors — elites carried across generations, local-search
+//! revisits, measurement-tier repetitions — skip partitioning and profiling
+//! entirely.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 
 use crate::util::rng::Rng;
 use crate::comm::CommModel;
-use crate::graph::{partition, Network, Partition};
+use crate::graph::{fnv1a, fnv1a_u64, partition, Network, Partition, FNV_OFFSET};
 use crate::profiler::Profiler;
-use crate::sim::{ExecutionPlan, PlannedTask, PlannedTransfer};
+use crate::sim::{compile_plans, CompiledPlan, ExecutionPlan, PlannedTask, PlannedTransfer};
 use crate::{DataType, Processor};
 
 /// Genes for one network: the partition bit-vector (one per edge) and the
@@ -65,6 +73,29 @@ impl Genome {
             networks: nets.iter().map(|n| NetworkGenes::whole_on(n, p)).collect(),
             priority: (0..nets.len()).collect(),
         }
+    }
+
+    /// Structural 64-bit fingerprint of the full chromosome (FNV-1a over
+    /// cuts, mapping, and priority — the same hash family as the profile
+    /// DB's Merkle keys). Used as the [`DecodedPlanCache`] index; collisions
+    /// are disambiguated by full [`PartialEq`] comparison, so a collision
+    /// costs a decode, never a wrong plan.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        for genes in &self.networks {
+            h = fnv1a_u64(genes.cuts.len() as u64, h);
+            for &cut in &genes.cuts {
+                h = fnv1a(&[cut as u8], h);
+            }
+            h = fnv1a_u64(genes.mapping.len() as u64, h);
+            for &p in &genes.mapping {
+                h = fnv1a(&[p.index() as u8], h);
+            }
+        }
+        for &p in &self.priority {
+            h = fnv1a_u64(p as u64, h);
+        }
+        h
     }
 
     /// Validity: gene lengths match, priority is a permutation.
@@ -132,6 +163,107 @@ pub fn decode(
             ExecutionPlan { tasks, transfers, priority: genome.priority[i] }
         })
         .collect()
+}
+
+/// A decoded genome ready for simulation: the executable plans plus their
+/// one-time structural compilation (CSR dependency metadata). Shared via
+/// `Arc` so survivors re-evaluated across generations, local-search
+/// revisits, and the measurement tier's noisy repetitions all reuse one
+/// decode + compile.
+#[derive(Debug)]
+pub struct PlanSet {
+    pub plans: Vec<ExecutionPlan>,
+    pub compiled: Vec<CompiledPlan>,
+}
+
+struct CacheEntry {
+    genome: Genome,
+    set: Arc<PlanSet>,
+}
+
+/// Genome-fingerprint → decoded-plan memo, the decode-level sibling of the
+/// profiler's merkle cache: where the profile DB dedups *subgraph
+/// measurements* across genomes, this dedups whole *decodes* across
+/// re-evaluations of the same genome (elites, crossover clones,
+/// measure-tier reps). Thread-safe: the batch evaluator's worker threads
+/// share one cache. Values are pure functions of the genome (the profiler
+/// probe is deterministic), so concurrent misses on the same genome insert
+/// identical plans and determinism is preserved regardless of interleaving.
+pub struct DecodedPlanCache {
+    /// fingerprint → entries (a bucket list disambiguates hash collisions
+    /// by full genome equality).
+    map: RwLock<HashMap<u64, Vec<CacheEntry>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for DecodedPlanCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DecodedPlanCache {
+    /// Soft cap on memoized genomes; beyond it new decodes are returned
+    /// uncached (a search rarely exceeds a few thousand distinct genomes).
+    const MAX_GENOMES: usize = 1 << 15;
+
+    pub fn new() -> DecodedPlanCache {
+        DecodedPlanCache {
+            map: RwLock::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Decode a genome, reusing the memoized plan set when this exact genome
+    /// has been decoded before.
+    pub fn decode(
+        &self,
+        nets: &[Network],
+        genome: &Genome,
+        profiler: &Profiler<'_>,
+        comm: &CommModel,
+    ) -> Arc<PlanSet> {
+        let fp = genome.fingerprint();
+        {
+            let map = self.map.read().unwrap();
+            if let Some(bucket) = map.get(&fp) {
+                if let Some(entry) = bucket.iter().find(|e| &e.genome == genome) {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return entry.set.clone();
+                }
+            }
+        }
+        let plans = decode(nets, genome, profiler, comm);
+        let compiled = compile_plans(&plans);
+        let set = Arc::new(PlanSet { plans, compiled });
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.map.write().unwrap();
+        if map.len() < Self::MAX_GENOMES {
+            let bucket = map.entry(fp).or_default();
+            // Another thread may have raced the same genome in; both decoded
+            // identical values, keep one.
+            if !bucket.iter().any(|e| e.genome == *genome) {
+                bucket.push(CacheEntry { genome: genome.clone(), set: set.clone() });
+            }
+        }
+        set
+    }
+
+    /// (memo hits, decode misses).
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Number of distinct fingerprints memoized.
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
 }
 
 #[cfg(test)]
@@ -202,6 +334,50 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn fingerprint_tracks_genome_content() {
+        let nets = nets();
+        let mut rng = Rng::seed_from_u64(9);
+        let g = Genome::random(&nets, 0.3, &mut rng);
+        assert_eq!(g.fingerprint(), g.clone().fingerprint(), "fingerprint not pure");
+        let mut h = g.clone();
+        h.priority.swap(0, 1);
+        assert_ne!(g.fingerprint(), h.fingerprint(), "priority ignored");
+        let mut k = g.clone();
+        k.networks[0].cuts[0] = !k.networks[0].cuts[0];
+        assert_ne!(g.fingerprint(), k.fingerprint(), "cuts ignored");
+        let mut m = g.clone();
+        m.networks[1].mapping[0] = match m.networks[1].mapping[0] {
+            Processor::Cpu => Processor::Gpu,
+            _ => Processor::Cpu,
+        };
+        assert_ne!(g.fingerprint(), m.fingerprint(), "mapping ignored");
+    }
+
+    #[test]
+    fn decoded_plan_cache_memoizes() {
+        let nets = nets();
+        let pm = PerfModel::paper_calibrated();
+        let prof = Profiler::new(&pm);
+        let comm = CommModel::paper_calibrated();
+        let mut rng = Rng::seed_from_u64(11);
+        let g = Genome::random(&nets, 0.3, &mut rng);
+        let cache = DecodedPlanCache::new();
+        let a = cache.decode(&nets, &g, &prof, &comm);
+        let b = cache.decode(&nets, &g, &prof, &comm);
+        assert!(std::sync::Arc::ptr_eq(&a, &b), "second decode must be a memo hit");
+        assert_eq!(cache.stats(), (1, 1));
+        // Memoized plans equal a fresh decode exactly.
+        let fresh = decode(&nets, &g, &prof, &comm);
+        assert_eq!(a.plans, fresh);
+        assert_eq!(a.compiled.len(), fresh.len());
+        // A different genome is a distinct entry.
+        let g2 = Genome::random(&nets, 0.3, &mut rng);
+        let _ = cache.decode(&nets, &g2, &prof, &comm);
+        assert_eq!(cache.stats(), (1, 2));
+        assert_eq!(cache.len(), 2);
     }
 
     #[test]

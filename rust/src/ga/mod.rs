@@ -19,7 +19,7 @@ mod local_search;
 mod nsga3;
 mod operators;
 
-pub use chromosome::{decode, decode_network, Genome, NetworkGenes};
+pub use chromosome::{decode, decode_network, DecodedPlanCache, Genome, NetworkGenes, PlanSet};
 pub use local_search::{debug_check, merge_neighbors, reposition_adjacent};
 pub use nsga3::{fast_non_dominated_sort, nsga3_select, reference_points, Dominance};
 pub use operators::{mutate, one_point_crossover, upmx};

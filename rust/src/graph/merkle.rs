@@ -25,10 +25,14 @@ impl std::fmt::Display for MerkleHash {
     }
 }
 
-const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+/// FNV-1a offset basis — the shared seed for every structural hash in the
+/// crate (subgraph Merkle roots here, genome fingerprints in
+/// [`crate::ga::Genome::fingerprint`]).
+pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;
 const FNV_PRIME: u64 = 0x100000001b3;
 
-fn fnv1a(bytes: &[u8], mut h: u64) -> u64 {
+/// Fold `bytes` into running FNV-1a state `h`.
+pub fn fnv1a(bytes: &[u8], mut h: u64) -> u64 {
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(FNV_PRIME);
@@ -36,12 +40,13 @@ fn fnv1a(bytes: &[u8], mut h: u64) -> u64 {
     h
 }
 
-fn hash_u64(v: u64, h: u64) -> u64 {
+/// Fold one `u64` (little-endian bytes) into running FNV-1a state `h`.
+pub fn fnv1a_u64(v: u64, h: u64) -> u64 {
     fnv1a(&v.to_le_bytes(), h)
 }
 
 fn combine(a: u64, b: u64) -> u64 {
-    hash_u64(b, hash_u64(a, FNV_OFFSET))
+    fnv1a_u64(b, fnv1a_u64(a, FNV_OFFSET))
 }
 
 /// Structural leaf hash of a single layer (kind + shapes + MACs; name is
@@ -53,14 +58,14 @@ fn leaf(net: &Network, l: LayerId) -> u64 {
     if let super::layer::LayerKind::Conv { kernel, stride }
     | super::layer::LayerKind::DepthwiseConv { kernel, stride } = layer.kind
     {
-        h = hash_u64(kernel as u64, h);
-        h = hash_u64(stride as u64, h);
+        h = fnv1a_u64(kernel as u64, h);
+        h = fnv1a_u64(stride as u64, h);
     }
-    h = hash_u64(layer.out_shape.h as u64, h);
-    h = hash_u64(layer.out_shape.w as u64, h);
-    h = hash_u64(layer.out_shape.c as u64, h);
-    h = hash_u64(layer.in_channels as u64, h);
-    h = hash_u64(layer.macs, h);
+    h = fnv1a_u64(layer.out_shape.h as u64, h);
+    h = fnv1a_u64(layer.out_shape.w as u64, h);
+    h = fnv1a_u64(layer.out_shape.c as u64, h);
+    h = fnv1a_u64(layer.in_channels as u64, h);
+    h = fnv1a_u64(layer.macs, h);
     h
 }
 

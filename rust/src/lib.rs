@@ -20,6 +20,12 @@
 //! CPU/GPU/NPU and their SDKs) are rebuilt from scratch: see `DESIGN.md` for
 //! the substitution table.
 
+/// Counting allocator (see [`util::alloc`]): lets tests assert that the
+/// simulator's steady state performs zero heap allocation. One relaxed
+/// atomic add per allocation; active in every binary linking this crate.
+#[global_allocator]
+static GLOBAL_ALLOCATOR: util::alloc::CountingAllocator = util::alloc::CountingAllocator;
+
 pub mod analyzer;
 pub mod baselines;
 pub mod comm;

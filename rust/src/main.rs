@@ -11,7 +11,7 @@
 //! Argument parsing is hand-rolled (`--key value` / `--flag`): the build
 //! environment is offline and clap is not vendored.
 
-use anyhow::Result;
+use puzzle::util::error::Result;
 
 use puzzle::analyzer::{GaConfig, StaticAnalyzer};
 use puzzle::experiments::{self, ServingBudget};
@@ -201,7 +201,7 @@ fn serve_cmd(
                     let mb = b.objectives.iter().cloned().fold(0.0, f64::max);
                     ma.partial_cmp(&mb).unwrap()
                 })
-                .ok_or_else(|| anyhow::anyhow!("no solutions in {path}"))?;
+                .ok_or_else(|| puzzle::anyhow!("no solutions in {path}"))?;
             println!("loaded solution from {path}");
             (best.genome.clone(), best.genome.priority)
         }
@@ -365,7 +365,7 @@ fn run_experiment(pm: &PerfModel, id: &str, budget: &ServingBudget) -> Result<()
                 println!();
             }
         }
-        other => anyhow::bail!("unknown experiment id: {other}"),
+        other => puzzle::bail!("unknown experiment id: {other}"),
     }
     Ok(())
 }

@@ -8,91 +8,156 @@
 //!
 //! One [`PjrtRuntime`] owns the CPU PJRT client and a cache of compiled
 //! executables keyed by artifact path; Python never runs at serving time.
+//!
+//! The real bridge binds the external `xla` crate, which is not available in
+//! the offline build. It is therefore gated behind the off-by-default
+//! `pjrt` cargo feature; without it a stub with the same API ships, whose
+//! constructor returns an error. Artifact-path plumbing is feature-free, and
+//! the integration tests in `rust/tests/pjrt_integration.rs` skip themselves
+//! when `artifacts/` has not been built.
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
-use anyhow::{anyhow, Context, Result};
-use std::sync::Mutex;
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
 
-/// A loaded, compiled executable plus its I/O metadata.
-pub struct LoadedModule {
-    exe: xla::PjRtLoadedExecutable,
-    pub path: PathBuf,
-}
+    use crate::util::error::{Context, Result};
+    use std::sync::Mutex;
 
-impl LoadedModule {
-    /// Execute with f32 input buffers (shape handled by the artifact). The
-    /// lowering uses `return_tuple=True`, so outputs come back as a tuple
-    /// of however many results the jax function returned.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, shape)| {
-                let lit = xla::Literal::vec1(data);
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
-            })
-            .collect::<Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute: {e:?}"))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        // Outputs are a tuple (return_tuple=True at lowering).
-        let elems = out.to_tuple().map_err(|e| anyhow!("decompose: {e:?}"))?;
-        elems
-            .into_iter()
-            .map(|lit| lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
-            .collect()
-    }
-}
-
-/// The PJRT client + executable cache.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<PathBuf, std::sync::Arc<LoadedModule>>>,
-}
-
-impl PjrtRuntime {
-    /// Create a CPU PJRT client (the only plugin available in this image;
-    /// real NPU/GPU PJRT plugins would slot in here on hardware).
-    pub fn cpu() -> Result<PjrtRuntime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(PjrtRuntime { client, cache: Mutex::new(HashMap::new()) })
+    /// A loaded, compiled executable plus its I/O metadata.
+    pub struct LoadedModule {
+        exe: xla::PjRtLoadedExecutable,
+        pub path: PathBuf,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO-text artifact (cached by path).
-    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<LoadedModule>> {
-        if let Some(m) = self.cache.lock().unwrap().get(path) {
-            return Ok(m.clone());
+    impl LoadedModule {
+        /// Execute with f32 input buffers (shape handled by the artifact). The
+        /// lowering uses `return_tuple=True`, so outputs come back as a tuple
+        /// of however many results the jax function returned.
+        pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, shape)| {
+                    let lit = xla::Literal::vec1(data);
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    lit.reshape(&dims).map_err(|e| crate::anyhow!("reshape: {e:?}"))
+                })
+                .collect::<Result<_>>()?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| crate::anyhow!("execute: {e:?}"))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| crate::anyhow!("to_literal: {e:?}"))?;
+            // Outputs are a tuple (return_tuple=True at lowering).
+            let elems = out.to_tuple().map_err(|e| crate::anyhow!("decompose: {e:?}"))?;
+            elems
+                .into_iter()
+                .map(|lit| lit.to_vec::<f32>().map_err(|e| crate::anyhow!("to_vec: {e:?}")))
+                .collect()
         }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))
-        .context("loading HLO text artifact")?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
-        let module = std::sync::Arc::new(LoadedModule { exe, path: path.to_path_buf() });
-        self.cache.lock().unwrap().insert(path.to_path_buf(), module.clone());
-        Ok(module)
     }
 
-    /// Number of compiled modules held.
-    pub fn cached_modules(&self) -> usize {
-        self.cache.lock().unwrap().len()
+    /// The PJRT client + executable cache.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        cache: Mutex<HashMap<PathBuf, std::sync::Arc<LoadedModule>>>,
+    }
+
+    impl PjrtRuntime {
+        /// Create a CPU PJRT client (the only plugin available in this image;
+        /// real NPU/GPU PJRT plugins would slot in here on hardware).
+        pub fn cpu() -> Result<PjrtRuntime> {
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| crate::anyhow!("pjrt cpu client: {e:?}"))?;
+            Ok(PjrtRuntime { client, cache: Mutex::new(HashMap::new()) })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO-text artifact (cached by path).
+        pub fn load(&self, path: &Path) -> Result<std::sync::Arc<LoadedModule>> {
+            if let Some(m) = self.cache.lock().unwrap().get(path) {
+                return Ok(m.clone());
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| crate::anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| crate::anyhow!("parse {}: {e:?}", path.display()))
+            .context("loading HLO text artifact")?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| crate::anyhow!("compile {}: {e:?}", path.display()))?;
+            let module = std::sync::Arc::new(LoadedModule { exe, path: path.to_path_buf() });
+            self.cache.lock().unwrap().insert(path.to_path_buf(), module.clone());
+            Ok(module)
+        }
+
+        /// Number of compiled modules held.
+        pub fn cached_modules(&self) -> usize {
+            self.cache.lock().unwrap().len()
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use std::path::{Path, PathBuf};
+    use std::sync::Arc;
+
+    use crate::util::error::Result;
+
+    /// Stub module handle (`pjrt` feature disabled): never constructed,
+    /// because [`PjrtRuntime::cpu`] and [`PjrtRuntime::load`] both error.
+    pub struct LoadedModule {
+        pub path: PathBuf,
+    }
+
+    impl LoadedModule {
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            Err(crate::anyhow!(
+                "pjrt feature disabled: cannot execute {}",
+                self.path.display()
+            ))
+        }
+    }
+
+    /// Stub runtime (`pjrt` feature disabled).
+    pub struct PjrtRuntime {
+        _private: (),
+    }
+
+    impl PjrtRuntime {
+        /// Always errors: build with `--features pjrt` (and a vendored `xla`
+        /// bindings crate) for real execution.
+        pub fn cpu() -> Result<PjrtRuntime> {
+            Err(crate::anyhow!(
+                "pjrt feature disabled: rebuild with --features pjrt and a vendored `xla` crate"
+            ))
+        }
+
+        pub fn platform(&self) -> String {
+            "pjrt-disabled".to_string()
+        }
+
+        pub fn load(&self, path: &Path) -> Result<Arc<LoadedModule>> {
+            Err(crate::anyhow!("pjrt feature disabled: cannot load {}", path.display()))
+        }
+
+        pub fn cached_modules(&self) -> usize {
+            0
+        }
+    }
+}
+
+pub use imp::{LoadedModule, PjrtRuntime};
 
 /// Locate the artifacts directory: `$PUZZLE_ARTIFACTS`, else `artifacts/`
 /// relative to the crate root / current dir.
@@ -133,5 +198,12 @@ mod tests {
             PathBuf::from("/tmp/zzz/face_det.layer03.hlo.txt")
         );
         std::env::remove_var("PUZZLE_ARTIFACTS");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_errors_cleanly() {
+        let err = PjrtRuntime::cpu().err().expect("stub must error");
+        assert!(err.to_string().contains("pjrt feature disabled"), "{err}");
     }
 }

@@ -1,0 +1,142 @@
+//! [`CompiledPlan`] — per-plan structural metadata, derived **once per
+//! decode** instead of on every `simulate()` call.
+//!
+//! The seed simulator rebuilt a `PlanMeta` (indegrees, per-task dependent
+//! lists, input byte counts, root set) from the transfer list at the top of
+//! every simulation; with the GA evaluating tens of thousands of candidates
+//! per search, that rebuild — and its per-task `Vec` allocations — dominated
+//! the inner loop. `CompiledPlan` flattens the same information into CSR
+//! (compressed sparse row) arrays built exactly once, shared immutably by
+//! every subsequent simulation of the plan (including the measurement tier's
+//! noisy repetitions, whose perturbed durations leave the structure intact).
+//!
+//! Dependent edges preserve the transfer-list order per source task, so the
+//! event sequence — and therefore every simulated makespan — is bit-identical
+//! to the seed implementation.
+
+use super::ExecutionPlan;
+
+/// Flattened dependency structure of one [`ExecutionPlan`].
+#[derive(Debug, Clone, Default)]
+pub struct CompiledPlan {
+    /// Number of tasks in the plan.
+    pub(crate) n_tasks: usize,
+    /// Incoming-transfer count per task.
+    pub(crate) indeg: Vec<usize>,
+    /// Total inbound transfer bytes per task (allocation-overhead model).
+    pub(crate) in_bytes: Vec<usize>,
+    /// Tasks with no dependencies — ready at request arrival.
+    pub(crate) roots: Vec<usize>,
+    /// CSR row offsets into `dep_task`/`dep_bytes`, length `n_tasks + 1`.
+    pub(crate) dep_idx: Vec<usize>,
+    /// Destination task of each dependent edge, grouped by source task.
+    pub(crate) dep_task: Vec<usize>,
+    /// Bytes carried by each dependent edge (parallel to `dep_task`).
+    pub(crate) dep_bytes: Vec<usize>,
+}
+
+impl CompiledPlan {
+    /// Compile a plan's transfer list into CSR dependency arrays.
+    pub fn compile(plan: &ExecutionPlan) -> CompiledPlan {
+        let n = plan.tasks.len();
+        let mut indeg = vec![0usize; n];
+        let mut in_bytes = vec![0usize; n];
+        let mut counts = vec![0usize; n];
+        for tr in &plan.transfers {
+            indeg[tr.to] += 1;
+            in_bytes[tr.to] += tr.bytes;
+            counts[tr.from] += 1;
+        }
+        let mut dep_idx = vec![0usize; n + 1];
+        for t in 0..n {
+            dep_idx[t + 1] = dep_idx[t] + counts[t];
+        }
+        // Fill preserving transfer order per source (cursor sweep), matching
+        // the seed's `dependents[from].push(..)` ordering exactly.
+        let mut cursor: Vec<usize> = dep_idx[..n].to_vec();
+        let m = plan.transfers.len();
+        let mut dep_task = vec![0usize; m];
+        let mut dep_bytes = vec![0usize; m];
+        for tr in &plan.transfers {
+            let c = cursor[tr.from];
+            dep_task[c] = tr.to;
+            dep_bytes[c] = tr.bytes;
+            cursor[tr.from] += 1;
+        }
+        let roots = (0..n).filter(|&t| indeg[t] == 0).collect();
+        CompiledPlan { n_tasks: n, indeg, in_bytes, roots, dep_idx, dep_task, dep_bytes }
+    }
+
+    /// Range of CSR edge indices whose source is `task`.
+    #[inline]
+    pub(crate) fn dep_range(&self, task: usize) -> std::ops::Range<usize> {
+        self.dep_idx[task]..self.dep_idx[task + 1]
+    }
+
+    /// Dependent `(destination task, bytes)` pairs of `task`, in transfer
+    /// order.
+    pub fn dependents(&self, task: usize) -> impl Iterator<Item = (usize, usize)> + '_ {
+        let r = self.dep_range(task);
+        self.dep_task[r.clone()]
+            .iter()
+            .copied()
+            .zip(self.dep_bytes[r].iter().copied())
+    }
+
+    /// Number of tasks in the compiled plan.
+    pub fn num_tasks(&self) -> usize {
+        self.n_tasks
+    }
+}
+
+/// Compile every plan of a scenario (one-time cost per decode; memoized with
+/// the decode itself by [`crate::ga::DecodedPlanCache`]).
+pub fn compile_plans(plans: &[ExecutionPlan]) -> Vec<CompiledPlan> {
+    plans.iter().map(CompiledPlan::compile).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{PlannedTask, PlannedTransfer};
+    use crate::Processor;
+
+    fn plan() -> ExecutionPlan {
+        ExecutionPlan {
+            tasks: (0..4)
+                .map(|_| PlannedTask { duration: 0.001, processor: Processor::Npu })
+                .collect(),
+            transfers: vec![
+                PlannedTransfer { from: 0, to: 1, bytes: 10 },
+                PlannedTransfer { from: 0, to: 2, bytes: 20 },
+                PlannedTransfer { from: 1, to: 3, bytes: 30 },
+                PlannedTransfer { from: 2, to: 3, bytes: 40 },
+            ],
+            priority: 0,
+        }
+    }
+
+    #[test]
+    fn csr_mirrors_transfer_list() {
+        let cp = CompiledPlan::compile(&plan());
+        assert_eq!(cp.num_tasks(), 4);
+        assert_eq!(cp.indeg, vec![0, 1, 1, 2]);
+        assert_eq!(cp.in_bytes, vec![0, 10, 20, 70]);
+        assert_eq!(cp.roots, vec![0]);
+        let d0: Vec<(usize, usize)> = cp.dependents(0).collect();
+        assert_eq!(d0, vec![(1, 10), (2, 20)], "transfer order preserved");
+        let d3: Vec<(usize, usize)> = cp.dependents(3).collect();
+        assert!(d3.is_empty());
+    }
+
+    #[test]
+    fn empty_plan_compiles() {
+        let cp = CompiledPlan::compile(&ExecutionPlan {
+            tasks: vec![],
+            transfers: vec![],
+            priority: 0,
+        });
+        assert_eq!(cp.num_tasks(), 0);
+        assert!(cp.roots.is_empty());
+    }
+}

@@ -12,15 +12,29 @@
 //! the device-in-the-loop profiler, processor mapping, transfer byte counts)
 //! plus [`GroupSpec`]s (model groups with periods). Output is the per-group
 //! makespan series the XRBench metrics consume.
+//!
+//! The hot path is split into two pieces (§Perf, this PR):
+//! * [`CompiledPlan`] — flat CSR dependency metadata built **once per
+//!   decode** (the seed rebuilt it inside every `simulate()` call);
+//! * [`SimWorkspace`] — a reusable arena owning the event heap, instance
+//!   table, ready queues, and scratch buffers, so steady-state evaluation
+//!   performs zero heap allocation.
+//!
+//! [`simulate`] remains the convenience entry point (compile + fresh
+//! workspace + owned [`SimResult`]); batch evaluation in
+//! [`crate::analyzer`] drives [`SimWorkspace::run`] directly.
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+mod compiled;
+mod workspace;
+
+pub use compiled::{compile_plans, CompiledPlan};
+pub use workspace::SimWorkspace;
 
 use crate::comm::CommModel;
 use crate::Processor;
 
 /// One subgraph execution template within a network's plan.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PlannedTask {
     /// Profiled (measured) execution duration, seconds.
     pub duration: f64,
@@ -29,7 +43,7 @@ pub struct PlannedTask {
 }
 
 /// A tensor transfer between two subgraphs of the same network.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PlannedTransfer {
     pub from: usize,
     pub to: usize,
@@ -39,7 +53,7 @@ pub struct PlannedTransfer {
 /// The executable plan for one network: its partitioned subgraphs, their
 /// dependencies, and its scheduling priority (lower value = dispatched
 /// first when competing for a worker).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ExecutionPlan {
     pub tasks: Vec<PlannedTask>,
     pub transfers: Vec<PlannedTransfer>,
@@ -115,19 +129,27 @@ impl GroupSpec {
 
     /// Arrival timestamps for `n` requests under this group's pattern.
     pub fn arrival_times(&self, n: usize) -> Vec<f64> {
+        let mut out = Vec::with_capacity(n);
+        self.arrival_times_into(n, &mut out);
+        out
+    }
+
+    /// Write the first `n` arrival timestamps into `out` (cleared first).
+    /// Allocation-free once `out` has capacity — the simulator workspace
+    /// reuses one scratch vector across runs.
+    pub fn arrival_times_into(&self, n: usize, out: &mut Vec<f64>) {
+        out.clear();
         match self.pattern {
-            ArrivalPattern::Periodic => (0..n).map(|j| self.period * j as f64).collect(),
+            ArrivalPattern::Periodic => out.extend((0..n).map(|j| self.period * j as f64)),
             ArrivalPattern::Poisson { seed } => {
                 let mut rng = crate::util::rng::Rng::seed_from_u64(seed);
                 let mut t = 0.0;
-                (0..n)
-                    .map(|_| {
-                        // Exponential inter-arrival with mean `period`.
-                        let u = rng.gen_f64().max(1e-12);
-                        t += -self.period * u.ln();
-                        t
-                    })
-                    .collect()
+                out.extend((0..n).map(|_| {
+                    // Exponential inter-arrival with mean `period`.
+                    let u = rng.gen_f64().max(1e-12);
+                    t += -self.period * u.ln();
+                    t
+                }));
             }
         }
     }
@@ -189,267 +211,38 @@ impl SimResult {
 
 /// p-th percentile (nearest-rank on a sorted copy).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+    let mut v = xs.to_vec();
+    v.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    nearest_rank(&v, p)
+}
+
+/// Nearest-rank percentile of an already **sorted** slice (the shared
+/// backend of [`percentile`] and [`SimWorkspace::p90_makespan`]).
+pub(crate) fn nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
         return 0.0;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = ((p * v.len() as f64).ceil() as usize).clamp(1, v.len());
-    v[rank - 1]
+    let rank = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
 }
 
-#[derive(Debug, Clone, Copy)]
-enum Event {
-    /// A periodic request arrives for a group.
-    Arrival { group: usize, request: usize },
-    /// A task instance finished on its worker.
-    Complete { instance: usize },
-    /// A task instance's inputs have landed on its worker (post-transfer).
-    Ready { instance: usize },
-}
-
-/// Live state of one task instance (a subgraph execution for a specific
-/// request of a specific network).
-struct Instance {
-    plan: usize,
-    task: usize,
-    group: usize,
-    request: usize,
-    remaining_deps: usize,
-    /// (priority, arrival seq) dispatch key.
-    priority: usize,
-    seq: u64,
-}
-
-/// Heap entry carrying its event inline (§Perf L3-2: replaces the previous
-/// payload-vector indirection and per-event allocation).
-struct HeapEntry {
-    time: f64,
-    /// Completions sort ahead of arrivals at equal times so freed workers
-    /// pick up backlog deterministically.
-    class: u8,
-    seq: u64,
-    event: Event,
-}
-
-impl PartialEq for HeapEntry {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.class == other.class && self.seq == other.seq
-    }
-}
-impl Eq for HeapEntry {}
-impl PartialOrd for HeapEntry {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for HeapEntry {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
-        other
-            .time
-            .partial_cmp(&self.time)
-            .expect("NaN time")
-            .then(other.class.cmp(&self.class))
-            .then(other.seq.cmp(&self.seq))
-    }
-}
-
-/// Run the discrete-event simulation.
+/// Run the discrete-event simulation: compile the plans, run them through a
+/// fresh [`SimWorkspace`], and return an owned [`SimResult`].
+///
+/// This is the convenience path (one compile + one workspace per call). Hot
+/// loops — the GA's batch evaluator, the measurement tier — hold a
+/// [`CompiledPlan`] set and a per-thread [`SimWorkspace`] and call
+/// [`SimWorkspace::run`] directly, which allocates nothing in steady state.
 pub fn simulate(
     plans: &[ExecutionPlan],
     groups: &[GroupSpec],
     comm: &CommModel,
     opts: &SimOptions,
 ) -> SimResult {
-    let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::new();
-    let mut seq: u64 = 0;
-
-    // Per-plan static metadata, computed once (§Perf L3-4: arrivals used to
-    // re-scan the transfer list per task per request).
-    struct PlanMeta {
-        indeg: Vec<usize>,
-        dependents: Vec<Vec<(usize, usize)>>, // task -> (dst task, bytes)
-        in_bytes: Vec<usize>,
-        roots: Vec<usize>,
-    }
-    let metas: Vec<PlanMeta> = plans
-        .iter()
-        .map(|plan| {
-            let n = plan.tasks.len();
-            let mut indeg = vec![0usize; n];
-            let mut dependents: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n];
-            let mut in_bytes = vec![0usize; n];
-            for tr in &plan.transfers {
-                indeg[tr.to] += 1;
-                in_bytes[tr.to] += tr.bytes;
-                dependents[tr.from].push((tr.to, tr.bytes));
-            }
-            let roots = (0..n).filter(|&t| indeg[t] == 0).collect();
-            PlanMeta { indeg, dependents, in_bytes, roots }
-        })
-        .collect();
-
-    // Seed arrivals per the group's pattern.
-    for (g, group) in groups.iter().enumerate() {
-        for (j, t) in group.arrival_times(opts.requests_per_group).into_iter().enumerate() {
-            seq += 1;
-            heap.push(HeapEntry {
-                time: t,
-                class: 2,
-                seq,
-                event: Event::Arrival { group: g, request: j },
-            });
-        }
-    }
-
-    let mut instances: Vec<Instance> = Vec::new();
-    let mut arrival_time: Vec<Vec<f64>> =
-        groups.iter().map(|_| vec![0.0; opts.requests_per_group]).collect();
-    let mut finish_time: Vec<Vec<f64>> =
-        groups.iter().map(|_| vec![0.0; opts.requests_per_group]).collect();
-    let mut open_tasks: Vec<Vec<usize>> =
-        groups.iter().map(|_| vec![0; opts.requests_per_group]).collect();
-
-    // Per-worker ready queues ordered by (priority, seq), carrying the
-    // instance index directly.
-    let mut ready: [BinaryHeap<Reverse<(usize, u64, usize)>>; 3] =
-        [BinaryHeap::new(), BinaryHeap::new(), BinaryHeap::new()];
-    let mut worker_busy = [false; 3];
-    let mut busy_time = [0.0f64; 3];
-    let mut tasks_run = 0usize;
-    let mut span = 0.0f64;
-
-    // Dependents of each instance: (dependent instance, bytes), consumed
-    // once at completion.
-    let mut dependents_of: Vec<Vec<(usize, usize)>> = Vec::new();
-
-    let alloc_overhead = |bytes: usize| -> f64 {
-        if opts.tensor_pool {
-            0.0
-        } else {
-            // malloc + first-touch page faults (Table 5's memcpy inflation).
-            8e-6 + bytes as f64 / 6.0e9
-        }
-    };
-
-    macro_rules! start_if_free {
-        ($p:expr, $now:expr) => {
-            if !worker_busy[$p] {
-                if let Some(Reverse((_, _, inst))) = ready[$p].pop() {
-                    let i = &instances[inst];
-                    let task = &plans[i.plan].tasks[i.task];
-                    let in_bytes = metas[i.plan].in_bytes[i.task];
-                    let dur = opts.dispatch_overhead
-                        + alloc_overhead(task.duration as usize + in_bytes)
-                        + task.duration;
-                    worker_busy[$p] = true;
-                    busy_time[$p] += dur;
-                    tasks_run += 1;
-                    seq += 1;
-                    heap.push(HeapEntry {
-                        time: $now + dur,
-                        class: 0,
-                        seq,
-                        event: Event::Complete { instance: inst },
-                    });
-                }
-            }
-        };
-    }
-
-    while let Some(HeapEntry { time: now, event, .. }) = heap.pop() {
-        span = span.max(now);
-        match event {
-            Event::Arrival { group, request } => {
-                arrival_time[group][request] = now;
-                for &net in &groups[group].networks {
-                    let plan = &plans[net];
-                    let meta = &metas[net];
-                    let base = instances.len();
-                    open_tasks[group][request] += plan.tasks.len();
-                    for t in 0..plan.tasks.len() {
-                        instances.push(Instance {
-                            plan: net,
-                            task: t,
-                            group,
-                            request,
-                            remaining_deps: meta.indeg[t],
-                            priority: plan.priority,
-                            seq: base as u64 + t as u64,
-                        });
-                        // Shift this request's dependent edges to instance ids.
-                        dependents_of.push(
-                            meta.dependents[t]
-                                .iter()
-                                .map(|&(to, bytes)| (base + to, bytes))
-                                .collect(),
-                        );
-                    }
-                    // Root tasks are immediately ready.
-                    for &t in &meta.roots {
-                        let p = plan.tasks[t].processor.index();
-                        let inst = &instances[base + t];
-                        ready[p].push(Reverse((inst.priority, inst.seq, base + t)));
-                        start_if_free!(p, now);
-                    }
-                }
-            }
-            Event::Complete { instance } => {
-                let (plan_idx, task_idx, group, request) = {
-                    let i = &instances[instance];
-                    (i.plan, i.task, i.group, i.request)
-                };
-                let p = plans[plan_idx].tasks[task_idx].processor.index();
-                worker_busy[p] = false;
-                open_tasks[group][request] -= 1;
-                finish_time[group][request] = finish_time[group][request].max(now);
-                // Fan out to dependents, paying transfer cost per edge.
-                let deps = std::mem::take(&mut dependents_of[instance]);
-                for (dep_inst, bytes) in deps {
-                    let dep = &mut instances[dep_inst];
-                    dep.remaining_deps -= 1;
-                    if dep.remaining_deps == 0 {
-                        let from_p = plans[plan_idx].tasks[task_idx].processor;
-                        let to_p = plans[dep.plan].tasks[dep.task].processor;
-                        let same = from_p == to_p;
-                        let c = if opts.zero_copy {
-                            comm.transfer_cost_zero_copy(bytes, same)
-                        } else {
-                            comm.transfer_cost(bytes, same)
-                        };
-                        seq += 1;
-                        heap.push(HeapEntry {
-                            time: now + c,
-                            class: 1,
-                            seq,
-                            event: Event::Ready { instance: dep_inst },
-                        });
-                    }
-                }
-                // Worker freed: start next ready task.
-                start_if_free!(p, now);
-            }
-            Event::Ready { instance } => {
-                let i = &instances[instance];
-                let p = plans[i.plan].tasks[i.task].processor.index();
-                ready[p].push(Reverse((i.priority, i.seq, instance)));
-                start_if_free!(p, now);
-            }
-        }
-    }
-
-    let makespans = groups
-        .iter()
-        .enumerate()
-        .map(|(g, _)| {
-            (0..opts.requests_per_group)
-                .map(|j| (finish_time[g][j] - arrival_time[g][j]).max(0.0))
-                .collect()
-        })
-        .collect();
-
-    SimResult { makespans, busy: busy_time, span, tasks_run }
+    let compiled = compile_plans(plans);
+    let mut ws = SimWorkspace::new();
+    ws.run(plans, &compiled, groups, comm, opts);
+    ws.to_result()
 }
 
 #[cfg(test)]

@@ -1,0 +1,374 @@
+//! [`SimWorkspace`] — a reusable simulation arena: every buffer the
+//! discrete-event loop needs (event heap, instance table, per-worker ready
+//! queues, arrival/finish tables, scratch vectors), owned by one evaluator
+//! thread and `reset()` between candidates.
+//!
+//! The seed `simulate()` allocated all of this per call — event heap,
+//! instance vector, one dependent-list `Vec` *per task instance*, and the
+//! makespan matrices — on a path the GA executes tens of thousands of times
+//! per search. With a workspace, steady-state evaluation performs **zero**
+//! heap allocation: containers are cleared (capacity retained), per-instance
+//! dependent lists are gone entirely (the CSR arrays of
+//! [`CompiledPlan`](super::CompiledPlan) are indexed through each instance's
+//! block base), and objectives are read out of workspace buffers. The
+//! guarantee is asserted by `rust/tests/batch_eval.rs` against the counting
+//! allocator in [`crate::util::alloc`].
+//!
+//! Event ordering, tie-breaking, and floating-point accumulation order are
+//! byte-for-byte identical to the seed implementation, so a reused workspace
+//! reproduces fresh-allocation `simulate()` output exactly (also tested).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::comm::CommModel;
+
+use super::{nearest_rank, CompiledPlan, ExecutionPlan, GroupSpec, SimOptions, SimResult};
+
+#[derive(Debug, Clone, Copy)]
+enum Event {
+    /// A periodic request arrives for a group.
+    Arrival { group: usize, request: usize },
+    /// A task instance finished on its worker.
+    Complete { instance: usize },
+    /// A task instance's inputs have landed on its worker (post-transfer).
+    Ready { instance: usize },
+}
+
+/// Live state of one task instance (a subgraph execution for a specific
+/// request of a specific network).
+struct Instance {
+    plan: usize,
+    task: usize,
+    group: usize,
+    request: usize,
+    /// First instance index of this (network, request) block; dependent
+    /// tasks of the same block live at `base + dep_task`.
+    base: usize,
+    remaining_deps: usize,
+    /// (priority, arrival seq) dispatch key.
+    priority: usize,
+    seq: u64,
+}
+
+/// Heap entry carrying its event inline (§Perf L3-2: replaces the previous
+/// payload-vector indirection and per-event allocation).
+struct HeapEntry {
+    time: f64,
+    /// Completions sort ahead of arrivals at equal times so freed workers
+    /// pick up backlog deterministically.
+    class: u8,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.class == other.class && self.seq == other.seq
+    }
+}
+impl Eq for HeapEntry {}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .expect("NaN time")
+            .then(other.class.cmp(&self.class))
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Reusable simulation state. Create once per evaluator thread, call
+/// [`SimWorkspace::run`] per candidate, read objectives via the accessors.
+pub struct SimWorkspace {
+    heap: BinaryHeap<HeapEntry>,
+    /// Per-worker ready queues ordered by (priority, seq), carrying the
+    /// instance index directly.
+    ready: [BinaryHeap<Reverse<(usize, u64, usize)>>; 3],
+    instances: Vec<Instance>,
+    /// Flat `[group * requests + j]` request arrival / finish times.
+    arrival: Vec<f64>,
+    finish: Vec<f64>,
+    /// Scratch for per-group arrival timestamp generation.
+    arrivals_scratch: Vec<f64>,
+    /// Scratch for percentile computation (sorted copy of one group's
+    /// makespans).
+    sort_scratch: Vec<f64>,
+    busy: [f64; 3],
+    span: f64,
+    tasks_run: usize,
+    n_groups: usize,
+    requests: usize,
+}
+
+impl Default for SimWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SimWorkspace {
+    /// Empty workspace; buffers grow to steady-state capacity on first use.
+    pub fn new() -> SimWorkspace {
+        SimWorkspace {
+            heap: BinaryHeap::new(),
+            ready: [BinaryHeap::new(), BinaryHeap::new(), BinaryHeap::new()],
+            instances: Vec::new(),
+            arrival: Vec::new(),
+            finish: Vec::new(),
+            arrivals_scratch: Vec::new(),
+            sort_scratch: Vec::new(),
+            busy: [0.0; 3],
+            span: 0.0,
+            tasks_run: 0,
+            n_groups: 0,
+            requests: 0,
+        }
+    }
+
+    fn reset(&mut self, n_groups: usize, requests: usize) {
+        self.heap.clear();
+        for q in &mut self.ready {
+            q.clear();
+        }
+        self.instances.clear();
+        let slots = n_groups * requests;
+        self.arrival.clear();
+        self.arrival.resize(slots, 0.0);
+        self.finish.clear();
+        self.finish.resize(slots, 0.0);
+        self.busy = [0.0; 3];
+        self.span = 0.0;
+        self.tasks_run = 0;
+        self.n_groups = n_groups;
+        self.requests = requests;
+    }
+
+    /// Run the discrete-event simulation into this workspace. `compiled`
+    /// must be the compilation of `plans` (structure only — durations are
+    /// read from `plans`, so noisy-duration variants of the same plans can
+    /// share one compilation).
+    pub fn run(
+        &mut self,
+        plans: &[ExecutionPlan],
+        compiled: &[CompiledPlan],
+        groups: &[GroupSpec],
+        comm: &CommModel,
+        opts: &SimOptions,
+    ) {
+        debug_assert_eq!(plans.len(), compiled.len());
+        self.reset(groups.len(), opts.requests_per_group);
+        let requests = opts.requests_per_group;
+
+        // Split the workspace into disjoint field borrows so the event loop
+        // below reads exactly like the seed implementation's locals.
+        let SimWorkspace { heap, ready, instances, arrival, finish, arrivals_scratch, .. } =
+            self;
+
+        let mut seq: u64 = 0;
+        let mut worker_busy = [false; 3];
+        let mut busy_time = [0.0f64; 3];
+        let mut tasks_run = 0usize;
+        let mut span = 0.0f64;
+
+        // Seed arrivals per the group's pattern.
+        for (g, group) in groups.iter().enumerate() {
+            group.arrival_times_into(requests, arrivals_scratch);
+            for (j, &t) in arrivals_scratch.iter().enumerate() {
+                seq += 1;
+                heap.push(HeapEntry {
+                    time: t,
+                    class: 2,
+                    seq,
+                    event: Event::Arrival { group: g, request: j },
+                });
+            }
+        }
+
+        let alloc_overhead = |bytes: usize| -> f64 {
+            if opts.tensor_pool {
+                0.0
+            } else {
+                // malloc + first-touch page faults (Table 5's memcpy inflation).
+                8e-6 + bytes as f64 / 6.0e9
+            }
+        };
+
+        macro_rules! start_if_free {
+            ($p:expr, $now:expr) => {
+                if !worker_busy[$p] {
+                    if let Some(Reverse((_, _, inst))) = ready[$p].pop() {
+                        let i = &instances[inst];
+                        let task = &plans[i.plan].tasks[i.task];
+                        let in_bytes = compiled[i.plan].in_bytes[i.task];
+                        let dur = opts.dispatch_overhead
+                            + alloc_overhead(task.duration as usize + in_bytes)
+                            + task.duration;
+                        worker_busy[$p] = true;
+                        busy_time[$p] += dur;
+                        tasks_run += 1;
+                        seq += 1;
+                        heap.push(HeapEntry {
+                            time: $now + dur,
+                            class: 0,
+                            seq,
+                            event: Event::Complete { instance: inst },
+                        });
+                    }
+                }
+            };
+        }
+
+        while let Some(HeapEntry { time: now, event, .. }) = heap.pop() {
+            span = span.max(now);
+            match event {
+                Event::Arrival { group, request } => {
+                    arrival[group * requests + request] = now;
+                    for &net in &groups[group].networks {
+                        let plan = &plans[net];
+                        let cp = &compiled[net];
+                        let base = instances.len();
+                        for t in 0..plan.tasks.len() {
+                            instances.push(Instance {
+                                plan: net,
+                                task: t,
+                                group,
+                                request,
+                                base,
+                                remaining_deps: cp.indeg[t],
+                                priority: plan.priority,
+                                seq: base as u64 + t as u64,
+                            });
+                        }
+                        // Root tasks are immediately ready.
+                        for &t in &cp.roots {
+                            let p = plan.tasks[t].processor.index();
+                            let inst = &instances[base + t];
+                            ready[p].push(Reverse((inst.priority, inst.seq, base + t)));
+                            start_if_free!(p, now);
+                        }
+                    }
+                }
+                Event::Complete { instance } => {
+                    let (plan_idx, task_idx, group, request, base) = {
+                        let i = &instances[instance];
+                        (i.plan, i.task, i.group, i.request, i.base)
+                    };
+                    let from_p = plans[plan_idx].tasks[task_idx].processor;
+                    let p = from_p.index();
+                    worker_busy[p] = false;
+                    let slot = group * requests + request;
+                    finish[slot] = finish[slot].max(now);
+                    // Fan out to dependents through the plan's CSR arrays,
+                    // paying transfer cost per edge.
+                    let cp = &compiled[plan_idx];
+                    for k in cp.dep_range(task_idx) {
+                        let dep_inst = base + cp.dep_task[k];
+                        let bytes = cp.dep_bytes[k];
+                        let dep = &mut instances[dep_inst];
+                        dep.remaining_deps -= 1;
+                        if dep.remaining_deps == 0 {
+                            let to_p = plans[dep.plan].tasks[dep.task].processor;
+                            let same = from_p == to_p;
+                            let c = if opts.zero_copy {
+                                comm.transfer_cost_zero_copy(bytes, same)
+                            } else {
+                                comm.transfer_cost(bytes, same)
+                            };
+                            seq += 1;
+                            heap.push(HeapEntry {
+                                time: now + c,
+                                class: 1,
+                                seq,
+                                event: Event::Ready { instance: dep_inst },
+                            });
+                        }
+                    }
+                    // Worker freed: start next ready task.
+                    start_if_free!(p, now);
+                }
+                Event::Ready { instance } => {
+                    let i = &instances[instance];
+                    let p = plans[i.plan].tasks[i.task].processor.index();
+                    ready[p].push(Reverse((i.priority, i.seq, instance)));
+                    start_if_free!(p, now);
+                }
+            }
+        }
+
+        self.busy = busy_time;
+        self.span = span;
+        self.tasks_run = tasks_run;
+    }
+
+    /// Makespan of request `j` of group `g` from the last run.
+    #[inline]
+    pub fn makespan(&self, g: usize, j: usize) -> f64 {
+        let slot = g * self.requests + j;
+        (self.finish[slot] - self.arrival[slot]).max(0.0)
+    }
+
+    /// Mean makespan of a group (matches [`SimResult::avg_makespan`]
+    /// bit-for-bit: same values summed in the same order).
+    pub fn avg_makespan(&self, g: usize) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        let sum: f64 = (0..self.requests).map(|j| self.makespan(g, j)).sum();
+        sum / self.requests as f64
+    }
+
+    /// 90th-percentile makespan of a group (nearest-rank, matching
+    /// [`super::percentile`]). Uses the workspace sort scratch — no
+    /// allocation in steady state.
+    pub fn p90_makespan(&mut self, g: usize) -> f64 {
+        self.sort_scratch.clear();
+        for j in 0..self.requests {
+            self.sort_scratch.push(self.makespan(g, j));
+        }
+        self.sort_scratch
+            .sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        nearest_rank(&self.sort_scratch, 0.90)
+    }
+
+    /// Write the analyzer's flattened `[avg, p90]` objectives per group into
+    /// `out` (cleared first; no allocation once `out` has capacity).
+    pub fn objectives_into(&mut self, out: &mut Vec<f64>) {
+        out.clear();
+        for g in 0..self.n_groups {
+            out.push(self.avg_makespan(g));
+            out.push(self.p90_makespan(g));
+        }
+    }
+
+    /// Busy seconds of a processor from the last run.
+    pub fn busy(&self, index: usize) -> f64 {
+        self.busy[index]
+    }
+
+    /// Total simulated span of the last run, seconds.
+    pub fn span(&self) -> f64 {
+        self.span
+    }
+
+    /// Task executions simulated in the last run.
+    pub fn tasks_run(&self) -> usize {
+        self.tasks_run
+    }
+
+    /// Materialize the last run as an owned [`SimResult`] (allocates; the
+    /// compatibility path behind [`super::simulate`]).
+    pub fn to_result(&self) -> SimResult {
+        let makespans = (0..self.n_groups)
+            .map(|g| (0..self.requests).map(|j| self.makespan(g, j)).collect())
+            .collect();
+        SimResult { makespans, busy: self.busy, span: self.span, tasks_run: self.tasks_run }
+    }
+}

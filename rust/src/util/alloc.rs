@@ -1,0 +1,82 @@
+//! Global allocation counter — the instrument behind the "steady-state
+//! simulation performs zero per-call heap allocation" guarantee (§Perf: the
+//! GA's inner loop re-runs [`crate::sim::SimWorkspace`] tens of thousands of
+//! times per search; a single stray allocation per event would dominate).
+//!
+//! [`CountingAllocator`] wraps the system allocator and bumps a **per-thread**
+//! counter on every `alloc`/`realloc`/`alloc_zeroed`. Per-thread is doubly
+//! deliberate: tests asserting "zero allocations" cannot be flaked by other
+//! test threads allocating concurrently, and the hot multi-threaded batch
+//! evaluator never touches a shared cacheline — the overhead is one
+//! uncontended TLS `Cell` bump per allocation, negligible against the
+//! allocation itself.
+//!
+//! The counter is installed as the crate's `#[global_allocator]` in
+//! `lib.rs`, so it is active in every binary, bench, and test that links
+//! `puzzle`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    // `const`-initialized: no lazy init, no allocation on first access, so
+    // the allocator can touch it re-entrancy-free.
+    static THREAD_ALLOCATIONS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// System-allocator wrapper that counts allocation calls.
+pub struct CountingAllocator;
+
+#[inline]
+fn record() {
+    // `try_with`: TLS may be unavailable during thread teardown; dropping
+    // the count there is fine (nothing asserts across teardown).
+    let _ = THREAD_ALLOCATIONS.try_with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        record();
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        record();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        record();
+        System.alloc_zeroed(layout)
+    }
+}
+
+/// Allocation calls made by the **current thread** so far. Subtract two
+/// readings to count allocations across a code region.
+pub fn thread_allocations() -> u64 {
+    THREAD_ALLOCATIONS.try_with(|c| c.get()).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_heap_allocations_on_this_thread() {
+        let before = thread_allocations();
+        let v: Vec<u64> = std::hint::black_box(Vec::with_capacity(1024));
+        let after = thread_allocations();
+        assert!(after > before, "Vec::with_capacity not counted");
+        drop(v);
+        // A no-allocation region really reads as zero.
+        let a = thread_allocations();
+        let x = std::hint::black_box(3u64) + 4;
+        let b = thread_allocations();
+        assert_eq!(a, b, "pure arithmetic allocated?");
+        assert_eq!(x, 7);
+    }
+}

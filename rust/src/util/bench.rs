@@ -2,7 +2,13 @@
 //! binary (`harness = false`) builds a [`Harness`], registers closures, and
 //! prints per-iteration statistics. Warm-up + trimmed timing keeps the
 //! numbers stable enough for before/after comparisons in EXPERIMENTS.md.
+//!
+//! [`write_json`] additionally emits the collected stats as a
+//! machine-readable `name → ns/iter` map; `benches/hotpaths.rs` writes it to
+//! `BENCH_hotpaths.json` at the repo root so future PRs have a perf
+//! trajectory to regress against.
 
+use std::path::Path;
 use std::time::Instant;
 
 /// Timing result of one registered bench.
@@ -79,6 +85,37 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Serialize bench stats as a JSON object: `name → {ns_per_iter, ...}`.
+/// Hand-rolled (serde is unavailable offline); names are escaped, numbers
+/// are plain decimals.
+pub fn to_json(stats: &[BenchStats]) -> String {
+    let mut out = String::from("{\n");
+    for (i, st) in stats.iter().enumerate() {
+        let sep = if i + 1 == stats.len() { "" } else { "," };
+        out.push_str(&format!(
+            "  \"{}\": {{\"ns_per_iter\": {:.1}, \"iterations\": {}, \"min_ns\": {:.1}, \"p50_ns\": {:.1}, \"p90_ns\": {:.1}}}{}\n",
+            json_escape(&st.name),
+            st.mean_s * 1e9,
+            st.iterations,
+            st.min_s * 1e9,
+            st.p50_s * 1e9,
+            st.p90_s * 1e9,
+            sep,
+        ));
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Write bench stats as JSON to `path`.
+pub fn write_json(path: &Path, stats: &[BenchStats]) -> std::io::Result<()> {
+    std::fs::write(path, to_json(stats))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,6 +125,22 @@ mod tests {
         let s = run_bench("noop", 0.0, 7, || {});
         assert!(s.iterations >= 7);
         assert!(s.min_s <= s.p50_s && s.p50_s <= s.p90_s);
+    }
+
+    #[test]
+    fn json_output_well_formed() {
+        let stats = vec![
+            run_bench("a/first", 0.0, 2, || {}),
+            run_bench("b/\"quoted\"", 0.0, 2, || {}),
+        ];
+        let json = to_json(&stats);
+        assert!(json.starts_with("{\n") && json.ends_with("}\n"), "{json}");
+        assert!(json.contains("\"a/first\""));
+        assert!(json.contains("\\\"quoted\\\""), "quotes not escaped: {json}");
+        assert!(json.contains("ns_per_iter"));
+        // Exactly one comma separator for two entries (each entry line ends
+        // with a single closing brace).
+        assert_eq!(json.matches("},\n").count(), 1, "{json}");
     }
 
     #[test]

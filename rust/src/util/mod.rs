@@ -1,10 +1,14 @@
 //! In-tree utility substrates.
 //!
 //! The build environment is offline, so the usual helper crates (rand,
-//! criterion, proptest, clap, crossbeam) are rebuilt here at the size this
-//! project needs: a deterministic PRNG ([`rng`]), a micro bench harness
-//! ([`bench`]), and a tiny property-testing loop ([`prop`]).
+//! criterion, proptest, clap, crossbeam, anyhow) are rebuilt here at the
+//! size this project needs: a deterministic PRNG ([`rng`]), a micro bench
+//! harness ([`bench`]), a tiny property-testing loop ([`prop`]), an
+//! `anyhow`-style error type ([`error`]), and a counting global allocator
+//! ([`alloc`]) backing the simulator's zero-allocation guarantee.
 
+pub mod alloc;
 pub mod bench;
+pub mod error;
 pub mod prop;
 pub mod rng;

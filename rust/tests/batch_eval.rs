@@ -1,0 +1,184 @@
+//! Equivalence and allocation guarantees of the batch evaluation pipeline
+//! (parallel GA scoring + reusable `SimWorkspace` + decode memoization):
+//!
+//! 1. parallel batch evaluation is **bit-identical** to the serial path for
+//!    several seeds (objectives, Pareto genomes, evaluation counts);
+//! 2. a reused workspace reproduces fresh-allocation `simulate()` exactly;
+//! 3. steady-state workspace simulation performs **zero** heap allocation
+//!    (asserted against the counting global allocator);
+//! 4. the genome→plan memo returns plans identical to a fresh decode.
+
+use puzzle::analyzer::{AnalysisResult, GaConfig, StaticAnalyzer};
+use puzzle::comm::CommModel;
+use puzzle::ga::{decode, DecodedPlanCache, Genome};
+use puzzle::perf::PerfModel;
+use puzzle::profiler::Profiler;
+use puzzle::scenario::Scenario;
+use puzzle::sim::{
+    compile_plans, simulate, ArrivalPattern, GroupSpec, SimOptions, SimWorkspace,
+};
+use puzzle::util::rng::Rng;
+
+fn quick_cfg(seed: u64, threads: usize) -> GaConfig {
+    GaConfig {
+        population: 16,
+        max_generations: 6,
+        sim_requests: 8,
+        measure_reps: 2,
+        threads,
+        ..GaConfig::quick(seed)
+    }
+}
+
+fn pareto_signature(r: &AnalysisResult) -> Vec<(Vec<f64>, Genome)> {
+    r.pareto
+        .iter()
+        .map(|s| (s.objectives.clone(), s.genome.clone()))
+        .collect()
+}
+
+#[test]
+fn deterministic_across_thread_counts() {
+    // The tentpole contract: identical results whatever the thread count,
+    // including threads = 1 (the serial path). Cache hit/miss *counters*
+    // may differ under racing; search output never does.
+    let scenario = Scenario::from_groups("par", &[vec![0, 1, 6]]);
+    let pm = PerfModel::paper_calibrated();
+    for seed in [1u64, 5, 9] {
+        let serial = StaticAnalyzer::new(&scenario, &pm, quick_cfg(seed, 1)).run();
+        let par2 = StaticAnalyzer::new(&scenario, &pm, quick_cfg(seed, 2)).run();
+        let par4 = StaticAnalyzer::new(&scenario, &pm, quick_cfg(seed, 4)).run();
+        assert_eq!(serial.generations_run, par4.generations_run, "seed {seed}");
+        assert_eq!(serial.evaluations, par2.evaluations, "seed {seed}");
+        assert_eq!(serial.evaluations, par4.evaluations, "seed {seed}");
+        let sig = pareto_signature(&serial);
+        assert_eq!(sig, pareto_signature(&par2), "seed {seed}: 2 threads diverged");
+        assert_eq!(sig, pareto_signature(&par4), "seed {seed}: 4 threads diverged");
+    }
+}
+
+#[test]
+fn reused_workspace_matches_fresh_simulate_exactly() {
+    // One workspace reused across many different plan sets must reproduce
+    // fresh-allocation simulate() bit-for-bit each time.
+    let scenario = Scenario::from_groups("ws", &[vec![0, 4], vec![1, 6]]);
+    let pm = PerfModel::paper_calibrated();
+    let comm = CommModel::paper_calibrated();
+    let profiler = Profiler::new(&pm);
+    let periods = scenario.periods(1.0, &pm);
+    let groups: Vec<GroupSpec> = scenario
+        .groups
+        .iter()
+        .zip(&periods)
+        .map(|(g, &p)| GroupSpec::periodic(g.members.clone(), p))
+        .collect();
+    let opts = SimOptions { requests_per_group: 12, ..Default::default() };
+
+    let mut rng = Rng::seed_from_u64(77);
+    let mut ws = SimWorkspace::new();
+    for _ in 0..8 {
+        let genome = Genome::random(&scenario.networks, 0.4, &mut rng);
+        let plans = decode(&scenario.networks, &genome, &profiler, &comm);
+        let fresh = simulate(&plans, &groups, &comm, &opts);
+
+        let compiled = compile_plans(&plans);
+        ws.run(&plans, &compiled, &groups, &comm, &opts);
+        let reused = ws.to_result();
+
+        assert_eq!(fresh.makespans, reused.makespans, "makespans diverged");
+        assert_eq!(fresh.busy, reused.busy, "busy time diverged");
+        assert_eq!(fresh.span, reused.span, "span diverged");
+        assert_eq!(fresh.tasks_run, reused.tasks_run, "task count diverged");
+        for g in 0..groups.len() {
+            assert_eq!(fresh.avg_makespan(g), ws.avg_makespan(g));
+            assert_eq!(fresh.p90_makespan(g), ws.p90_makespan(g));
+        }
+    }
+}
+
+#[test]
+fn steady_state_simulation_is_allocation_free() {
+    // After one warm-up run, re-running the same workload through the
+    // workspace — event loop, Poisson arrival generation, objective
+    // extraction — must not allocate at all. Uses the per-thread counter of
+    // the crate's counting global allocator, so concurrent test threads
+    // cannot flake this.
+    let scenario = Scenario::from_groups("alloc", &[vec![0, 1, 6]]);
+    let pm = PerfModel::paper_calibrated();
+    let comm = CommModel::paper_calibrated();
+    let profiler = Profiler::new(&pm);
+    let mut rng = Rng::seed_from_u64(3);
+    let genome = Genome::random(&scenario.networks, 0.4, &mut rng);
+    let plans = decode(&scenario.networks, &genome, &profiler, &comm);
+    let compiled = compile_plans(&plans);
+    let periods = scenario.periods(1.0, &pm);
+    // One periodic group plus a Poisson group exercises both arrival paths.
+    let groups = vec![
+        GroupSpec::periodic(vec![0, 1], periods[0]),
+        GroupSpec {
+            networks: vec![2],
+            period: periods[0],
+            pattern: ArrivalPattern::Poisson { seed: 11 },
+        },
+    ];
+    let opts = SimOptions { requests_per_group: 16, ..Default::default() };
+
+    let mut ws = SimWorkspace::new();
+    let mut objectives: Vec<f64> = Vec::new();
+    // Warm-up: buffers grow to steady-state capacity.
+    ws.run(&plans, &compiled, &groups, &comm, &opts);
+    ws.objectives_into(&mut objectives);
+    let warm = objectives.clone();
+
+    let before = puzzle::util::alloc::thread_allocations();
+    for _ in 0..5 {
+        ws.run(&plans, &compiled, &groups, &comm, &opts);
+        ws.objectives_into(&mut objectives);
+    }
+    let after = puzzle::util::alloc::thread_allocations();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state workspace simulation allocated {} times",
+        after - before
+    );
+    assert_eq!(warm, objectives, "steady-state result drifted");
+}
+
+#[test]
+fn memoized_decode_equals_fresh_decode() {
+    let scenario = Scenario::from_groups("memo", &[vec![0, 2, 6]]);
+    let pm = PerfModel::paper_calibrated();
+    let comm = CommModel::paper_calibrated();
+    let profiler = Profiler::new(&pm);
+    let cache = DecodedPlanCache::new();
+    let mut rng = Rng::seed_from_u64(21);
+    for _ in 0..10 {
+        let genome = Genome::random(&scenario.networks, 0.3, &mut rng);
+        let first = cache.decode(&scenario.networks, &genome, &profiler, &comm);
+        let second = cache.decode(&scenario.networks, &genome, &profiler, &comm);
+        assert!(
+            std::sync::Arc::ptr_eq(&first, &second),
+            "re-decode of an identical genome must hit the memo"
+        );
+        let fresh = decode(&scenario.networks, &genome, &profiler, &comm);
+        assert_eq!(first.plans, fresh, "memoized plans diverge from decode()");
+    }
+    let (hits, misses) = cache.stats();
+    assert_eq!((hits, misses), (10, 10));
+}
+
+#[test]
+fn plan_memo_reports_hits_in_full_search() {
+    // End-to-end: a real search re-proposes genomes (elites, crossover
+    // clones), so the memo must land hits and the analyzer must report them.
+    let scenario = Scenario::from_groups("memo2", &[vec![0, 1]]);
+    let pm = PerfModel::paper_calibrated();
+    let r = StaticAnalyzer::new(&scenario, &pm, quick_cfg(4, 1)).run();
+    assert!(r.plan_cache_misses > 0);
+    assert!(
+        r.plan_cache_hits > 0,
+        "no memo reuse across {} evaluations",
+        r.evaluations
+    );
+}
