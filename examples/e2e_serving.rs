@@ -18,13 +18,10 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use puzzle::analyzer::{GaConfig, StaticAnalyzer};
-use puzzle::coordinator::{Coordinator, NetworkSolution, RuntimeOptions};
+use puzzle::analyzer::GaConfig;
+use puzzle::api::{RuntimeOptions, ScenarioSpec, SessionBuilder};
 use puzzle::engine::{Engine, PjrtEngine};
-use puzzle::ga::decode_network;
-use puzzle::perf::PerfModel;
 use puzzle::runtime::{model_artifact, PjrtRuntime};
-use puzzle::scenario::Scenario;
 
 fn main() {
     if !model_artifact("face_det").exists() {
@@ -34,11 +31,14 @@ fn main() {
 
     // A realistic camera-pipeline group: face detection + selfie
     // segmentation + hand detection (the paper's motivating example).
-    let scenario = Scenario::from_groups("e2e", &[vec![0, 1, 2]]);
-    let pm = PerfModel::paper_calibrated();
+    let session = SessionBuilder::new(ScenarioSpec::single_group("e2e", vec![0, 1, 2]))
+        .config(GaConfig::quick(7))
+        .build()
+        .expect("valid scenario spec");
     println!("== Static Analyzer ==");
-    let analysis = StaticAnalyzer::new(&scenario, &pm, GaConfig::quick(7)).run();
-    let best = analysis.best_by_max_makespan();
+    let analysis = session.run();
+    let best_idx = analysis.best_index();
+    let best = &analysis.pareto[best_idx];
     println!(
         "{} generations, {} evaluations, chose objectives {:?}",
         analysis.generations_run,
@@ -46,33 +46,15 @@ fn main() {
         best.objectives.iter().map(|o| format!("{:.2}ms", o * 1e3)).collect::<Vec<_>>()
     );
 
-    // Build runtime solutions, preload every artifact through PJRT.
+    // Preload every artifact through PJRT, then deploy onto the real
+    // engine; the deployment materializes the runtime solutions once.
     println!("== PJRT initialization ==");
     let t0 = Instant::now();
     let runtime = PjrtRuntime::cpu().expect("pjrt cpu client");
     println!("platform: {}", runtime.platform());
     let engine_impl = Arc::new(PjrtEngine::new(runtime));
-    let mut solutions = Vec::new();
-    for (i, (net, genes)) in scenario.networks.iter().zip(&best.genome.networks).enumerate() {
+    for net in &session.scenario().networks {
         engine_impl.preload(net).expect("preload artifacts");
-        let part = decode_network(net, genes);
-        println!(
-            "  {}: {} subgraphs ({:?})",
-            net.name,
-            part.num_subgraphs(),
-            part.subgraphs.iter().map(|s| (s.layers.len(), s.processor)).collect::<Vec<_>>()
-        );
-        let configs = part
-            .subgraphs
-            .iter()
-            .map(|sg| pm.best_config_for(net, &sg.layers, sg.processor).0)
-            .collect();
-        solutions.push(NetworkSolution {
-            network: Arc::new(net.clone()),
-            partition: Arc::new(part),
-            configs,
-            priority: best.genome.priority[i],
-        });
     }
     println!(
         "compiled {} executables in {:.2}s",
@@ -83,7 +65,21 @@ fn main() {
     // Serve periodic requests: the group "camera" ticks every period.
     println!("== Serving ==");
     let engine: Arc<dyn Engine> = engine_impl;
-    let mut coord = Coordinator::new(solutions, engine, RuntimeOptions::default());
+    let mut deployment = analysis
+        .deploy_with_engine(best_idx, RuntimeOptions::default(), engine, 1.0)
+        .expect("deployable solution");
+    for sol in deployment.coordinator.solutions() {
+        println!(
+            "  {}: {} subgraphs ({:?})",
+            sol.network.name,
+            sol.partition.num_subgraphs(),
+            sol.partition
+                .subgraphs
+                .iter()
+                .map(|s| (s.layers.len(), s.processor))
+                .collect::<Vec<_>>()
+        );
+    }
     let requests = 200usize;
     let period = Duration::from_millis(5);
     let t0 = Instant::now();
@@ -92,11 +88,11 @@ fn main() {
         if let Some(sleep) = target.checked_sub(t0.elapsed()) {
             std::thread::sleep(sleep);
         }
-        coord.submit_group(0, &[0, 1, 2]);
-        coord.pump(Duration::from_secs(5));
+        deployment.serve(0, 1, Duration::from_secs(5));
     }
     let wall = t0.elapsed().as_secs_f64();
 
+    let coord = &deployment.coordinator;
     let mut makespans: Vec<f64> = coord.served().iter().map(|s| s.makespan).collect();
     makespans.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let (avg, sd) = puzzle::metrics::mean_sd(&makespans);
@@ -119,6 +115,6 @@ fn main() {
         "tensor pool: malloc {:.2} ms over {} allocs, memcpy {:.2} ms, free {:.2} ms",
         m_ms, m_n, c_ms, f_ms
     );
-    coord.shutdown();
+    deployment.shutdown();
     println!("e2e OK");
 }

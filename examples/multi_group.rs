@@ -5,7 +5,8 @@
 //!
 //! Run with: `cargo run --release --example multi_group`
 
-use puzzle::analyzer::{GaConfig, StaticAnalyzer};
+use puzzle::analyzer::GaConfig;
+use puzzle::api::SessionBuilder;
 use puzzle::experiments::{saturation_of, score_at_alpha, solve_scenario_budgeted};
 use puzzle::perf::PerfModel;
 use puzzle::scenario::scenario10_analog;
@@ -26,9 +27,14 @@ fn main() {
         );
     }
 
-    // Run the Static Analyzer and show the makespan trade-off across the
-    // Pareto set (group 0 avg vs group 1 avg).
-    let analysis = StaticAnalyzer::new(&scenario, &pm, GaConfig::quick(210)).run();
+    // Run the Static Analyzer through the session layer and show the
+    // makespan trade-off across the Pareto set (group 0 avg vs group 1 avg).
+    let session = SessionBuilder::for_scenario(scenario.clone())
+        .perf_model(pm.clone())
+        .config(GaConfig::quick(210))
+        .build()
+        .expect("valid scenario");
+    let analysis = session.run();
     println!(
         "analyzer: {} generations, {} evaluations, {} pareto solutions",
         analysis.generations_run, analysis.evaluations, analysis.pareto.len()
@@ -38,7 +44,7 @@ fn main() {
         .pareto
         .iter()
         .map(|s| {
-            let sg: usize = s.plans.iter().map(|p| p.tasks.len()).sum();
+            let sg: usize = s.plans().iter().map(|p| p.tasks.len()).sum();
             (s.objectives[0] * 1e3, s.objectives[2] * 1e3, sg)
         })
         .collect();

@@ -1,74 +1,75 @@
-//! Quickstart: partition one model, inspect the plan, and serve a few
-//! requests through the runtime with the calibrated simulated device.
+//! Quickstart: the whole Puzzle pipeline — scenario → device-in-the-loop
+//! GA analysis → Pareto front → live Coordinator — in one page, entirely
+//! through the owned `puzzle::api` session layer.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
-use std::sync::Arc;
+use std::time::Duration;
 
-use puzzle::coordinator::{Coordinator, NetworkSolution, RuntimeOptions};
-use puzzle::engine::{Engine, SimEngine};
-use puzzle::ga::{decode_network, NetworkGenes};
-use puzzle::graph::LayerId;
-use puzzle::models::build_model;
-use puzzle::perf::PerfModel;
-use puzzle::Processor;
+use puzzle::analyzer::GaConfig;
+use puzzle::api::{GenerationProgress, RuntimeOptions, ScenarioSpec, SessionBuilder};
 
 fn main() {
-    let pm = PerfModel::paper_calibrated();
-
-    // 1. A model from the zoo: the YOLOv8-nano analog.
-    let net = build_model(0, 6);
-    println!("model {}: {} layers, {} edges, {:.1}M MACs", net.name, net.num_layers(), net.num_edges(), net.total_macs() as f64 / 1e6);
-
-    // 2. Profile it whole on each processor (Table 3 view).
-    let all: Vec<LayerId> = (0..net.num_layers()).map(LayerId).collect();
-    for p in Processor::ALL {
-        let (cfg, t) = pm.best_config_for(&net, &all, p);
-        println!("  whole on {p}: {:.2} ms under {cfg}", t * 1e3);
-    }
-
-    // 3. Partition it: cut after the CSP join (edge 7) and map the backbone
-    //    to the NPU, the heads to the GPU — the kind of solution the Static
-    //    Analyzer discovers automatically.
-    let mut genes = NetworkGenes::whole_on(&net, Processor::Npu);
-    genes.cuts[7] = true;
-    for l in 9..net.num_layers() {
-        genes.mapping[l] = Processor::Gpu;
-    }
-    let part = decode_network(&net, &genes);
-    println!("partitioned into {} subgraphs:", part.num_subgraphs());
-    for sg in &part.subgraphs {
-        let t = pm.subgraph_time(&net, &sg.layers, puzzle::ExecConfig::default_for(sg.processor));
+    // 1. Describe the workload: one camera-synchronized model group with the
+    //    MediaPipe face detector, selfie segmenter, and YOLOv8-nano analogs
+    //    (zoo indices 0, 1, 6), on the paper-calibrated device model.
+    let session = SessionBuilder::new(ScenarioSpec::single_group("quickstart", vec![0, 1, 6]))
+        .config(GaConfig::quick(42))
+        .build()
+        .expect("valid scenario spec");
+    let scenario = session.scenario();
+    println!("scenario {}:", scenario.name);
+    for net in &scenario.networks {
         println!(
-            "  {}: {} layers on {} ({:.2} ms), deps {:?}",
-            sg.id, sg.layers.len(), sg.processor, t * 1e3, sg.deps
+            "  {:<12} {} layers, {} edges, {:.1}M MACs",
+            net.name,
+            net.num_layers(),
+            net.num_edges(),
+            net.total_macs() as f64 / 1e6
         );
     }
 
-    // 4. Serve 10 requests through the real Coordinator/Worker stack.
-    let configs = part
-        .subgraphs
-        .iter()
-        .map(|sg| pm.best_config_for(&net, &sg.layers, sg.processor).0)
-        .collect();
-    let solution = NetworkSolution {
-        network: Arc::new(net),
-        partition: Arc::new(part),
-        configs,
-        priority: 0,
-    };
-    let time_scale = 0.1; // 1 simulated ms = 0.1 wall ms
-    let engine: Arc<dyn Engine> = Arc::new(SimEngine::new(Arc::new(pm), time_scale, true, 42));
-    let mut coord = Coordinator::new(vec![solution], engine, RuntimeOptions::default());
-    for _ in 0..10 {
-        coord.submit_group(0, &[0]);
-        coord.pump(std::time::Duration::from_secs(10));
+    // 2. Run the Static Analyzer, streaming per-generation progress.
+    let analysis = session.run_observed(&mut |p: &GenerationProgress<'_>| {
+        println!(
+            "  gen {:>2}: {:>4} evals, avg {:.2}ms, plan memo {:>3.0}%, profile cache {:>3.0}%",
+            p.generation,
+            p.evaluations,
+            p.avg_aggregate * 1e3,
+            p.plan_cache_hit_rate() * 100.0,
+            p.profile_cache_hit_rate() * 100.0,
+        );
+    });
+    println!(
+        "analysis: {} generations, {} evaluations, {} pareto solutions",
+        analysis.generations_run,
+        analysis.evaluations,
+        analysis.pareto.len()
+    );
+    for (i, sol) in analysis.pareto.iter().enumerate() {
+        let subgraphs: usize = sol.plans().iter().map(|p| p.tasks.len()).sum();
+        println!(
+            "  #{i}: objectives {:?} ({subgraphs} subgraphs)",
+            sol.objectives.iter().map(|o| format!("{:.2}ms", o * 1e3)).collect::<Vec<_>>()
+        );
     }
-    let makespans: Vec<f64> = coord.served().iter().map(|s| s.makespan / time_scale).collect();
+
+    // 3. Deploy the chosen solution: one call builds the runtime solutions
+    //    and a ready Coordinator/Worker stack on the simulated engine.
+    let best = analysis.best_index();
+    println!("deploying pareto solution #{best}");
+    let mut deployment = analysis
+        .deploy(best, RuntimeOptions::default())
+        .expect("deployable solution");
+
+    // 4. Serve 10 synchronized group requests through the real runtime.
+    let served = deployment.serve(0, 10, Duration::from_secs(10));
+    let makespans = deployment.simulated_makespans();
     let (avg, sd) = puzzle::metrics::mean_sd(&makespans);
     println!(
-        "served {} requests: simulated makespan {:.2} ± {:.2} ms",
-        makespans.len(), avg * 1e3, sd * 1e3
+        "served {served} group requests: simulated makespan {:.2} ± {:.2} ms",
+        avg * 1e3,
+        sd * 1e3
     );
-    coord.shutdown();
+    deployment.shutdown();
 }

@@ -4,10 +4,10 @@
 //!
 //! Run with: `cargo run --release --example single_group [-- <scenario 1-10>]`
 
+use puzzle::api::{ScenarioSpec, SessionBuilder};
 use puzzle::baselines;
 use puzzle::experiments::{saturation_of, score_at_alpha, solve_scenario_budgeted};
 use puzzle::perf::PerfModel;
-use puzzle::scenario::single_group_scenarios;
 
 fn main() {
     let which: usize = std::env::args()
@@ -15,8 +15,16 @@ fn main() {
         .and_then(|s| s.parse().ok())
         .unwrap_or(1);
     let pm = PerfModel::paper_calibrated();
-    let scenarios = single_group_scenarios(23);
-    let scenario = &scenarios[(which - 1).min(9)];
+    // The api's generated-scenario spec replaces indexing into the raw
+    // generator output.
+    let session = SessionBuilder::new(ScenarioSpec::GeneratedSingle {
+        seed: 23,
+        index: (which - 1).min(9),
+    })
+    .perf_model(pm.clone())
+    .build()
+    .expect("valid generated-scenario index");
+    let scenario = session.scenario().as_ref();
     println!("scenario {}: zoo models {:?}", scenario.name, scenario.zoo_indices);
     println!("base period: {:.2} ms", scenario.base_period(0, &pm) * 1e3);
 

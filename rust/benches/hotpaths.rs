@@ -12,7 +12,8 @@
 //! All stats are also written to `BENCH_hotpaths.json` at the repo root
 //! (name → ns/iter) so future PRs can regress against this trajectory.
 
-use puzzle::analyzer::{GaConfig, StaticAnalyzer};
+use puzzle::analyzer::GaConfig;
+use puzzle::api::SessionBuilder;
 use puzzle::comm::CommModel;
 use puzzle::ga::{decode, nsga3_select, DecodedPlanCache, Genome};
 use puzzle::graph::{merkle_hash_subgraph, partition};
@@ -109,11 +110,17 @@ fn main() {
         black_box(t.len());
     }));
 
-    // One full (tiny) analyzer run for an end-to-end feel.
+    // One full (tiny) analyzer run for an end-to-end feel (through the api
+    // session layer, as external callers run it).
     let tiny = Scenario::from_groups("tiny", &[vec![0, 1]]);
     let cfg = GaConfig { population: 8, max_generations: 3, sim_requests: 8, measure_reps: 1, ..GaConfig::quick(3) };
+    let tiny_session = SessionBuilder::for_scenario(tiny)
+        .perf_model(pm.clone())
+        .config(cfg)
+        .build()
+        .expect("valid scenario");
     all.push(bench("analyzer/tiny_ga_run", 5.0, 3, || {
-        black_box(StaticAnalyzer::new(&tiny, &pm, cfg.clone()).run());
+        black_box(tiny_session.run());
     }));
 
     // The headline before/after pair: one full GA generation at population
@@ -132,11 +139,20 @@ fn main() {
         threads,
         ..Default::default()
     };
+    let gen_session = |threads: usize| {
+        SessionBuilder::for_scenario(gen_scenario.clone())
+            .perf_model(pm.clone())
+            .config(gen_cfg(threads))
+            .build()
+            .expect("valid scenario")
+    };
+    let serial_session = gen_session(1);
+    let parallel_session = gen_session(0);
     let serial = bench("analyzer/serial_generation", 8.0, 3, || {
-        black_box(StaticAnalyzer::new(&gen_scenario, &pm, gen_cfg(1)).run());
+        black_box(serial_session.run());
     });
     let parallel = bench("analyzer/parallel_generation", 8.0, 3, || {
-        black_box(StaticAnalyzer::new(&gen_scenario, &pm, gen_cfg(0)).run());
+        black_box(parallel_session.run());
     });
     println!(
         "analyzer/parallel_generation speedup over serial: {:.2}x ({} logical cores)",
@@ -152,6 +168,11 @@ fn main() {
         .join("BENCH_hotpaths.json");
     match write_json(&json_path, &all) {
         Ok(()) => println!("wrote {}", json_path.display()),
-        Err(e) => eprintln!("could not write {}: {e}", json_path.display()),
+        Err(e) => {
+            // A silent write failure would let the CI bench guard compare a
+            // stale file against itself — fail loudly instead.
+            eprintln!("could not write {}: {e}", json_path.display());
+            std::process::exit(1);
+        }
     }
 }

@@ -31,6 +31,18 @@
 //! profiler/memo hit-miss *counters* may vary under concurrency (two
 //! threads can race the same miss); objectives, Pareto fronts, and
 //! evaluation counts never do.
+//!
+//! ## Entry points (§API, this PR)
+//!
+//! External callers drive the analyzer through the owned session layer in
+//! [`crate::api`]: a [`crate::api::SessionBuilder`] yields an
+//! `AnalysisSession` whose `run`/`run_observed` stream per-generation
+//! progress and return an `Analysis` that deploys straight to a
+//! [`crate::coordinator::Coordinator`]. The borrow-based
+//! [`StaticAnalyzer::new`]/[`StaticAnalyzer::run`] remain as deprecated
+//! shims. Solutions share their decoded plans via [`Arc<PlanSet>`] — Pareto
+//! bookkeeping moves candidates instead of deep-cloning their
+//! `Vec<ExecutionPlan>`.
 
 pub mod solution_io;
 
@@ -119,6 +131,12 @@ impl GaConfig {
 }
 
 /// One evaluated candidate.
+///
+/// The decoded plans are held as a shared [`Arc<PlanSet>`] (one decode per
+/// genome, owned by the [`DecodedPlanCache`]): cloning a `Solution` — Pareto
+/// archive updates, survivor carry-over, deployment hand-off — never copies
+/// the underlying `Vec<ExecutionPlan>` (the per-candidate deep clone this
+/// replaced was the analyzer's dominant steady-state allocation).
 #[derive(Debug, Clone)]
 pub struct Solution {
     pub genome: Genome,
@@ -126,7 +144,22 @@ pub struct Solution {
     /// flattened (paper: "average and 90th percentile of makespans for each
     /// model group").
     pub objectives: Vec<f64>,
-    pub plans: Vec<ExecutionPlan>,
+    /// Decoded plans + one-time structural compilation, shared across every
+    /// clone of this solution (and with the decode memo).
+    pub plan_set: Arc<PlanSet>,
+}
+
+impl Solution {
+    /// The executable per-network plans of this solution.
+    pub fn plans(&self) -> &[ExecutionPlan] {
+        &self.plan_set.plans
+    }
+
+    /// Worst (maximum) objective — the paper's single-number selection
+    /// metric ("the smallest maximum makespan", §5.3).
+    pub fn max_objective(&self) -> f64 {
+        self.objectives.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
 }
 
 /// Analyzer output: the Pareto archive and search telemetry.
@@ -150,11 +183,7 @@ impl AnalysisResult {
     pub fn best_by_max_makespan(&self) -> &Solution {
         self.pareto
             .iter()
-            .min_by(|a, b| {
-                let ma = a.objectives.iter().cloned().fold(0.0, f64::max);
-                let mb = b.objectives.iter().cloned().fold(0.0, f64::max);
-                ma.partial_cmp(&mb).unwrap()
-            })
+            .min_by(|a, b| a.max_objective().partial_cmp(&b.max_objective()).unwrap())
             .expect("non-empty pareto set")
     }
 }
@@ -191,7 +220,10 @@ pub struct StaticAnalyzer<'a> {
 }
 
 impl<'a> StaticAnalyzer<'a> {
-    pub fn new(scenario: &'a Scenario, perf: &'a PerfModel, config: GaConfig) -> Self {
+    /// Internal constructor: the engine behind [`crate::api::AnalysisSession`]
+    /// (which owns the scenario/perf data this borrows for the duration of a
+    /// run).
+    pub(crate) fn engine(scenario: &'a Scenario, perf: &'a PerfModel, config: GaConfig) -> Self {
         let periods = scenario.periods(1.0, perf);
         StaticAnalyzer {
             scenario,
@@ -200,6 +232,17 @@ impl<'a> StaticAnalyzer<'a> {
             config,
             periods,
         }
+    }
+
+    /// Deprecated borrow-based entry point. Prefer
+    /// [`crate::api::SessionBuilder`], which owns its inputs and exposes the
+    /// whole analyze → deploy flow.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use puzzle::api::SessionBuilder to construct an AnalysisSession"
+    )]
+    pub fn new(scenario: &'a Scenario, perf: &'a PerfModel, config: GaConfig) -> Self {
+        Self::engine(scenario, perf, config)
     }
 
     /// Group specs at the search-time periods.
@@ -298,9 +341,8 @@ impl<'a> StaticAnalyzer<'a> {
         ws: &mut SimWorkspace,
         scratch: &mut Vec<ExecutionPlan>,
     ) -> Solution {
-        let (objectives, mut set) = self.evaluate_cached(&job.genome, ctx, ws);
-        let mut sol =
-            Solution { genome: job.genome.clone(), objectives, plans: set.plans.clone() };
+        let (objectives, set) = self.evaluate_cached(&job.genome, ctx, ws);
+        let mut sol = Solution { genome: job.genome.clone(), objectives, plan_set: set };
         if job.local_search || job.measure {
             let mut rng = Rng::seed_from_u64(job.seed);
             if job.local_search && rng.gen_bool(self.config.p_local_search) {
@@ -319,18 +361,14 @@ impl<'a> StaticAnalyzer<'a> {
                             .all(|(c, o)| c <= o)
                             && cobjs.iter().zip(&sol.objectives).any(|(c, o)| c < o);
                         if better_all {
-                            sol = Solution {
-                                genome: cand,
-                                objectives: cobjs,
-                                plans: cset.plans.clone(),
-                            };
-                            set = cset;
+                            sol = Solution { genome: cand, objectives: cobjs, plan_set: cset };
                         }
                     }
                 }
             }
             if job.measure {
-                sol.objectives = self.measure_with(&set, ctx, &mut rng, ws, scratch);
+                let measured = self.measure_with(&sol.plan_set, ctx, &mut rng, ws, scratch);
+                sol.objectives = measured;
             }
         }
         sol
@@ -376,8 +414,19 @@ impl<'a> StaticAnalyzer<'a> {
         configured.clamp(1, jobs.max(1))
     }
 
-    /// Run the full GA search.
+    /// Deprecated silent run. Prefer [`crate::api::AnalysisSession::run`]
+    /// (or `run_observed` for streamed per-generation progress).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use puzzle::api::AnalysisSession::run / run_observed"
+    )]
     pub fn run(&self) -> AnalysisResult {
+        self.run_observed(&mut crate::api::null_observer())
+    }
+
+    /// Run the full GA search, streaming per-generation progress through the
+    /// observer (generation 0 is the evaluated initial population).
+    pub(crate) fn run_observed(&self, observer: &mut dyn crate::api::Observer) -> AnalysisResult {
         let mut rng = Rng::seed_from_u64(self.config.seed);
         let nets = &self.scenario.networks;
         let pm_probe: &dyn crate::profiler::DeviceProbe = self.perf;
@@ -441,6 +490,7 @@ impl<'a> StaticAnalyzer<'a> {
         let mut best_avg = avg_score(&evaluated);
         let mut stale = 0usize;
         let mut generations_run = 0usize;
+        emit_progress(observer, 0, &evaluated, best_avg, stale, &ctx);
 
         for _gen in 0..self.config.max_generations {
             generations_run += 1;
@@ -479,15 +529,20 @@ impl<'a> StaticAnalyzer<'a> {
                 .collect();
             let children = self.evaluate_batch(&jobs, &ctx);
 
-            // NSGA-III replacement over parents + children.
+            // NSGA-III replacement over parents + children. Survivors are
+            // *moved* out of the pool, never cloned, so retention copies no
+            // genomes and no plans (`tests/batch_eval.rs` asserts the
+            // underlying operations — Solution moves and plan-handle clones
+            // — are plan-copy-free). The selection scratch (`objs`, `keep`,
+            // the retained Vec) still allocates per generation — that lives
+            // with the NSGA-III O(n²) ROADMAP item.
             let mut pool = std::mem::take(&mut evaluated);
             pool.extend(children);
             let objs: Vec<Vec<f64>> = pool.iter().map(|s| s.objectives.clone()).collect();
-            let keep = nsga3_select(&objs, self.config.population);
-            let mut keep_sorted = keep;
-            keep_sorted.sort_unstable();
-            keep_sorted.dedup();
-            evaluated = keep_sorted.into_iter().map(|i| pool[i].clone()).collect();
+            let mut keep = nsga3_select(&objs, self.config.population);
+            keep.sort_unstable();
+            keep.dedup();
+            evaluated = take_by_index(pool, &keep);
 
             // Convergence check on the average aggregate.
             let avg = avg_score(&evaluated);
@@ -496,19 +551,20 @@ impl<'a> StaticAnalyzer<'a> {
                 stale = 0;
             } else {
                 stale += 1;
-                if stale >= self.config.patience {
-                    break;
-                }
+            }
+            emit_progress(observer, generations_run, &evaluated, avg, stale, &ctx);
+            if stale >= self.config.patience {
+                break;
             }
         }
 
-        // Final Pareto front.
+        // Final Pareto front (moved, not cloned).
         let objs: Vec<Vec<f64>> = evaluated.iter().map(|s| s.objectives.clone()).collect();
         let fronts = fast_non_dominated_sort(&objs);
-        let pareto = fronts
-            .first()
-            .map(|f| f.iter().map(|&i| evaluated[i].clone()).collect())
-            .unwrap_or_default();
+        let mut front = fronts.first().cloned().unwrap_or_default();
+        front.sort_unstable();
+        front.dedup();
+        let pareto = take_by_index(evaluated, &front);
         let (hits, misses) = profiler.stats();
         let (plan_hits, plan_misses) = plan_cache.stats();
         AnalysisResult {
@@ -556,6 +612,51 @@ impl<'a> StaticAnalyzer<'a> {
     }
 }
 
+/// Move the solutions at `indices` (strictly increasing, deduplicated) out
+/// of `pool`, dropping the rest. No `Solution` is ever cloned — with
+/// `Arc<PlanSet>` plan sharing this keeps survivor retention free of plan
+/// copies.
+fn take_by_index(pool: Vec<Solution>, indices: &[usize]) -> Vec<Solution> {
+    let mut out = Vec::with_capacity(indices.len());
+    let mut next = indices.iter().copied().peekable();
+    for (i, sol) in pool.into_iter().enumerate() {
+        if next.peek() == Some(&i) {
+            next.next();
+            out.push(sol);
+        }
+    }
+    out
+}
+
+/// Build and send one [`crate::api::GenerationProgress`] snapshot.
+#[allow(clippy::too_many_arguments)]
+fn emit_progress(
+    observer: &mut dyn crate::api::Observer,
+    generation: usize,
+    evaluated: &[Solution],
+    avg_aggregate: f64,
+    stale_generations: usize,
+    ctx: &EvalCtx<'_, '_>,
+) {
+    let best = evaluated
+        .iter()
+        .min_by(|a, b| a.max_objective().partial_cmp(&b.max_objective()).unwrap());
+    let (profile_cache_hits, profile_measurements) = ctx.profiler.stats();
+    let (plan_cache_hits, plan_cache_misses) = ctx.cache.stats();
+    let progress = crate::api::GenerationProgress {
+        generation,
+        evaluations: ctx.evals.load(Ordering::Relaxed),
+        best_objectives: best.map(|s| s.objectives.as_slice()).unwrap_or(&[]),
+        avg_aggregate,
+        stale_generations,
+        profile_cache_hits,
+        profile_measurements,
+        plan_cache_hits,
+        plan_cache_misses,
+    };
+    observer.on_generation(&progress);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -565,11 +666,17 @@ mod tests {
         Scenario::from_groups("tiny", &[vec![0, 1, 6]])
     }
 
+    /// In-crate shorthand for the engine path (external callers go through
+    /// `puzzle::api`).
+    fn run(s: &Scenario, pm: &PerfModel, config: GaConfig) -> AnalysisResult {
+        StaticAnalyzer::engine(s, pm, config).run_observed(&mut crate::api::null_observer())
+    }
+
     #[test]
     fn analyzer_produces_pareto_front() {
         let s = tiny_scenario();
         let pm = PerfModel::paper_calibrated();
-        let result = StaticAnalyzer::new(&s, &pm, GaConfig::quick(1)).run();
+        let result = run(&s, &pm, GaConfig::quick(1));
         assert!(!result.pareto.is_empty());
         assert!(result.evaluations > 16);
         // Pareto front is mutually non-dominated.
@@ -592,8 +699,8 @@ mod tests {
         // running everything on the CPU.
         let s = tiny_scenario();
         let pm = PerfModel::paper_calibrated();
-        let analyzer = StaticAnalyzer::new(&s, &pm, GaConfig::quick(2));
-        let result = analyzer.run();
+        let analyzer = StaticAnalyzer::engine(&s, &pm, GaConfig::quick(2));
+        let result = analyzer.run_observed(&mut crate::api::null_observer());
         let profiler = Profiler::new(&pm);
         let groups = analyzer.groups();
         let cpu = Genome::all_on(&s.networks, Processor::Cpu);
@@ -610,7 +717,7 @@ mod tests {
     fn cache_reuse_is_substantial() {
         let s = tiny_scenario();
         let pm = PerfModel::paper_calibrated();
-        let result = StaticAnalyzer::new(&s, &pm, GaConfig::quick(3)).run();
+        let result = run(&s, &pm, GaConfig::quick(3));
         assert!(
             result.profile_cache_hits > result.profile_measurements,
             "merkle cache ineffective: {} hits vs {} measures",
@@ -622,8 +729,8 @@ mod tests {
     fn deterministic_for_seed() {
         let s = tiny_scenario();
         let pm = PerfModel::paper_calibrated();
-        let r1 = StaticAnalyzer::new(&s, &pm, GaConfig::quick(7)).run();
-        let r2 = StaticAnalyzer::new(&s, &pm, GaConfig::quick(7)).run();
+        let r1 = run(&s, &pm, GaConfig::quick(7));
+        let r2 = run(&s, &pm, GaConfig::quick(7));
         let o1: Vec<&Vec<f64>> = r1.pareto.iter().map(|s| &s.objectives).collect();
         let o2: Vec<&Vec<f64>> = r2.pareto.iter().map(|s| &s.objectives).collect();
         assert_eq!(o1, o2);

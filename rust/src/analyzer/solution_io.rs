@@ -4,11 +4,12 @@
 //! the Runtime").
 //!
 //! Format: a line-based text file (serde is unavailable offline), one
-//! solution per `solution` block:
+//! solution per `solution` block. The current version is **v2**:
 //!
 //! ```text
-//! puzzle-solution v1
+//! puzzle-solution v2
 //! scenario <name>
+//! groups <m,m,...> <m,m,...>        (one token per group; `-` = empty group)
 //! solution <index>
 //! objectives <o0> <o1> ...
 //! network <idx> zoo <zoo_idx> priority <p>
@@ -16,6 +17,14 @@
 //! mapping <C|G|N>...
 //! end
 //! ```
+//!
+//! v2 (the `Arc<PlanSet>`-era format) adds the `groups` line — the model-
+//! group membership (network indices per group) — so a file cannot be
+//! replayed against a scenario whose group structure changed, not just one
+//! whose models changed. Plans are still *not* serialized: genomes are
+//! re-decoded through the profiler at load time, keeping files
+//! device-independent. **v1 files (no `groups` line) remain readable**;
+//! writing always produces v2.
 
 use std::path::Path;
 
@@ -45,10 +54,23 @@ fn proc_from(c: char) -> Result<Processor> {
     })
 }
 
-/// Serialize a set of analyzer solutions for a scenario.
+/// Serialize a set of analyzer solutions for a scenario (v2 format).
 pub fn serialize_solutions(scenario: &Scenario, solutions: &[Solution]) -> String {
-    let mut out = String::from("puzzle-solution v1\n");
+    let mut out = String::from("puzzle-solution v2\n");
     out.push_str(&format!("scenario {}\n", scenario.name));
+    out.push_str("groups");
+    for group in &scenario.groups {
+        let members: Vec<String> = group.members.iter().map(|m| m.to_string()).collect();
+        out.push(' ');
+        if members.is_empty() {
+            // An empty token would vanish under whitespace splitting on
+            // parse; `-` keeps degenerate empty groups round-trippable.
+            out.push('-');
+        } else {
+            out.push_str(&members.join(","));
+        }
+    }
+    out.push('\n');
     for (si, sol) in solutions.iter().enumerate() {
         out.push_str(&format!("solution {si}\n"));
         out.push_str("objectives");
@@ -84,17 +106,43 @@ pub struct LoadedSolution {
 /// Parse a solution file against a scenario (validates zoo indices and gene
 /// lengths, so a stale file cannot be applied to the wrong scenario).
 pub fn parse_solutions(text: &str, scenario: &Scenario) -> Result<Vec<LoadedSolution>> {
-    let mut lines = text.lines().peekable();
+    let mut lines = text.lines();
     let header = lines.next().ok_or_else(|| anyhow!("empty solution file"))?;
-    if header != "puzzle-solution v1" {
-        bail!("unrecognized header {header:?}");
-    }
+    let version: u32 = match header {
+        "puzzle-solution v1" => 1,
+        "puzzle-solution v2" => 2,
+        other => bail!("unrecognized header {other:?}"),
+    };
     let mut out = Vec::new();
+    let mut groups_validated = version == 1; // v1 predates the groups line
     let mut current: Option<(Vec<NetworkGenes>, Vec<usize>, Vec<f64>)> = None;
     for line in lines {
         let mut it = line.split_whitespace();
         match it.next() {
             Some("scenario") | None => {}
+            Some("groups") => {
+                if version == 1 {
+                    bail!("groups directive in a v1 file");
+                }
+                let declared: Vec<Vec<usize>> = it
+                    .map(|tok| {
+                        if tok == "-" {
+                            return Ok(Vec::new()); // empty group sentinel
+                        }
+                        tok.split(',')
+                            .map(|m| m.parse::<usize>().context("bad group member"))
+                            .collect::<Result<Vec<usize>>>()
+                    })
+                    .collect::<Result<_>>()?;
+                let actual: Vec<Vec<usize>> =
+                    scenario.groups.iter().map(|g| g.members.clone()).collect();
+                if declared != actual {
+                    bail!(
+                        "solution was made for groups {declared:?}, scenario has {actual:?}"
+                    );
+                }
+                groups_validated = true;
+            }
             Some("solution") => {
                 if current.is_some() {
                     bail!("nested solution block");
@@ -163,6 +211,9 @@ pub fn parse_solutions(text: &str, scenario: &Scenario) -> Result<Vec<LoadedSolu
     if current.is_some() {
         bail!("unterminated solution block");
     }
+    if !groups_validated && !out.is_empty() {
+        bail!("v2 file is missing its groups line");
+    }
     Ok(out)
 }
 
@@ -182,20 +233,23 @@ pub fn load_solutions(path: &Path, scenario: &Scenario) -> Result<Vec<LoadedSolu
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::analyzer::{GaConfig, StaticAnalyzer};
-    use crate::perf::PerfModel;
+    use crate::api::{GaConfig, ScenarioSpec, SessionBuilder};
 
     fn analyzed() -> (Scenario, Vec<Solution>) {
-        let scenario = Scenario::from_groups("io", &[vec![0, 2]]);
-        let pm = PerfModel::paper_calibrated();
-        let result = StaticAnalyzer::new(&scenario, &pm, GaConfig::quick(13)).run();
-        (scenario, result.pareto)
+        let session = SessionBuilder::new(ScenarioSpec::single_group("io", vec![0, 2]))
+            .config(GaConfig::quick(13))
+            .build()
+            .unwrap();
+        let analysis = session.run();
+        (session.scenario().as_ref().clone(), analysis.pareto)
     }
 
     #[test]
     fn roundtrip_preserves_genomes_and_objectives() {
         let (scenario, sols) = analyzed();
         let text = serialize_solutions(&scenario, &sols);
+        assert!(text.starts_with("puzzle-solution v2\n"), "writes the current version");
+        assert!(text.contains("\ngroups 0,1\n"), "{text:.120}");
         let loaded = parse_solutions(&text, &scenario).unwrap();
         assert_eq!(loaded.len(), sols.len());
         for (a, b) in sols.iter().zip(&loaded) {
@@ -215,17 +269,72 @@ mod tests {
     }
 
     #[test]
+    fn wrong_group_structure_rejected() {
+        // Same zoo models in the same slots, but regrouped: the v2 groups
+        // line must catch it (v1 could not).
+        let (scenario, sols) = analyzed();
+        let text = serialize_solutions(&scenario, &sols);
+        let regrouped = Scenario::from_groups("io", &[vec![0], vec![2]]);
+        let err = parse_solutions(&text, &regrouped).unwrap_err();
+        assert!(err.to_string().contains("groups"), "{err}");
+    }
+
+    #[test]
     fn corrupted_inputs_rejected() {
         let (scenario, sols) = analyzed();
         let text = serialize_solutions(&scenario, &sols);
         for bad in [
             "bogus header\nrest",
-            "puzzle-solution v1\nend\n",
+            "puzzle-solution v2\nend\n",
+            "puzzle-solution v1\ngroups 0,1\nend\n", // v1 must not carry groups
             &text.replace("mapping N", "mapping X"),
             &text[..text.len() - 5], // truncated
         ] {
             assert!(parse_solutions(bad, &scenario).is_err(), "accepted: {bad:.60}");
         }
+    }
+
+    #[test]
+    fn v1_fixture_still_loads() {
+        // Back-compat: a checked-in file written by the pre-session v1
+        // serializer (no groups line) parses against the matching scenario.
+        let text = include_str!("../../tests/fixtures/solutions_v1.txt");
+        let scenario = Scenario::from_groups("io", &[vec![0, 2]]);
+        let loaded = parse_solutions(text, &scenario).unwrap();
+        assert_eq!(loaded.len(), 1);
+        let sol = &loaded[0];
+        assert!(sol.genome.is_valid(&scenario.networks));
+        assert_eq!(sol.genome.priority, vec![1, 0]);
+        assert_eq!(sol.objectives, vec![0.00375, 0.00411]);
+        // And it migrates forward: re-serializing the loaded solution
+        // produces a v2 file (groups line included) that parses back to the
+        // same genome against the same scenario.
+        let migrated = Solution {
+            genome: sol.genome.clone(),
+            objectives: sol.objectives.clone(),
+            plan_set: std::sync::Arc::new(crate::ga::PlanSet {
+                plans: Vec::new(),
+                compiled: Vec::new(),
+            }),
+        };
+        let v2_text = serialize_solutions(&scenario, &[migrated]);
+        assert!(v2_text.starts_with("puzzle-solution v2\n"));
+        let reloaded = parse_solutions(&v2_text, &scenario).unwrap();
+        assert_eq!(reloaded[0].genome, sol.genome);
+        assert_eq!(reloaded[0].objectives, sol.objectives);
+    }
+
+    #[test]
+    fn empty_group_roundtrips_via_sentinel() {
+        // Degenerate scenarios (an empty model group) must save/load: the
+        // `-` token keeps the group count under whitespace splitting.
+        let scenario = Scenario::from_groups("deg", &[vec![0], vec![]]);
+        let text = serialize_solutions(&scenario, &[]);
+        assert!(text.contains("\ngroups 0 -\n"), "{text:.120}");
+        assert!(parse_solutions(&text, &scenario).unwrap().is_empty());
+        // ...and still mismatches a scenario without the empty group.
+        let other = Scenario::from_groups("deg", &[vec![0]]);
+        assert!(parse_solutions(&text, &other).is_err());
     }
 
     #[test]

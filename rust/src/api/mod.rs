@@ -1,0 +1,652 @@
+//! # `puzzle::api` — the owned analyze → deploy → serve session layer.
+//!
+//! Puzzle's pipeline is one conceptual flow (paper Fig 2): describe a
+//! scenario, run device-in-the-loop GA analysis, pick a Pareto solution,
+//! and hand it to the Runtime. This module exposes that flow behind owned,
+//! `Arc`-based types, replacing the borrow-heavy entry points
+//! (`StaticAnalyzer<'a>`, hand-wired `NetworkSolution` construction):
+//!
+//! ```no_run
+//! use puzzle::api::{GenerationProgress, RuntimeOptions, ScenarioSpec, SessionBuilder};
+//! use puzzle::analyzer::GaConfig;
+//!
+//! // 1. Describe the workload and budget.
+//! let session = SessionBuilder::new(ScenarioSpec::single_group("demo", vec![0, 1, 6]))
+//!     .config(GaConfig::quick(23))
+//!     .build()
+//!     .unwrap();
+//!
+//! // 2. Analyze, streaming per-generation progress.
+//! let analysis = session.run_observed(&mut |p: &GenerationProgress<'_>| {
+//!     println!("gen {:>3}: {} evaluations", p.generation, p.evaluations);
+//! });
+//!
+//! // 3. Deploy the chosen Pareto solution to a ready Coordinator.
+//! let mut deployment = analysis
+//!     .deploy(analysis.best_index(), RuntimeOptions::default())
+//!     .unwrap();
+//! deployment.serve(0, 10, std::time::Duration::from_secs(10));
+//! println!("makespans: {:?}", deployment.simulated_makespans());
+//! deployment.shutdown();
+//! ```
+//!
+//! The [`Analysis`] holds `Arc<Scenario>` / `Arc<PerfModel>` and a Pareto
+//! front of [`Solution`]s whose decoded plans are shared `Arc<PlanSet>`s, so
+//! selection, serialization ([`Analysis::save`]), and deployment never copy
+//! plan vectors. New scenario types slot in through [`ScenarioSpec`]
+//! (including [`ScenarioSpec::Custom`] for networks outside the zoo); new
+//! execution backends through [`Analysis::deploy_with_engine`].
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::analyzer::solution_io;
+use crate::analyzer::{AnalysisResult, StaticAnalyzer};
+use crate::anyhow;
+use crate::comm::CommModel;
+use crate::coordinator::{Coordinator, NetworkSolution, ServedRequest};
+use crate::engine::{Engine, SimEngine};
+use crate::ga::{decode, decode_network, PlanSet};
+use crate::graph::Network;
+use crate::models;
+use crate::perf::PerfModel;
+use crate::profiler::{DeviceProbe, Profiler};
+use crate::scenario::{multi_group_scenarios, single_group_scenarios, Scenario};
+use crate::sim::compile_plans;
+use crate::util::error::Result;
+
+pub use crate::analyzer::{GaConfig, Solution};
+pub use crate::coordinator::RuntimeOptions;
+
+/// Wall-seconds per simulated second used by [`Analysis::deploy`]'s default
+/// simulated engine (1 simulated ms replays in 50 µs).
+pub const DEFAULT_TIME_SCALE: f64 = 0.05;
+
+/// Declarative description of the workload a session analyzes.
+#[derive(Debug, Clone)]
+pub enum ScenarioSpec {
+    /// Named model groups drawn from the nine-model zoo: one inner `Vec`
+    /// of zoo indices per group.
+    ZooGroups { name: String, groups: Vec<Vec<usize>> },
+    /// Scenario `index` (0..10) of the paper's random single-group
+    /// generator (Fig 11 top), deterministic in `seed`.
+    GeneratedSingle { seed: u64, index: usize },
+    /// Scenario `index` (0..10) of the random two-group generator (Fig 11
+    /// bottom).
+    GeneratedMulti { seed: u64, index: usize },
+    /// Caller-provided networks (models outside the zoo). `groups`
+    /// partitions the network indices into model groups.
+    Custom { name: String, networks: Vec<Network>, groups: Vec<Vec<usize>> },
+    /// An already-built scenario, adopted as-is.
+    Prebuilt(Scenario),
+}
+
+/// Shared group-shape validation: at least one group, none empty.
+fn validate_group_shape(name: &str, groups: &[Vec<usize>]) -> Result<()> {
+    if groups.is_empty() || groups.iter().any(|g| g.is_empty()) {
+        return Err(anyhow!("scenario {name:?} needs at least one non-empty group"));
+    }
+    Ok(())
+}
+
+/// Pick scenario `index` from a generator's output.
+fn pick_generated(mut all: Vec<Scenario>, index: usize) -> Result<Scenario> {
+    if index >= all.len() {
+        return Err(anyhow!("generated scenario index {index} out of range (0..{})", all.len()));
+    }
+    Ok(all.swap_remove(index))
+}
+
+impl ScenarioSpec {
+    /// One model group of zoo models — the common case.
+    pub fn single_group(name: &str, zoo_indices: Vec<usize>) -> ScenarioSpec {
+        ScenarioSpec::ZooGroups { name: name.to_string(), groups: vec![zoo_indices] }
+    }
+
+    /// Validate and materialize the scenario.
+    fn build(self) -> Result<Scenario> {
+        match self {
+            ScenarioSpec::ZooGroups { name, groups } => {
+                validate_group_shape(&name, &groups)?;
+                for &zoo in groups.iter().flatten() {
+                    if zoo >= models::MODEL_COUNT {
+                        return Err(anyhow!(
+                            "zoo index {zoo} out of range (the zoo has {} models)",
+                            models::MODEL_COUNT
+                        ));
+                    }
+                }
+                Ok(Scenario::from_groups(&name, &groups))
+            }
+            ScenarioSpec::GeneratedSingle { seed, index } => {
+                pick_generated(single_group_scenarios(seed), index)
+            }
+            ScenarioSpec::GeneratedMulti { seed, index } => {
+                pick_generated(multi_group_scenarios(seed), index)
+            }
+            ScenarioSpec::Custom { name, networks, groups } => {
+                validate_group_shape(&name, &groups)?;
+                let mut seen = vec![false; networks.len()];
+                for &m in groups.iter().flatten() {
+                    if m >= networks.len() {
+                        return Err(anyhow!(
+                            "group member {m} out of range ({} networks)",
+                            networks.len()
+                        ));
+                    }
+                    if seen[m] {
+                        return Err(anyhow!("network {m} appears in more than one group"));
+                    }
+                    seen[m] = true;
+                }
+                if let Some(missing) = seen.iter().position(|s| !s) {
+                    return Err(anyhow!("network {missing} belongs to no group"));
+                }
+                // The profiler pools calibration and config-ordering stats
+                // by network name: two *different* models sharing a name
+                // would silently cross-contaminate them.
+                let mut names: Vec<&str> = networks.iter().map(|n| n.name.as_str()).collect();
+                names.sort_unstable();
+                if let Some(dup) = names.windows(2).find(|w| w[0] == w[1]) {
+                    return Err(anyhow!(
+                        "duplicate network name {:?}: custom networks must have unique names \
+                         (the profiler keys performance statistics by name)",
+                        dup[0]
+                    ));
+                }
+                Ok(Scenario::from_networks(&name, networks, &groups))
+            }
+            ScenarioSpec::Prebuilt(s) => Ok(s),
+        }
+    }
+}
+
+/// Where the session's device model comes from.
+#[derive(Debug, Clone)]
+pub enum PerfSource {
+    /// [`PerfModel::paper_calibrated`] — the Snapdragon 8 Gen 2 calibration.
+    Calibrated,
+    /// A caller-supplied model (re-calibrated tables, hypothetical device).
+    Model(PerfModel),
+}
+
+/// Per-generation search telemetry streamed through [`Observer`].
+/// Generation 0 is the evaluated initial population.
+#[derive(Debug)]
+pub struct GenerationProgress<'a> {
+    pub generation: usize,
+    /// Candidate evaluations so far (including local-search probes).
+    pub evaluations: usize,
+    /// Objectives of the current best solution by the paper's
+    /// smallest-maximum-makespan rule.
+    pub best_objectives: &'a [f64],
+    /// Population-average aggregate objective (the stop-rule signal).
+    pub avg_aggregate: f64,
+    /// Generations since the average last improved (patience counter).
+    pub stale_generations: usize,
+    pub profile_cache_hits: u64,
+    pub profile_measurements: u64,
+    pub plan_cache_hits: u64,
+    pub plan_cache_misses: u64,
+}
+
+impl GenerationProgress<'_> {
+    /// Profile-DB hit rate so far (0.0 when nothing was looked up).
+    pub fn profile_cache_hit_rate(&self) -> f64 {
+        let total = self.profile_cache_hits + self.profile_measurements;
+        if total == 0 { 0.0 } else { self.profile_cache_hits as f64 / total as f64 }
+    }
+
+    /// Genome→plan memo hit rate so far.
+    pub fn plan_cache_hit_rate(&self) -> f64 {
+        let total = self.plan_cache_hits + self.plan_cache_misses;
+        if total == 0 { 0.0 } else { self.plan_cache_hits as f64 / total as f64 }
+    }
+}
+
+/// Receives streamed per-generation progress during
+/// [`AnalysisSession::run_observed`]. Implemented for any
+/// `FnMut(&GenerationProgress)` closure.
+pub trait Observer {
+    fn on_generation(&mut self, progress: &GenerationProgress<'_>);
+}
+
+impl<F: FnMut(&GenerationProgress<'_>)> Observer for F {
+    fn on_generation(&mut self, progress: &GenerationProgress<'_>) {
+        self(progress)
+    }
+}
+
+/// An observer that discards all progress (the [`AnalysisSession::run`]
+/// path). A free function returning a closure — a named unit struct would
+/// conflict with the blanket `FnMut` implementation under coherence.
+pub fn null_observer() -> impl Observer {
+    |_: &GenerationProgress<'_>| {}
+}
+
+/// Builder for an [`AnalysisSession`].
+pub struct SessionBuilder {
+    spec: ScenarioSpec,
+    perf: PerfSource,
+    config: GaConfig,
+    comm: CommModel,
+}
+
+impl SessionBuilder {
+    pub fn new(spec: ScenarioSpec) -> SessionBuilder {
+        SessionBuilder {
+            spec,
+            perf: PerfSource::Calibrated,
+            config: GaConfig::default(),
+            comm: CommModel::paper_calibrated(),
+        }
+    }
+
+    /// Adopt an already-built [`Scenario`].
+    pub fn for_scenario(scenario: Scenario) -> SessionBuilder {
+        SessionBuilder::new(ScenarioSpec::Prebuilt(scenario))
+    }
+
+    pub fn perf(mut self, source: PerfSource) -> SessionBuilder {
+        self.perf = source;
+        self
+    }
+
+    /// Shorthand for [`PerfSource::Model`].
+    pub fn perf_model(mut self, model: PerfModel) -> SessionBuilder {
+        self.perf = PerfSource::Model(model);
+        self
+    }
+
+    pub fn config(mut self, config: GaConfig) -> SessionBuilder {
+        self.config = config;
+        self
+    }
+
+    pub fn comm(mut self, comm: CommModel) -> SessionBuilder {
+        self.comm = comm;
+        self
+    }
+
+    /// Validate the spec and assemble the session.
+    pub fn build(self) -> Result<AnalysisSession> {
+        let scenario = Arc::new(self.spec.build()?);
+        let perf = Arc::new(match self.perf {
+            PerfSource::Calibrated => PerfModel::paper_calibrated(),
+            PerfSource::Model(m) => m,
+        });
+        Ok(AnalysisSession { scenario, perf, comm: self.comm, config: self.config })
+    }
+}
+
+/// An owned, ready-to-run analysis: scenario + device model + GA budget.
+pub struct AnalysisSession {
+    scenario: Arc<Scenario>,
+    perf: Arc<PerfModel>,
+    comm: CommModel,
+    config: GaConfig,
+}
+
+impl AnalysisSession {
+    pub fn scenario(&self) -> &Arc<Scenario> {
+        &self.scenario
+    }
+
+    pub fn perf(&self) -> &Arc<PerfModel> {
+        &self.perf
+    }
+
+    pub fn config(&self) -> &GaConfig {
+        &self.config
+    }
+
+    /// Run the Static Analyzer search silently.
+    pub fn run(&self) -> Analysis {
+        self.run_observed(&mut null_observer())
+    }
+
+    /// Run the search, streaming per-generation progress through `observer`.
+    pub fn run_observed(&self, observer: &mut dyn Observer) -> Analysis {
+        let mut engine = StaticAnalyzer::engine(&self.scenario, &self.perf, self.config.clone());
+        engine.comm = self.comm.clone();
+        let result = engine.run_observed(observer);
+        self.analysis_of(result)
+    }
+
+    /// Load previously saved solutions (v1 or v2 files) back into a
+    /// deployable [`Analysis`]: genomes are validated against this session's
+    /// scenario and re-decoded through the profiler, so the file stays
+    /// device-independent.
+    pub fn load_solutions(&self, path: &Path) -> Result<Analysis> {
+        let loaded = solution_io::load_solutions(path, &self.scenario)?;
+        if loaded.is_empty() {
+            return Err(anyhow!("no solutions in {}", path.display()));
+        }
+        let probe: &dyn DeviceProbe = self.perf.as_ref();
+        let profiler = Profiler::new(probe);
+        let pareto = loaded
+            .into_iter()
+            .map(|ls| {
+                let plans = decode(&self.scenario.networks, &ls.genome, &profiler, &self.comm);
+                let compiled = compile_plans(&plans);
+                Solution {
+                    genome: ls.genome,
+                    objectives: ls.objectives,
+                    plan_set: Arc::new(PlanSet { plans, compiled }),
+                }
+            })
+            .collect();
+        Ok(Analysis {
+            scenario: self.scenario.clone(),
+            perf: self.perf.clone(),
+            pareto,
+            generations_run: 0,
+            evaluations: 0,
+            profile_cache_hits: 0,
+            profile_measurements: 0,
+            plan_cache_hits: 0,
+            plan_cache_misses: 0,
+        })
+    }
+
+    fn analysis_of(&self, result: AnalysisResult) -> Analysis {
+        Analysis {
+            scenario: self.scenario.clone(),
+            perf: self.perf.clone(),
+            pareto: result.pareto,
+            generations_run: result.generations_run,
+            evaluations: result.evaluations,
+            profile_cache_hits: result.profile_cache_hits,
+            profile_measurements: result.profile_measurements,
+            plan_cache_hits: result.plan_cache_hits,
+            plan_cache_misses: result.plan_cache_misses,
+        }
+    }
+}
+
+/// Analysis output: the Pareto front (plan sets `Arc`-shared), search
+/// telemetry, and the owned context needed to deploy any solution.
+#[derive(Clone)]
+pub struct Analysis {
+    scenario: Arc<Scenario>,
+    perf: Arc<PerfModel>,
+    pub pareto: Vec<Solution>,
+    pub generations_run: usize,
+    pub evaluations: usize,
+    pub profile_cache_hits: u64,
+    pub profile_measurements: u64,
+    pub plan_cache_hits: u64,
+    pub plan_cache_misses: u64,
+}
+
+impl Analysis {
+    pub fn scenario(&self) -> &Arc<Scenario> {
+        &self.scenario
+    }
+
+    pub fn perf(&self) -> &Arc<PerfModel> {
+        &self.perf
+    }
+
+    /// Index of the solution minimizing the maximum (worst-group) average
+    /// makespan — the paper's selection rule for single-number comparisons
+    /// (§5.3). Panics on an empty Pareto front.
+    pub fn best_index(&self) -> usize {
+        self.pareto
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                a.max_objective().partial_cmp(&b.max_objective()).unwrap()
+            })
+            .map(|(i, _)| i)
+            .expect("non-empty pareto front")
+    }
+
+    /// The solution chosen by [`Self::best_index`].
+    pub fn best(&self) -> &Solution {
+        &self.pareto[self.best_index()]
+    }
+
+    /// Save the Pareto front in the versioned solution-file format
+    /// ([`solution_io`]).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        solution_io::save_solutions(path, &self.scenario, &self.pareto)
+    }
+
+    /// Materialize runtime [`NetworkSolution`]s for one Pareto solution:
+    /// partitions from the genome, per-subgraph exec configs from the device
+    /// model, priorities from the priority chromosome.
+    pub fn runtime_solutions(&self, solution_idx: usize) -> Result<Vec<NetworkSolution>> {
+        let sol = self.pareto.get(solution_idx).ok_or_else(|| {
+            anyhow!(
+                "solution index {solution_idx} out of range ({} pareto solutions)",
+                self.pareto.len()
+            )
+        })?;
+        Ok(self
+            .scenario
+            .networks
+            .iter()
+            .zip(&sol.genome.networks)
+            .enumerate()
+            .map(|(i, (net, genes))| {
+                let part = decode_network(net, genes);
+                let configs = part
+                    .subgraphs
+                    .iter()
+                    .map(|sg| self.perf.best_config_for(net, &sg.layers, sg.processor).0)
+                    .collect();
+                NetworkSolution {
+                    network: Arc::new(net.clone()),
+                    partition: Arc::new(part),
+                    configs,
+                    priority: sol.genome.priority[i],
+                }
+            })
+            .collect())
+    }
+
+    /// Deploy a Pareto solution to a ready [`Coordinator`] backed by the
+    /// calibrated simulated engine at [`DEFAULT_TIME_SCALE`] (with execution
+    /// noise, as on the real device).
+    pub fn deploy(&self, solution_idx: usize, options: RuntimeOptions) -> Result<Deployment> {
+        self.deploy_sim(solution_idx, options, DEFAULT_TIME_SCALE, true, 7)
+    }
+
+    /// Deploy with full control over the simulated engine (time scale, noise
+    /// on/off, noise seed).
+    pub fn deploy_sim(
+        &self,
+        solution_idx: usize,
+        options: RuntimeOptions,
+        time_scale: f64,
+        noisy: bool,
+        seed: u64,
+    ) -> Result<Deployment> {
+        let engine: Arc<dyn Engine> =
+            Arc::new(SimEngine::new(self.perf.clone(), time_scale, noisy, seed));
+        self.deploy_with_engine(solution_idx, options, engine, time_scale)
+    }
+
+    /// Deploy onto a caller-provided engine (e.g. the PJRT engine executing
+    /// real AOT artifacts). `time_scale` is only used to convert served
+    /// wall-clock makespans back to simulated seconds in
+    /// [`Deployment::simulated_makespans`]; pass `1.0` for real engines.
+    pub fn deploy_with_engine(
+        &self,
+        solution_idx: usize,
+        options: RuntimeOptions,
+        engine: Arc<dyn Engine>,
+        time_scale: f64,
+    ) -> Result<Deployment> {
+        let solutions = self.runtime_solutions(solution_idx)?;
+        let coordinator = Coordinator::new(solutions, engine, options);
+        Ok(Deployment {
+            coordinator,
+            time_scale,
+            groups: self.scenario.groups.iter().map(|g| g.members.clone()).collect(),
+        })
+    }
+}
+
+/// A live runtime serving one deployed solution: the [`Coordinator`] plus
+/// the scenario's group membership, ready for group submissions.
+pub struct Deployment {
+    pub coordinator: Coordinator,
+    /// Wall-seconds per simulated second of the backing engine (1.0 for
+    /// real engines).
+    pub time_scale: f64,
+    groups: Vec<Vec<usize>>,
+}
+
+impl Deployment {
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Network indices of one model group. Panics on an out-of-range group
+    /// (groups are fixed by the scenario at deploy time).
+    pub fn group_members(&self, group: usize) -> &[usize] {
+        assert!(group < self.groups.len(), "group {group} out of range ({} groups)", self.groups.len());
+        &self.groups[group]
+    }
+
+    /// Submit `requests` synchronized group requests, pumping completions
+    /// after each (up to `timeout` per request). Returns how many of *this
+    /// group's* requests finished during this call (a straggler from an
+    /// earlier timed-out call that completes now is counted — it is still
+    /// this group's work — but another group's completions never are).
+    /// Panics on an out-of-range group (see [`Self::group_members`]).
+    pub fn serve(&mut self, group: usize, requests: usize, timeout: Duration) -> usize {
+        let members = self.group_members(group).to_vec();
+        let served_in_group =
+            |c: &Coordinator| c.served().iter().filter(|s| s.group == group).count();
+        let before = served_in_group(&self.coordinator);
+        for _ in 0..requests {
+            self.coordinator.submit_group(group, &members);
+            self.coordinator.pump(timeout);
+        }
+        served_in_group(&self.coordinator) - before
+    }
+
+    /// All served group requests so far (every group).
+    pub fn served(&self) -> &[ServedRequest] {
+        self.coordinator.served()
+    }
+
+    /// Served makespans of **all groups** converted to simulated seconds
+    /// (wall makespan ÷ time scale); use
+    /// [`Self::simulated_makespans_for`] on multi-group deployments. With
+    /// `time_scale ≤ 0` (a non-sleeping engine) there is no simulated-time
+    /// conversion: wall-clock makespans are returned unscaled — they
+    /// measure runtime overhead only.
+    pub fn simulated_makespans(&self) -> Vec<f64> {
+        let scale = if self.time_scale > 0.0 { self.time_scale } else { 1.0 };
+        self.coordinator.served().iter().map(|s| s.makespan / scale).collect()
+    }
+
+    /// [`Self::simulated_makespans`] restricted to one model group.
+    pub fn simulated_makespans_for(&self, group: usize) -> Vec<f64> {
+        let scale = if self.time_scale > 0.0 { self.time_scale } else { 1.0 };
+        self.coordinator
+            .served()
+            .iter()
+            .filter(|s| s.group == group)
+            .map(|s| s.makespan / scale)
+            .collect()
+    }
+
+    /// Shut the runtime's workers down and join their threads.
+    pub fn shutdown(self) {
+        self.coordinator.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_validation_rejects_bad_inputs() {
+        // Out-of-range zoo index.
+        let err = SessionBuilder::new(ScenarioSpec::single_group("bad", vec![0, 99]))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("zoo index"), "{err}");
+        // Empty group.
+        assert!(SessionBuilder::new(ScenarioSpec::ZooGroups {
+            name: "empty".into(),
+            groups: vec![vec![]],
+        })
+        .build()
+        .is_err());
+        // Generated index out of range.
+        assert!(SessionBuilder::new(ScenarioSpec::GeneratedSingle { seed: 1, index: 10 })
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn custom_spec_requires_group_partition() {
+        let nets = vec![crate::models::build_model(0, 0), crate::models::build_model(1, 1)];
+        // Network 1 missing from all groups.
+        let err = SessionBuilder::new(ScenarioSpec::Custom {
+            name: "c".into(),
+            networks: nets.clone(),
+            groups: vec![vec![0]],
+        })
+        .build()
+        .unwrap_err();
+        assert!(err.to_string().contains("no group"), "{err}");
+        // Duplicate membership.
+        assert!(SessionBuilder::new(ScenarioSpec::Custom {
+            name: "c".into(),
+            networks: nets,
+            groups: vec![vec![0, 1], vec![1]],
+        })
+        .build()
+        .is_err());
+        // Duplicate network names (would cross-contaminate name-keyed
+        // profiler statistics).
+        let twins = vec![crate::models::build_model(0, 0), crate::models::build_model(1, 0)];
+        let err = SessionBuilder::new(ScenarioSpec::Custom {
+            name: "c".into(),
+            networks: twins,
+            groups: vec![vec![0, 1]],
+        })
+        .build()
+        .unwrap_err();
+        assert!(err.to_string().contains("duplicate network name"), "{err}");
+    }
+
+    #[test]
+    fn generated_spec_matches_generator() {
+        let session = SessionBuilder::new(ScenarioSpec::GeneratedSingle { seed: 23, index: 2 })
+            .build()
+            .unwrap();
+        let reference = single_group_scenarios(23);
+        assert_eq!(session.scenario().zoo_indices, reference[2].zoo_indices);
+    }
+
+    #[test]
+    fn session_runs_and_deploys_custom_networks() {
+        let nets = vec![crate::models::build_model(0, 0), crate::models::build_model(1, 2)];
+        let session = SessionBuilder::new(ScenarioSpec::Custom {
+            name: "custom".into(),
+            networks: nets,
+            groups: vec![vec![0, 1]],
+        })
+        .config(GaConfig { population: 12, max_generations: 4, ..GaConfig::quick(3) })
+        .build()
+        .unwrap();
+        let analysis = session.run();
+        assert!(!analysis.pareto.is_empty());
+        let mut deployment = analysis
+            .deploy_sim(analysis.best_index(), RuntimeOptions::default(), 0.0, false, 5)
+            .unwrap();
+        let served = deployment.serve(0, 3, Duration::from_secs(10));
+        assert_eq!(served, 3);
+        deployment.shutdown();
+    }
+}

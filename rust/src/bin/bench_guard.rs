@@ -1,0 +1,124 @@
+//! CI bench-smoke guard: compare a freshly regenerated `BENCH_hotpaths.json`
+//! against the committed baseline and fail on regressions.
+//!
+//! ```text
+//! usage: bench_guard <baseline.json> <fresh.json> [--threshold 1.25]
+//! ```
+//!
+//! Two layers of checking:
+//!
+//! 1. **Cross-run comparison** — for every bench name present in both files,
+//!    fail if the fresh `min_ns` exceeds `baseline min_ns × threshold`
+//!    (default 1.25, i.e. a >25% regression). `min_ns` is the least noisy
+//!    of the recorded statistics. A missing/unreadable baseline downgrades
+//!    this layer to record-only (first run on a new runner class).
+//! 2. **Same-run invariants** — machine-independent relations that must hold
+//!    within the fresh numbers alone: the parallel generation bench must not
+//!    be slower than the serial one (beyond jitter), the memoized decode
+//!    must beat the non-memoized decode, and the reused-workspace simulation
+//!    must not lose to fresh-allocation `simulate()`.
+//!
+//! Exit code 0 = pass, 1 = regression, 2 = usage/IO error on the fresh file.
+
+use puzzle::util::bench::{parse_json, BenchNumbers};
+
+fn load(path: &str) -> Option<Vec<(String, BenchNumbers)>> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let rows = parse_json(&text);
+    if rows.is_empty() { None } else { Some(rows) }
+}
+
+fn get<'a>(rows: &'a [(String, BenchNumbers)], name: &str) -> Option<&'a BenchNumbers> {
+    rows.iter().find(|(n, _)| n == name).map(|(_, v)| v)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.len() < 2 {
+        eprintln!("usage: bench_guard <baseline.json> <fresh.json> [--threshold 1.25]");
+        std::process::exit(2);
+    }
+    let mut threshold = 1.25f64;
+    if let Some(pos) = args.iter().position(|a| a == "--threshold") {
+        if let Some(v) = args.get(pos + 1).and_then(|v| v.parse().ok()) {
+            threshold = v;
+        }
+    }
+
+    let Some(fresh) = load(&args[1]) else {
+        eprintln!("bench_guard: cannot read fresh results from {}", args[1]);
+        std::process::exit(2);
+    };
+    let mut failures: Vec<String> = Vec::new();
+
+    // Layer 1: cross-run comparison against the committed baseline.
+    match load(&args[0]) {
+        Some(baseline) => {
+            let mut compared = 0;
+            for (name, base) in &baseline {
+                let Some(new) = get(&fresh, name) else {
+                    println!("  [gone]    {name} (not in fresh run)");
+                    continue;
+                };
+                compared += 1;
+                let ratio = new.min_ns / base.min_ns.max(1e-9);
+                let tag = if ratio > threshold {
+                    failures.push(format!(
+                        "{name}: min {:.0}ns -> {:.0}ns ({ratio:.2}x > {threshold:.2}x)",
+                        base.min_ns, new.min_ns
+                    ));
+                    "REGRESS"
+                } else if ratio < 1.0 / threshold {
+                    "faster"
+                } else {
+                    "ok"
+                };
+                println!("  [{tag:>7}] {name}: {:.0}ns -> {:.0}ns ({ratio:.2}x)", base.min_ns, new.min_ns);
+            }
+            println!("bench_guard: compared {compared} benches at threshold {threshold:.2}x");
+        }
+        None => {
+            println!(
+                "bench_guard: no baseline at {} — record-only run (commit the fresh \
+                 BENCH_hotpaths.json to arm cross-run comparison)",
+                args[0]
+            );
+        }
+    }
+
+    // Layer 2: same-run invariants (machine-independent).
+    let invariants: [(&str, &str, f64); 3] = [
+        // Parallel must not lose to serial by more than scheduling jitter
+        // (on a single-core runner both take the same path).
+        ("analyzer/parallel_generation", "analyzer/serial_generation", 1.10),
+        // The genome->plan memo hit path must beat a full decode.
+        ("ga/decode_memoized", "ga/decode_genome(cached profiles)", 1.00),
+        // Reused-workspace simulation must not lose to fresh allocation.
+        ("sim/simulate_reused_workspace", "sim/simulate_6models_20req", 1.25),
+    ];
+    for (fast, slow, margin) in invariants {
+        match (get(&fresh, fast), get(&fresh, slow)) {
+            (Some(f), Some(s)) => {
+                if f.min_ns > s.min_ns * margin {
+                    failures.push(format!(
+                        "invariant: {fast} ({:.0}ns) slower than {slow} ({:.0}ns) x{margin:.2}",
+                        f.min_ns, s.min_ns
+                    ));
+                } else {
+                    println!("  [invariant ok] {fast} <= {slow} x{margin:.2}");
+                }
+            }
+            _ => println!("  [invariant skipped] {fast} vs {slow}: bench missing"),
+        }
+    }
+
+    if failures.is_empty() {
+        println!("bench_guard: PASS");
+    } else {
+        eprintln!("bench_guard: FAIL");
+        for f in &failures {
+            eprintln!("  {f}");
+        }
+        std::process::exit(1);
+    }
+}

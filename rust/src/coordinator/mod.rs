@@ -319,6 +319,11 @@ impl Coordinator {
         }
     }
 
+    /// The registered per-network solutions.
+    pub fn solutions(&self) -> &[NetworkSolution] {
+        &self.solutions
+    }
+
     /// Served request records so far.
     pub fn served(&self) -> &[ServedRequest] {
         &self.served

@@ -4,10 +4,10 @@
 
 use std::sync::Arc;
 
-use crate::analyzer::{GaConfig, StaticAnalyzer};
+use crate::analyzer::GaConfig;
+use crate::api::SessionBuilder;
 use crate::coordinator::{Coordinator, NetworkSolution, RuntimeOptions};
 use crate::engine::{Engine, SimEngine};
-use crate::ga::decode_network;
 use crate::perf::PerfModel;
 use crate::scenario::{single_group_scenarios, Scenario};
 
@@ -43,30 +43,18 @@ pub struct Table5Row {
     pub free_ms: f64,
 }
 
-/// Build runtime solutions from a Puzzle analysis of a scenario.
+/// Build runtime solutions from a Puzzle analysis of a scenario (the api's
+/// analyze → deploy materialization).
 fn puzzle_solutions(scenario: &Scenario, pm: &PerfModel, seed: u64) -> Vec<NetworkSolution> {
-    let analysis = StaticAnalyzer::new(scenario, pm, GaConfig::quick(seed)).run();
-    let best = analysis.best_by_max_makespan();
-    scenario
-        .networks
-        .iter()
-        .zip(&best.genome.networks)
-        .enumerate()
-        .map(|(i, (net, genes))| {
-            let part = decode_network(net, genes);
-            let configs = part
-                .subgraphs
-                .iter()
-                .map(|sg| pm.best_config_for(net, &sg.layers, sg.processor).0)
-                .collect();
-            NetworkSolution {
-                network: Arc::new(net.clone()),
-                partition: Arc::new(part),
-                configs,
-                priority: best.genome.priority[i],
-            }
-        })
-        .collect()
+    let session = SessionBuilder::for_scenario(scenario.clone())
+        .perf_model(pm.clone())
+        .config(GaConfig::quick(seed))
+        .build()
+        .expect("prebuilt scenario is always valid");
+    let analysis = session.run();
+    analysis
+        .runtime_solutions(analysis.best_index())
+        .expect("best pareto solution deploys")
 }
 
 /// Serve `requests` group-requests through the real runtime under given
@@ -260,10 +248,15 @@ pub fn ga_ablation(
     variants
         .into_iter()
         .map(|(name, cfg)| {
-            let analysis = StaticAnalyzer::new(scenario, pm, cfg).run();
+            let session = SessionBuilder::for_scenario(scenario.clone())
+                .perf_model(pm.clone())
+                .config(cfg)
+                .build()
+                .expect("prebuilt scenario is always valid");
+            let analysis = session.run();
             let sols: Vec<Vec<crate::sim::ExecutionPlan>> =
-                analysis.pareto.iter().map(|s| s.plans.clone()).collect();
-            let best = analysis.best_by_max_makespan();
+                analysis.pareto.iter().map(|s| s.plans().to_vec()).collect();
+            let best = analysis.best();
             let worst_obj = best.objectives.iter().cloned().fold(0.0, f64::max);
             let sat = super::saturation_of(&sols, scenario, pm, 12);
             (name.to_string(), worst_obj, sat)

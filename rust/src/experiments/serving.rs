@@ -1,7 +1,8 @@
 //! Serving experiments: Figures 12–16 and the headline request-frequency
 //! ratios (paper §6.3–6.4).
 
-use crate::analyzer::{GaConfig, StaticAnalyzer};
+use crate::analyzer::GaConfig;
+use crate::api::SessionBuilder;
 use crate::baselines;
 use crate::metrics::mean_sd;
 use crate::perf::PerfModel;
@@ -70,9 +71,14 @@ pub fn solve_scenario(
     budget: &ServingBudget,
     seed: u64,
 ) -> (Vec<Vec<ExecutionPlan>>, Vec<Vec<ExecutionPlan>>, Vec<Vec<ExecutionPlan>>) {
-    let analysis = StaticAnalyzer::new(scenario, pm, budget.ga_config(seed)).run();
+    let session = SessionBuilder::for_scenario(scenario.clone())
+        .perf_model(pm.clone())
+        .config(budget.ga_config(seed))
+        .build()
+        .expect("prebuilt scenario is always valid");
+    let analysis = session.run();
     let puzzle: Vec<Vec<ExecutionPlan>> =
-        analysis.pareto.iter().map(|s| s.plans.clone()).collect();
+        analysis.pareto.iter().map(|s| s.plans().to_vec()).collect();
     let bm: Vec<Vec<ExecutionPlan>> = baselines::best_mapping(scenario, pm, budget.sim_requests)
         .into_iter()
         .map(|s| s.plans)

@@ -19,6 +19,11 @@
 //! Substrates the paper relied on (DEAP, SimPy, the Snapdragon 8 Gen 2's
 //! CPU/GPU/NPU and their SDKs) are rebuilt from scratch: see `DESIGN.md` for
 //! the substitution table.
+//!
+//! The two halves meet in [`api`] — the owned analyze → deploy → serve
+//! session layer ([`api::SessionBuilder`] → [`api::AnalysisSession`] →
+//! [`api::Analysis::deploy`]), which is the supported entry point for
+//! external callers.
 
 /// Counting allocator (see [`util::alloc`]): lets tests assert that the
 /// simulator's steady state performs zero heap allocation. One relaxed
@@ -27,6 +32,7 @@
 static GLOBAL_ALLOCATOR: util::alloc::CountingAllocator = util::alloc::CountingAllocator;
 
 pub mod analyzer;
+pub mod api;
 pub mod baselines;
 pub mod comm;
 pub mod coordinator;

@@ -13,12 +13,15 @@
 
 use puzzle::util::error::Result;
 
-use puzzle::analyzer::{GaConfig, StaticAnalyzer};
+use puzzle::analyzer::GaConfig;
+use puzzle::api::{
+    Analysis, GenerationProgress, RuntimeOptions, ScenarioSpec, SessionBuilder,
+};
 use puzzle::experiments::{self, ServingBudget};
 use puzzle::graph::LayerId;
 use puzzle::models;
 use puzzle::perf::PerfModel;
-use puzzle::scenario::{multi_group_scenarios, single_group_scenarios, Scenario};
+use puzzle::scenario::{multi_group_scenarios, single_group_scenarios};
 use puzzle::Processor;
 
 /// Parsed `--key value` options and `--flag` switches.
@@ -67,7 +70,7 @@ impl Args {
 }
 
 const USAGE: &str = "usage: puzzle <analyze|serve|profile|comm-bench|scenario-gen|experiment> [options]
-  analyze      --models 0,1,6 --population 48 --generations 40 --seed 23 [--save sol.txt]
+  analyze      --models 0,1,6 --population 48 --generations 40 --seed 23 [--save sol.txt] [--quiet]
   serve        --models 0,1,6 --requests 30 --time-scale 0.05 [--solution sol.txt]
   profile
   comm-bench
@@ -92,28 +95,44 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "analyze" => {
             let idx = parse_models(&args.get_str("models", "0,1,6"));
-            let scenario = Scenario::from_groups("cli", &[idx]);
             let config = GaConfig {
                 population: args.get("population", 48),
                 max_generations: args.get("generations", 40),
                 seed: args.get("seed", 23),
                 ..Default::default()
             };
-            let result = StaticAnalyzer::new(&scenario, &pm, config).run();
+            let session = SessionBuilder::new(ScenarioSpec::single_group("cli", idx))
+                .perf_model(pm.clone())
+                .config(config)
+                .build()?;
+            let quiet = args.flags.contains("quiet");
+            let analysis = session.run_observed(&mut |p: &GenerationProgress<'_>| {
+                if !quiet {
+                    println!(
+                        "gen {:>3}: {:>5} evals, best {:?}, plan memo {:.0}%, profile cache {:.0}%",
+                        p.generation,
+                        p.evaluations,
+                        p.best_objectives
+                            .iter()
+                            .map(|o| format!("{:.2}ms", o * 1e3))
+                            .collect::<Vec<_>>(),
+                        p.plan_cache_hit_rate() * 100.0,
+                        p.profile_cache_hit_rate() * 100.0,
+                    );
+                }
+            });
             if let Some(path) = args.options.get("save") {
-                puzzle::analyzer::solution_io::save_solutions(
-                    std::path::Path::new(path), &scenario, &result.pareto,
-                )?;
-                println!("saved {} solutions to {path}", result.pareto.len());
+                analysis.save(std::path::Path::new(path))?;
+                println!("saved {} solutions to {path}", analysis.pareto.len());
             }
             println!(
                 "analyzer: {} generations, {} evaluations, profile cache {} hits / {} measures",
-                result.generations_run, result.evaluations,
-                result.profile_cache_hits, result.profile_measurements
+                analysis.generations_run, analysis.evaluations,
+                analysis.profile_cache_hits, analysis.profile_measurements
             );
-            println!("pareto solutions: {}", result.pareto.len());
-            for (i, sol) in result.pareto.iter().enumerate() {
-                let subgraphs: usize = sol.plans.iter().map(|p| p.tasks.len()).sum();
+            println!("pareto solutions: {}", analysis.pareto.len());
+            for (i, sol) in analysis.pareto.iter().enumerate() {
+                let subgraphs: usize = sol.plans().iter().map(|p| p.tasks.len()).sum();
                 println!(
                     "  #{i}: objectives {:?} ({} subgraphs total)",
                     sol.objectives.iter().map(|o| format!("{:.2}ms", o * 1e3)).collect::<Vec<_>>(),
@@ -181,81 +200,39 @@ fn serve_cmd(
     time_scale: f64,
     solution_file: Option<&str>,
 ) -> Result<()> {
-    use puzzle::coordinator::{Coordinator, NetworkSolution, RuntimeOptions};
-    use puzzle::engine::{Engine, SimEngine};
-    use puzzle::ga::decode_network;
-    use std::sync::Arc;
-
-    let scenario = Scenario::from_groups("serve", &[idx.to_vec()]);
+    let session = SessionBuilder::new(ScenarioSpec::single_group("serve", idx.to_vec()))
+        .perf_model(pm.clone())
+        .config(GaConfig::quick(23))
+        .build()?;
     // Either load a saved Static-Analyzer solution (the paper's Fig 2
     // hand-off) or run a fresh quick analysis.
-    let (genome, priorities) = match solution_file {
+    let analysis: Analysis = match solution_file {
         Some(path) => {
-            let loaded = puzzle::analyzer::solution_io::load_solutions(
-                std::path::Path::new(path), &scenario,
-            )?;
-            let best = loaded
-                .into_iter()
-                .min_by(|a, b| {
-                    let ma = a.objectives.iter().cloned().fold(0.0, f64::max);
-                    let mb = b.objectives.iter().cloned().fold(0.0, f64::max);
-                    ma.partial_cmp(&mb).unwrap()
-                })
-                .ok_or_else(|| puzzle::anyhow!("no solutions in {path}"))?;
-            println!("loaded solution from {path}");
-            (best.genome.clone(), best.genome.priority)
+            let loaded = session.load_solutions(std::path::Path::new(path))?;
+            println!("loaded {} solutions from {path}", loaded.pareto.len());
+            loaded
         }
-        None => {
-            let analysis = StaticAnalyzer::new(&scenario, pm, GaConfig::quick(23)).run();
-            let best = analysis.best_by_max_makespan();
-            (best.genome.clone(), best.genome.priority.clone())
-        }
+        None => session.run(),
     };
-    let best_networks = genome.networks;
-    let solutions: Vec<NetworkSolution> = scenario
-        .networks
-        .iter()
-        .zip(&best_networks)
-        .enumerate()
-        .map(|(i, (net, genes))| {
-            let part = decode_network(net, genes);
-            let configs = part
-                .subgraphs
-                .iter()
-                .map(|sg| pm.best_config_for(net, &sg.layers, sg.processor).0)
-                .collect();
-            NetworkSolution {
-                network: Arc::new(net.clone()),
-                partition: Arc::new(part),
-                configs,
-                priority: priorities[i],
-            }
-        })
-        .collect();
-    let engine: Arc<dyn Engine> = Arc::new(SimEngine::new(
-        Arc::new(PerfModel::paper_calibrated()),
+    let mut deployment = analysis.deploy_sim(
+        analysis.best_index(),
+        RuntimeOptions::default(),
         time_scale,
         true,
         7,
-    ));
-    let members: Vec<usize> = (0..idx.len()).collect();
-    let mut coord = Coordinator::new(solutions, engine, RuntimeOptions::default());
+    )?;
     let t0 = std::time::Instant::now();
-    for _ in 0..requests {
-        coord.submit_group(0, &members);
-        coord.pump(std::time::Duration::from_secs(30));
-    }
-    let served = coord.served().to_vec();
+    let served = deployment.serve(0, requests, std::time::Duration::from_secs(30));
     let wall = t0.elapsed().as_secs_f64();
-    let makespans: Vec<f64> = served.iter().map(|s| s.makespan / time_scale.max(1e-9)).collect();
+    let makespans = deployment.simulated_makespans();
     let (avg, sd) = puzzle::metrics::mean_sd(&makespans);
     println!(
         "served {} requests in {:.2}s wall; simulated makespan avg {:.2}ms ± {:.2}ms, p90 {:.2}ms",
-        served.len(), wall,
+        served, wall,
         avg * 1e3, sd * 1e3,
         puzzle::sim::percentile(&makespans, 0.9) * 1e3
     );
-    coord.shutdown();
+    deployment.shutdown();
     Ok(())
 }
 

@@ -20,6 +20,10 @@ use crate::{models, Processor};
 /// Slack constant ε in the base-period formula (paper: 0.1).
 pub const EPSILON: f64 = 0.1;
 
+/// Sentinel `zoo_indices` entry for networks built outside the model zoo
+/// (see [`Scenario::from_networks`]).
+pub const CUSTOM_ZOO_INDEX: usize = usize::MAX;
+
 /// One model group: zoo indices + which scenario networks belong to it.
 #[derive(Debug, Clone)]
 pub struct ModelGroup {
@@ -53,6 +57,19 @@ impl Scenario {
             }
             out_groups.push(ModelGroup { members });
         }
+        Scenario { name: name.to_string(), networks, zoo_indices, groups: out_groups }
+    }
+
+    /// Build a scenario from caller-provided networks (models outside the
+    /// zoo — [`crate::api::ScenarioSpec::Custom`]). `groups` partitions the
+    /// network indices into model groups. Custom networks have no zoo entry,
+    /// so their `zoo_indices` are the [`CUSTOM_ZOO_INDEX`] sentinel.
+    pub fn from_networks(name: &str, networks: Vec<Network>, groups: &[Vec<usize>]) -> Scenario {
+        let zoo_indices = vec![CUSTOM_ZOO_INDEX; networks.len()];
+        let out_groups = groups
+            .iter()
+            .map(|g| ModelGroup { members: g.clone() })
+            .collect();
         Scenario { name: name.to_string(), networks, zoo_indices, groups: out_groups }
     }
 

@@ -116,6 +116,61 @@ pub fn write_json(path: &Path, stats: &[BenchStats]) -> std::io::Result<()> {
     std::fs::write(path, to_json(stats))
 }
 
+/// Numbers recovered from a [`to_json`] file (the subset the regression
+/// guard compares).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BenchNumbers {
+    pub ns_per_iter: f64,
+    pub min_ns: f64,
+}
+
+/// Parse a [`to_json`]-format file back into `(name, numbers)` rows — the
+/// inverse used by the `bench_guard` binary. Line-oriented and forgiving:
+/// lines without a quoted name + `ns_per_iter`/`min_ns` fields are skipped.
+pub fn parse_json(text: &str) -> Vec<(String, BenchNumbers)> {
+    fn field(line: &str, key: &str) -> Option<f64> {
+        let start = line.find(key)? + key.len();
+        let rest = &line[start..];
+        let rest = rest.trim_start_matches([':', ' ']);
+        let end = rest
+            .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == 'e' || c == '+'))
+            .unwrap_or(rest.len());
+        rest[..end].parse().ok()
+    }
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let trimmed = line.trim_start();
+        if !trimmed.starts_with('"') {
+            continue;
+        }
+        // Name: between the first quote and the next unescaped quote.
+        let body = &trimmed[1..];
+        let mut name = String::new();
+        let mut escaped = false;
+        let mut name_len = 0;
+        for c in body.chars() {
+            name_len += c.len_utf8();
+            if escaped {
+                name.push(c);
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                break;
+            } else {
+                name.push(c);
+            }
+        }
+        let rest = &body[name_len..];
+        if let (Some(ns_per_iter), Some(min_ns)) =
+            (field(rest, "\"ns_per_iter\""), field(rest, "\"min_ns\""))
+        {
+            out.push((name, BenchNumbers { ns_per_iter, min_ns }));
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,6 +196,23 @@ mod tests {
         // Exactly one comma separator for two entries (each entry line ends
         // with a single closing brace).
         assert_eq!(json.matches("},\n").count(), 1, "{json}");
+    }
+
+    #[test]
+    fn parse_json_roundtrips_write_json() {
+        let stats = vec![
+            run_bench("analyzer/serial_generation", 0.0, 2, || {}),
+            run_bench("ga/decode_genome(cached profiles)", 0.0, 2, || {}),
+        ];
+        let parsed = parse_json(&to_json(&stats));
+        assert_eq!(parsed.len(), 2);
+        for (st, (name, nums)) in stats.iter().zip(&parsed) {
+            assert_eq!(&st.name, name);
+            assert!((nums.ns_per_iter - st.mean_s * 1e9).abs() <= 0.1);
+            assert!((nums.min_ns - st.min_s * 1e9).abs() <= 0.1);
+        }
+        // Garbage lines are skipped, not fatal.
+        assert!(parse_json("{\nnot json\n}\n").is_empty());
     }
 
     #[test]

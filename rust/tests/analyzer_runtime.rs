@@ -4,77 +4,41 @@
 
 use std::sync::Arc;
 
-use puzzle::analyzer::{GaConfig, StaticAnalyzer};
-use puzzle::coordinator::{Coordinator, NetworkSolution, RuntimeOptions};
+use puzzle::analyzer::GaConfig;
+use puzzle::api::{RuntimeOptions, ScenarioSpec, SessionBuilder};
+use puzzle::coordinator::{Coordinator, NetworkSolution};
 use puzzle::engine::{Engine, SimEngine};
 use puzzle::ga::decode_network;
 use puzzle::perf::PerfModel;
 use puzzle::scenario::Scenario;
 
-/// Build runtime solutions from the analyzer's best genome.
-fn solutions_from_analysis(
-    scenario: &Scenario,
-    pm: &PerfModel,
-    seed: u64,
-) -> (Vec<NetworkSolution>, Vec<f64>) {
-    let analysis = StaticAnalyzer::new(scenario, pm, GaConfig::quick(seed)).run();
-    let best = analysis.best_by_max_makespan();
-    let sols = scenario
-        .networks
-        .iter()
-        .zip(&best.genome.networks)
-        .enumerate()
-        .map(|(i, (net, genes))| {
-            let part = decode_network(net, genes);
-            let configs = part
-                .subgraphs
-                .iter()
-                .map(|sg| pm.best_config_for(net, &sg.layers, sg.processor).0)
-                .collect();
-            NetworkSolution {
-                network: Arc::new(net.clone()),
-                partition: Arc::new(part),
-                configs,
-                priority: best.genome.priority[i],
-            }
-        })
-        .collect();
-    (sols, best.objectives.clone())
-}
-
 #[test]
 fn analyzer_solution_serves_through_runtime() {
-    let pm = PerfModel::paper_calibrated();
-    let scenario = Scenario::from_groups("int", &[vec![0, 2]]);
-    let (solutions, objectives) = solutions_from_analysis(&scenario, &pm, 5);
-
-    // Serve with the simulated engine at a time scale that keeps wall time
-    // short while still exercising the real threads/queues.
-    let engine: Arc<dyn Engine> = Arc::new(SimEngine::new(
-        Arc::new(PerfModel::paper_calibrated()),
-        0.05,
-        false,
-        9,
-    ));
-    let mut coord = Coordinator::new(solutions, engine, RuntimeOptions::default());
-    let members = [0usize, 1];
-    for _ in 0..10 {
-        coord.submit_group(0, &members);
-        coord.pump(std::time::Duration::from_secs(10));
-    }
-    assert_eq!(coord.served().len(), 10, "all group requests served");
-    // Wall makespans at scale 0.05 → simulated = wall / 0.05. They should be
-    // within a loose factor of the analyzer's promise (thread scheduling
-    // overhead makes the runtime a bit slower, never 10x).
+    // The full api flow: session → analysis → deployment, with the
+    // simulated engine at a time scale that keeps wall time short while
+    // still exercising the real threads/queues.
+    let session = SessionBuilder::new(ScenarioSpec::single_group("int", vec![0, 2]))
+        .config(GaConfig::quick(5))
+        .build()
+        .unwrap();
+    let analysis = session.run();
+    let objectives = analysis.best().objectives.clone();
+    let mut deployment = analysis
+        .deploy_sim(analysis.best_index(), RuntimeOptions::default(), 0.05, false, 9)
+        .unwrap();
+    let served = deployment.serve(0, 10, std::time::Duration::from_secs(10));
+    assert_eq!(served, 10, "all group requests served");
+    // Simulated makespans (wall / time-scale) should be within a loose
+    // factor of the analyzer's promise (thread scheduling overhead makes
+    // the runtime a bit slower, never 10x).
     let sim_promise = objectives[0]; // avg makespan objective
-    for s in coord.served() {
-        let simulated = s.makespan / 0.05;
+    for simulated in deployment.simulated_makespans() {
         assert!(
             simulated < sim_promise * 10.0 + 0.5,
             "runtime makespan {simulated} vastly exceeds promise {sim_promise}"
         );
     }
-    coord.shutdown();
+    deployment.shutdown();
 }
 
 #[test]
@@ -151,9 +115,12 @@ fn runtime_ablation_accounting_direction_holds() {
 
 #[test]
 fn pareto_solutions_are_mutually_nondominated() {
-    let pm = PerfModel::paper_calibrated();
     let scenario = Scenario::from_groups("pareto", &[vec![0, 4, 6]]);
-    let analysis = StaticAnalyzer::new(&scenario, &pm, GaConfig::quick(11)).run();
+    let analysis = SessionBuilder::for_scenario(scenario)
+        .config(GaConfig::quick(11))
+        .build()
+        .unwrap()
+        .run();
     assert!(!analysis.pareto.is_empty());
     for a in &analysis.pareto {
         for b in &analysis.pareto {

@@ -1,0 +1,118 @@
+//! Integration tests of the `puzzle::api` session layer: the full
+//! analyze → deploy → serve flow, observer streaming, plan-set sharing
+//! across the Pareto front, and the versioned save/load hand-off.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use puzzle::analyzer::GaConfig;
+use puzzle::api::{GenerationProgress, RuntimeOptions, ScenarioSpec, SessionBuilder};
+
+fn quick_session(seed: u64) -> puzzle::api::AnalysisSession {
+    SessionBuilder::new(ScenarioSpec::single_group("api", vec![0, 2]))
+        .config(GaConfig::quick(seed))
+        .build()
+        .expect("valid spec")
+}
+
+#[test]
+fn observer_streams_generation_progress() {
+    let session = quick_session(3);
+    let mut generations: Vec<usize> = Vec::new();
+    let mut evaluations: Vec<usize> = Vec::new();
+    let analysis = session.run_observed(&mut |p: &GenerationProgress<'_>| {
+        generations.push(p.generation);
+        evaluations.push(p.evaluations);
+        assert!(!p.best_objectives.is_empty(), "best solution always exists");
+        assert!(p.avg_aggregate.is_finite() && p.avg_aggregate > 0.0);
+        assert!((0.0..=1.0).contains(&p.plan_cache_hit_rate()));
+        assert!((0.0..=1.0).contains(&p.profile_cache_hit_rate()));
+    });
+    // Generation 0 (initial population) plus one event per GA generation.
+    assert_eq!(generations.len(), analysis.generations_run + 1);
+    assert_eq!(generations, (0..=analysis.generations_run).collect::<Vec<_>>());
+    // Evaluations are cumulative and end at the reported total.
+    assert!(evaluations.windows(2).all(|w| w[0] <= w[1]));
+    assert_eq!(*evaluations.last().unwrap(), analysis.evaluations);
+}
+
+#[test]
+fn run_and_run_observed_agree() {
+    let a = quick_session(7).run();
+    let b = quick_session(7).run_observed(&mut |_: &GenerationProgress<'_>| {});
+    let sig = |x: &puzzle::api::Analysis| -> Vec<Vec<f64>> {
+        x.pareto.iter().map(|s| s.objectives.clone()).collect()
+    };
+    assert_eq!(sig(&a), sig(&b), "observation must not perturb the search");
+    assert_eq!(a.evaluations, b.evaluations);
+}
+
+#[test]
+fn pareto_solutions_share_plan_sets() {
+    let analysis = quick_session(11).run();
+    for sol in &analysis.pareto {
+        assert_eq!(
+            sol.plans().len(),
+            analysis.scenario().networks.len(),
+            "one plan per network"
+        );
+        // Cloning a Solution (the archive/deployment hand-off operation)
+        // must share the plan set, not re-wrap or deep-copy it.
+        let cloned = sol.clone();
+        assert!(
+            Arc::ptr_eq(&cloned.plan_set, &sol.plan_set),
+            "Solution::clone re-created its plan set"
+        );
+    }
+    // Entries with distinct genomes must not alias each other's plans.
+    // (Identical genomes *usually* share one memoized decode, but two
+    // threads racing the first decode may legitimately hold separate Arcs,
+    // so no assertion in that direction.)
+    for a in &analysis.pareto {
+        for b in &analysis.pareto {
+            if a.genome != b.genome {
+                assert!(!Arc::ptr_eq(&a.plan_set, &b.plan_set), "distinct genomes share plans");
+            }
+        }
+    }
+}
+
+#[test]
+fn save_load_deploy_roundtrip() {
+    let session = quick_session(13);
+    let analysis = session.run();
+    let dir = std::env::temp_dir().join("puzzle_api_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("pareto.txt");
+    analysis.save(&path).unwrap();
+
+    // A fresh session (same spec) loads the file back into a deployable
+    // Analysis with identical genomes and objectives.
+    let session2 = quick_session(99); // GA seed is irrelevant for loading
+    let loaded = session2.load_solutions(&path).unwrap();
+    assert_eq!(loaded.pareto.len(), analysis.pareto.len());
+    for (a, b) in analysis.pareto.iter().zip(&loaded.pareto) {
+        assert_eq!(a.genome, b.genome);
+        assert_eq!(a.objectives, b.objectives);
+        // Plans re-decoded at load time must match the originals (the
+        // profiler is deterministic).
+        assert_eq!(a.plans(), b.plans());
+    }
+
+    let mut deployment = loaded
+        .deploy_sim(loaded.best_index(), RuntimeOptions::default(), 0.0, false, 1)
+        .unwrap();
+    let served = deployment.serve(0, 4, Duration::from_secs(10));
+    assert_eq!(served, 4);
+    deployment.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn deploy_rejects_bad_solution_index() {
+    let analysis = quick_session(17).run();
+    let err = analysis
+        .deploy(analysis.pareto.len() + 3, RuntimeOptions::default())
+        .unwrap_err();
+    assert!(err.to_string().contains("out of range"), "{err}");
+}

@@ -1,16 +1,25 @@
 //! Equivalence and allocation guarantees of the batch evaluation pipeline
-//! (parallel GA scoring + reusable `SimWorkspace` + decode memoization):
+//! (parallel GA scoring + reusable `SimWorkspace` + decode memoization +
+//! `Arc<PlanSet>`-shared solutions):
 //!
 //! 1. parallel batch evaluation is **bit-identical** to the serial path for
 //!    several seeds (objectives, Pareto genomes, evaluation counts);
 //! 2. a reused workspace reproduces fresh-allocation `simulate()` exactly;
 //! 3. steady-state workspace simulation performs **zero** heap allocation
 //!    (asserted against the counting global allocator);
-//! 4. the genome→plan memo returns plans identical to a fresh decode.
+//! 4. the genome→plan memo returns plans identical to a fresh decode;
+//! 5. the operations Pareto bookkeeping is built from — moving `Solution`s
+//!    between buffers and cloning their plan handles — are plan-copy-free:
+//!    plans are `Arc`-shared, never deep-cloned. (The replacement step's
+//!    selection scratch still allocates per generation; that belongs to the
+//!    NSGA-III ROADMAP item.)
 
-use puzzle::analyzer::{AnalysisResult, GaConfig, StaticAnalyzer};
+use std::sync::Arc;
+
+use puzzle::analyzer::{GaConfig, Solution};
+use puzzle::api::{Analysis, SessionBuilder};
 use puzzle::comm::CommModel;
-use puzzle::ga::{decode, DecodedPlanCache, Genome};
+use puzzle::ga::{decode, DecodedPlanCache, Genome, PlanSet};
 use puzzle::perf::PerfModel;
 use puzzle::profiler::Profiler;
 use puzzle::scenario::Scenario;
@@ -30,7 +39,16 @@ fn quick_cfg(seed: u64, threads: usize) -> GaConfig {
     }
 }
 
-fn pareto_signature(r: &AnalysisResult) -> Vec<(Vec<f64>, Genome)> {
+fn run_session(scenario: &Scenario, pm: &PerfModel, cfg: GaConfig) -> Analysis {
+    SessionBuilder::for_scenario(scenario.clone())
+        .perf_model(pm.clone())
+        .config(cfg)
+        .build()
+        .expect("valid scenario")
+        .run()
+}
+
+fn pareto_signature(r: &Analysis) -> Vec<(Vec<f64>, Genome)> {
     r.pareto
         .iter()
         .map(|s| (s.objectives.clone(), s.genome.clone()))
@@ -45,9 +63,9 @@ fn deterministic_across_thread_counts() {
     let scenario = Scenario::from_groups("par", &[vec![0, 1, 6]]);
     let pm = PerfModel::paper_calibrated();
     for seed in [1u64, 5, 9] {
-        let serial = StaticAnalyzer::new(&scenario, &pm, quick_cfg(seed, 1)).run();
-        let par2 = StaticAnalyzer::new(&scenario, &pm, quick_cfg(seed, 2)).run();
-        let par4 = StaticAnalyzer::new(&scenario, &pm, quick_cfg(seed, 4)).run();
+        let serial = run_session(&scenario, &pm, quick_cfg(seed, 1));
+        let par2 = run_session(&scenario, &pm, quick_cfg(seed, 2));
+        let par4 = run_session(&scenario, &pm, quick_cfg(seed, 4));
         assert_eq!(serial.generations_run, par4.generations_run, "seed {seed}");
         assert_eq!(serial.evaluations, par2.evaluations, "seed {seed}");
         assert_eq!(serial.evaluations, par4.evaluations, "seed {seed}");
@@ -174,11 +192,81 @@ fn plan_memo_reports_hits_in_full_search() {
     // clones), so the memo must land hits and the analyzer must report them.
     let scenario = Scenario::from_groups("memo2", &[vec![0, 1]]);
     let pm = PerfModel::paper_calibrated();
-    let r = StaticAnalyzer::new(&scenario, &pm, quick_cfg(4, 1)).run();
+    let r = run_session(&scenario, &pm, quick_cfg(4, 1));
     assert!(r.plan_cache_misses > 0);
     assert!(
         r.plan_cache_hits > 0,
         "no memo reuse across {} evaluations",
         r.evaluations
     );
+}
+
+/// Build a handful of solutions sharing plan sets, as the analyzer's
+/// replacement step sees them.
+fn sharing_solutions(n: usize) -> Vec<Solution> {
+    let scenario = Scenario::from_groups("share", &[vec![0, 2, 6]]);
+    let pm = PerfModel::paper_calibrated();
+    let comm = CommModel::paper_calibrated();
+    let profiler = Profiler::new(&pm);
+    let mut rng = Rng::seed_from_u64(41);
+    let genome = Genome::random(&scenario.networks, 0.3, &mut rng);
+    let plans = decode(&scenario.networks, &genome, &profiler, &comm);
+    let compiled = compile_plans(&plans);
+    let set = Arc::new(PlanSet { plans, compiled });
+    (0..n)
+        .map(|i| Solution {
+            genome: genome.clone(),
+            objectives: vec![i as f64, (i * 2) as f64],
+            plan_set: set.clone(),
+        })
+        .collect()
+}
+
+#[test]
+fn solution_clone_never_copies_plans() {
+    // Cloning a solution's plan handle is a pure Arc bump: zero heap
+    // allocations (the pre-Arc representation deep-cloned every
+    // ExecutionPlan here).
+    let sols = sharing_solutions(2);
+    let before = puzzle::util::alloc::thread_allocations();
+    let handle = sols[0].plan_set.clone();
+    let after = puzzle::util::alloc::thread_allocations();
+    assert_eq!(after - before, 0, "Arc clone of the plan set allocated");
+    assert!(Arc::ptr_eq(&handle, &sols[1].plan_set), "clones share one plan set");
+
+    // A full Solution clone pays only for genome + objectives — its cost is
+    // independent of the plan set entirely (same genome, plan sets of very
+    // different sizes ⇒ identical allocation counts).
+    let small = Solution { plan_set: Arc::new(PlanSet { plans: vec![], compiled: vec![] }), ..sols[0].clone() };
+    let b1 = puzzle::util::alloc::thread_allocations();
+    let _c1 = sols[0].clone();
+    let mid = puzzle::util::alloc::thread_allocations();
+    let _c2 = small.clone();
+    let b2 = puzzle::util::alloc::thread_allocations();
+    assert_eq!(mid - b1, b2 - mid, "clone cost depends on plan-set size");
+}
+
+#[test]
+fn solution_moves_are_allocation_free() {
+    // The primitive the replacement step's retention is built on: moving
+    // `Solution`s between preallocated buffers allocates nothing, and plan
+    // sets stay shared. With the old owned `Vec<ExecutionPlan>`
+    // representation, every survivor carried (and on clone, copied) its
+    // whole plan vector through this churn.
+    let n = 16;
+    let mut pool = sharing_solutions(n);
+    let mut kept: Vec<Solution> = Vec::with_capacity(n);
+    // Warm-up one full cycle so both buffers reach capacity.
+    kept.extend(pool.drain(..));
+    pool.extend(kept.drain(..));
+
+    let before = puzzle::util::alloc::thread_allocations();
+    for _ in 0..100 {
+        kept.extend(pool.drain(..));
+        pool.extend(kept.drain(..));
+    }
+    let after = puzzle::util::alloc::thread_allocations();
+    assert_eq!(after - before, 0, "survivor retention allocated");
+    // Sharing survived the churn.
+    assert!(Arc::ptr_eq(&pool[0].plan_set, &pool[n - 1].plan_set));
 }
