@@ -72,4 +72,23 @@ fn main() {
         sd * 1e3
     );
     deployment.shutdown();
+
+    // 5. Load-test the same solution under open-loop traffic: deploy on a
+    //    non-sleeping engine and drive the deterministic virtual clock —
+    //    periodic arrivals at the scenario's period, deadline accounting,
+    //    all through the real Coordinator/Worker stack.
+    use puzzle::api::LoadSpec;
+    let mut lt = analysis
+        .deploy_sim(best, RuntimeOptions::default(), 0.0, true, 42)
+        .expect("deployable solution");
+    let spec = LoadSpec::for_scenario(analysis.scenario(), analysis.perf(), 1.2, 30);
+    let report = lt.serve_load(&spec);
+    println!(
+        "loadtest (alpha 1.2, virtual clock): {}/{} in deadline, p90 {:.2} ms, score {:.3}",
+        report.served - report.violations,
+        report.submitted,
+        report.percentile(0, 0.9) * 1e3,
+        report.score
+    );
+    lt.shutdown();
 }

@@ -21,6 +21,7 @@ use puzzle::mem::TensorPool;
 use puzzle::perf::PerfModel;
 use puzzle::profiler::Profiler;
 use puzzle::scenario::Scenario;
+use puzzle::serve::{LoadSpec, RuntimeHarness};
 use puzzle::sim::{compile_plans, simulate, GroupSpec, SimOptions, SimWorkspace};
 use puzzle::util::bench::{bench, black_box, write_json, BenchStats};
 use puzzle::util::rng::Rng;
@@ -161,6 +162,28 @@ fn main() {
     );
     all.push(serial);
     all.push(parallel);
+
+    // Arrival-driven load tests through the real Coordinator/Worker stack:
+    // the virtual-clock event loop (deterministic, engine never sleeps) vs
+    // the wall-clock driver (engine sleeps at time scale 1.0). bench_guard
+    // asserts virtual <= wall as a same-run invariant — the virtual clock's
+    // whole point is replaying a schedule faster than real time.
+    let lt_scenario = puzzle::scenario::Scenario::from_groups("loadtest", &[vec![0, 1]]);
+    let lt_genome = puzzle::ga::Genome::all_on(&lt_scenario.networks, Processor::Npu);
+    let lt_perf = std::sync::Arc::new(pm.clone());
+    let lt_periods = lt_scenario.periods(1.2, &pm);
+    let mut lt_virtual = RuntimeHarness::for_genome(&lt_scenario, &lt_genome, &lt_perf, 7);
+    lt_virtual.noisy = false;
+    let virtual_spec = LoadSpec::periodic(&lt_periods, 10);
+    all.push(bench("serve/loadtest_virtual_clock", 3.0, 20, || {
+        black_box(lt_virtual.run(&virtual_spec).served);
+    }));
+    let mut lt_wall = lt_virtual.clone();
+    lt_wall.time_scale = 1.0;
+    let wall_spec = LoadSpec::periodic(&lt_periods, 10).wall(std::time::Duration::from_secs(10));
+    all.push(bench("serve/loadtest_wall_clock", 3.0, 5, || {
+        black_box(lt_wall.run(&wall_spec).served);
+    }));
 
     // Machine-readable trajectory for future PRs.
     let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))

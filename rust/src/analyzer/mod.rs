@@ -174,6 +174,10 @@ pub struct AnalysisResult {
     pub plan_cache_hits: u64,
     /// Actual decode + compile executions.
     pub plan_cache_misses: u64,
+    /// True when an [`crate::api::Observer`] hook returned
+    /// [`std::ops::ControlFlow::Break`]: the Pareto front reflects the
+    /// population at the moment of cancellation, not convergence.
+    pub cancelled: bool,
 }
 
 impl AnalysisResult {
@@ -424,18 +428,33 @@ impl<'a> StaticAnalyzer<'a> {
         self.run_observed(&mut crate::api::null_observer())
     }
 
-    /// Run the full GA search, streaming per-generation progress through the
-    /// observer (generation 0 is the evaluated initial population).
+    /// Run the full GA search with a run-local profiler, streaming
+    /// per-generation progress through the observer.
     pub(crate) fn run_observed(&self, observer: &mut dyn crate::api::Observer) -> AnalysisResult {
-        let mut rng = Rng::seed_from_u64(self.config.seed);
-        let nets = &self.scenario.networks;
         let pm_probe: &dyn crate::profiler::DeviceProbe = self.perf;
         let profiler = Profiler::new(pm_probe);
+        self.run_observed_with(&profiler, observer)
+    }
+
+    /// Run the full GA search against a caller-owned profiler (the session
+    /// layer shares one across analyze → deploy so deployment reuses the
+    /// best-config memo), streaming per-generation progress through the
+    /// observer (generation 0 is the evaluated initial population). Any
+    /// observer hook returning `Break` cancels the search: the result
+    /// carries the front of the population evaluated so far, with
+    /// `cancelled` set.
+    pub(crate) fn run_observed_with(
+        &self,
+        profiler: &Profiler<'_>,
+        observer: &mut dyn crate::api::Observer,
+    ) -> AnalysisResult {
+        let mut rng = Rng::seed_from_u64(self.config.seed);
+        let nets = &self.scenario.networks;
         let plan_cache = DecodedPlanCache::new();
         let groups = self.groups();
         let evals = AtomicUsize::new(0);
         let ctx = EvalCtx {
-            profiler: &profiler,
+            profiler,
             cache: &plan_cache,
             groups: &groups,
             evals: &evals,
@@ -490,9 +509,13 @@ impl<'a> StaticAnalyzer<'a> {
         let mut best_avg = avg_score(&evaluated);
         let mut stale = 0usize;
         let mut generations_run = 0usize;
-        emit_progress(observer, 0, &evaluated, best_avg, stale, &ctx);
+        let mut cancelled = emit_batch(observer, 0, evaluated.len(), &ctx).is_break();
+        cancelled |= emit_progress(observer, 0, &evaluated, best_avg, stale, &ctx).is_break();
 
         for _gen in 0..self.config.max_generations {
+            if cancelled {
+                break;
+            }
             generations_run += 1;
             // All parents reproduce: shuffle and pair.
             let mut order: Vec<usize> = (0..evaluated.len()).collect();
@@ -528,6 +551,11 @@ impl<'a> StaticAnalyzer<'a> {
                 })
                 .collect();
             let children = self.evaluate_batch(&jobs, &ctx);
+            // Mid-generation (post-batch, pre-replacement) progress: the
+            // cancellation point for long searches. A Break still performs
+            // this generation's replacement so the returned front reflects
+            // every evaluation paid for.
+            cancelled |= emit_batch(observer, generations_run, children.len(), &ctx).is_break();
 
             // NSGA-III replacement over parents + children. Survivors are
             // *moved* out of the pool, never cloned, so retention copies no
@@ -552,8 +580,9 @@ impl<'a> StaticAnalyzer<'a> {
             } else {
                 stale += 1;
             }
-            emit_progress(observer, generations_run, &evaluated, avg, stale, &ctx);
-            if stale >= self.config.patience {
+            cancelled |=
+                emit_progress(observer, generations_run, &evaluated, avg, stale, &ctx).is_break();
+            if cancelled || stale >= self.config.patience {
                 break;
             }
         }
@@ -575,6 +604,7 @@ impl<'a> StaticAnalyzer<'a> {
             profile_measurements: misses,
             plan_cache_hits: plan_hits,
             plan_cache_misses: plan_misses,
+            cancelled,
         }
     }
 
@@ -628,6 +658,21 @@ fn take_by_index(pool: Vec<Solution>, indices: &[usize]) -> Vec<Solution> {
     out
 }
 
+/// Send one [`crate::api::BatchProgress`] snapshot (after a batch of
+/// candidate evaluations; mid-generation granularity).
+fn emit_batch(
+    observer: &mut dyn crate::api::Observer,
+    generation: usize,
+    batch_size: usize,
+    ctx: &EvalCtx<'_, '_>,
+) -> std::ops::ControlFlow<()> {
+    observer.on_batch(&crate::api::BatchProgress {
+        generation,
+        batch_size,
+        evaluations: ctx.evals.load(Ordering::Relaxed),
+    })
+}
+
 /// Build and send one [`crate::api::GenerationProgress`] snapshot.
 #[allow(clippy::too_many_arguments)]
 fn emit_progress(
@@ -637,7 +682,7 @@ fn emit_progress(
     avg_aggregate: f64,
     stale_generations: usize,
     ctx: &EvalCtx<'_, '_>,
-) {
+) -> std::ops::ControlFlow<()> {
     let best = evaluated
         .iter()
         .min_by(|a, b| a.max_objective().partial_cmp(&b.max_objective()).unwrap());
@@ -654,7 +699,7 @@ fn emit_progress(
         plan_cache_hits,
         plan_cache_misses,
     };
-    observer.on_generation(&progress);
+    observer.on_generation(&progress)
 }
 
 #[cfg(test)]

@@ -4,12 +4,13 @@
 //! the Runtime").
 //!
 //! Format: a line-based text file (serde is unavailable offline), one
-//! solution per `solution` block. The current version is **v2**:
+//! solution per `solution` block. The current version is **v3**:
 //!
 //! ```text
-//! puzzle-solution v2
+//! puzzle-solution v3
 //! scenario <name>
 //! groups <m,m,...> <m,m,...>        (one token per group; `-` = empty group)
+//! hashes <h0> <h1> ...              (per-network structural Merkle root, hex)
 //! solution <index>
 //! objectives <o0> <o1> ...
 //! network <idx> zoo <zoo_idx> priority <p>
@@ -18,13 +19,17 @@
 //! end
 //! ```
 //!
-//! v2 (the `Arc<PlanSet>`-era format) adds the `groups` line — the model-
+//! v2 (the `Arc<PlanSet>`-era format) added the `groups` line — the model-
 //! group membership (network indices per group) — so a file cannot be
-//! replayed against a scenario whose group structure changed, not just one
-//! whose models changed. Plans are still *not* serialized: genomes are
-//! re-decoded through the profiler at load time, keeping files
-//! device-independent. **v1 files (no `groups` line) remain readable**;
-//! writing always produces v2.
+//! replayed against a scenario whose group structure changed. v3 (this PR)
+//! adds the `hashes` line: one [`merkle_hash_network`] fingerprint per
+//! network, validated on load against the scenario's actual networks. That
+//! closes the custom-model hole: [`crate::api::ScenarioSpec::Custom`]
+//! networks serialize the `CUSTOM_ZOO_INDEX` sentinel, which the zoo check
+//! cannot validate — the structural hash can. Plans are still *not*
+//! serialized: genomes are re-decoded through the profiler at load time,
+//! keeping files device-independent. **v1 (no `groups`) and v2 (no
+//! `hashes`) files remain readable**; writing always produces v3.
 
 use std::path::Path;
 
@@ -32,6 +37,7 @@ use crate::util::error::{Context, Result};
 use crate::{anyhow, bail};
 
 use crate::ga::{Genome, NetworkGenes};
+use crate::graph::merkle_hash_network;
 use crate::scenario::Scenario;
 use crate::Processor;
 
@@ -54,9 +60,9 @@ fn proc_from(c: char) -> Result<Processor> {
     })
 }
 
-/// Serialize a set of analyzer solutions for a scenario (v2 format).
+/// Serialize a set of analyzer solutions for a scenario (v3 format).
 pub fn serialize_solutions(scenario: &Scenario, solutions: &[Solution]) -> String {
-    let mut out = String::from("puzzle-solution v2\n");
+    let mut out = String::from("puzzle-solution v3\n");
     out.push_str(&format!("scenario {}\n", scenario.name));
     out.push_str("groups");
     for group in &scenario.groups {
@@ -69,6 +75,15 @@ pub fn serialize_solutions(scenario: &Scenario, solutions: &[Solution]) -> Strin
         } else {
             out.push_str(&members.join(","));
         }
+    }
+    out.push('\n');
+    // Per-network structural fingerprints (v3): validated on load, so a
+    // file cannot be replayed against structurally different models even
+    // when the zoo indices line up (custom models always do — they share
+    // the CUSTOM_ZOO_INDEX sentinel).
+    out.push_str("hashes");
+    for net in &scenario.networks {
+        out.push_str(&format!(" {}", merkle_hash_network(net)));
     }
     out.push('\n');
     for (si, sol) in solutions.iter().enumerate() {
@@ -111,10 +126,12 @@ pub fn parse_solutions(text: &str, scenario: &Scenario) -> Result<Vec<LoadedSolu
     let version: u32 = match header {
         "puzzle-solution v1" => 1,
         "puzzle-solution v2" => 2,
+        "puzzle-solution v3" => 3,
         other => bail!("unrecognized header {other:?}"),
     };
     let mut out = Vec::new();
     let mut groups_validated = version == 1; // v1 predates the groups line
+    let mut hashes_validated = version < 3; // v1/v2 predate the hashes line
     let mut current: Option<(Vec<NetworkGenes>, Vec<usize>, Vec<f64>)> = None;
     for line in lines {
         let mut it = line.split_whitespace();
@@ -142,6 +159,32 @@ pub fn parse_solutions(text: &str, scenario: &Scenario) -> Result<Vec<LoadedSolu
                     );
                 }
                 groups_validated = true;
+            }
+            Some("hashes") => {
+                if version < 3 {
+                    bail!("hashes directive in a v{version} file");
+                }
+                let declared: Vec<u64> = it
+                    .map(|tok| u64::from_str_radix(tok, 16).context("bad network hash"))
+                    .collect::<Result<_>>()?;
+                if declared.len() != scenario.networks.len() {
+                    bail!(
+                        "solution file declares {} network hashes, scenario has {} networks",
+                        declared.len(),
+                        scenario.networks.len()
+                    );
+                }
+                for (ni, (&h, net)) in declared.iter().zip(&scenario.networks).enumerate() {
+                    let actual = merkle_hash_network(net);
+                    if actual.0 != h {
+                        bail!(
+                            "network {ni} ({}) structural hash mismatch: solution was made \
+                             for {h:016x}, scenario network hashes to {actual}",
+                            net.name
+                        );
+                    }
+                }
+                hashes_validated = true;
             }
             Some("solution") => {
                 if current.is_some() {
@@ -212,7 +255,10 @@ pub fn parse_solutions(text: &str, scenario: &Scenario) -> Result<Vec<LoadedSolu
         bail!("unterminated solution block");
     }
     if !groups_validated && !out.is_empty() {
-        bail!("v2 file is missing its groups line");
+        bail!("v{version} file is missing its groups line");
+    }
+    if !hashes_validated && !out.is_empty() {
+        bail!("v{version} file is missing its hashes line");
     }
     Ok(out)
 }
@@ -248,8 +294,9 @@ mod tests {
     fn roundtrip_preserves_genomes_and_objectives() {
         let (scenario, sols) = analyzed();
         let text = serialize_solutions(&scenario, &sols);
-        assert!(text.starts_with("puzzle-solution v2\n"), "writes the current version");
+        assert!(text.starts_with("puzzle-solution v3\n"), "writes the current version");
         assert!(text.contains("\ngroups 0,1\n"), "{text:.120}");
+        assert!(text.contains("\nhashes "), "{text:.160}");
         let loaded = parse_solutions(&text, &scenario).unwrap();
         assert_eq!(loaded.len(), sols.len());
         for (a, b) in sols.iter().zip(&loaded) {
@@ -287,11 +334,68 @@ mod tests {
             "bogus header\nrest",
             "puzzle-solution v2\nend\n",
             "puzzle-solution v1\ngroups 0,1\nend\n", // v1 must not carry groups
+            "puzzle-solution v2\ngroups 0,1\nhashes 0\nend\n", // nor v2 hashes
             &text.replace("mapping N", "mapping X"),
-            &text[..text.len() - 5], // truncated
+            &text.replace("hashes ", "hashes f"), // corrupted fingerprint
+            &text[..text.len() - 5],              // truncated
         ] {
             assert!(parse_solutions(bad, &scenario).is_err(), "accepted: {bad:.60}");
         }
+        // A v3 file stripped of its hashes line is rejected outright.
+        let stripped: String = text
+            .lines()
+            .filter(|l| !l.starts_with("hashes"))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        let err = parse_solutions(&stripped, &scenario).unwrap_err();
+        assert!(err.to_string().contains("hashes"), "{err}");
+    }
+
+    #[test]
+    fn custom_networks_validate_by_structural_hash() {
+        use crate::api::{ScenarioSpec, SessionBuilder};
+        // Two custom scenarios with identical shape metadata (group layout,
+        // CUSTOM_ZOO_INDEX sentinels) but different network structure: only
+        // the v3 hash line can tell them apart.
+        let build_custom = |zoo_a: usize| {
+            let nets =
+                vec![crate::models::build_model(0, zoo_a), crate::models::build_model(1, 3)];
+            SessionBuilder::new(ScenarioSpec::Custom {
+                name: "cust".into(),
+                networks: nets,
+                groups: vec![vec![0, 1]],
+            })
+            .config(GaConfig { population: 10, max_generations: 3, ..GaConfig::quick(5) })
+            .build()
+            .unwrap()
+        };
+        let session = build_custom(0);
+        let analysis = session.run();
+        let scenario = session.scenario().as_ref();
+        let text = serialize_solutions(scenario, &analysis.pareto);
+        // Loads against the matching custom scenario…
+        let loaded = parse_solutions(&text, scenario).unwrap();
+        assert_eq!(loaded.len(), analysis.pareto.len());
+        // …and is rejected by a structurally different one, despite both
+        // declaring the same zoo sentinel in every slot.
+        let other = build_custom(2);
+        let err = parse_solutions(&text, other.scenario()).unwrap_err();
+        assert!(err.to_string().contains("hash mismatch"), "{err}");
+    }
+
+    #[test]
+    fn v2_fixture_still_loads() {
+        // Back-compat: a checked-in v2 file (groups line, no hashes line)
+        // parses against the matching scenario.
+        let text = include_str!("../../tests/fixtures/solutions_v2.txt");
+        let scenario = Scenario::from_groups("io", &[vec![0, 2]]);
+        let loaded = parse_solutions(text, &scenario).unwrap();
+        assert_eq!(loaded.len(), 1);
+        assert!(loaded[0].genome.is_valid(&scenario.networks));
+        assert_eq!(loaded[0].genome.priority, vec![1, 0]);
+        // And still rejects a regrouped scenario (the v2 guarantee).
+        let regrouped = Scenario::from_groups("io", &[vec![0], vec![2]]);
+        assert!(parse_solutions(text, &regrouped).is_err());
     }
 
     #[test]
@@ -307,8 +411,8 @@ mod tests {
         assert_eq!(sol.genome.priority, vec![1, 0]);
         assert_eq!(sol.objectives, vec![0.00375, 0.00411]);
         // And it migrates forward: re-serializing the loaded solution
-        // produces a v2 file (groups line included) that parses back to the
-        // same genome against the same scenario.
+        // produces a current-version file (groups + hashes lines included)
+        // that parses back to the same genome against the same scenario.
         let migrated = Solution {
             genome: sol.genome.clone(),
             objectives: sol.objectives.clone(),
@@ -317,9 +421,9 @@ mod tests {
                 compiled: Vec::new(),
             }),
         };
-        let v2_text = serialize_solutions(&scenario, &[migrated]);
-        assert!(v2_text.starts_with("puzzle-solution v2\n"));
-        let reloaded = parse_solutions(&v2_text, &scenario).unwrap();
+        let v3_text = serialize_solutions(&scenario, &[migrated]);
+        assert!(v3_text.starts_with("puzzle-solution v3\n"));
+        let reloaded = parse_solutions(&v3_text, &scenario).unwrap();
         assert_eq!(reloaded[0].genome, sol.genome);
         assert_eq!(reloaded[0].objectives, sol.objectives);
     }

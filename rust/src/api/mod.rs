@@ -37,6 +37,7 @@
 //! (including [`ScenarioSpec::Custom`] for networks outside the zoo); new
 //! execution backends through [`Analysis::deploy_with_engine`].
 
+use std::ops::ControlFlow;
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
@@ -53,11 +54,15 @@ use crate::models;
 use crate::perf::PerfModel;
 use crate::profiler::{DeviceProbe, Profiler};
 use crate::scenario::{multi_group_scenarios, single_group_scenarios, Scenario};
+use crate::serve;
 use crate::sim::compile_plans;
 use crate::util::error::Result;
 
 pub use crate::analyzer::{GaConfig, Solution};
-pub use crate::coordinator::RuntimeOptions;
+pub use crate::coordinator::{OverloadPolicy, RuntimeOptions};
+pub use crate::serve::{
+    ArrivalProcess, ClockMode, GroupLoad, LoadSpec, SaturationOptions, ServeReport,
+};
 
 /// Wall-seconds per simulated second used by [`Analysis::deploy`]'s default
 /// simulated engine (1 simulated ms replays in 50 µs).
@@ -205,16 +210,42 @@ impl GenerationProgress<'_> {
     }
 }
 
-/// Receives streamed per-generation progress during
+/// Mid-generation telemetry: one event per evaluated candidate batch (the
+/// initial population, then each generation's offspring) — finer-grained
+/// than [`GenerationProgress`], and the natural cancellation point for long
+/// searches.
+#[derive(Debug, Clone)]
+pub struct BatchProgress {
+    /// Generation the batch belongs to (0 = initial population).
+    pub generation: usize,
+    /// Candidates in this batch.
+    pub batch_size: usize,
+    /// Candidate evaluations so far (including local-search probes).
+    pub evaluations: usize,
+}
+
+/// Receives streamed search progress during
 /// [`AnalysisSession::run_observed`]. Implemented for any
-/// `FnMut(&GenerationProgress)` closure.
+/// `FnMut(&GenerationProgress)` closure (which never cancels).
+///
+/// Returning [`ControlFlow::Break`] from either hook cancels the search:
+/// the analyzer finishes the replacement step it is in and returns the
+/// current front with [`Analysis::cancelled`] set — long searches stay
+/// interruptible from a CLI or serving layer without losing the
+/// evaluations already paid for.
 pub trait Observer {
-    fn on_generation(&mut self, progress: &GenerationProgress<'_>);
+    fn on_generation(&mut self, progress: &GenerationProgress<'_>) -> ControlFlow<()>;
+
+    /// Per-batch (mid-generation) progress. Default: keep running.
+    fn on_batch(&mut self, _progress: &BatchProgress) -> ControlFlow<()> {
+        ControlFlow::Continue(())
+    }
 }
 
 impl<F: FnMut(&GenerationProgress<'_>)> Observer for F {
-    fn on_generation(&mut self, progress: &GenerationProgress<'_>) {
-        self(progress)
+    fn on_generation(&mut self, progress: &GenerationProgress<'_>) -> ControlFlow<()> {
+        self(progress);
+        ControlFlow::Continue(())
     }
 }
 
@@ -276,14 +307,21 @@ impl SessionBuilder {
             PerfSource::Calibrated => PerfModel::paper_calibrated(),
             PerfSource::Model(m) => m,
         });
-        Ok(AnalysisSession { scenario, perf, comm: self.comm, config: self.config })
+        // One profiler for the session's lifetime: the search fills its
+        // merkle-keyed profile DB and best-config memo, deployment and
+        // solution loading reuse them instead of re-deriving exec configs.
+        let probe: Arc<dyn DeviceProbe> = perf.clone();
+        let profiler = Arc::new(Profiler::shared(probe));
+        Ok(AnalysisSession { scenario, perf, profiler, comm: self.comm, config: self.config })
     }
 }
 
-/// An owned, ready-to-run analysis: scenario + device model + GA budget.
+/// An owned, ready-to-run analysis: scenario + device model + GA budget,
+/// sharing one [`Profiler`] across analyze → deploy.
 pub struct AnalysisSession {
     scenario: Arc<Scenario>,
     perf: Arc<PerfModel>,
+    profiler: Arc<Profiler<'static>>,
     comm: CommModel,
     config: GaConfig,
 }
@@ -297,6 +335,11 @@ impl AnalysisSession {
         &self.perf
     }
 
+    /// The session-shared device profiler (profile DB + best-config memo).
+    pub fn profiler(&self) -> &Arc<Profiler<'static>> {
+        &self.profiler
+    }
+
     pub fn config(&self) -> &GaConfig {
         &self.config
     }
@@ -306,29 +349,30 @@ impl AnalysisSession {
         self.run_observed(&mut null_observer())
     }
 
-    /// Run the search, streaming per-generation progress through `observer`.
+    /// Run the search, streaming per-generation and per-batch progress
+    /// through `observer`; a `Break` from either hook cancels the search
+    /// (see [`Observer`]).
     pub fn run_observed(&self, observer: &mut dyn Observer) -> Analysis {
         let mut engine = StaticAnalyzer::engine(&self.scenario, &self.perf, self.config.clone());
         engine.comm = self.comm.clone();
-        let result = engine.run_observed(observer);
+        let result = engine.run_observed_with(&self.profiler, observer);
         self.analysis_of(result)
     }
 
-    /// Load previously saved solutions (v1 or v2 files) back into a
-    /// deployable [`Analysis`]: genomes are validated against this session's
-    /// scenario and re-decoded through the profiler, so the file stays
-    /// device-independent.
+    /// Load previously saved solutions (v1–v3 files; v3 validates
+    /// per-network structural hashes) back into a deployable [`Analysis`]:
+    /// genomes are validated against this session's scenario and re-decoded
+    /// through the session profiler, so the file stays device-independent.
     pub fn load_solutions(&self, path: &Path) -> Result<Analysis> {
         let loaded = solution_io::load_solutions(path, &self.scenario)?;
         if loaded.is_empty() {
             return Err(anyhow!("no solutions in {}", path.display()));
         }
-        let probe: &dyn DeviceProbe = self.perf.as_ref();
-        let profiler = Profiler::new(probe);
         let pareto = loaded
             .into_iter()
             .map(|ls| {
-                let plans = decode(&self.scenario.networks, &ls.genome, &profiler, &self.comm);
+                let plans =
+                    decode(&self.scenario.networks, &ls.genome, &self.profiler, &self.comm);
                 let compiled = compile_plans(&plans);
                 Solution {
                     genome: ls.genome,
@@ -340,6 +384,7 @@ impl AnalysisSession {
         Ok(Analysis {
             scenario: self.scenario.clone(),
             perf: self.perf.clone(),
+            profiler: self.profiler.clone(),
             pareto,
             generations_run: 0,
             evaluations: 0,
@@ -347,6 +392,7 @@ impl AnalysisSession {
             profile_measurements: 0,
             plan_cache_hits: 0,
             plan_cache_misses: 0,
+            cancelled: false,
         })
     }
 
@@ -354,6 +400,7 @@ impl AnalysisSession {
         Analysis {
             scenario: self.scenario.clone(),
             perf: self.perf.clone(),
+            profiler: self.profiler.clone(),
             pareto: result.pareto,
             generations_run: result.generations_run,
             evaluations: result.evaluations,
@@ -361,16 +408,20 @@ impl AnalysisSession {
             profile_measurements: result.profile_measurements,
             plan_cache_hits: result.plan_cache_hits,
             plan_cache_misses: result.plan_cache_misses,
+            cancelled: result.cancelled,
         }
     }
 }
 
 /// Analysis output: the Pareto front (plan sets `Arc`-shared), search
-/// telemetry, and the owned context needed to deploy any solution.
+/// telemetry, and the owned context needed to deploy any solution —
+/// including the session's profiler, whose best-config memo deployment
+/// reuses.
 #[derive(Clone)]
 pub struct Analysis {
     scenario: Arc<Scenario>,
     perf: Arc<PerfModel>,
+    profiler: Arc<Profiler<'static>>,
     pub pareto: Vec<Solution>,
     pub generations_run: usize,
     pub evaluations: usize,
@@ -378,6 +429,9 @@ pub struct Analysis {
     pub profile_measurements: u64,
     pub plan_cache_hits: u64,
     pub plan_cache_misses: u64,
+    /// True when the search was cancelled through an [`Observer`] hook: the
+    /// front reflects the population at cancellation, not convergence.
+    pub cancelled: bool,
 }
 
 impl Analysis {
@@ -387,6 +441,11 @@ impl Analysis {
 
     pub fn perf(&self) -> &Arc<PerfModel> {
         &self.perf
+    }
+
+    /// The session-shared profiler backing this analysis.
+    pub fn profiler(&self) -> &Arc<Profiler<'static>> {
+        &self.profiler
     }
 
     /// Index of the solution minimizing the maximum (worst-group) average
@@ -415,8 +474,10 @@ impl Analysis {
     }
 
     /// Materialize runtime [`NetworkSolution`]s for one Pareto solution:
-    /// partitions from the genome, per-subgraph exec configs from the device
-    /// model, priorities from the priority chromosome.
+    /// partitions from the genome, per-subgraph exec configs from the
+    /// session profiler's **best-config memo** (every Pareto genome was
+    /// decoded through it during the search, so this is a pure memo read —
+    /// no duplicate config scan), priorities from the priority chromosome.
     pub fn runtime_solutions(&self, solution_idx: usize) -> Result<Vec<NetworkSolution>> {
         let sol = self.pareto.get(solution_idx).ok_or_else(|| {
             anyhow!(
@@ -435,7 +496,7 @@ impl Analysis {
                 let configs = part
                     .subgraphs
                     .iter()
-                    .map(|sg| self.perf.best_config_for(net, &sg.layers, sg.processor).0)
+                    .map(|sg| self.profiler.best_on(net, sg, sg.processor).0)
                     .collect();
                 NetworkSolution {
                     network: Arc::new(net.clone()),
@@ -510,6 +571,20 @@ impl Deployment {
     pub fn group_members(&self, group: usize) -> &[usize] {
         assert!(group < self.groups.len(), "group {group} out of range ({} groups)", self.groups.len());
         &self.groups[group]
+    }
+
+    /// Push an **open-loop load** through this deployment's runtime: per-
+    /// group arrival processes (periodic / Poisson / bursty), deadline
+    /// accounting, and an overload policy, summarized as a [`ServeReport`].
+    ///
+    /// [`ClockMode::Virtual`] drives the coordinator's deterministic event
+    /// loop — deploy with `deploy_sim(.., time_scale = 0.0, ..)` so the
+    /// engine never sleeps and the test runs at memo speed.
+    /// [`ClockMode::Wall`] schedules arrivals in real time at this
+    /// deployment's time scale (spec times are simulated seconds; the
+    /// report converts back).
+    pub fn serve_load(&mut self, spec: &LoadSpec) -> ServeReport {
+        serve::run_load(&mut self.coordinator, &self.groups, spec, self.time_scale)
     }
 
     /// Submit `requests` synchronized group requests, pumping completions
@@ -627,6 +702,65 @@ mod tests {
             .unwrap();
         let reference = single_group_scenarios(23);
         assert_eq!(session.scenario().zoo_indices, reference[2].zoo_indices);
+    }
+
+    #[test]
+    fn observer_cancellation_returns_partial_front() {
+        struct StopAfterBatches {
+            batches: usize,
+        }
+        impl Observer for StopAfterBatches {
+            fn on_generation(&mut self, _p: &GenerationProgress<'_>) -> ControlFlow<()> {
+                ControlFlow::Continue(())
+            }
+            fn on_batch(&mut self, _p: &BatchProgress) -> ControlFlow<()> {
+                self.batches += 1;
+                if self.batches >= 2 { ControlFlow::Break(()) } else { ControlFlow::Continue(()) }
+            }
+        }
+        let session = SessionBuilder::new(ScenarioSpec::single_group("cancel", vec![0, 1]))
+            .config(GaConfig { max_generations: 30, patience: 30, ..GaConfig::quick(9) })
+            .build()
+            .unwrap();
+        let mut obs = StopAfterBatches { batches: 0 };
+        let analysis = session.run_observed(&mut obs);
+        assert!(analysis.cancelled, "Break must mark the analysis cancelled");
+        assert!(!analysis.pareto.is_empty(), "partial front still usable");
+        assert_eq!(analysis.generations_run, 1, "stopped at the first offspring batch");
+        // The partial front still deploys.
+        let mut dep = analysis
+            .deploy_sim(analysis.best_index(), RuntimeOptions::default(), 0.0, false, 3)
+            .unwrap();
+        assert_eq!(dep.serve(0, 2, Duration::from_secs(10)), 2);
+        dep.shutdown();
+    }
+
+    #[test]
+    fn deploy_reuses_session_profiler_memo() {
+        let session = SessionBuilder::new(ScenarioSpec::single_group("memo", vec![0, 2]))
+            .config(GaConfig::quick(21))
+            .build()
+            .unwrap();
+        let analysis = session.run();
+        // Every Pareto genome was decoded through the session profiler
+        // during the search, so materializing runtime solutions is a pure
+        // memo read: hits grow, measurements do not.
+        let (hits_before, misses_before) = analysis.profiler().stats();
+        let sols = analysis.runtime_solutions(analysis.best_index()).unwrap();
+        assert_eq!(sols.len(), 2);
+        let (hits_after, misses_after) = analysis.profiler().stats();
+        assert_eq!(
+            misses_after, misses_before,
+            "deployment re-measured configs instead of reusing the session memo"
+        );
+        assert!(hits_after > hits_before, "deployment bypassed the profiler");
+        // And the chosen configs match the device model's exhaustive answer.
+        for (net, sol) in session.scenario().networks.iter().zip(&sols) {
+            for (sg, cfg) in sol.partition.subgraphs.iter().zip(&sol.configs) {
+                let expect = session.perf().best_config_for(net, &sg.layers, sg.processor).0;
+                assert_eq!(*cfg, expect);
+            }
+        }
     }
 
     #[test]

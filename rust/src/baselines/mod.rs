@@ -10,6 +10,7 @@
 //!   characterization (§6.1, §6.3).
 
 use crate::comm::CommModel;
+use crate::coordinator::NetworkSolution;
 use crate::ga::{decode, fast_non_dominated_sort, Genome, NetworkGenes};
 use crate::perf::PerfModel;
 use crate::profiler::Profiler;
@@ -23,6 +24,19 @@ pub struct BaselineSolution {
     pub genome: Genome,
     pub plans: Vec<ExecutionPlan>,
     pub objectives: Vec<f64>,
+}
+
+impl BaselineSolution {
+    /// Materialize this baseline for the runtime — the entry into the same
+    /// arrival-driven serving harness ([`crate::serve`]) Puzzle's Pareto
+    /// solutions go through, so saturation comparisons are apples-to-apples.
+    pub fn runtime_solutions(
+        &self,
+        scenario: &Scenario,
+        perf: &PerfModel,
+    ) -> Vec<NetworkSolution> {
+        crate::serve::materialize_solutions(&scenario.networks, &self.genome, perf)
+    }
 }
 
 fn eval_mapping(

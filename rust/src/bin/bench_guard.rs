@@ -87,7 +87,7 @@ fn main() {
     }
 
     // Layer 2: same-run invariants (machine-independent).
-    let invariants: [(&str, &str, f64); 3] = [
+    let invariants: [(&str, &str, f64); 4] = [
         // Parallel must not lose to serial by more than scheduling jitter
         // (on a single-core runner both take the same path).
         ("analyzer/parallel_generation", "analyzer/serial_generation", 1.10),
@@ -95,6 +95,9 @@ fn main() {
         ("ga/decode_memoized", "ga/decode_genome(cached profiles)", 1.00),
         // Reused-workspace simulation must not lose to fresh allocation.
         ("sim/simulate_reused_workspace", "sim/simulate_6models_20req", 1.25),
+        // The virtual-clock load test replays the same schedule the wall
+        // driver sleeps through: it must never be slower.
+        ("serve/loadtest_virtual_clock", "serve/loadtest_wall_clock", 1.00),
     ];
     for (fast, slow, margin) in invariants {
         match (get(&fresh, fast), get(&fresh, slow)) {

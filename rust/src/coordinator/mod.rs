@@ -1,23 +1,49 @@
 //! The Coordinator (paper §5.1–5.2, Fig 9): external interface of the
-//! Runtime. It queues client inference requests, finds schedulable subgraphs
-//! whose data dependencies are resolved, dispatches tasks to the per-
-//! processor Workers (in priority order — the pseudo-preemption mechanism),
-//! collects completions, and returns results when every subgraph of a
-//! request has finished.
+//! Runtime. It admits client inference requests (open-loop arrivals with
+//! optional SLO deadlines), holds schedulable subgraphs in per-processor
+//! **priority-ordered ready queues**, dispatches one in-flight task per
+//! Worker (the pseudo-preemption mechanism: the next subgraph is chosen from
+//! the heap at completion time, so a high-priority subgraph never waits
+//! behind queued low-priority work), collects completions, and records a
+//! [`ServedRequest`] — with deadline/violation accounting — when every
+//! subgraph of a group request has finished.
+//!
+//! ## Event-driven serving (this PR)
+//!
+//! The former submit-then-pump loop (submit everything, then drain) became an
+//! event-driven core with two drivers:
+//!
+//! * **wall clock** — [`Coordinator::pump`]/[`Coordinator::poll`] dispatch
+//!   ready work to idle workers and drain completions; timestamps come from
+//!   the pluggable [`crate::serve::Clock`].
+//! * **virtual clock** — [`Coordinator::run_virtual`] runs a deterministic
+//!   discrete-event schedule *through the real Coordinator/Worker/Engine
+//!   stack*: arrivals release requests at their virtual timestamps, each
+//!   dispatched task executes immediately on its worker (one task in flight
+//!   system-wide, so engine noise draws are sequential and seed-
+//!   deterministic) and its reported duration schedules the completion
+//!   event. Same seed ⇒ bit-identical [`ServedRequest`] logs.
+//!
+//! Overload is governed by [`OverloadPolicy`]: queue everything (the paper's
+//! implicit behavior) or drop arrivals past an in-flight cap (admission
+//! control for sustained-overload scenarios).
 
 mod request;
 
 pub use request::{CompletionMsg, GroupRequest, RequestId, TaskMsg, TensorInput};
 
-use std::collections::HashMap;
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::{BinaryHeap, HashMap};
 use std::sync::Arc;
 use std::time::Instant;
 
 use std::sync::mpsc::{Receiver, Sender};
 
+use crate::comm::CommModel;
 use crate::engine::Engine;
 use crate::graph::{Network, Partition, Subgraph, SubgraphId};
 use crate::mem::{SharedArena, TensorPool};
+use crate::serve::{Arrival, Clock, VirtualClock, WallClock};
 use crate::worker::Worker;
 use crate::{DataType, ExecConfig};
 
@@ -50,25 +76,146 @@ impl Default for RuntimeOptions {
     }
 }
 
+/// What to do with an arriving group request when the runtime is loaded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverloadPolicy {
+    /// Admit every arrival; the backlog may grow without bound (the paper's
+    /// implicit closed-world behavior, and the default).
+    Queue,
+    /// Drop an arriving group request outright when `max_inflight` group
+    /// requests are already admitted and unfinished (admission control).
+    DropAfter { max_inflight: usize },
+}
+
 /// Per-request live state.
 struct LiveRequest {
     /// Remaining dependency count per subgraph.
     pending_deps: Vec<usize>,
     /// Completed subgraphs.
     done: Vec<bool>,
+    /// Earliest time each subgraph's cross-subgraph inputs are fully
+    /// transferred (virtual-clock runs; stays 0 under the wall clock, where
+    /// staging costs are paid in real time).
+    data_at: Vec<f64>,
     remaining: usize,
 }
 
-/// Record of one served group request (all member networks done).
+/// Progress of one admitted group request.
+struct GroupProgress {
+    outstanding: usize,
+    arrival: f64,
+    deadline: Option<f64>,
+}
+
+/// Record of one served group request (all member networks done). All
+/// timestamps are clock seconds (wall seconds under the wall clock,
+/// simulated seconds under the virtual clock).
 #[derive(Debug, Clone)]
 pub struct ServedRequest {
     pub group: usize,
     pub request: u64,
-    /// Makespan: max finish over member networks − submission, seconds.
+    /// Open-loop arrival timestamp of the request.
+    pub arrival: f64,
+    /// Timestamp of the last member network finishing.
+    pub completion: f64,
+    /// Makespan: max finish over member networks − arrival, seconds.
     pub makespan: f64,
+    /// Relative SLO deadline (= the group's period in the paper's protocol),
+    /// when the load declared one.
+    pub deadline: Option<f64>,
+    /// `makespan > deadline` (always false for deadline-less requests).
+    pub violated: bool,
 }
 
-/// The Coordinator. Owns the workers and the dispatch loop state.
+/// Record of a group request rejected by [`OverloadPolicy::DropAfter`].
+#[derive(Debug, Clone)]
+pub struct DroppedRequest {
+    pub group: usize,
+    pub request: u64,
+    pub arrival: f64,
+}
+
+/// A schedulable subgraph waiting for its processor's worker. Max-heap
+/// order = dispatch precedence: lowest solution priority value first, FIFO
+/// (insertion order) among equals.
+struct ReadyTask {
+    precedence: usize,
+    order: u64,
+    group: usize,
+    seq: u64,
+    net_idx: usize,
+    sg: SubgraphId,
+}
+
+impl PartialEq for ReadyTask {
+    fn eq(&self, other: &Self) -> bool {
+        self.precedence == other.precedence && self.order == other.order
+    }
+}
+impl Eq for ReadyTask {}
+impl PartialOrd for ReadyTask {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for ReadyTask {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        // Reversed: BinaryHeap pops the max, we want the smallest
+        // (precedence, insertion order).
+        other
+            .precedence
+            .cmp(&self.precedence)
+            .then_with(|| other.order.cmp(&self.order))
+    }
+}
+
+/// A subgraph made schedulable by a completion, with the time its inputs
+/// are fully transferred (≥ the completion time under the virtual clock).
+struct ReadySub {
+    group: usize,
+    seq: u64,
+    net_idx: usize,
+    sg: SubgraphId,
+    ready_at: f64,
+}
+
+/// Virtual-run event: arrival, data-ready, or task completion.
+struct VEvent {
+    time: f64,
+    order: u64,
+    kind: VEventKind,
+}
+
+enum VEventKind {
+    Arrival { group: usize, deadline: Option<f64> },
+    Ready { group: usize, seq: u64, net_idx: usize, sg: SubgraphId },
+    Completion { msg: CompletionMsg },
+}
+
+impl PartialEq for VEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.order == other.order
+    }
+}
+impl Eq for VEvent {}
+impl PartialOrd for VEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for VEvent {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        // Reversed (min-heap on (time, insertion order)); event times are
+        // always finite.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(CmpOrdering::Equal)
+            .then_with(|| other.order.cmp(&self.order))
+    }
+}
+
+/// The Coordinator. Owns the workers and the event-driven dispatch state.
 pub struct Coordinator {
     solutions: Vec<NetworkSolution>,
     workers: Vec<Worker>,
@@ -77,20 +224,30 @@ pub struct Coordinator {
     pool: TensorPool,
     pub arena: SharedArena,
     options: RuntimeOptions,
+    clock: Arc<dyn Clock>,
+    policy: OverloadPolicy,
     /// request key = (group, request_seq, network) -> live state.
     live: HashMap<(usize, u64, usize), LiveRequest>,
-    /// group request -> (outstanding networks, submit instant, last finish).
-    group_progress: HashMap<(usize, u64), (usize, Instant, Option<Instant>)>,
+    /// group request -> admission bookkeeping.
+    group_progress: HashMap<(usize, u64), GroupProgress>,
     /// Cross-subgraph tensors in flight: (group, seq, network, src layer) ->
     /// published slice. Entries are dropped when the request completes.
     tensors: HashMap<(usize, u64, usize, usize), crate::mem::SharedSlice>,
+    /// Per-processor priority-ordered ready queues.
+    ready: Vec<BinaryHeap<ReadyTask>>,
+    /// One in-flight task per worker (pseudo-preemption granularity).
+    busy: Vec<bool>,
+    ready_order: u64,
     served: Vec<ServedRequest>,
+    dropped: Vec<DroppedRequest>,
     next_request: u64,
 }
 
 impl Coordinator {
     /// Initialize the runtime: register solutions, spawn workers
-    /// (paper §5.2 "Initialization").
+    /// (paper §5.2 "Initialization"). The clock defaults to wall time;
+    /// [`Coordinator::run_virtual`] swaps in a virtual clock for the
+    /// duration of a deterministic run.
     pub fn new(
         solutions: Vec<NetworkSolution>,
         engine: Arc<dyn Engine>,
@@ -111,6 +268,7 @@ impl Coordinator {
         }
         let workers = crate::worker::spawn_all(&engine, &pool, &completion_tx);
         let arena = SharedArena::new(options.zero_copy);
+        let n_workers = workers.len();
         Coordinator {
             solutions,
             workers,
@@ -119,43 +277,140 @@ impl Coordinator {
             pool,
             arena,
             options,
+            clock: Arc::new(WallClock::new()),
+            policy: OverloadPolicy::Queue,
             live: HashMap::new(),
             group_progress: HashMap::new(),
             tensors: HashMap::new(),
+            ready: (0..n_workers).map(|_| BinaryHeap::new()).collect(),
+            busy: vec![false; n_workers],
+            ready_order: 0,
             served: Vec::new(),
+            dropped: Vec::new(),
             next_request: 0,
         }
     }
 
-    /// Submit one synchronized group request: every network in `members`
-    /// gets an inference request with the same input timestamp (paper's
-    /// model-group semantics). Returns the request sequence number.
+    /// Replace the runtime clock (timestamps of subsequent admissions and
+    /// completions).
+    pub fn set_clock(&mut self, clock: Arc<dyn Clock>) {
+        self.clock = clock;
+    }
+
+    /// Current clock reading, seconds.
+    pub fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    /// Set the admission policy for subsequent arrivals.
+    pub fn set_overload_policy(&mut self, policy: OverloadPolicy) {
+        self.policy = policy;
+    }
+
+    /// The current admission policy.
+    pub fn overload_policy(&self) -> OverloadPolicy {
+        self.policy
+    }
+
+    /// Submit one synchronized group request *now* with no deadline: every
+    /// network in `members` gets an inference request with the same input
+    /// timestamp (paper's model-group semantics). Returns the request
+    /// sequence number (the request may still be dropped under
+    /// [`OverloadPolicy::DropAfter`]).
     pub fn submit_group(&mut self, group: usize, members: &[usize]) -> u64 {
+        let now = self.clock.now();
+        let seq = self.next_request;
+        self.submit_group_at(group, members, now, None);
+        seq
+    }
+
+    /// Admission (Fig 9 step ①, open-loop): a group request arriving at
+    /// `arrival` (clock seconds) with an optional relative SLO deadline.
+    /// Under [`OverloadPolicy::DropAfter`] an arrival past the in-flight cap
+    /// is recorded in [`Coordinator::dropped`] and rejected. Returns the
+    /// sequence number of an admitted request.
+    pub fn submit_group_at(
+        &mut self,
+        group: usize,
+        members: &[usize],
+        arrival: f64,
+        deadline: Option<f64>,
+    ) -> Option<u64> {
         let seq = self.next_request;
         self.next_request += 1;
-        let now = Instant::now();
-        self.group_progress.insert((group, seq), (members.len(), now, None));
+        if let OverloadPolicy::DropAfter { max_inflight } = self.policy {
+            if self.group_progress.len() >= max_inflight {
+                self.dropped.push(DroppedRequest { group, request: seq, arrival });
+                return None;
+            }
+        }
+        self.group_progress.insert(
+            (group, seq),
+            GroupProgress { outstanding: members.len(), arrival, deadline },
+        );
         for &net_idx in members {
-            let sol = self.solutions[net_idx].clone();
-            let n_sg = sol.partition.subgraphs.len();
+            let n_sg = self.solutions[net_idx].partition.subgraphs.len();
             let mut pending: Vec<usize> = vec![0; n_sg];
-            for sg in &sol.partition.subgraphs {
+            for sg in &self.solutions[net_idx].partition.subgraphs {
                 pending[sg.id.0] = sg.deps.len();
             }
             let live = LiveRequest {
                 pending_deps: pending,
                 done: vec![false; n_sg],
+                data_at: vec![0.0; n_sg],
                 remaining: n_sg,
             };
             self.live.insert((group, seq, net_idx), live);
-            // Dispatch all root subgraphs immediately (paper Fig 9 step ③).
-            for sg in &sol.partition.subgraphs {
-                if sg.deps.is_empty() {
-                    self.dispatch(&sol, group, seq, net_idx, sg.id);
-                }
+            // Root subgraphs are schedulable immediately (Fig 9 step ②);
+            // they wait in the priority queues for an idle worker.
+            let roots: Vec<SubgraphId> = self.solutions[net_idx]
+                .partition
+                .subgraphs
+                .iter()
+                .filter(|sg| sg.deps.is_empty())
+                .map(|sg| sg.id)
+                .collect();
+            for sg in roots {
+                self.enqueue_ready(group, seq, net_idx, sg);
             }
         }
-        seq
+        Some(seq)
+    }
+
+    /// Put a schedulable subgraph into its processor's ready queue.
+    fn enqueue_ready(&mut self, group: usize, seq: u64, net_idx: usize, sg: SubgraphId) {
+        let sol = &self.solutions[net_idx];
+        let p = sol.configs[sg.0].processor.index();
+        let order = self.ready_order;
+        self.ready_order += 1;
+        self.ready[p].push(ReadyTask {
+            precedence: sol.priority,
+            order,
+            group,
+            seq,
+            net_idx,
+            sg,
+        });
+    }
+
+    /// Dispatch ready subgraphs to idle workers, highest priority first
+    /// (Fig 9 step ③). One task in flight per worker: the next choice is
+    /// made at completion time, which is what makes the priority order a
+    /// pseudo-preemption mechanism. Returns the number dispatched.
+    pub fn dispatch_ready(&mut self) -> usize {
+        let mut dispatched = 0;
+        for p in 0..self.workers.len() {
+            if self.busy[p] {
+                continue;
+            }
+            if let Some(t) = self.ready[p].pop() {
+                let sol = self.solutions[t.net_idx].clone();
+                self.dispatch(&sol, t.group, t.seq, t.net_idx, t.sg);
+                self.busy[p] = true;
+                dispatched += 1;
+            }
+        }
+        dispatched
     }
 
     fn dispatch(&self, sol: &NetworkSolution, group: usize, seq: u64, net_idx: usize, sg: SubgraphId) {
@@ -214,15 +469,21 @@ impl Coordinator {
         self.workers[config.processor.index()].submit(task);
     }
 
-    /// Pump completions until all outstanding requests are served or the
-    /// timeout elapses. Returns the number of completions processed.
+    /// Wall-clock driver: dispatch and pump completions until all admitted
+    /// requests are served or the timeout elapses. Returns the number of
+    /// completions processed.
     pub fn pump(&mut self, timeout: std::time::Duration) -> usize {
         let deadline = Instant::now() + timeout;
         let mut processed = 0;
+        self.dispatch_ready();
         while !self.live.is_empty() && Instant::now() < deadline {
             match self.completion_rx.recv_timeout(std::time::Duration::from_millis(20)) {
                 Ok(msg) => {
-                    self.handle_completion(msg);
+                    let now = self.clock.now();
+                    for r in self.handle_completion(msg, now, None) {
+                        self.enqueue_ready(r.group, r.seq, r.net_idx, r.sg);
+                    }
+                    self.dispatch_ready();
                     processed += 1;
                 }
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
@@ -232,14 +493,214 @@ impl Coordinator {
         processed
     }
 
-    fn handle_completion(&mut self, msg: CompletionMsg) {
+    /// Finish any outstanding work (dispatch + drain under `timeout`) so
+    /// the runtime is idle: no live requests, no busy workers, no pending
+    /// completions in the channel. Load drivers call this before taking a
+    /// served-log snapshot, so stragglers from earlier traffic are never
+    /// attributed to a new load's report. Returns completions processed.
+    pub fn settle(&mut self, timeout: std::time::Duration) -> usize {
+        if self.live.is_empty() && !self.busy.iter().any(|&b| b) {
+            return 0;
+        }
+        self.pump(timeout)
+    }
+
+    /// Non-blocking wall-clock step: dispatch ready work, drain any
+    /// already-available completions. Returns completions processed.
+    pub fn poll(&mut self) -> usize {
+        let mut processed = 0;
+        loop {
+            self.dispatch_ready();
+            match self.completion_rx.try_recv() {
+                Ok(msg) => {
+                    let now = self.clock.now();
+                    for r in self.handle_completion(msg, now, None) {
+                        self.enqueue_ready(r.group, r.seq, r.net_idx, r.sg);
+                    }
+                    processed += 1;
+                }
+                Err(_) => break,
+            }
+        }
+        processed
+    }
+
+    /// Deterministic virtual-clock run: an event-driven schedule of
+    /// open-loop `arrivals` through the real Coordinator/Worker/Engine
+    /// stack. `groups[g]` are the member network indices of group `g`;
+    /// `comm` prices cross-subgraph tensor transfers into dependent ready
+    /// times (the wall path pays them as real staging time instead).
+    ///
+    /// The backing engine must not sleep (`SimEngine` time scale 0) for the
+    /// run to be fast; correctness only needs the engine's reported
+    /// durations. Exactly one task is in flight at any instant, so engine
+    /// noise draws happen in a deterministic order: same seed ⇒
+    /// bit-identical [`ServedRequest`] logs. Returns the number of group
+    /// requests completed during the run.
+    pub fn run_virtual(
+        &mut self,
+        arrivals: &[Arrival],
+        groups: &[Vec<usize>],
+        comm: &CommModel,
+    ) -> usize {
+        // Settle any in-flight work from earlier (e.g. a timed-out wall
+        // pump): a stale completion in the channel must not be paired with
+        // a virtual dispatch, or every subsequent event carries the wrong
+        // request's timing.
+        self.settle(std::time::Duration::from_secs(30));
+        let vclock = Arc::new(VirtualClock::new());
+        let vdyn: Arc<dyn Clock> = vclock.clone();
+        let prev_clock = std::mem::replace(&mut self.clock, vdyn);
+        let served_before = self.served.len();
+
+        let mut events: BinaryHeap<VEvent> = BinaryHeap::new();
+        let mut order: u64 = 0;
+        for a in arrivals {
+            events.push(VEvent {
+                time: a.time,
+                order,
+                kind: VEventKind::Arrival { group: a.group, deadline: a.deadline },
+            });
+            order += 1;
+        }
+
+        while let Some(ev) = events.pop() {
+            let now = ev.time;
+            vclock.advance_to(now);
+            self.process_virtual_event(ev, now, comm, groups, &mut events, &mut order);
+            // Drain co-temporal events before dispatching, so a completion
+            // and a ready edge at the same instant cannot race the priority
+            // decision.
+            while events.peek().is_some_and(|e| e.time == now) {
+                let ev = events.pop().expect("peeked event");
+                self.process_virtual_event(ev, now, comm, groups, &mut events, &mut order);
+            }
+            // Dispatch phase: fill every idle worker, one task at a time,
+            // awaiting each completion immediately (the engine does not
+            // sleep) and scheduling it as a future event.
+            for p in 0..self.workers.len() {
+                if self.busy[p] {
+                    continue;
+                }
+                if let Some(t) = self.ready[p].pop() {
+                    let sol = self.solutions[t.net_idx].clone();
+                    self.dispatch(&sol, t.group, t.seq, t.net_idx, t.sg);
+                    self.busy[p] = true;
+                    match self
+                        .completion_rx
+                        .recv_timeout(std::time::Duration::from_secs(30))
+                    {
+                        Ok(msg) => {
+                            let finish = now + msg.elapsed.max(0.0);
+                            events.push(VEvent {
+                                time: finish,
+                                order,
+                                kind: VEventKind::Completion { msg },
+                            });
+                            order += 1;
+                        }
+                        Err(_) => {
+                            // Worker died or stalled: abandon the run with
+                            // whatever completed so far.
+                            self.busy[p] = false;
+                            self.clock = prev_clock;
+                            return self.served.len() - served_before;
+                        }
+                    }
+                }
+            }
+        }
+
+        self.clock = prev_clock;
+        self.served.len() - served_before
+    }
+
+    fn process_virtual_event(
+        &mut self,
+        ev: VEvent,
+        now: f64,
+        comm: &CommModel,
+        groups: &[Vec<usize>],
+        events: &mut BinaryHeap<VEvent>,
+        order: &mut u64,
+    ) {
+        match ev.kind {
+            VEventKind::Arrival { group, deadline } => {
+                self.submit_group_at(group, &groups[group], now, deadline);
+            }
+            VEventKind::Ready { group, seq, net_idx, sg } => {
+                self.enqueue_ready(group, seq, net_idx, sg);
+            }
+            VEventKind::Completion { msg } => {
+                for r in self.handle_completion(msg, now, Some(comm)) {
+                    if r.ready_at > now {
+                        events.push(VEvent {
+                            time: r.ready_at,
+                            order: *order,
+                            kind: VEventKind::Ready {
+                                group: r.group,
+                                seq: r.seq,
+                                net_idx: r.net_idx,
+                                sg: r.sg,
+                            },
+                        });
+                        *order += 1;
+                    } else {
+                        self.enqueue_ready(r.group, r.seq, r.net_idx, r.sg);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Cost of moving the tensors crossing `from → to` of one network
+    /// (virtual-clock runs; the wall path stages them in real time).
+    fn transfer_delay(
+        &self,
+        sol: &NetworkSolution,
+        from: SubgraphId,
+        to: SubgraphId,
+        comm: &CommModel,
+    ) -> f64 {
+        let mut total = 0.0;
+        for &e in &sol.partition.cut_edges {
+            let edge = sol.network.edge(e);
+            if sol.partition.owner_of(edge.src) == from && sol.partition.owner_of(edge.dst) == to {
+                let bytes = sol.network.layer(edge.src).out_bytes(DataType::Fp16);
+                let same = sol.configs[from.0].processor == sol.configs[to.0].processor;
+                total += if self.options.zero_copy {
+                    comm.transfer_cost_zero_copy(bytes, same)
+                } else {
+                    comm.transfer_cost(bytes, same)
+                };
+            }
+        }
+        total
+    }
+
+    /// Process one completion at clock time `now` (Fig 9 steps ④–⑥): free
+    /// the worker, publish boundary tensors, resolve dependents, and record
+    /// the [`ServedRequest`] when the group's last network finishes. Returns
+    /// the dependents that became schedulable (with their data-ready times
+    /// when `comm` prices transfers — virtual mode).
+    fn handle_completion(
+        &mut self,
+        msg: CompletionMsg,
+        now: f64,
+        comm: Option<&CommModel>,
+    ) -> Vec<ReadySub> {
         let (group, seq, net_idx) = unpack_request(msg.request);
-        let now = Instant::now();
+        // The worker that ran this subgraph is idle again, whether or not
+        // the request is still live.
+        let proc = self.solutions[net_idx].configs[msg.subgraph.0].processor.index();
+        self.busy[proc] = false;
+
+        let mut newly_ready = Vec::new();
         let Some(live) = self.live.get_mut(&(group, seq, net_idx)) else {
-            return;
+            return newly_ready;
         };
         if live.done[msg.subgraph.0] {
-            return; // duplicate (should not happen; defensive)
+            return newly_ready; // duplicate (should not happen; defensive)
         }
         live.done[msg.subgraph.0] = true;
         live.remaining -= 1;
@@ -283,19 +744,27 @@ impl Coordinator {
             }
         }
 
-        // Resolve dependents; dispatch the newly schedulable (Fig 9 ② → ③).
-        let mut to_dispatch: Vec<SubgraphId> = Vec::new();
+        // Resolve dependents (Fig 9 ② → ③): account when their inputs land,
+        // collect the newly schedulable.
         for sg in &sol.partition.subgraphs {
             if sg.deps.contains(&msg.subgraph) {
+                let data_at = comm
+                    .map(|c| now + self.transfer_delay(&sol, msg.subgraph, sg.id, c))
+                    .unwrap_or(now);
                 let live = self.live.get_mut(&(group, seq, net_idx)).unwrap();
+                live.data_at[sg.id.0] = live.data_at[sg.id.0].max(data_at);
                 live.pending_deps[sg.id.0] -= 1;
                 if live.pending_deps[sg.id.0] == 0 {
-                    to_dispatch.push(sg.id);
+                    let ready_at = live.data_at[sg.id.0].max(now);
+                    newly_ready.push(ReadySub {
+                        group,
+                        seq,
+                        net_idx,
+                        sg: sg.id,
+                        ready_at,
+                    });
                 }
             }
-        }
-        for &sg in &to_dispatch {
-            self.dispatch(&sol, group, seq, net_idx, sg);
         }
 
         let live = self.live.get_mut(&(group, seq, net_idx)).unwrap();
@@ -304,19 +773,26 @@ impl Coordinator {
             // Return this request's in-flight tensors (pool/arena reuse).
             self.tensors.retain(|k, _| !(k.0 == group && k.1 == seq && k.2 == net_idx));
             // Group bookkeeping: when the last member network finishes,
-            // record the group makespan (paper §6.2: max Tf − min Ts).
+            // record the group makespan (paper §6.2: max Tf − min Ts) and
+            // the deadline verdict.
             let entry = self.group_progress.get_mut(&(group, seq)).unwrap();
-            entry.0 -= 1;
-            entry.2 = Some(entry.2.map_or(now, |f| f.max(now)));
-            if entry.0 == 0 {
-                let (_, start, finish) = self.group_progress.remove(&(group, seq)).unwrap();
+            entry.outstanding -= 1;
+            if entry.outstanding == 0 {
+                let GroupProgress { arrival, deadline, .. } =
+                    self.group_progress.remove(&(group, seq)).unwrap();
+                let makespan = (now - arrival).max(0.0);
                 self.served.push(ServedRequest {
                     group,
                     request: seq,
-                    makespan: finish.unwrap().duration_since(start).as_secs_f64(),
+                    arrival,
+                    completion: now,
+                    makespan,
+                    deadline,
+                    violated: deadline.is_some_and(|d| makespan > d),
                 });
             }
         }
+        newly_ready
     }
 
     /// The registered per-network solutions.
@@ -327,6 +803,11 @@ impl Coordinator {
     /// Served request records so far.
     pub fn served(&self) -> &[ServedRequest] {
         &self.served
+    }
+
+    /// Group requests rejected by the admission policy so far.
+    pub fn dropped(&self) -> &[DroppedRequest] {
+        &self.dropped
     }
 
     /// Outstanding (unfinished) network-requests.
@@ -405,7 +886,10 @@ mod tests {
         coord.pump(std::time::Duration::from_secs(5));
         assert_eq!(coord.served().len(), 1);
         assert_eq!(coord.outstanding(), 0);
-        assert!(coord.served()[0].makespan > 0.0);
+        let s = &coord.served()[0];
+        assert!(s.makespan > 0.0);
+        assert!(s.completion >= s.arrival);
+        assert!(s.deadline.is_none() && !s.violated);
         coord.shutdown();
     }
 
@@ -446,6 +930,62 @@ mod tests {
         }
         coord.pump(std::time::Duration::from_secs(10));
         assert_eq!(coord.served().len(), 5);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn drop_policy_bounds_inflight_requests() {
+        let sol = solution_for(build_model(0, 0), 0, None);
+        let mut coord = sim_coordinator(vec![sol], RuntimeOptions::default());
+        coord.set_overload_policy(OverloadPolicy::DropAfter { max_inflight: 2 });
+        // Five back-to-back arrivals with no pumping in between: only the
+        // first two are admitted.
+        for _ in 0..5 {
+            coord.submit_group(0, &[0]);
+        }
+        assert_eq!(coord.dropped().len(), 3);
+        coord.pump(std::time::Duration::from_secs(5));
+        assert_eq!(coord.served().len(), 2);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn virtual_run_serves_and_accounts_deadlines() {
+        let sol = solution_for(build_model(0, 0), 0, None);
+        let mut coord = sim_coordinator(vec![sol], RuntimeOptions::default());
+        let arrivals: Vec<Arrival> = (0..4)
+            .map(|j| Arrival { time: j as f64 * 0.01, group: 0, deadline: Some(0.01) })
+            .collect();
+        let groups = vec![vec![0usize]];
+        let served = coord.run_virtual(&arrivals, &groups, &CommModel::paper_calibrated());
+        assert_eq!(served, 4);
+        for (j, s) in coord.served().iter().enumerate() {
+            // Virtual timestamps follow the arrival schedule exactly.
+            assert_eq!(s.arrival, j as f64 * 0.01);
+            assert_eq!(s.deadline, Some(0.01));
+            // face_det on the NPU is ~0.3 ms: a 10 ms period never violates.
+            assert!(!s.violated, "request {j} violated: {s:?}");
+            assert!((s.completion - s.arrival - s.makespan).abs() < 1e-12);
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn virtual_run_detects_overload_violations() {
+        let sol = solution_for(build_model(0, 8), 0, None); // fastsam: heavy
+        let mut coord = sim_coordinator(vec![sol], RuntimeOptions::default());
+        // Period far below the model's NPU service time: backlog grows and
+        // later requests blow their deadlines.
+        let arrivals: Vec<Arrival> = (0..6)
+            .map(|j| Arrival { time: j as f64 * 1e-4, group: 0, deadline: Some(1e-4) })
+            .collect();
+        let groups = vec![vec![0usize]];
+        coord.run_virtual(&arrivals, &groups, &CommModel::paper_calibrated());
+        assert_eq!(coord.served().len(), 6);
+        assert!(coord.served().iter().any(|s| s.violated));
+        // Makespans grow monotonically under backlog.
+        let ms: Vec<f64> = coord.served().iter().map(|s| s.makespan).collect();
+        assert!(ms.windows(2).all(|w| w[1] >= w[0] - 1e-12), "{ms:?}");
         coord.shutdown();
     }
 

@@ -10,8 +10,9 @@ pub mod tables;
 pub use ablation::{fig10_ablation, ga_ablation, table5_breakdown, AblationRow, Table5Row};
 pub use serving::{
     fig12_single_group, fig13_score_curves, fig14_makespan_distribution, fig15_multi_group,
-    fig16_multi_score_curves, headline_ratios, solve_scenario, solve_scenario_budgeted, GaSize,
-    MethodCurve, SaturationRow, ScoreCurve, ServingBudget,
+    fig16_multi_score_curves, headline_ratios, solve_scenario, solve_scenario_budgeted,
+    solve_scenario_runtime, GaSize, MethodCurve, SaturationRow, ScenarioMethods, ScoreCurve,
+    ServingBudget,
 };
 pub use tables::{fig5_rpc_regression, table2_configs, table3_processors, table4_nonlinearity};
 
@@ -89,7 +90,10 @@ pub fn median_score_at_alpha(
     }
 }
 
-/// Saturation multiplier α* of a solution set on a scenario.
+/// Saturation multiplier α* of a solution set on a scenario — the
+/// **analytic** (simulator-only) estimate, kept for the ablation drivers
+/// and examples. The serving figures (12–16) measure saturation through
+/// the runtime instead: [`crate::serve::saturation_via_runtime`].
 pub fn saturation_of(
     solutions: &[Vec<ExecutionPlan>],
     scenario: &Scenario,

@@ -1,15 +1,28 @@
 //! Serving experiments: Figures 12–16 and the headline request-frequency
 //! ratios (paper §6.3–6.4).
+//!
+//! Since the arrival-driven serving PR these figures are measured **through
+//! the runtime**: every method's solutions (Puzzle's Pareto genomes, Best
+//! Mapping's front, NPU Only) are materialized into runtime
+//! [`NetworkSolution`]s and pushed through the same open-loop virtual-clock
+//! harness ([`crate::serve`]) — saturation multipliers come from
+//! [`crate::serve::saturation_via_runtime`], scores from the Coordinator's
+//! deadline-accounted [`crate::coordinator::ServedRequest`] log. The
+//! analytic simulator path ([`super::saturation_of`] /
+//! [`super::score_at_alpha`]) remains available for the ablation drivers
+//! and quick estimates, but the figures no longer use it.
+
+use std::sync::Arc;
 
 use crate::analyzer::GaConfig;
 use crate::api::SessionBuilder;
 use crate::baselines;
+use crate::coordinator::NetworkSolution;
 use crate::metrics::mean_sd;
 use crate::perf::PerfModel;
 use crate::scenario::{multi_group_scenarios, scenario10_analog, single_group_scenarios, Scenario};
+use crate::serve::{self, LoadSpec, RuntimeHarness, SaturationOptions};
 use crate::sim::ExecutionPlan;
-
-use super::{saturation_of, score_at_alpha};
 
 /// Per-scenario saturation multipliers for the three methods.
 #[derive(Debug, Clone)]
@@ -53,7 +66,8 @@ impl ServingBudget {
 }
 
 /// Convenience wrapper for examples: solve with a quick budget at a given
-/// sim-request count and seed.
+/// sim-request count and seed (analytic plan sets — see
+/// [`solve_scenario`]).
 pub fn solve_scenario_budgeted(
     scenario: &Scenario,
     pm: &PerfModel,
@@ -64,7 +78,9 @@ pub fn solve_scenario_budgeted(
     solve_scenario(scenario, pm, &budget, seed)
 }
 
-/// Run the three methods on one scenario; return their Pareto plan sets.
+/// Run the three methods on one scenario; return their Pareto **plan sets**
+/// (the analytic-simulator representation, kept for the examples and the
+/// energy estimate; the serving figures use [`solve_scenario_runtime`]).
 pub fn solve_scenario(
     scenario: &Scenario,
     pm: &PerfModel,
@@ -87,19 +103,65 @@ pub fn solve_scenario(
     (puzzle, bm, npu)
 }
 
-/// Figure 12 / 15 core: saturation multiplier per scenario per method.
-fn saturation_sweep(scenarios: &[Scenario], pm: &PerfModel, budget: &ServingBudget) -> Vec<SaturationRow> {
+/// Runtime solution sets of the three methods on one scenario — the input
+/// to the single serving harness every method goes through (identical
+/// measurement for Puzzle and both baselines).
+pub struct ScenarioMethods {
+    pub puzzle: Vec<Vec<NetworkSolution>>,
+    pub best_mapping: Vec<Vec<NetworkSolution>>,
+    pub npu_only: Vec<Vec<NetworkSolution>>,
+}
+
+/// Solve one scenario with all three methods and materialize each
+/// candidate solution for the runtime.
+pub fn solve_scenario_runtime(
+    scenario: &Scenario,
+    pm: &PerfModel,
+    budget: &ServingBudget,
+    seed: u64,
+) -> ScenarioMethods {
+    let session = SessionBuilder::for_scenario(scenario.clone())
+        .perf_model(pm.clone())
+        .config(budget.ga_config(seed))
+        .build()
+        .expect("prebuilt scenario is always valid");
+    let analysis = session.run();
+    let puzzle = (0..analysis.pareto.len())
+        .map(|i| analysis.runtime_solutions(i).expect("pareto index in range"))
+        .collect();
+    let best_mapping = baselines::best_mapping(scenario, pm, budget.sim_requests)
+        .iter()
+        .map(|s| s.runtime_solutions(scenario, pm))
+        .collect();
+    let npu = baselines::npu_only(scenario, pm, budget.sim_requests);
+    let npu_only = vec![npu.runtime_solutions(scenario, pm)];
+    ScenarioMethods { puzzle, best_mapping, npu_only }
+}
+
+fn sat_opts(budget: &ServingBudget, seed: u64) -> SaturationOptions {
+    SaturationOptions { requests: budget.sim_requests, seed, ..Default::default() }
+}
+
+/// Figure 12 / 15 core: runtime-measured saturation multiplier per scenario
+/// per method (the [`crate::serve::saturation_via_runtime`] driver).
+fn saturation_sweep(
+    scenarios: &[Scenario],
+    pm: &PerfModel,
+    budget: &ServingBudget,
+) -> Vec<SaturationRow> {
+    let perf = Arc::new(pm.clone());
     scenarios
         .iter()
         .take(budget.scenarios)
         .enumerate()
         .map(|(i, s)| {
-            let (puzzle, bm, npu) = solve_scenario(s, pm, budget, 23 + i as u64);
+            let methods = solve_scenario_runtime(s, pm, budget, 23 + i as u64);
+            let opts = sat_opts(budget, 29 + i as u64);
             SaturationRow {
                 scenario: s.name.clone(),
-                puzzle: saturation_of(&puzzle, s, pm, budget.sim_requests),
-                best_mapping: saturation_of(&bm, s, pm, budget.sim_requests),
-                npu_only: saturation_of(&npu, s, pm, budget.sim_requests),
+                puzzle: serve::saturation_via_runtime(&methods.puzzle, s, &perf, &opts),
+                best_mapping: serve::saturation_via_runtime(&methods.best_mapping, s, &perf, &opts),
+                npu_only: serve::saturation_via_runtime(&methods.npu_only, s, &perf, &opts),
             }
         })
         .collect()
@@ -133,26 +195,42 @@ pub struct MethodCurve {
     pub curves: Vec<ScoreCurve>,
 }
 
-fn score_band(
-    solutions: &[Vec<ExecutionPlan>],
+/// Runtime-measured score band of a set of candidate solutions at one
+/// period multiplier: periodic open-loop load at Φ(α) through a fresh
+/// virtual-clock runtime per solution, deterministic per seed.
+fn runtime_score_band(
+    sets: &[Vec<NetworkSolution>],
     scenario: &Scenario,
     alpha: f64,
-    pm: &PerfModel,
+    perf: &Arc<PerfModel>,
     requests: usize,
+    seed: u64,
 ) -> (f64, f64, f64) {
-    let mut scores: Vec<f64> = solutions
-        .iter()
-        .map(|p| score_at_alpha(p, scenario, alpha, pm, requests))
-        .collect();
-    scores.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    if scores.is_empty() {
+    if sets.is_empty() {
         return (0.0, 0.0, 0.0);
     }
+    let spec = LoadSpec::for_scenario(scenario, perf, alpha, requests);
+    let groups: Vec<Vec<usize>> = scenario.groups.iter().map(|g| g.members.clone()).collect();
+    let mut scores: Vec<f64> = sets
+        .iter()
+        .enumerate()
+        .map(|(i, sols)| {
+            RuntimeHarness::for_solutions(
+                sols.clone(),
+                groups.clone(),
+                perf.clone(),
+                serve::probe_seed(seed, i, alpha),
+            )
+            .run(&spec)
+            .score
+        })
+        .collect();
+    scores.sort_by(|a, b| a.partial_cmp(b).unwrap());
     (scores[0], scores[scores.len() / 2], scores[scores.len() - 1])
 }
 
 /// Score-vs-α curves for a scenario (Figure 13 for single-group scenarios,
-/// Figure 16 for multi-group).
+/// Figure 16 for multi-group), measured through the runtime.
 pub fn score_curves(
     scenario: &Scenario,
     pm: &PerfModel,
@@ -160,21 +238,22 @@ pub fn score_curves(
     alphas: &[f64],
     seed: u64,
 ) -> MethodCurve {
-    let (puzzle, bm, npu) = solve_scenario(scenario, pm, budget, seed);
-    let make = |name: &str, sols: &[Vec<ExecutionPlan>]| ScoreCurve {
+    let methods = solve_scenario_runtime(scenario, pm, budget, seed);
+    let perf = Arc::new(pm.clone());
+    let make = |name: &str, sets: &[Vec<NetworkSolution>]| ScoreCurve {
         method: name.to_string(),
         alphas: alphas.to_vec(),
         scores: alphas
             .iter()
-            .map(|&a| score_band(sols, scenario, a, pm, budget.sim_requests))
+            .map(|&a| runtime_score_band(sets, scenario, a, &perf, budget.sim_requests, seed))
             .collect(),
     };
     MethodCurve {
         scenario: scenario.name.clone(),
         curves: vec![
-            make("puzzle", &puzzle),
-            make("best_mapping", &bm),
-            make("npu_only", &npu),
+            make("puzzle", &methods.puzzle),
+            make("best_mapping", &methods.best_mapping),
+            make("npu_only", &methods.npu_only),
         ],
     }
 }
@@ -199,39 +278,37 @@ pub fn fig16_multi_score_curves(pm: &PerfModel, budget: &ServingBudget) -> Vec<M
 }
 
 /// Figure 14 — per-group average makespan of scenario 10's solutions at a
-/// lenient (α=1.4) and tight (α=0.9) period. Returns
-/// `(method, alpha, [group avg makespans])` rows.
+/// lenient (α=1.4) and tight (α=0.9) period, measured through the runtime's
+/// served-request log. Returns `(method, alpha, [group avg makespans])`
+/// rows.
 pub fn fig14_makespan_distribution(
     pm: &PerfModel,
     budget: &ServingBudget,
 ) -> Vec<(String, f64, Vec<f64>)> {
     let scenario = scenario10_analog();
-    let (puzzle, bm, npu) = solve_scenario(&scenario, pm, budget, 210);
-    let comm = crate::comm::CommModel::paper_calibrated();
+    let methods = solve_scenario_runtime(&scenario, pm, budget, 210);
+    let perf = Arc::new(pm.clone());
+    let groups: Vec<Vec<usize>> = scenario.groups.iter().map(|g| g.members.clone()).collect();
     let mut rows = Vec::new();
     for &alpha in &[1.4, 0.9] {
-        let periods = scenario.periods(alpha, pm);
-        let groups: Vec<crate::sim::GroupSpec> = scenario
-            .groups
-            .iter()
-            .zip(&periods)
-            .map(|(g, &p)| crate::sim::GroupSpec::periodic(g.members.clone(), p))
-            .collect();
-        let opts = crate::sim::SimOptions {
-            requests_per_group: budget.sim_requests,
-            ..Default::default()
-        };
-        let methods: Vec<(&str, Option<&Vec<ExecutionPlan>>)> = vec![
-            ("puzzle", puzzle.first()),
-            ("best_mapping", bm.first()),
+        let spec = LoadSpec::for_scenario(&scenario, pm, alpha, budget.sim_requests);
+        let named: Vec<(&str, Option<&Vec<NetworkSolution>>)> = vec![
+            ("puzzle", methods.puzzle.first()),
+            ("best_mapping", methods.best_mapping.first()),
             // Paper omits NPU Only at tight periods (system failure from
             // accumulated tasks); we keep it at the lenient period only.
-            ("npu_only", if alpha >= 1.0 { npu.first() } else { None }),
+            ("npu_only", if alpha >= 1.0 { methods.npu_only.first() } else { None }),
         ];
-        for (name, plans) in methods {
-            if let Some(plans) = plans {
-                let r = crate::sim::simulate(plans, &groups, &comm, &opts);
-                let avgs: Vec<f64> = (0..groups.len()).map(|g| r.avg_makespan(g)).collect();
+        for (name, sols) in named {
+            if let Some(sols) = sols {
+                let report = RuntimeHarness::for_solutions(
+                    sols.clone(),
+                    groups.clone(),
+                    perf.clone(),
+                    serve::probe_seed(41, 0, alpha),
+                )
+                .run(&spec);
+                let avgs: Vec<f64> = (0..groups.len()).map(|g| report.avg_makespan(g)).collect();
                 rows.push((name.to_string(), alpha, avgs));
             }
         }
@@ -286,6 +363,10 @@ mod tests {
 
     #[test]
     fn quick_single_group_puzzle_wins() {
+        // The acceptance bar of the arrival-driven serving PR: Fig 12's
+        // quick budget, saturation measured through the runtime driver,
+        // Puzzle at least as good (≤, lower α* = more sustainable load) as
+        // both baselines.
         let pm = PerfModel::paper_calibrated();
         let budget = ServingBudget { scenarios: 2, ..ServingBudget::quick() };
         let rows = fig12_single_group(&pm, &budget);
@@ -298,6 +379,37 @@ mod tests {
             if let Some(b) = r.best_mapping {
                 assert!(p <= b + 0.05, "{}: puzzle {p} vs bm {b}", r.scenario);
             }
+        }
+    }
+
+    #[test]
+    fn runtime_serving_logs_bit_identical_for_seed() {
+        // The virtual-clock determinism contract on the fig-12 path: same
+        // seed, same load ⇒ bit-identical ServedRequest logs.
+        let pm = PerfModel::paper_calibrated();
+        let budget = ServingBudget { scenarios: 1, ..ServingBudget::quick() };
+        let scenarios = single_group_scenarios(23);
+        let scenario = &scenarios[0];
+        let methods = solve_scenario_runtime(scenario, &pm, &budget, 23);
+        let perf = Arc::new(pm.clone());
+        let harness = RuntimeHarness::for_solutions(
+            methods.puzzle[0].clone(),
+            scenario.groups.iter().map(|g| g.members.clone()).collect(),
+            perf.clone(),
+            7,
+        );
+        let spec = LoadSpec::for_scenario(scenario, &pm, 1.0, budget.sim_requests);
+        let (_, log_a) = harness.run_with_log(&spec);
+        let (_, log_b) = harness.run_with_log(&spec);
+        assert_eq!(log_a.len(), log_b.len());
+        assert!(!log_a.is_empty());
+        for (a, b) in log_a.iter().zip(&log_b) {
+            assert_eq!((a.group, a.request), (b.group, b.request));
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+            assert_eq!(a.completion.to_bits(), b.completion.to_bits());
+            assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+            assert_eq!(a.deadline.map(f64::to_bits), b.deadline.map(f64::to_bits));
+            assert_eq!(a.violated, b.violated);
         }
     }
 

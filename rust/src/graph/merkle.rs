@@ -69,6 +69,31 @@ fn leaf(net: &Network, l: LayerId) -> u64 {
     h
 }
 
+/// Structural Merkle root of a **whole network**: leaf per layer (network
+/// order, folded pairwise) plus the full edge list. Unlike
+/// [`merkle_hash_subgraph`] this is position-*dependent* — it identifies the
+/// network as built, so solution files can carry a per-network fingerprint
+/// that validates on load even for custom (non-zoo) models, where the zoo
+/// index validates nothing.
+pub fn merkle_hash_network(net: &Network) -> MerkleHash {
+    let mut level: Vec<u64> = (0..net.num_layers()).map(|l| leaf(net, LayerId(l))).collect();
+    if level.is_empty() {
+        return MerkleHash(FNV_OFFSET);
+    }
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        for pair in level.chunks(2) {
+            next.push(if pair.len() == 2 { combine(pair[0], pair[1]) } else { pair[0] });
+        }
+        level = next;
+    }
+    let mut root = level[0];
+    for e in net.edges() {
+        root = combine(root, combine(e.src.0 as u64, e.dst.0 as u64));
+    }
+    MerkleHash(root)
+}
+
 /// Merkle root over a subgraph's layers (leaf per layer, folded pairwise)
 /// plus its internal edges in canonical (local-index) form.
 pub fn merkle_hash_subgraph(net: &Network, sg: &Subgraph) -> MerkleHash {
@@ -147,6 +172,22 @@ mod tests {
             merkle_hash_subgraph(&n1, &whole.subgraphs[0]),
             merkle_hash_subgraph(&n1, &split.subgraphs[0]),
         );
+    }
+
+    #[test]
+    fn network_hash_tracks_structure_not_names() {
+        let (n1, n2) = two_chains();
+        // Same structure, different names/ids → same fingerprint.
+        assert_eq!(merkle_hash_network(&n1), merkle_hash_network(&n2));
+        // A structural change (different kernel) changes it.
+        let mut n3 = Network::new(2, "z");
+        let a = n3.add_layer(Layer::conv("za", 8, 8, 16, 5, 1)); // kernel 5, not 3
+        let b = n3.add_layer(Layer::conv("zb", 8, 16, 16, 3, 1));
+        let c = n3.add_layer(Layer::pointwise("zc", 8, 16, 8));
+        n3.connect(a, b);
+        n3.connect(b, c);
+        n3.finalize();
+        assert_ne!(merkle_hash_network(&n1), merkle_hash_network(&n3));
     }
 
     #[test]

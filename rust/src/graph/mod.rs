@@ -12,7 +12,9 @@ mod network;
 mod partition;
 
 pub use layer::{Layer, LayerId, LayerKind, TensorShape};
-pub use merkle::{fnv1a, fnv1a_u64, merkle_hash_subgraph, MerkleHash, FNV_OFFSET};
+pub use merkle::{
+    fnv1a, fnv1a_u64, merkle_hash_network, merkle_hash_subgraph, MerkleHash, FNV_OFFSET,
+};
 pub use network::{Edge, EdgeId, Network, NetworkId};
 pub use partition::{partition, Partition, Subgraph, SubgraphId};
 

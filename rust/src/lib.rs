@@ -23,7 +23,10 @@
 //! The two halves meet in [`api`] — the owned analyze → deploy → serve
 //! session layer ([`api::SessionBuilder`] → [`api::AnalysisSession`] →
 //! [`api::Analysis::deploy`]), which is the supported entry point for
-//! external callers.
+//! external callers. [`serve`] drives deployments under **open-loop load**:
+//! pluggable wall/virtual clocks, periodic/Poisson/bursty arrival
+//! processes, deadline accounting, and the runtime-measured saturation
+//! driver behind the serving figures.
 
 /// Counting allocator (see [`util::alloc`]): lets tests assert that the
 /// simulator's steady state performs zero heap allocation. One relaxed
@@ -48,6 +51,7 @@ pub mod profiler;
 pub mod quant;
 pub mod runtime;
 pub mod scenario;
+pub mod serve;
 pub mod sim;
 pub mod util;
 pub mod worker;

@@ -3,6 +3,9 @@
 //! Subcommands:
 //! * `analyze`     — run the Static Analyzer on a scenario, print the Pareto set
 //! * `serve`       — serve a scenario through the runtime (simulated engine)
+//! * `loadtest`    — open-loop load test through the runtime (periodic /
+//!   poisson / bursty arrivals, deadline accounting, runtime-measured
+//!   saturation search)
 //! * `profile`     — profile the model zoo on the simulated device
 //! * `comm-bench`  — run the RPC/STREAM microbenchmarks and print the fit
 //! * `scenario-gen`— print the random scenario configurations (Fig 11)
@@ -69,9 +72,12 @@ impl Args {
     }
 }
 
-const USAGE: &str = "usage: puzzle <analyze|serve|profile|comm-bench|scenario-gen|experiment> [options]
+const USAGE: &str = "usage: puzzle <analyze|serve|loadtest|profile|comm-bench|scenario-gen|experiment> [options]
   analyze      --models 0,1,6 --population 48 --generations 40 --seed 23 [--save sol.txt] [--quiet]
   serve        --models 0,1,6 --requests 30 --time-scale 0.05 [--solution sol.txt]
+  loadtest     --models 0,1,6 --alpha 1.0 --requests 40 --pattern periodic|poisson|bursty
+               [--burst 4] [--max-inflight N] [--wall] [--time-scale 0.05]
+               [--quick] [--no-saturation] [--seed 23]
   profile
   comm-bench
   scenario-gen --seed 23
@@ -148,6 +154,7 @@ fn main() -> Result<()> {
                 solution_file.as_deref(),
             )?;
         }
+        "loadtest" => loadtest_cmd(&pm, &args)?,
         "profile" => profile_zoo(&pm),
         "comm-bench" => {
             let (samples, fit, bw) = experiments::fig5_rpc_regression();
@@ -233,6 +240,126 @@ fn serve_cmd(
         puzzle::sim::percentile(&makespans, 0.9) * 1e3
     );
     deployment.shutdown();
+    Ok(())
+}
+
+/// Open-loop load test through the arrival-driven runtime: analyze a model
+/// group, deploy the best Pareto solution, push an arrival process through
+/// it (virtual clock by default — deterministic and fast; `--wall` for real
+/// time), report deadline attainment, then binary-search the
+/// runtime-measured saturation multiplier.
+fn loadtest_cmd(pm: &PerfModel, args: &Args) -> Result<()> {
+    use puzzle::api::{LoadSpec, OverloadPolicy};
+    use std::ops::ControlFlow;
+
+    let idx = parse_models(&args.get_str("models", "0,1,6"));
+    let quick = args.flags.contains("quick");
+    let seed = args.get("seed", 23u64);
+    let config = if quick {
+        GaConfig {
+            population: 12,
+            max_generations: 4,
+            sim_requests: 8,
+            measure_reps: 1,
+            ..GaConfig::quick(seed)
+        }
+    } else {
+        GaConfig::quick(seed)
+    };
+    let session = SessionBuilder::new(ScenarioSpec::single_group("loadtest", idx))
+        .perf_model(pm.clone())
+        .config(config)
+        .build()?;
+    let scenario = session.scenario().clone();
+    println!(
+        "analyzing {} models ({})...",
+        scenario.networks.len(),
+        scenario.networks.iter().map(|n| n.name.as_str()).collect::<Vec<_>>().join(", ")
+    );
+    let analysis = session.run();
+    let best = analysis.best_index();
+    println!(
+        "analysis: {} generations, {} evaluations, deploying pareto solution #{best}",
+        analysis.generations_run, analysis.evaluations
+    );
+
+    let alpha = args.get("alpha", 1.0f64);
+    let requests: usize = args.get("requests", if quick { 10 } else { 40 });
+    let periods = scenario.periods(alpha, pm);
+    let pattern = args.get_str("pattern", "periodic");
+    let mut spec = match pattern.as_str() {
+        "poisson" => LoadSpec::poisson(&periods, requests, seed),
+        "bursty" => LoadSpec::bursty(&periods, args.get("burst", 4usize), requests),
+        _ => LoadSpec::periodic(&periods, requests),
+    };
+    if let Some(max_inflight) = args.options.get("max-inflight").and_then(|v| v.parse().ok()) {
+        spec = spec.with_policy(OverloadPolicy::DropAfter { max_inflight });
+    }
+    let wall = args.flags.contains("wall");
+    let time_scale = args.get("time-scale", 0.05);
+    if wall {
+        spec = spec.wall(std::time::Duration::from_secs(60));
+    }
+    let mut deployment = analysis.deploy_sim(
+        best,
+        RuntimeOptions::default(),
+        if wall { time_scale } else { 0.0 },
+        true,
+        seed,
+    )?;
+    let report = deployment.serve_load(&spec);
+    deployment.shutdown();
+
+    println!(
+        "loadtest: pattern {pattern}, alpha {alpha:.2}, {} clock",
+        if wall { "wall" } else { "virtual" }
+    );
+    println!(
+        "  submitted {} served {} dropped {} unfinished {} violations {} | attainment {:.1}%, score {:.3}, {:.2}s wall",
+        report.submitted,
+        report.served,
+        report.dropped,
+        report.unfinished,
+        report.violations,
+        report.attainment * 100.0,
+        report.score,
+        report.wall_seconds
+    );
+    for g in 0..report.group_makespans.len() {
+        println!(
+            "  group {g}: avg {:.2}ms p50 {:.2}ms p90 {:.2}ms over {} served (deadline {:.2}ms)",
+            report.avg_makespan(g) * 1e3,
+            report.percentile(g, 0.5) * 1e3,
+            report.percentile(g, 0.9) * 1e3,
+            report.group_makespans[g].len(),
+            periods[g] * 1e3
+        );
+    }
+
+    if !args.flags.contains("no-saturation") {
+        println!("saturation search (runtime-measured, virtual clock):");
+        let sets = vec![analysis.runtime_solutions(best)?];
+        let opts = puzzle::serve::SaturationOptions {
+            requests,
+            tolerance: if quick { 0.05 } else { 0.01 },
+            seed,
+            ..Default::default()
+        };
+        let sat = puzzle::serve::saturation_via_runtime_observed(
+            &sets,
+            &scenario,
+            session.perf(),
+            &opts,
+            &mut |p| {
+                println!("  probe {:>2}: alpha {:.3} -> score {:.3}", p.probes, p.alpha, p.score);
+                ControlFlow::Continue(())
+            },
+        );
+        match sat {
+            Some(a) => println!("saturation multiplier alpha* = {a:.3}"),
+            None => println!("no saturation within alpha <= {:.1}", opts.alpha_max),
+        }
+    }
     Ok(())
 }
 

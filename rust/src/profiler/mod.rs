@@ -44,7 +44,7 @@
 use std::collections::HashMap;
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::{Arc, RwLock};
 
 use crate::graph::{merkle_hash_subgraph, LayerId, MerkleHash, Network, Subgraph};
 use crate::perf::PerfModel;
@@ -96,9 +96,28 @@ impl ConfigStat {
     }
 }
 
+/// Where the profiler's device probe comes from: borrowed for the duration
+/// of one analysis run (the legacy entry points), or shared/owned so a
+/// `Profiler<'static>` can outlive the run — the session layer keeps one
+/// profiler alive across analyze → deploy, so deployment reuses the
+/// best-config memo instead of re-deriving exec configs.
+enum ProbeSource<'d> {
+    Borrowed(&'d dyn DeviceProbe),
+    Shared(Arc<dyn DeviceProbe>),
+}
+
+impl<'d> ProbeSource<'d> {
+    fn get(&self) -> &dyn DeviceProbe {
+        match self {
+            ProbeSource::Borrowed(p) => *p,
+            ProbeSource::Shared(p) => p.as_ref(),
+        }
+    }
+}
+
 /// The profiler with its Merkle-keyed cache.
 pub struct Profiler<'d> {
-    probe: &'d dyn DeviceProbe,
+    probe: ProbeSource<'d>,
     db: RwLock<HashMap<ProfileKey, f64>>,
     /// (merkle, processor) → winning (config, time) of a completed scan.
     best: RwLock<HashMap<(MerkleHash, Processor), (ExecConfig, f64)>>,
@@ -112,6 +131,16 @@ pub struct Profiler<'d> {
 
 impl<'d> Profiler<'d> {
     pub fn new(probe: &'d dyn DeviceProbe) -> Self {
+        Self::with_source(ProbeSource::Borrowed(probe))
+    }
+
+    /// A profiler owning its probe: lives as long as needed (the session
+    /// layer holds one across analyze → deploy → load-test).
+    pub fn shared(probe: Arc<dyn DeviceProbe>) -> Profiler<'static> {
+        Profiler::with_source(ProbeSource::Shared(probe))
+    }
+
+    fn with_source(probe: ProbeSource<'d>) -> Self {
         Profiler {
             probe,
             db: RwLock::new(HashMap::new()),
@@ -149,7 +178,7 @@ impl<'d> Profiler<'d> {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return t;
         }
-        let t = self.probe.measure(net, &sg.layers, cfg);
+        let t = self.probe.get().measure(net, &sg.layers, cfg);
         self.misses.fetch_add(1, Ordering::Relaxed);
         self.db.write().unwrap().insert(key, t);
         t

@@ -1,0 +1,866 @@
+//! Arrival-driven serving (paper §6.3–6.4): open-loop load generation,
+//! deadline accounting, and runtime-measured saturation.
+//!
+//! The paper's headline metric is *request frequency* — how much sustained
+//! load each method handles while meeting real-time requirements (Figs
+//! 12–16). This module provides the harness that measures it **through the
+//! actual runtime** instead of the analytic simulator:
+//!
+//! * [`Clock`] — pluggable time source: [`WallClock`] for real serving,
+//!   [`VirtualClock`] for deterministic, fast load tests
+//!   ([`Coordinator::run_virtual`] advances it along the event schedule);
+//! * [`ArrivalProcess`] / [`GroupLoad`] / [`LoadSpec`] — open-loop arrival
+//!   schedules per model group: periodic at the scenario's period (Fig 11
+//!   semantics), Poisson (user-driven events), and an on/off bursty variant;
+//! * [`run_load`] / [`RuntimeHarness`] — push one load through a
+//!   Coordinator (existing or freshly deployed) and summarize the
+//!   [`ServedRequest`] log as a [`ServeReport`] (attainment, violations,
+//!   drops, XRBench score);
+//! * [`saturation_via_runtime`] — the saturation driver: binary-search the
+//!   smallest period multiplier α whose **runtime-measured** score clears
+//!   the SLO-attainment threshold, replacing the analytic-only
+//!   `experiments::saturation_of` path for the serving figures.
+//!
+//! Every method (Puzzle, Best Mapping, NPU Only) is measured through this
+//! one harness — [`materialize_solutions`] turns any genome into runtime
+//! [`NetworkSolution`]s — so the comparison is apples-to-apples.
+
+use std::ops::ControlFlow;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::comm::CommModel;
+use crate::coordinator::{
+    Coordinator, NetworkSolution, OverloadPolicy, RuntimeOptions, ServedRequest,
+};
+use crate::engine::{Engine, SimEngine};
+use crate::ga::{decode_network, Genome};
+use crate::graph::Network;
+use crate::metrics;
+use crate::perf::PerfModel;
+use crate::scenario::Scenario;
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Clocks
+
+/// A monotonic time source for the runtime, in seconds. Wall time for real
+/// serving; a virtual clock for reproducible, fast load tests.
+pub trait Clock: Send + Sync {
+    fn now(&self) -> f64;
+    /// True for clocks advanced by an event loop rather than the OS.
+    fn is_virtual(&self) -> bool {
+        false
+    }
+}
+
+/// Wall time relative to the clock's creation instant.
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> WallClock {
+        WallClock { epoch: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+}
+
+/// Deterministic virtual time, advanced explicitly by the event-driven run
+/// ([`Coordinator::run_virtual`]). Readable from any thread.
+pub struct VirtualClock {
+    bits: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock { bits: AtomicU64::new(0f64.to_bits()) }
+    }
+
+    /// Move the clock to `t` seconds (monotonicity is the caller's event
+    /// order, not enforced here).
+    pub fn advance_to(&self, t: f64) {
+        self.bits.store(t.to_bits(), Ordering::Relaxed);
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        VirtualClock::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    fn is_virtual(&self) -> bool {
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Open-loop load generation
+
+/// One open-loop group-request arrival (simulated seconds; the wall driver
+/// scales to wall seconds at the engine's time scale).
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    pub time: f64,
+    pub group: usize,
+    /// Relative SLO deadline of this request (= the group period under the
+    /// paper's protocol).
+    pub deadline: Option<f64>,
+}
+
+/// How one group's requests arrive. All processes are open-loop: arrival
+/// times never depend on service completions (no back-pressure), which is
+/// what exposes backlog growth past saturation.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Fixed-rate arrivals every `period` seconds (camera / microphone —
+    /// the paper's protocol).
+    Periodic { period: f64 },
+    /// Poisson arrivals with mean inter-arrival `mean` seconds (user-driven
+    /// aperiodic events), deterministic per seed.
+    Poisson { mean: f64, seed: u64 },
+    /// On/off bursts: `burst` requests spaced `period / 10` apart, bursts
+    /// starting every `burst × period` seconds — the long-run rate matches
+    /// `Periodic { period }` but queueing is adversarial.
+    Bursty { period: f64, burst: usize },
+}
+
+impl ArrivalProcess {
+    /// The first `n` arrival timestamps of this process.
+    pub fn times(&self, n: usize) -> Vec<f64> {
+        match *self {
+            ArrivalProcess::Periodic { period } => {
+                (0..n).map(|j| period * j as f64).collect()
+            }
+            ArrivalProcess::Poisson { mean, seed } => {
+                let mut rng = Rng::seed_from_u64(seed);
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        let u = rng.gen_f64().max(1e-12);
+                        t += -mean * u.ln();
+                        t
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Bursty { period, burst } => {
+                let burst = burst.max(1);
+                (0..n)
+                    .map(|j| {
+                        let k = (j / burst) as f64;
+                        let i = (j % burst) as f64;
+                        k * burst as f64 * period + i * period * 0.1
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+/// The load offered to one model group.
+#[derive(Debug, Clone)]
+pub struct GroupLoad {
+    pub process: ArrivalProcess,
+    /// Relative SLO deadline stamped on each request (the group period in
+    /// the paper's protocol; `None` disables deadline accounting).
+    pub deadline: Option<f64>,
+    pub requests: usize,
+}
+
+/// Which clock drives the load.
+#[derive(Debug, Clone, Copy)]
+pub enum ClockMode {
+    /// Deterministic event-driven run (fast: the engine never sleeps).
+    Virtual,
+    /// Real time: arrivals scheduled on the wall clock at the deployment's
+    /// time scale; `timeout` bounds the post-arrival drain.
+    Wall { timeout: Duration },
+}
+
+/// A complete load test description, consumed by [`run_load`] /
+/// [`crate::api::Deployment::serve_load`].
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    /// One entry per model group of the deployment.
+    pub groups: Vec<GroupLoad>,
+    pub mode: ClockMode,
+    pub policy: OverloadPolicy,
+    /// Prices cross-subgraph tensor transfers into virtual ready times
+    /// (wall runs pay real staging cost instead).
+    pub comm: CommModel,
+}
+
+impl LoadSpec {
+    fn from_processes(groups: Vec<GroupLoad>) -> LoadSpec {
+        LoadSpec {
+            groups,
+            mode: ClockMode::Virtual,
+            policy: OverloadPolicy::Queue,
+            comm: CommModel::paper_calibrated(),
+        }
+    }
+
+    /// The paper's protocol: periodic arrivals at each group's period, the
+    /// period doubling as the deadline.
+    pub fn periodic(periods: &[f64], requests: usize) -> LoadSpec {
+        LoadSpec::from_processes(
+            periods
+                .iter()
+                .map(|&p| GroupLoad {
+                    process: ArrivalProcess::Periodic { period: p },
+                    deadline: Some(p),
+                    requests,
+                })
+                .collect(),
+        )
+    }
+
+    /// Poisson arrivals at the same mean rate (and deadline) as
+    /// [`LoadSpec::periodic`].
+    pub fn poisson(periods: &[f64], requests: usize, seed: u64) -> LoadSpec {
+        LoadSpec::from_processes(
+            periods
+                .iter()
+                .enumerate()
+                .map(|(g, &p)| GroupLoad {
+                    process: ArrivalProcess::Poisson { mean: p, seed: seed ^ ((g as u64) << 16) },
+                    deadline: Some(p),
+                    requests,
+                })
+                .collect(),
+        )
+    }
+
+    /// Bursty arrivals at the same long-run rate (and deadline) as
+    /// [`LoadSpec::periodic`].
+    pub fn bursty(periods: &[f64], burst: usize, requests: usize) -> LoadSpec {
+        LoadSpec::from_processes(
+            periods
+                .iter()
+                .map(|&p| GroupLoad {
+                    process: ArrivalProcess::Bursty { period: p, burst },
+                    deadline: Some(p),
+                    requests,
+                })
+                .collect(),
+        )
+    }
+
+    /// Periodic load for a scenario at period multiplier `alpha` (Fig 11
+    /// semantics: Φ(α, Gi) = α·φ̄).
+    pub fn for_scenario(
+        scenario: &Scenario,
+        perf: &PerfModel,
+        alpha: f64,
+        requests: usize,
+    ) -> LoadSpec {
+        LoadSpec::periodic(&scenario.periods(alpha, perf), requests)
+    }
+
+    /// Switch to wall-clock mode with the given drain timeout.
+    pub fn wall(mut self, timeout: Duration) -> LoadSpec {
+        self.mode = ClockMode::Wall { timeout };
+        self
+    }
+
+    pub fn with_policy(mut self, policy: OverloadPolicy) -> LoadSpec {
+        self.policy = policy;
+        self
+    }
+}
+
+/// Merge every group's arrival process into one time-ordered open-loop
+/// schedule (stable: simultaneous arrivals keep group order, then per-group
+/// generation order).
+pub fn generate_arrivals(groups: &[GroupLoad]) -> Vec<Arrival> {
+    let mut out = Vec::new();
+    for (g, load) in groups.iter().enumerate() {
+        for t in load.process.times(load.requests) {
+            out.push(Arrival { time: t, group: g, deadline: load.deadline });
+        }
+    }
+    out.sort_by(|a, b| a.time.partial_cmp(&b.time).expect("finite arrival times"));
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Reports
+
+/// Summary of one load pushed through the runtime.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Requests offered by the arrival schedule (= served + dropped +
+    /// unfinished-at-timeout).
+    pub submitted: usize,
+    pub served: usize,
+    pub dropped: usize,
+    /// Requests still in flight when a wall-mode drain timeout expired
+    /// (always 0 under the virtual clock, which runs to completion).
+    pub unfinished: usize,
+    /// Served requests that missed their deadline.
+    pub violations: usize,
+    /// Makespans per group in **simulated seconds**, completion order.
+    pub group_makespans: Vec<Vec<f64>>,
+    /// XRBench scenario score of the served makespans against the declared
+    /// deadlines (falls back to `attainment` when no group declared one).
+    /// Dropped/unfinished requests are *not* in the makespan series — they
+    /// show up in `attainment`, which counts them as misses.
+    pub score: f64,
+    /// Fraction of offered requests served within their deadline (dropped
+    /// and unfinished requests count as misses).
+    pub attainment: f64,
+    /// Wall-clock duration of the run.
+    pub wall_seconds: f64,
+}
+
+impl ServeReport {
+    /// Summarize a slice of the served log. `offered` is the arrival count
+    /// of the load (requests neither served nor dropped were left
+    /// unfinished by a drain timeout); `scale` converts recorded makespans
+    /// back to simulated seconds (wall runs record wall seconds);
+    /// `deadlines` are per group, in simulated seconds.
+    pub fn from_log(
+        served: &[ServedRequest],
+        dropped: usize,
+        offered: usize,
+        deadlines: &[Option<f64>],
+        scale: f64,
+        wall_seconds: f64,
+    ) -> ServeReport {
+        let scale = if scale > 0.0 { scale } else { 1.0 };
+        let n_groups = deadlines.len();
+        let mut group_makespans = vec![Vec::new(); n_groups];
+        let mut violations = 0usize;
+        let mut met = 0usize;
+        for s in served {
+            if s.group < n_groups {
+                group_makespans[s.group].push(s.makespan / scale);
+            }
+            if s.violated {
+                violations += 1;
+            } else {
+                met += 1;
+            }
+        }
+        let submitted = offered.max(served.len() + dropped);
+        let unfinished = submitted - served.len() - dropped;
+        let attainment = if submitted == 0 { 1.0 } else { met as f64 / submitted as f64 };
+        let (scored, dls): (Vec<Vec<f64>>, Vec<f64>) = group_makespans
+            .iter()
+            .zip(deadlines)
+            .filter_map(|(m, d)| d.map(|d| (m.clone(), d)))
+            .unzip();
+        let score = if dls.is_empty() {
+            attainment
+        } else {
+            metrics::scenario_score(&scored, &dls)
+        };
+        ServeReport {
+            submitted,
+            served: served.len(),
+            dropped,
+            unfinished,
+            violations,
+            group_makespans,
+            score,
+            attainment,
+            wall_seconds,
+        }
+    }
+
+    /// p-th percentile makespan of one group, simulated seconds.
+    pub fn percentile(&self, group: usize, p: f64) -> f64 {
+        crate::sim::percentile(&self.group_makespans[group], p)
+    }
+
+    /// Mean makespan of one group, simulated seconds.
+    pub fn avg_makespan(&self, group: usize) -> f64 {
+        let m = &self.group_makespans[group];
+        if m.is_empty() { 0.0 } else { m.iter().sum::<f64>() / m.len() as f64 }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Drivers
+
+/// Push one open-loop load through an existing coordinator. `groups[g]` are
+/// the member network indices of model group `g`; `time_scale` is the
+/// backing engine's wall-seconds per simulated second (wall mode only —
+/// virtual runs are unscaled). The report covers only this load, even on a
+/// coordinator that served earlier traffic.
+pub fn run_load(
+    coord: &mut Coordinator,
+    groups: &[Vec<usize>],
+    spec: &LoadSpec,
+    time_scale: f64,
+) -> ServeReport {
+    // Finish stragglers from earlier traffic BEFORE snapshotting the log:
+    // a request still in flight from a timed-out pump must complete under
+    // the previous clock/policy and stay out of this load's report.
+    coord.settle(Duration::from_secs(30));
+    let prev_policy = coord.overload_policy();
+    coord.set_overload_policy(spec.policy);
+    let served_before = coord.served().len();
+    let dropped_before = coord.dropped().len();
+    let arrivals = generate_arrivals(&spec.groups);
+    let offered = arrivals.len();
+    let t0 = Instant::now();
+    let scale = match spec.mode {
+        ClockMode::Virtual => {
+            coord.run_virtual(&arrivals, groups, &spec.comm);
+            1.0
+        }
+        ClockMode::Wall { timeout } => {
+            let scale = if time_scale > 0.0 { time_scale } else { 1.0 };
+            drive_wall(coord, groups, &arrivals, scale, timeout);
+            scale
+        }
+    };
+    let wall_seconds = t0.elapsed().as_secs_f64();
+    coord.set_overload_policy(prev_policy);
+    let deadlines: Vec<Option<f64>> = spec.groups.iter().map(|g| g.deadline).collect();
+    ServeReport::from_log(
+        &coord.served()[served_before..],
+        coord.dropped().len() - dropped_before,
+        offered,
+        &deadlines,
+        scale,
+        wall_seconds,
+    )
+}
+
+/// Wall-clock open-loop driver: release each arrival when the wall reaches
+/// its (scaled) timestamp, polling completions in between; drain the tail
+/// under `timeout`.
+fn drive_wall(
+    coord: &mut Coordinator,
+    groups: &[Vec<usize>],
+    arrivals: &[Arrival],
+    scale: f64,
+    timeout: Duration,
+) {
+    let t0 = Instant::now();
+    for a in arrivals {
+        let target = a.time * scale;
+        loop {
+            coord.poll();
+            let elapsed = t0.elapsed().as_secs_f64();
+            if elapsed >= target {
+                break;
+            }
+            std::thread::sleep(Duration::from_secs_f64((target - elapsed).min(500e-6)));
+        }
+        let now = coord.now();
+        coord.submit_group_at(a.group, &groups[a.group], now, a.deadline.map(|d| d * scale));
+        coord.poll();
+    }
+    coord.pump(timeout);
+}
+
+// ---------------------------------------------------------------------------
+// Deploying a genome straight into runtime solutions
+
+/// Materialize runtime [`NetworkSolution`]s for a genome: partitions from
+/// the cut chromosome, per-subgraph exec configs from the device model,
+/// priorities from the priority chromosome. This is how the baselines enter
+/// the same serving harness as Puzzle's Pareto solutions.
+pub fn materialize_solutions(
+    networks: &[Network],
+    genome: &Genome,
+    perf: &PerfModel,
+) -> Vec<NetworkSolution> {
+    networks
+        .iter()
+        .zip(&genome.networks)
+        .enumerate()
+        .map(|(i, (net, genes))| {
+            let part = decode_network(net, genes);
+            let configs = part
+                .subgraphs
+                .iter()
+                .map(|sg| perf.best_config_for(net, &sg.layers, sg.processor).0)
+                .collect();
+            NetworkSolution {
+                network: Arc::new(net.clone()),
+                partition: Arc::new(part),
+                configs,
+                priority: genome.priority[i],
+            }
+        })
+        .collect()
+}
+
+/// Everything needed to push loads through a *fresh* runtime per run: used
+/// by the saturation driver and benches, where each probe must start from an
+/// empty backlog.
+#[derive(Clone)]
+pub struct RuntimeHarness {
+    pub solutions: Vec<NetworkSolution>,
+    /// Member network indices per model group.
+    pub groups: Vec<Vec<usize>>,
+    pub perf: Arc<PerfModel>,
+    pub options: RuntimeOptions,
+    /// Apply the calibrated execution-noise model (as on the real device).
+    pub noisy: bool,
+    pub seed: u64,
+    /// Engine wall-seconds per simulated second for wall-mode runs (virtual
+    /// runs always use a non-sleeping engine).
+    pub time_scale: f64,
+}
+
+/// Deterministic per-probe seed: stable in (base seed, solution-set index,
+/// period multiplier), so repeated probes of one α agree and the score
+/// curves share the saturation driver's schedule.
+pub fn probe_seed(base: u64, set_index: usize, alpha: f64) -> u64 {
+    base ^ ((set_index as u64) << 32) ^ (alpha.to_bits() >> 20)
+}
+
+impl RuntimeHarness {
+    /// Harness for one genome on a scenario (deterministic; noise on).
+    pub fn for_genome(
+        scenario: &Scenario,
+        genome: &Genome,
+        perf: &Arc<PerfModel>,
+        seed: u64,
+    ) -> RuntimeHarness {
+        RuntimeHarness::for_solutions(
+            materialize_solutions(&scenario.networks, genome, perf),
+            scenario.groups.iter().map(|g| g.members.clone()).collect(),
+            perf.clone(),
+            seed,
+        )
+    }
+
+    /// Harness over prepared runtime solutions (noise on, virtual-speed
+    /// engine) — the probe shape the saturation driver and the serving
+    /// figures share.
+    pub fn for_solutions(
+        solutions: Vec<NetworkSolution>,
+        groups: Vec<Vec<usize>>,
+        perf: Arc<PerfModel>,
+        seed: u64,
+    ) -> RuntimeHarness {
+        RuntimeHarness {
+            solutions,
+            groups,
+            perf,
+            options: RuntimeOptions::default(),
+            noisy: true,
+            seed,
+            time_scale: 0.0,
+        }
+    }
+
+    /// Deploy a fresh Coordinator/Worker stack, run the load, shut down.
+    pub fn run(&self, spec: &LoadSpec) -> ServeReport {
+        let (report, _) = self.run_with_log(spec);
+        report
+    }
+
+    /// [`RuntimeHarness::run`], also returning the raw [`ServedRequest`]
+    /// log (for determinism checks and custom accounting).
+    pub fn run_with_log(&self, spec: &LoadSpec) -> (ServeReport, Vec<ServedRequest>) {
+        // Wall mode must use the same fallback scale as the wall driver's
+        // arrival pacing (`run_load`): with a never-sleeping engine under
+        // real-time arrivals, every makespan would be ~0 and the report
+        // would measure nothing.
+        let engine_scale = match spec.mode {
+            ClockMode::Virtual => 0.0,
+            ClockMode::Wall { .. } => {
+                if self.time_scale > 0.0 {
+                    self.time_scale
+                } else {
+                    1.0
+                }
+            }
+        };
+        let engine: Arc<dyn Engine> =
+            Arc::new(SimEngine::new(self.perf.clone(), engine_scale, self.noisy, self.seed));
+        let mut coord = Coordinator::new(self.solutions.clone(), engine, self.options.clone());
+        let report = run_load(&mut coord, &self.groups, spec, self.time_scale);
+        let log = coord.served().to_vec();
+        coord.shutdown();
+        (report, log)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Saturation driver
+
+/// Knobs of the runtime saturation search.
+#[derive(Debug, Clone)]
+pub struct SaturationOptions {
+    /// Requests per group per probe.
+    pub requests: usize,
+    pub alpha_min: f64,
+    pub alpha_max: f64,
+    pub tolerance: f64,
+    /// Score treated as "meets the SLO" (XRBench rounds at two decimals).
+    pub threshold: f64,
+    pub seed: u64,
+    /// Execution noise on (the paper measures on the fluctuating device).
+    pub noisy: bool,
+    pub options: RuntimeOptions,
+}
+
+impl Default for SaturationOptions {
+    fn default() -> Self {
+        SaturationOptions {
+            requests: 12,
+            alpha_min: 0.2,
+            alpha_max: 6.0,
+            tolerance: 0.01,
+            threshold: metrics::SATURATION_THRESHOLD,
+            seed: 23,
+            noisy: true,
+            options: RuntimeOptions::default(),
+        }
+    }
+}
+
+/// One probe of the saturation search, streamed to the observer.
+#[derive(Debug, Clone)]
+pub struct ProbeProgress {
+    pub alpha: f64,
+    /// Median runtime-measured score across the solution sets at `alpha`.
+    pub score: f64,
+    /// Probes evaluated so far (including this one).
+    pub probes: usize,
+}
+
+/// Runtime-measured saturation multiplier α* of a set of candidate
+/// solutions on a scenario: the smallest α whose **median runtime score**
+/// (over the solution sets, the paper's multi-solution rule) clears the
+/// threshold. Every probe deploys a fresh virtual-clock runtime and pushes
+/// periodic open-loop load at Φ(α) through the real Coordinator. Returns
+/// `None` when even `alpha_max` fails.
+pub fn saturation_via_runtime(
+    solution_sets: &[Vec<NetworkSolution>],
+    scenario: &Scenario,
+    perf: &Arc<PerfModel>,
+    opts: &SaturationOptions,
+) -> Option<f64> {
+    saturation_via_runtime_observed(solution_sets, scenario, perf, opts, &mut |_| {
+        ControlFlow::Continue(())
+    })
+}
+
+/// [`saturation_via_runtime`] with a per-probe observer; returning
+/// [`ControlFlow::Break`] cancels the search (→ `None`), which is how the
+/// CLI keeps long load tests interruptible.
+pub fn saturation_via_runtime_observed(
+    solution_sets: &[Vec<NetworkSolution>],
+    scenario: &Scenario,
+    perf: &Arc<PerfModel>,
+    opts: &SaturationOptions,
+    on_probe: &mut dyn FnMut(&ProbeProgress) -> ControlFlow<()>,
+) -> Option<f64> {
+    if solution_sets.is_empty() {
+        return None;
+    }
+    let groups: Vec<Vec<usize>> = scenario.groups.iter().map(|g| g.members.clone()).collect();
+    let mut probes = 0usize;
+    // Median runtime score at one multiplier; None = cancelled.
+    let mut score_at = |alpha: f64| -> Option<f64> {
+        let spec = LoadSpec::periodic(&scenario.periods(alpha, perf), opts.requests);
+        let mut scores: Vec<f64> = solution_sets
+            .iter()
+            .enumerate()
+            .map(|(i, sols)| {
+                let mut harness = RuntimeHarness::for_solutions(
+                    sols.clone(),
+                    groups.clone(),
+                    perf.clone(),
+                    probe_seed(opts.seed, i, alpha),
+                );
+                harness.options = opts.options.clone();
+                harness.noisy = opts.noisy;
+                harness.run(&spec).score
+            })
+            .collect();
+        scores.sort_by(|a, b| a.partial_cmp(b).expect("finite scores"));
+        let median = scores[scores.len() / 2];
+        probes += 1;
+        if on_probe(&ProbeProgress { alpha, score: median, probes }).is_break() {
+            return None;
+        }
+        Some(median)
+    };
+
+    // Same grid + bisection as `metrics::saturation_multiplier`, but
+    // cancellable per probe.
+    if score_at(opts.alpha_max)? < opts.threshold {
+        return None;
+    }
+    if score_at(opts.alpha_min)? >= opts.threshold {
+        return Some(opts.alpha_min);
+    }
+    let (mut lo, mut hi) = (opts.alpha_min, opts.alpha_max);
+    while hi - lo > opts.tolerance {
+        let mid = 0.5 * (lo + hi);
+        if score_at(mid)? >= opts.threshold {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Some(hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::Processor;
+
+    #[test]
+    fn clocks_behave() {
+        let w = WallClock::new();
+        let a = w.now();
+        let b = w.now();
+        assert!(b >= a && !w.is_virtual());
+        let v = VirtualClock::new();
+        assert_eq!(v.now(), 0.0);
+        v.advance_to(1.5);
+        assert_eq!(v.now(), 1.5);
+        assert!(v.is_virtual());
+    }
+
+    #[test]
+    fn periodic_and_bursty_preserve_mean_rate() {
+        let p = ArrivalProcess::Periodic { period: 0.01 }.times(10);
+        assert_eq!(p[0], 0.0);
+        assert!((p[9] - 0.09).abs() < 1e-12);
+        // Bursty: same long-run rate, clumped.
+        let b = ArrivalProcess::Bursty { period: 0.01, burst: 4 }.times(8);
+        assert_eq!(b[0], 0.0);
+        assert!((b[4] - 0.04).abs() < 1e-12, "second burst starts at 4·period: {b:?}");
+        // Within a burst, spacing is period/10.
+        assert!((b[1] - 0.001).abs() < 1e-12);
+        assert!(b.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn poisson_times_deterministic_per_seed() {
+        let a = ArrivalProcess::Poisson { mean: 0.01, seed: 9 }.times(100);
+        let b = ArrivalProcess::Poisson { mean: 0.01, seed: 9 }.times(100);
+        let c = ArrivalProcess::Poisson { mean: 0.01, seed: 10 }.times(100);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn arrivals_merge_in_time_order() {
+        let spec = LoadSpec::periodic(&[0.010, 0.004], 3);
+        let arrivals = generate_arrivals(&spec.groups);
+        assert_eq!(arrivals.len(), 6);
+        assert!(arrivals.windows(2).all(|w| w[0].time <= w[1].time));
+        // Simultaneous arrivals (t = 0) keep group order.
+        assert_eq!((arrivals[0].group, arrivals[1].group), (0, 1));
+        assert_eq!(arrivals[0].deadline, Some(0.010));
+    }
+
+    #[test]
+    fn report_scores_and_counts() {
+        let served = vec![
+            ServedRequest {
+                group: 0,
+                request: 0,
+                arrival: 0.0,
+                completion: 0.005,
+                makespan: 0.005,
+                deadline: Some(0.01),
+                violated: false,
+            },
+            ServedRequest {
+                group: 0,
+                request: 1,
+                arrival: 0.01,
+                completion: 0.05,
+                makespan: 0.04,
+                deadline: Some(0.01),
+                violated: true,
+            },
+        ];
+        let r = ServeReport::from_log(&served, 1, 3, &[Some(0.01)], 1.0, 0.1);
+        assert_eq!(r.submitted, 3);
+        assert_eq!(r.served, 2);
+        assert_eq!(r.dropped, 1);
+        assert_eq!(r.unfinished, 0);
+        assert_eq!(r.violations, 1);
+        assert!((r.attainment - 1.0 / 3.0).abs() < 1e-12);
+        assert!(r.score > 0.0 && r.score < 1.0);
+        assert_eq!(r.group_makespans[0].len(), 2);
+        // Requests a wall-mode drain timeout never finished count as
+        // misses, not as a smaller denominator.
+        let r = ServeReport::from_log(&served, 1, 5, &[Some(0.01)], 1.0, 0.1);
+        assert_eq!(r.submitted, 5);
+        assert_eq!(r.unfinished, 2);
+        assert!((r.attainment - 1.0 / 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn harness_runs_virtual_load_end_to_end() {
+        let scenario = Scenario::from_groups("serve-test", &[vec![0, 1]]);
+        let perf = Arc::new(PerfModel::paper_calibrated());
+        let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+        let harness = RuntimeHarness::for_genome(&scenario, &genome, &perf, 7);
+        let spec = LoadSpec::for_scenario(&scenario, &perf, 2.0, 8);
+        let report = harness.run(&spec);
+        assert_eq!(report.served, 8);
+        assert_eq!(report.dropped, 0);
+        assert!(report.group_makespans[0].iter().all(|&m| m > 0.0));
+        // A 2x period is comfortable for two light models on the NPU.
+        assert_eq!(report.violations, 0, "{report:?}");
+        assert!(report.score > 0.9, "score {}", report.score);
+    }
+
+    #[test]
+    fn saturation_driver_finds_knee_on_tiny_scenario() {
+        let scenario = Scenario::from_groups("sat-test", &[vec![0, 1]]);
+        let perf = Arc::new(PerfModel::paper_calibrated());
+        let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+        let sets = vec![materialize_solutions(&scenario.networks, &genome, &perf)];
+        let opts = SaturationOptions { requests: 10, tolerance: 0.02, ..Default::default() };
+        let alpha = saturation_via_runtime(&sets, &scenario, &perf, &opts);
+        let a = alpha.expect("light scenario saturates");
+        assert!(a >= opts.alpha_min && a < opts.alpha_max, "alpha {a}");
+        // Reproducible: the same search lands on the same knee.
+        let again = saturation_via_runtime(&sets, &scenario, &perf, &opts).unwrap();
+        assert_eq!(a, again);
+    }
+
+    #[test]
+    fn saturation_driver_is_cancellable() {
+        let scenario = Scenario::from_groups("cancel-test", &[vec![0]]);
+        let perf = Arc::new(PerfModel::paper_calibrated());
+        let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+        let sets = vec![materialize_solutions(&scenario.networks, &genome, &perf)];
+        let opts = SaturationOptions { requests: 4, ..Default::default() };
+        let mut seen = 0usize;
+        let out = saturation_via_runtime_observed(&sets, &scenario, &perf, &opts, &mut |p| {
+            seen = p.probes;
+            if p.probes >= 2 { ControlFlow::Break(()) } else { ControlFlow::Continue(()) }
+        });
+        assert!(out.is_none(), "cancelled search must not report a knee");
+        assert_eq!(seen, 2);
+    }
+}

@@ -1,0 +1,204 @@
+//! Integration tests of the arrival-driven serving runtime: virtual-clock
+//! determinism, priority-ordered dispatch under contention, deadline
+//! accounting above saturation, overload policies, and the
+//! `Deployment::serve_load` api surface.
+
+use std::sync::Arc;
+
+use puzzle::analyzer::GaConfig;
+use puzzle::api::{LoadSpec, OverloadPolicy, RuntimeOptions, ScenarioSpec, SessionBuilder};
+use puzzle::ga::Genome;
+use puzzle::perf::PerfModel;
+use puzzle::scenario::Scenario;
+use puzzle::serve::{materialize_solutions, RuntimeHarness};
+use puzzle::Processor;
+
+fn harness_for(scenario: &Scenario, genome: &Genome, seed: u64) -> RuntimeHarness {
+    let perf = Arc::new(PerfModel::paper_calibrated());
+    RuntimeHarness::for_genome(scenario, genome, &perf, seed)
+}
+
+#[test]
+fn virtual_clock_logs_bit_identical_across_runs() {
+    // Same seed, same (Poisson!) load, fresh runtime each run: the
+    // ServedRequest logs must agree to the last f64 bit — arrivals,
+    // completions, makespans, verdicts.
+    let scenario = Scenario::from_groups("det", &[vec![0, 1]]);
+    let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+    let harness = harness_for(&scenario, &genome, 11);
+    let perf = PerfModel::paper_calibrated();
+    let spec = LoadSpec::poisson(&scenario.periods(1.0, &perf), 15, 5);
+    let (report_a, log_a) = harness.run_with_log(&spec);
+    let (_, log_b) = harness.run_with_log(&spec);
+    assert_eq!(report_a.served, 15);
+    assert_eq!(log_a.len(), log_b.len());
+    for (a, b) in log_a.iter().zip(&log_b) {
+        assert_eq!((a.group, a.request), (b.group, b.request));
+        assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+        assert_eq!(a.completion.to_bits(), b.completion.to_bits());
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.violated, b.violated);
+    }
+    // A different noise seed produces a different schedule (the determinism
+    // is per seed, not an accident of a noise-free path).
+    let (_, log_c) = harness_for(&scenario, &genome, 12).run_with_log(&spec);
+    assert!(
+        log_a
+            .iter()
+            .zip(&log_c)
+            .any(|(a, c)| a.makespan.to_bits() != c.makespan.to_bits()),
+        "noise seed had no effect"
+    );
+}
+
+#[test]
+fn priority_orders_dispatch_under_contention() {
+    // Three copies of the same heavy model, all pinned to the NPU, one per
+    // group, submitted simultaneously. The ready queue must release them in
+    // priority order (0 = highest precedence), not submission order.
+    let scenario = Scenario::from_groups("prio", &[vec![8], vec![8], vec![8]]);
+    let mut genome = Genome::all_on(&scenario.networks, Processor::Npu);
+    genome.priority = vec![1, 2, 0]; // network/group 2 wins, then 0, then 1
+    let mut harness = harness_for(&scenario, &genome, 3);
+    harness.noisy = false;
+    let spec = LoadSpec::periodic(&[1.0, 1.0, 1.0], 1); // one request each at t=0
+    let (report, log) = harness.run_with_log(&spec);
+    assert_eq!(report.served, 3);
+    let completion_order: Vec<usize> = log.iter().map(|s| s.group).collect();
+    assert_eq!(completion_order, vec![2, 0, 1], "dispatch ignored priorities");
+    // Serialized on one worker: completions strictly increase.
+    assert!(log.windows(2).all(|w| w[1].completion > w[0].completion));
+}
+
+#[test]
+fn deadline_violations_appear_above_saturation() {
+    // One NPU-friendly model. At a generous period every deadline holds; at
+    // a period far below the service time the backlog grows and the tail of
+    // the run violates.
+    let scenario = Scenario::from_groups("overload", &[vec![0]]);
+    let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+    let harness = harness_for(&scenario, &genome, 9);
+    let perf = PerfModel::paper_calibrated();
+
+    let relaxed = harness.run(&LoadSpec::for_scenario(&scenario, &perf, 3.0, 12));
+    assert_eq!(relaxed.served, 12);
+    assert_eq!(relaxed.violations, 0, "{relaxed:?}");
+    assert!(relaxed.attainment == 1.0 && relaxed.score > 0.9);
+
+    let overloaded = harness.run(&LoadSpec::for_scenario(&scenario, &perf, 0.05, 12));
+    assert_eq!(overloaded.served, 12, "queue policy still serves everything");
+    assert!(overloaded.violations > 0, "no violations under overload: {overloaded:?}");
+    assert!(overloaded.attainment < 1.0);
+    assert!(overloaded.score < relaxed.score);
+    // Open-loop backlog: makespans grow toward the tail.
+    let ms = &overloaded.group_makespans[0];
+    assert!(ms.last().unwrap() > ms.first().unwrap());
+}
+
+#[test]
+fn drop_policy_bounds_backlog() {
+    let scenario = Scenario::from_groups("drops", &[vec![0]]);
+    let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+    let harness = harness_for(&scenario, &genome, 17);
+    let perf = PerfModel::paper_calibrated();
+    let overload = LoadSpec::for_scenario(&scenario, &perf, 0.05, 16);
+
+    let queued = harness.run(&overload);
+    let dropping =
+        harness.run(&overload.with_policy(OverloadPolicy::DropAfter { max_inflight: 2 }));
+    assert!(dropping.dropped > 0, "drop policy never engaged");
+    assert_eq!(dropping.served + dropping.dropped, dropping.submitted);
+    // Admission control bounds the worst makespan the served requests see.
+    let worst = |r: &puzzle::serve::ServeReport| {
+        r.group_makespans[0].iter().cloned().fold(0.0f64, f64::max)
+    };
+    assert!(
+        worst(&dropping) < worst(&queued),
+        "drop policy did not bound the backlog: {} vs {}",
+        worst(&dropping),
+        worst(&queued)
+    );
+}
+
+#[test]
+fn bursty_load_inflates_tail_latency() {
+    // Same long-run rate, clumped arrivals: the p90 makespan under bursts
+    // must exceed the periodic p90 (queueing at the worker).
+    let scenario = Scenario::from_groups("burst", &[vec![6]]);
+    let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+    let mut harness = harness_for(&scenario, &genome, 21);
+    harness.noisy = false;
+    let perf = PerfModel::paper_calibrated();
+    let periods = scenario.periods(1.1, &perf);
+    let periodic = harness.run(&LoadSpec::periodic(&periods, 24));
+    let bursty = harness.run(&LoadSpec::bursty(&periods, 6, 24));
+    assert_eq!(periodic.served, 24);
+    assert_eq!(bursty.served, 24);
+    assert!(
+        bursty.percentile(0, 0.9) > periodic.percentile(0, 0.9),
+        "bursty p90 {} <= periodic p90 {}",
+        bursty.percentile(0, 0.9),
+        periodic.percentile(0, 0.9)
+    );
+}
+
+#[test]
+fn wall_clock_load_completes_and_converts_units() {
+    // Wall mode on a light group at a compressing time scale: everything
+    // serves, and the reported makespans come back in simulated seconds
+    // (not wall seconds).
+    let scenario = Scenario::from_groups("wall", &[vec![0, 1]]);
+    let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+    let mut harness = harness_for(&scenario, &genome, 13);
+    harness.time_scale = 2.0; // stretch: wall sleeps 2x simulated time
+    let perf = PerfModel::paper_calibrated();
+    let spec = LoadSpec::for_scenario(&scenario, &perf, 2.0, 5)
+        .wall(std::time::Duration::from_secs(20));
+    let report = harness.run(&spec);
+    assert_eq!(report.served, 5);
+    assert_eq!(report.dropped, 0);
+    // Simulated makespans stay on the order of the models' service times
+    // (sub-5ms), even though wall time was stretched 2x.
+    for &m in &report.group_makespans[0] {
+        assert!(m > 0.0 && m < 0.05, "makespan {m}s not in simulated units");
+    }
+}
+
+#[test]
+fn deployment_serve_load_end_to_end() {
+    // The api surface: session → analysis → deploy (non-sleeping engine) →
+    // serve_load under the virtual clock.
+    let session = SessionBuilder::new(ScenarioSpec::single_group("api-load", vec![0, 2]))
+        .config(GaConfig { population: 10, max_generations: 3, ..GaConfig::quick(7) })
+        .build()
+        .unwrap();
+    let analysis = session.run();
+    let mut deployment = analysis
+        .deploy_sim(analysis.best_index(), RuntimeOptions::default(), 0.0, true, 7)
+        .unwrap();
+    let spec = LoadSpec::for_scenario(analysis.scenario(), analysis.perf(), 2.0, 12);
+    let report = deployment.serve_load(&spec);
+    deployment.shutdown();
+    assert_eq!(report.submitted, 12);
+    assert_eq!(report.served, 12);
+    assert!(report.score > 0.5, "relaxed load should score well: {report:?}");
+    assert!(report.group_makespans[0].iter().all(|&m| m > 0.0));
+}
+
+#[test]
+fn materialized_baseline_matches_api_deployment_shape() {
+    // materialize_solutions (the baseline entry into the harness) produces
+    // the same solution shape as Analysis::runtime_solutions.
+    let scenario = Scenario::from_groups("shape", &[vec![0, 4]]);
+    let perf = PerfModel::paper_calibrated();
+    let genome = Genome::all_on(&scenario.networks, Processor::Gpu);
+    let sols = materialize_solutions(&scenario.networks, &genome, &perf);
+    assert_eq!(sols.len(), 2);
+    for (i, sol) in sols.iter().enumerate() {
+        assert_eq!(sol.priority, genome.priority[i]);
+        assert_eq!(sol.partition.subgraphs.len(), sol.configs.len());
+        for (sg, cfg) in sol.partition.subgraphs.iter().zip(&sol.configs) {
+            assert_eq!(cfg.processor, sg.processor);
+        }
+    }
+}
