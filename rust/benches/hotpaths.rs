@@ -15,14 +15,14 @@
 use puzzle::analyzer::GaConfig;
 use puzzle::api::SessionBuilder;
 use puzzle::comm::CommModel;
-use puzzle::ga::{decode, nsga3_select, DecodedPlanCache, Genome};
-use puzzle::graph::{merkle_hash_subgraph, partition};
+use puzzle::ga::{decode, nsga3_select, DecodedPlanCache, Genome, SelectionWorkspace};
+use puzzle::graph::{merkle_hash_subgraph, partition, PartitionWorkspace};
 use puzzle::mem::TensorPool;
 use puzzle::perf::PerfModel;
 use puzzle::profiler::Profiler;
 use puzzle::scenario::Scenario;
 use puzzle::serve::{LoadSpec, RuntimeHarness};
-use puzzle::sim::{compile_plans, simulate, GroupSpec, SimOptions, SimWorkspace};
+use puzzle::sim::{compile_plans, simulate, ExecutionPlan, GroupSpec, SimOptions, SimWorkspace};
 use puzzle::util::bench::{bench, black_box, write_json, BenchStats};
 use puzzle::util::rng::Rng;
 use puzzle::Processor;
@@ -62,6 +62,51 @@ fn main() {
         black_box(ws.tasks_run());
     }));
 
+    // Measurement tier at measure_reps = 8, per candidate: the legacy path
+    // (clone plans, rewrite every task duration with sample() per rep) vs
+    // the vectorized path (flatten nominals once, sample flat factors,
+    // replay via run_with_durations). bench_guard asserts vectorized <=
+    // naive as a same-run invariant.
+    let reps = 8usize;
+    let mut mt_rng = Rng::seed_from_u64(77);
+    let mut mt_ws = SimWorkspace::new();
+    let mut scratch_plans: Vec<ExecutionPlan> = Vec::new();
+    all.push(bench("sim/measure_tier_naive_reps8", 3.0, 20, || {
+        scratch_plans.clear();
+        scratch_plans.extend(plans.iter().cloned());
+        for _ in 0..reps {
+            for (np, p) in scratch_plans.iter_mut().zip(&plans) {
+                for (nt, t) in np.tasks.iter_mut().zip(&p.tasks) {
+                    nt.duration = pm.sample(t.duration, t.processor, &mut mt_rng);
+                }
+            }
+            mt_ws.run(&scratch_plans, &compiled, &groups, &comm, &opts);
+        }
+        black_box(mt_ws.tasks_run());
+    }));
+    let mut nominal: Vec<f64> = Vec::new();
+    let mut procs: Vec<Processor> = Vec::new();
+    let mut durs: Vec<f64> = Vec::new();
+    all.push(bench("sim/measure_tier_vectorized_reps8", 3.0, 20, || {
+        nominal.clear();
+        procs.clear();
+        for p in &plans {
+            for t in &p.tasks {
+                nominal.push(t.duration);
+                procs.push(t.processor);
+            }
+        }
+        durs.clear();
+        durs.resize(nominal.len(), 0.0);
+        for _ in 0..reps {
+            for i in 0..nominal.len() {
+                durs[i] = nominal[i] * pm.sample_factor(procs[i], &mut mt_rng);
+            }
+            mt_ws.run_with_durations(&plans, &compiled, &durs, &groups, &comm, &opts);
+        }
+        black_box(mt_ws.tasks_run());
+    }));
+
     all.push(bench("ga/decode_genome(cached profiles)", 3.0, 50, || {
         black_box(decode(nets, &genome, &profiler, &comm));
     }));
@@ -89,6 +134,15 @@ fn main() {
         black_box(partition(net, &cuts, &mapping));
     }));
 
+    // Same partition through the reusable arena (the decode hot path);
+    // bench_guard asserts workspace <= owned as a same-run invariant.
+    let mut pws = PartitionWorkspace::new();
+    pws.partition_into(net, &cuts, &mapping); // warm to the net's bounds
+    all.push(bench("graph/partition_workspace_17layer", 3.0, 200, || {
+        pws.partition_into(net, &cuts, &mapping);
+        black_box(pws.num_subgraphs());
+    }));
+
     let part = partition(net, &cuts, &mapping);
     all.push(bench("graph/merkle_hash", 3.0, 200, || {
         for sg in &part.subgraphs {
@@ -102,6 +156,23 @@ fn main() {
         .collect();
     all.push(bench("ga/nsga3_select_96to48_4obj", 3.0, 100, || {
         black_box(nsga3_select(&objs, 48));
+    }));
+
+    // Selection at the target scale: 1024-candidate pool (population 512
+    // parents + children), 4 objectives. The O(n²) reference vs the ENS +
+    // heap-niching workspace (bit-identical output); bench_guard asserts
+    // ENS <= naive as a same-run invariant.
+    let big_objs: Vec<Vec<f64>> = (0..1024)
+        .map(|_| (0..4).map(|_| rng.gen_f64()).collect())
+        .collect();
+    let big_flat: Vec<f64> = big_objs.iter().flatten().copied().collect();
+    all.push(bench("ga/naive_select_pop512", 5.0, 10, || {
+        black_box(nsga3_select(&big_objs, 512));
+    }));
+    let mut sel_ws = SelectionWorkspace::new();
+    let _ = sel_ws.select(&big_flat, 4, 512); // warm: the analyzer's steady state
+    all.push(bench("ga/ens_select_pop512", 5.0, 10, || {
+        black_box(sel_ws.select(&big_flat, 4, 512).len());
     }));
 
     // Tensor pool.
@@ -162,6 +233,43 @@ fn main() {
     );
     all.push(serial);
     all.push(parallel);
+
+    // Offspring generation at scale: one full generation at population 256
+    // with local search + measurement tier on. Since breeding moved into
+    // the fan-out, threads = 0 parallelizes crossover/mutation too;
+    // bench_guard asserts fan-out <= serial as a same-run invariant.
+    let off_scenario = Scenario::from_groups("off256", &[vec![0, 4, 6], vec![1, 5, 8]]);
+    let off_cfg = |threads: usize| GaConfig {
+        population: 256,
+        max_generations: 1,
+        patience: 1,
+        sim_requests: 6,
+        measure_reps: 1,
+        seed: 11,
+        threads,
+        ..Default::default()
+    };
+    let off_session = |threads: usize| {
+        SessionBuilder::for_scenario(off_scenario.clone())
+            .perf_model(pm.clone())
+            .config(off_cfg(threads))
+            .build()
+            .expect("valid scenario")
+    };
+    let off_serial_session = off_session(1);
+    let off_fanout_session = off_session(0);
+    let off_serial = bench("analyzer/offspring_serial", 10.0, 2, || {
+        black_box(off_serial_session.run());
+    });
+    let off_fanout = bench("analyzer/offspring_fanout", 10.0, 2, || {
+        black_box(off_fanout_session.run());
+    });
+    println!(
+        "analyzer/offspring_fanout speedup over serial: {:.2}x",
+        off_serial.mean_s / off_fanout.mean_s
+    );
+    all.push(off_serial);
+    all.push(off_fanout);
 
     // Arrival-driven load tests through the real Coordinator/Worker stack:
     // the virtual-clock event loop (deterministic, engine never sleeps) vs

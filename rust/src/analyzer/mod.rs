@@ -16,21 +16,41 @@
 //!   simulated promise does not survive device fluctuation (the paper's
 //!   Scenario-6 observation).
 //!
-//! ## Batch evaluation engine (§Perf, this PR)
+//! ## Batch evaluation engine (§Perf)
 //!
 //! Candidate scoring — the search's entire cost — runs through a **batch
-//! evaluator**: each generation's offspring become [`EvalJob`]s (genome +
-//! a per-job RNG seed derived *sequentially* from the master stream), which
-//! a `std::thread::scope` fan-out scores in parallel. Each worker thread
-//! owns one reusable [`SimWorkspace`] (zero steady-state allocation) and
-//! shares the [`DecodedPlanCache`] genome→plan memo and the merkle-keyed
-//! profile DB. Because every job's outcome depends only on its genome and
-//! its derived seed — never on cross-thread state — results gathered back
-//! by index are **bit-identical for any thread count**, including
-//! `threads = 1` (tested by `deterministic_across_thread_counts`). Only the
-//! profiler/memo hit-miss *counters* may vary under concurrency (two
-//! threads can race the same miss); objectives, Pareto fronts, and
-//! evaluation counts never do.
+//! evaluator**: the initial population becomes [`EvalJob`]s, and each
+//! generation's reproduction becomes [`PairJob`]s (parent indices + RNG
+//! seeds derived *sequentially* from the master stream), which a
+//! `std::thread::scope` fan-out processes in parallel. **Offspring
+//! generation runs inside the fan-out too**: a pair job breeds its two
+//! children (clone → one-point crossover → mutation, driven by the pair's
+//! derived seed), then scores them (decode/memo, simulation, seed-driven
+//! local search, measurement tier) on the same worker — the master thread
+//! only draws seeds and gathers results by index. Each worker owns one
+//! [`EvalScratch`] (reusable [`SimWorkspace`], partition/probe arenas,
+//! measurement-tier buffers, local-search clone target) and shares the
+//! [`DecodedPlanCache`] genome→plan memo and the merkle-keyed profile DB.
+//! Because every job's outcome depends only on its parents and its derived
+//! seeds — never on cross-thread state — results gathered back by index are
+//! **bit-identical for any thread count**, including `threads = 1` (tested
+//! by `deterministic_across_thread_counts` and
+//! `offspring_fanout_deterministic_with_odd_population`). Only the profiler/memo
+//! hit-miss *counters* may vary under concurrency (two threads can race the
+//! same miss); objectives, Pareto fronts, and evaluation counts never do.
+//!
+//! Replacement runs through [`SelectionWorkspace`] — ENS non-dominated
+//! sorting + binary-heap niching, bit-identical to `nsga3_select` — with
+//! the flattened objective matrix and survivor index list kept in reusable
+//! master-thread buffers, so per-generation selection allocates nothing in
+//! steady state.
+//!
+//! The measurement tier is **vectorized across repetitions**: nominal
+//! durations and processors are flattened once per candidate, each rep
+//! samples multiplicative noise factors in one flat pass
+//! ([`crate::perf::PerfModel::sample_factor`]) and replays the shared
+//! compiled plan through [`SimWorkspace::run_with_durations`] — no plan
+//! cloning per candidate, no per-rep plan rewriting.
 //!
 //! ## Entry points (§API, this PR)
 //!
@@ -53,8 +73,8 @@ use crate::util::rng::Rng;
 
 use crate::comm::CommModel;
 use crate::ga::{
-    decode, fast_non_dominated_sort, merge_neighbors, mutate, nsga3_select, one_point_crossover,
-    reposition_adjacent, DecodedPlanCache, Genome, PlanSet,
+    breed_pair, decode, fast_non_dominated_sort, merge_neighbors_into, reposition_adjacent_into,
+    DecodeScratch, DecodedPlanCache, Genome, MutationRates, PlanSet, SelectionWorkspace,
 };
 
 use crate::perf::PerfModel;
@@ -195,12 +215,58 @@ impl AnalysisResult {
 /// One unit of batch-evaluation work: a candidate genome plus the RNG seed
 /// that drives its local-search decisions and measurement-tier noise. Seeds
 /// are drawn sequentially from the master stream *before* the parallel
-/// fan-out, which is what makes results thread-count independent.
+/// fan-out, which is what makes results thread-count independent. The
+/// genome is *moved* into the resulting [`Solution`] (via `mem::take`), so
+/// scoring a job never copies it.
 struct EvalJob {
     genome: Genome,
     seed: u64,
     local_search: bool,
     measure: bool,
+}
+
+/// One unit of offspring work: breed the parent pair `(a, b)` (clone →
+/// crossover → mutation, driven by `pair_seed`) and evaluate the children
+/// with `seed_a`/`seed_b` — the whole reproduction step of one pair, shipped
+/// to a worker thread. All three seeds are drawn sequentially from the
+/// master stream before the fan-out, so the children are a pure function of
+/// `(parents, seeds)` whatever the thread count. `emit_b` is false only for
+/// the surplus child of an odd-population last pair.
+struct PairJob {
+    a: usize,
+    b: usize,
+    pair_seed: u64,
+    seed_a: u64,
+    seed_b: u64,
+    emit_b: bool,
+    measure: bool,
+}
+
+/// Per-worker evaluation scratch: simulation arena, first-touch decode
+/// arenas (partitioning + config probing), the measurement tier's flat
+/// duration/factor buffers, objective buffers, and the local-search clone
+/// target. One per evaluator thread; with it, steady-state candidate
+/// scoring allocates only for each [`Solution`]'s owned output (genome
+/// already moved in, one objectives `Vec`) and whatever the shared caches
+/// store on a miss.
+#[derive(Default)]
+struct EvalScratch {
+    sim: SimWorkspace,
+    decode: DecodeScratch,
+    /// Flat nominal duration per task of the current candidate's plan set.
+    nominal: Vec<f64>,
+    /// Flat processor per task (parallel to `nominal`).
+    procs: Vec<Processor>,
+    /// Flat noisy durations of the current measurement repetition.
+    durs: Vec<f64>,
+    /// Worst-observed `[avg, p90]` per group across repetitions.
+    worst: Vec<f64>,
+    /// Objectives of the job's current best genome.
+    objectives: Vec<f64>,
+    /// Objectives of the local-search candidate under test.
+    cand_objectives: Vec<f64>,
+    /// Local-search candidate clone target (buffer-reusing `clone_from`).
+    cand: Genome,
 }
 
 /// Shared, thread-safe evaluation context: the profile DB, the genome→plan
@@ -283,130 +349,255 @@ impl<'a> StaticAnalyzer<'a> {
         SimOptions { requests_per_group: self.config.sim_requests, ..Default::default() }
     }
 
-    /// Memoized evaluation through the shared plan cache and a reusable
-    /// per-thread workspace: decode (or memo-hit), simulate allocation-free,
-    /// read objectives out of the workspace.
+    /// Memoized evaluation through the shared plan cache and the per-thread
+    /// scratch: decode (or memo-hit), simulate allocation-free, write the
+    /// objectives into `out` (cleared first).
     fn evaluate_cached(
         &self,
         genome: &Genome,
         ctx: &EvalCtx<'_, '_>,
-        ws: &mut SimWorkspace,
-    ) -> (Vec<f64>, Arc<PlanSet>) {
-        let set = ctx.cache.decode(&self.scenario.networks, genome, ctx.profiler, &self.comm);
+        sim: &mut SimWorkspace,
+        decode: &mut DecodeScratch,
+        out: &mut Vec<f64>,
+    ) -> Arc<PlanSet> {
+        let set = ctx.cache.decode_scratch(
+            &self.scenario.networks,
+            genome,
+            ctx.profiler,
+            &self.comm,
+            decode,
+        );
         let opts = self.sim_opts();
-        ws.run(&set.plans, &set.compiled, ctx.groups, &self.comm, &opts);
-        let mut objectives = Vec::with_capacity(ctx.groups.len() * 2);
-        ws.objectives_into(&mut objectives);
+        sim.run(&set.plans, &set.compiled, ctx.groups, &self.comm, &opts);
+        sim.objectives_into(out);
         ctx.evals.fetch_add(1, Ordering::Relaxed);
-        (objectives, set)
+        set
     }
 
-    /// Measurement tier: re-evaluate with execution-time noise, and score by
-    /// the worst observed repetition. Candidates that only look good in the
-    /// noiseless simulation get demoted here. Durations are perturbed in a
-    /// reusable scratch plan set; the structural compilation is shared with
-    /// the noiseless plans (noise never changes dependencies).
+    /// Measurement tier: re-evaluate with execution-time noise, scoring by
+    /// the worst observed repetition (written into `worst` as flattened
+    /// `[avg, p90]` per group). Candidates that only look good in the
+    /// noiseless simulation get demoted here.
+    ///
+    /// Vectorized across repetitions: the candidate's nominal durations and
+    /// processors are flattened once, each rep samples multiplicative noise
+    /// factors in one flat pass ([`PerfModel::sample_factor`] — bit-equal to
+    /// the per-task `sample` rewrite it replaces, same RNG stream) and
+    /// replays the shared compilation via
+    /// [`SimWorkspace::run_with_durations`]. No plan clones, no per-rep
+    /// plan rewriting, zero steady-state allocation.
+    #[allow(clippy::too_many_arguments)]
     fn measure_with(
         &self,
         set: &PlanSet,
         ctx: &EvalCtx<'_, '_>,
         rng: &mut Rng,
-        ws: &mut SimWorkspace,
-        scratch: &mut Vec<ExecutionPlan>,
-    ) -> Vec<f64> {
+        sim: &mut SimWorkspace,
+        nominal: &mut Vec<f64>,
+        procs: &mut Vec<Processor>,
+        durs: &mut Vec<f64>,
+        worst: &mut Vec<f64>,
+    ) {
         let opts = self.sim_opts();
-        let mut worst: Vec<f64> = vec![0.0; ctx.groups.len() * 2];
-        scratch.clear();
-        scratch.extend(set.plans.iter().cloned());
-        for _ in 0..self.config.measure_reps.max(1) {
-            for (noisy, nominal) in scratch.iter_mut().zip(&set.plans) {
-                for (nt, t) in noisy.tasks.iter_mut().zip(&nominal.tasks) {
-                    nt.duration = self.perf.sample(t.duration, t.processor, rng);
-                }
-            }
-            ws.run(scratch, &set.compiled, ctx.groups, &self.comm, &opts);
-            for g in 0..ctx.groups.len() {
-                worst[g * 2] = worst[g * 2].max(ws.avg_makespan(g));
-                worst[g * 2 + 1] = worst[g * 2 + 1].max(ws.p90_makespan(g));
+        worst.clear();
+        worst.resize(ctx.groups.len() * 2, 0.0);
+        nominal.clear();
+        procs.clear();
+        for plan in &set.plans {
+            for t in &plan.tasks {
+                nominal.push(t.duration);
+                procs.push(t.processor);
             }
         }
-        worst
+        durs.clear();
+        durs.resize(nominal.len(), 0.0);
+        for _ in 0..self.config.measure_reps.max(1) {
+            for i in 0..nominal.len() {
+                durs[i] = nominal[i] * self.perf.sample_factor(procs[i], rng);
+            }
+            sim.run_with_durations(&set.plans, &set.compiled, durs, ctx.groups, &self.comm, &opts);
+            for g in 0..ctx.groups.len() {
+                worst[g * 2] = worst[g * 2].max(sim.avg_makespan(g));
+                worst[g * 2 + 1] = worst[g * 2 + 1].max(sim.p90_makespan(g));
+            }
+        }
     }
 
-    /// Score one job end-to-end: memoized evaluation, seed-driven local
-    /// search, measurement tier. Everything the job touches is either its
-    /// own (`rng` from the derived seed, the thread-local workspace and
-    /// scratch) or value-deterministic shared state (profile DB, plan memo),
-    /// so the result is a pure function of (genome, seed).
+    /// Score one candidate end-to-end: memoized evaluation, seed-driven
+    /// local search (in-place moves into the scratch clone target, accepted
+    /// only on all-objective improvement), measurement tier. Everything the
+    /// job touches is either its own (`rng` from the derived seed, the
+    /// thread-local scratch) or value-deterministic shared state (profile
+    /// DB, plan memo), so the result is a pure function of (genome, seed).
+    /// The genome is owned and moves into the returned [`Solution`].
     fn eval_one(
         &self,
-        job: &EvalJob,
+        genome: Genome,
+        seed: u64,
+        local_search: bool,
+        measure: bool,
         ctx: &EvalCtx<'_, '_>,
-        ws: &mut SimWorkspace,
-        scratch: &mut Vec<ExecutionPlan>,
+        scratch: &mut EvalScratch,
     ) -> Solution {
-        let (objectives, set) = self.evaluate_cached(&job.genome, ctx, ws);
-        let mut sol = Solution { genome: job.genome.clone(), objectives, plan_set: set };
-        if job.local_search || job.measure {
-            let mut rng = Rng::seed_from_u64(job.seed);
-            if job.local_search && rng.gen_bool(self.config.p_local_search) {
+        let EvalScratch {
+            sim,
+            decode,
+            nominal,
+            procs,
+            durs,
+            worst,
+            objectives,
+            cand_objectives,
+            cand,
+        } = scratch;
+        let mut genome = genome;
+        let mut set = self.evaluate_cached(&genome, ctx, sim, decode, objectives);
+        if local_search || measure {
+            let mut rng = Rng::seed_from_u64(seed);
+            if local_search && rng.gen_bool(self.config.p_local_search) {
                 let nets = &self.scenario.networks;
                 for _ in 0..2 {
-                    let cand = if rng.gen_bool(0.5) {
-                        merge_neighbors(&sol.genome, &mut rng)
+                    let moved = if rng.gen_bool(0.5) {
+                        merge_neighbors_into(&genome, cand, &mut rng)
                     } else {
-                        reposition_adjacent(nets, &sol.genome, &mut rng)
+                        reposition_adjacent_into(nets, &genome, cand, &mut rng)
                     };
-                    if let Some(cand) = cand {
-                        let (cobjs, cset) = self.evaluate_cached(&cand, ctx, ws);
-                        let better_all = cobjs
+                    if moved {
+                        let cset = self.evaluate_cached(cand, ctx, sim, decode, cand_objectives);
+                        let better_all = cand_objectives
                             .iter()
-                            .zip(&sol.objectives)
+                            .zip(objectives.iter())
                             .all(|(c, o)| c <= o)
-                            && cobjs.iter().zip(&sol.objectives).any(|(c, o)| c < o);
+                            && cand_objectives.iter().zip(objectives.iter()).any(|(c, o)| c < o);
                         if better_all {
-                            sol = Solution { genome: cand, objectives: cobjs, plan_set: cset };
+                            std::mem::swap(&mut genome, cand);
+                            std::mem::swap(objectives, cand_objectives);
+                            set = cset;
                         }
                     }
                 }
             }
-            if job.measure {
-                let measured = self.measure_with(&sol.plan_set, ctx, &mut rng, ws, scratch);
-                sol.objectives = measured;
+            if measure {
+                self.measure_with(&set, ctx, &mut rng, sim, nominal, procs, durs, worst);
+                objectives.clear();
+                objectives.extend_from_slice(worst);
             }
         }
-        sol
+        Solution { genome, objectives: objectives.clone(), plan_set: set }
     }
 
-    /// Batch evaluation: score a whole job slice, fanning out across
-    /// `config.threads` scoped threads (0 = available cores). Jobs are
-    /// chunked contiguously and results written back by index — never by
-    /// completion order — so output is independent of scheduling.
-    fn evaluate_batch(&self, jobs: &[EvalJob], ctx: &EvalCtx<'_, '_>) -> Vec<Solution> {
+    /// Breed one pair job and evaluate its children on the calling worker
+    /// thread: derive the pair RNG, clone + crossover + mutate the parents,
+    /// apply the ablation switches, then score each emitted child with its
+    /// own derived seed.
+    fn breed_and_eval(
+        &self,
+        parents: &[Solution],
+        job: &PairJob,
+        rates: MutationRates,
+        ctx: &EvalCtx<'_, '_>,
+        scratch: &mut EvalScratch,
+    ) -> (Solution, Option<Solution>) {
+        let mut rng = Rng::seed_from_u64(job.pair_seed);
+        let (mut a, mut b) =
+            breed_pair(&parents[job.a].genome, &parents[job.b].genome, rates, &mut rng);
+        self.enforce_ablation_switches(&mut a);
+        self.enforce_ablation_switches(&mut b);
+        let sol_a = self.eval_one(a, job.seed_a, true, job.measure, ctx, scratch);
+        let sol_b = if job.emit_b {
+            Some(self.eval_one(b, job.seed_b, true, job.measure, ctx, scratch))
+        } else {
+            None
+        };
+        (sol_a, sol_b)
+    }
+
+    /// The shared fan-out scaffold behind [`Self::evaluate_batch`] and
+    /// [`Self::evaluate_offspring`]: chunk `jobs` contiguously across
+    /// `config.threads` scoped threads (0 = available cores), run `per_job`
+    /// with a per-worker [`EvalScratch`], and gather results **by index** —
+    /// never by completion order — so output is independent of scheduling.
+    ///
+    /// `scratches` is the caller-owned per-worker scratch pool (worker `i`
+    /// always takes `scratches[i]`, grown on demand): warmed arenas survive
+    /// across generations instead of being rebuilt cold per fan-out. Reuse
+    /// cannot affect results — every scratch buffer is cleared or
+    /// overwritten before it is read.
+    fn fan_out<J: Send, R: Send>(
+        &self,
+        jobs: &mut [J],
+        scratches: &mut Vec<EvalScratch>,
+        per_job: &(impl Fn(&mut J, &mut EvalScratch) -> R + Sync),
+    ) -> Vec<R> {
         let threads = self.effective_threads(jobs.len());
-        let mut out: Vec<Option<Solution>> = Vec::with_capacity(jobs.len());
+        if scratches.len() < threads {
+            scratches.resize_with(threads, EvalScratch::default);
+        }
+        let mut out: Vec<Option<R>> = Vec::with_capacity(jobs.len());
         out.resize_with(jobs.len(), || None);
+        let run_chunk =
+            |job_chunk: &mut [J], out_chunk: &mut [Option<R>], scratch: &mut EvalScratch| {
+                for (slot, job) in out_chunk.iter_mut().zip(job_chunk) {
+                    *slot = Some(per_job(job, scratch));
+                }
+            };
         if threads <= 1 {
-            let mut ws = SimWorkspace::new();
-            let mut scratch: Vec<ExecutionPlan> = Vec::new();
-            for (slot, job) in out.iter_mut().zip(jobs) {
-                *slot = Some(self.eval_one(job, ctx, &mut ws, &mut scratch));
-            }
+            run_chunk(jobs, &mut out, &mut scratches[0]);
         } else {
             let chunk = jobs.len().div_ceil(threads);
+            let run_chunk = &run_chunk;
             std::thread::scope(|scope| {
-                for (job_chunk, out_chunk) in jobs.chunks(chunk).zip(out.chunks_mut(chunk)) {
-                    scope.spawn(move || {
-                        let mut ws = SimWorkspace::new();
-                        let mut scratch: Vec<ExecutionPlan> = Vec::new();
-                        for (slot, job) in out_chunk.iter_mut().zip(job_chunk) {
-                            *slot = Some(self.eval_one(job, ctx, &mut ws, &mut scratch));
-                        }
-                    });
+                for ((job_chunk, out_chunk), scratch) in jobs
+                    .chunks_mut(chunk)
+                    .zip(out.chunks_mut(chunk))
+                    .zip(scratches.iter_mut())
+                {
+                    scope.spawn(move || run_chunk(job_chunk, out_chunk, scratch));
                 }
             });
         }
-        out.into_iter().map(|s| s.expect("every job evaluated")).collect()
+        out.into_iter().map(|s| s.expect("every job processed")).collect()
+    }
+
+    /// Batch evaluation: score a whole job list through [`Self::fan_out`].
+    fn evaluate_batch(
+        &self,
+        mut jobs: Vec<EvalJob>,
+        scratches: &mut Vec<EvalScratch>,
+        ctx: &EvalCtx<'_, '_>,
+    ) -> Vec<Solution> {
+        self.fan_out(&mut jobs, scratches, &|job, scratch| {
+            let genome = std::mem::take(&mut job.genome);
+            let (seed, ls, measure) = (job.seed, job.local_search, job.measure);
+            self.eval_one(genome, seed, ls, measure, ctx, scratch)
+        })
+    }
+
+    /// Offspring fan-out: breed + evaluate every pair job across the worker
+    /// threads, flattening the per-pair results back in pair order (child a,
+    /// then child b) — the same offspring order the master-thread loop
+    /// produced before this moved into the fan-out.
+    fn evaluate_offspring(
+        &self,
+        parents: &[Solution],
+        pairs: &mut [PairJob],
+        scratches: &mut Vec<EvalScratch>,
+        ctx: &EvalCtx<'_, '_>,
+    ) -> Vec<Solution> {
+        let rates = MutationRates {
+            cut: self.config.p_mutate_cut,
+            map: self.config.p_mutate_map,
+            prio: self.config.p_mutate_prio,
+        };
+        let results = self.fan_out(pairs, scratches, &|job, scratch| {
+            self.breed_and_eval(parents, job, rates, ctx, scratch)
+        });
+        let mut children = Vec::with_capacity(results.len() * 2);
+        for (a, b) in results {
+            children.push(a);
+            children.extend(b);
+        }
+        children
     }
 
     fn effective_threads(&self, jobs: usize) -> usize {
@@ -497,7 +688,18 @@ impl<'a> StaticAnalyzer<'a> {
                 measure: false,
             })
             .collect();
-        let mut evaluated: Vec<Solution> = self.evaluate_batch(&init_jobs, &ctx);
+        // Per-worker evaluation scratches, persisted across every fan-out
+        // of this run so warmed arenas are never rebuilt cold.
+        let mut scratches: Vec<EvalScratch> = Vec::new();
+        let mut evaluated: Vec<Solution> = self.evaluate_batch(init_jobs, &mut scratches, &ctx);
+
+        // Master-thread per-generation scratch, reused across generations:
+        // the ENS selection workspace, the flattened objective matrix, and
+        // the survivor index list. Steady-state replacement allocates
+        // nothing beyond the pooled Solution moves.
+        let mut selection = SelectionWorkspace::new();
+        let mut flat_objs: Vec<f64> = Vec::new();
+        let mut keep: Vec<usize> = Vec::new();
 
         let avg_score = |sols: &[Solution]| -> f64 {
             sols.iter()
@@ -517,57 +719,69 @@ impl<'a> StaticAnalyzer<'a> {
                 break;
             }
             generations_run += 1;
-            // All parents reproduce: shuffle and pair.
+            // All parents reproduce: shuffle and pair. The breeding itself
+            // (clone + crossover + mutation) happens inside the fan-out; the
+            // master thread only draws the shuffle and the per-pair /
+            // per-child seeds, sequentially, so results are independent of
+            // the thread count.
             let mut order: Vec<usize> = (0..evaluated.len()).collect();
             for i in (1..order.len()).rev() {
                 let j = rng.gen_range_inclusive(0, i);
                 order.swap(i, j);
             }
-            let mut offspring: Vec<Genome> = Vec::with_capacity(evaluated.len());
+            let measure = self.config.measure_reps > 0;
+            let mut remaining = evaluated.len();
+            let mut pairs: Vec<PairJob> = Vec::with_capacity(order.len().div_ceil(2));
             for pair in order.chunks(2) {
-                let mut a = evaluated[pair[0]].genome.clone();
-                let mut b = evaluated[pair[pair.len() - 1]].genome.clone();
-                one_point_crossover(&mut a, &mut b, &mut rng);
-                mutate(&mut a, self.config.p_mutate_cut, self.config.p_mutate_map, self.config.p_mutate_prio, &mut rng);
-                mutate(&mut b, self.config.p_mutate_cut, self.config.p_mutate_map, self.config.p_mutate_prio, &mut rng);
-                self.enforce_ablation_switches(&mut a);
-                self.enforce_ablation_switches(&mut b);
-                offspring.push(a);
-                offspring.push(b);
+                if remaining == 0 {
+                    break;
+                }
+                // An odd population's last pair emits only its first child
+                // (the pre-fan-out loop truncated the surplus offspring).
+                let emit_b = remaining >= 2;
+                let pair_seed = rng.next_u64();
+                let seed_a = rng.next_u64();
+                let seed_b = if emit_b { rng.next_u64() } else { 0 };
+                pairs.push(PairJob {
+                    a: pair[0],
+                    b: pair[pair.len() - 1],
+                    pair_seed,
+                    seed_a,
+                    seed_b,
+                    emit_b,
+                    measure,
+                });
+                remaining -= if emit_b { 2 } else { 1 };
             }
-            offspring.truncate(evaluated.len());
-
-            // Batch-evaluate the offspring: per-child derived seeds drive
-            // probabilistic local search (simulator-scored, kept only on
-            // all-objective improvement) and the measurement tier (brief
-            // noisy execution) before replacement.
-            let jobs: Vec<EvalJob> = offspring
-                .into_iter()
-                .map(|g| EvalJob {
-                    seed: rng.next_u64(),
-                    genome: g,
-                    local_search: true,
-                    measure: self.config.measure_reps > 0,
-                })
-                .collect();
-            let children = self.evaluate_batch(&jobs, &ctx);
+            // Breed + evaluate in one fan-out: per-pair derived seeds drive
+            // crossover/mutation, per-child seeds drive probabilistic local
+            // search (simulator-scored, kept only on all-objective
+            // improvement) and the measurement tier (brief noisy execution)
+            // before replacement.
+            let children = self.evaluate_offspring(&evaluated, &mut pairs, &mut scratches, &ctx);
             // Mid-generation (post-batch, pre-replacement) progress: the
             // cancellation point for long searches. A Break still performs
             // this generation's replacement so the returned front reflects
             // every evaluation paid for.
             cancelled |= emit_batch(observer, generations_run, children.len(), &ctx).is_break();
 
-            // NSGA-III replacement over parents + children. Survivors are
+            // NSGA-III replacement over parents + children through the ENS
+            // workspace (bit-identical to `nsga3_select`). Survivors are
             // *moved* out of the pool, never cloned, so retention copies no
             // genomes and no plans (`tests/batch_eval.rs` asserts the
             // underlying operations — Solution moves and plan-handle clones
-            // — are plan-copy-free). The selection scratch (`objs`, `keep`,
-            // the retained Vec) still allocates per generation — that lives
-            // with the NSGA-III O(n²) ROADMAP item.
+            // — are plan-copy-free), and the selection scratch (flattened
+            // objectives, ENS fronts, niching heaps, survivor indices) lives
+            // in reusable buffers.
             let mut pool = std::mem::take(&mut evaluated);
             pool.extend(children);
-            let objs: Vec<Vec<f64>> = pool.iter().map(|s| s.objectives.clone()).collect();
-            let mut keep = nsga3_select(&objs, self.config.population);
+            let m = pool.first().map(|s| s.objectives.len()).unwrap_or(1);
+            flat_objs.clear();
+            for s in &pool {
+                flat_objs.extend_from_slice(&s.objectives);
+            }
+            keep.clear();
+            keep.extend_from_slice(selection.select(&flat_objs, m, self.config.population));
             keep.sort_unstable();
             keep.dedup();
             evaluated = take_by_index(pool, &keep);
@@ -688,6 +902,7 @@ fn emit_progress(
         .min_by(|a, b| a.max_objective().partial_cmp(&b.max_objective()).unwrap());
     let (profile_cache_hits, profile_measurements) = ctx.profiler.stats();
     let (plan_cache_hits, plan_cache_misses) = ctx.cache.stats();
+    let (probe_skips, best_memo_hits) = ctx.profiler.probe_stats();
     let progress = crate::api::GenerationProgress {
         generation,
         evaluations: ctx.evals.load(Ordering::Relaxed),
@@ -698,6 +913,8 @@ fn emit_progress(
         profile_measurements,
         plan_cache_hits,
         plan_cache_misses,
+        probe_skips,
+        best_memo_hits,
     };
     observer.on_generation(&progress)
 }

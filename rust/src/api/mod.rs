@@ -194,6 +194,11 @@ pub struct GenerationProgress<'a> {
     pub profile_measurements: u64,
     pub plan_cache_hits: u64,
     pub plan_cache_misses: u64,
+    /// Config probes skipped so far by the profiler's dominance cutoff
+    /// (best-first probing at work during long searches).
+    pub probe_skips: u64,
+    /// Best-config memo hits so far (whole config scans avoided).
+    pub best_memo_hits: u64,
 }
 
 impl GenerationProgress<'_> {

@@ -87,14 +87,26 @@ fn main() {
     }
 
     // Layer 2: same-run invariants (machine-independent).
-    let invariants: [(&str, &str, f64); 4] = [
+    let invariants: [(&str, &str, f64); 8] = [
         // Parallel must not lose to serial by more than scheduling jitter
         // (on a single-core runner both take the same path).
         ("analyzer/parallel_generation", "analyzer/serial_generation", 1.10),
+        // Offspring-in-fan-out (threads = cores, breeding included) must
+        // not lose to the serial generation at population 256.
+        ("analyzer/offspring_fanout", "analyzer/offspring_serial", 1.10),
         // The genome->plan memo hit path must beat a full decode.
         ("ga/decode_memoized", "ga/decode_genome(cached profiles)", 1.00),
+        // ENS + heap niching must beat the O(n²) reference selector at
+        // population 512 (1024-candidate pool).
+        ("ga/ens_select_pop512", "ga/naive_select_pop512", 1.00),
         // Reused-workspace simulation must not lose to fresh allocation.
         ("sim/simulate_reused_workspace", "sim/simulate_6models_20req", 1.25),
+        // The vectorized measurement tier (flat factors + duration
+        // overrides) must not lose to per-candidate plan cloning/rewriting.
+        ("sim/measure_tier_vectorized_reps8", "sim/measure_tier_naive_reps8", 1.05),
+        // Workspace partitioning must not lose to the owned materializing
+        // path it feeds.
+        ("graph/partition_workspace_17layer", "graph/partition_17layer", 1.05),
         // The virtual-clock load test replays the same schedule the wall
         // driver sleeps through: it must never be slower.
         ("serve/loadtest_virtual_clock", "serve/loadtest_wall_clock", 1.00),

@@ -10,17 +10,35 @@ use std::sync::{Arc, RwLock};
 
 use crate::util::rng::Rng;
 use crate::comm::CommModel;
-use crate::graph::{fnv1a, fnv1a_u64, partition, Network, Partition, FNV_OFFSET};
-use crate::profiler::Profiler;
+use crate::graph::{
+    fnv1a, fnv1a_u64, partition, Network, Partition, PartitionWorkspace, FNV_OFFSET,
+};
+use crate::profiler::{ProbeScratch, Profiler};
 use crate::sim::{compile_plans, CompiledPlan, ExecutionPlan, PlannedTask, PlannedTransfer};
 use crate::{DataType, Processor};
 
 /// Genes for one network: the partition bit-vector (one per edge) and the
 /// mapping vector (one processor per layer).
-#[derive(Debug, Clone, PartialEq)]
+///
+/// `Clone` is implemented by hand so that `clone_from` reuses the target's
+/// buffers — local-search candidate generation clones a genome per attempted
+/// move, and with `clone_from` into a per-thread scratch genome those
+/// attempts stop allocating.
+#[derive(Debug, PartialEq)]
 pub struct NetworkGenes {
     pub cuts: Vec<bool>,
     pub mapping: Vec<Processor>,
+}
+
+impl Clone for NetworkGenes {
+    fn clone(&self) -> NetworkGenes {
+        NetworkGenes { cuts: self.cuts.clone(), mapping: self.mapping.clone() }
+    }
+
+    fn clone_from(&mut self, source: &NetworkGenes) {
+        self.cuts.clone_from(&source.cuts);
+        self.mapping.clone_from(&source.mapping);
+    }
 }
 
 impl NetworkGenes {
@@ -46,11 +64,28 @@ impl NetworkGenes {
 }
 
 /// A complete GA individual: per-network genes + the priority permutation.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// `Clone` is hand-written for a buffer-reusing `clone_from` (see
+/// [`NetworkGenes`]); `Default` is the empty genome, useful as the initial
+/// state of a reusable clone-target scratch.
+#[derive(Debug, Default, PartialEq)]
 pub struct Genome {
     pub networks: Vec<NetworkGenes>,
     /// `priority[i]` = dispatch precedence of network `i` (0 = highest).
     pub priority: Vec<usize>,
+}
+
+impl Clone for Genome {
+    fn clone(&self) -> Genome {
+        Genome { networks: self.networks.clone(), priority: self.priority.clone() }
+    }
+
+    fn clone_from(&mut self, source: &Genome) {
+        // Vec::clone_from reuses capacity and calls clone_from element-wise,
+        // which NetworkGenes implements buffer-reusingly.
+        self.networks.clone_from(&source.networks);
+        self.priority.clone_from(&source.priority);
+    }
 }
 
 impl Genome {
@@ -122,36 +157,59 @@ pub fn decode_network(net: &Network, genes: &NetworkGenes) -> Partition {
     partition(net, &genes.cuts, &genes.mapping)
 }
 
+/// Reusable first-touch decode scratch: the partitioning arenas plus the
+/// profiler probing buffers. One per evaluator thread; with it, a memo-miss
+/// decode allocates only for its *output* (the plan vectors the memo then
+/// owns) — every transient of partitioning, hashing, and config probing
+/// lives here.
+#[derive(Default)]
+pub struct DecodeScratch {
+    pub partition: PartitionWorkspace,
+    pub probe: ProbeScratch,
+}
+
+impl DecodeScratch {
+    pub fn new() -> DecodeScratch {
+        DecodeScratch::default()
+    }
+}
+
 /// Decode a genome into simulator-ready [`ExecutionPlan`]s, profiling each
 /// subgraph at its mapped processor's best (backend, dtype) via the
 /// device-in-the-loop profiler. Transfer bytes use the producing subgraph's
-/// chosen dtype (fp16 default for tensors in flight).
-pub fn decode(
+/// chosen dtype (fp16 default for tensors in flight). Partitioning and
+/// probing scratch comes from `scratch`; only the returned plans allocate.
+pub fn decode_with(
     nets: &[Network],
     genome: &Genome,
     profiler: &Profiler<'_>,
     _comm: &CommModel,
+    scratch: &mut DecodeScratch,
 ) -> Vec<ExecutionPlan> {
     nets.iter()
         .zip(&genome.networks)
         .enumerate()
         .map(|(i, (net, genes))| {
-            let part = decode_network(net, genes);
-            let tasks: Vec<PlannedTask> = part
-                .subgraphs
-                .iter()
-                .map(|sg| {
-                    let (_cfg, t) = profiler.profile_best(net, sg);
-                    PlannedTask { duration: t, processor: sg.processor }
-                })
-                .collect();
+            scratch.partition.partition_into(net, &genes.cuts, &genes.mapping);
+            let n_sg = scratch.partition.num_subgraphs();
+            let mut tasks: Vec<PlannedTask> = Vec::with_capacity(n_sg);
+            for s in 0..n_sg {
+                let proc = scratch.partition.subgraph_processor(s);
+                let (_cfg, t) = profiler.best_on_layers(
+                    net,
+                    scratch.partition.subgraph_layers(s),
+                    proc,
+                    &mut scratch.probe,
+                );
+                tasks.push(PlannedTask { duration: t, processor: proc });
+            }
             // Cross-subgraph transfers from cut edges; bytes at fp16 (the
             // in-flight representation of activations on the device).
             let mut transfers = Vec::new();
-            for &e in &part.cut_edges {
+            for &e in scratch.partition.cut_edges() {
                 let edge = net.edge(e);
-                let from = part.owner_of(edge.src);
-                let to = part.owner_of(edge.dst);
+                let from = scratch.partition.owner_of(edge.src);
+                let to = scratch.partition.owner_of(edge.dst);
                 if from != to {
                     transfers.push(PlannedTransfer {
                         from: from.0,
@@ -163,6 +221,17 @@ pub fn decode(
             ExecutionPlan { tasks, transfers, priority: genome.priority[i] }
         })
         .collect()
+}
+
+/// [`decode_with`] through a throwaway [`DecodeScratch`] — the convenience
+/// path for tests, benches, and one-off decodes.
+pub fn decode(
+    nets: &[Network],
+    genome: &Genome,
+    profiler: &Profiler<'_>,
+    comm: &CommModel,
+) -> Vec<ExecutionPlan> {
+    decode_with(nets, genome, profiler, comm, &mut DecodeScratch::new())
 }
 
 /// A decoded genome ready for simulation: the executable plans plus their
@@ -217,13 +286,17 @@ impl DecodedPlanCache {
     }
 
     /// Decode a genome, reusing the memoized plan set when this exact genome
-    /// has been decoded before.
-    pub fn decode(
+    /// has been decoded before. The **hit path performs zero heap
+    /// allocation** (fingerprint, bucket probe, `Arc` bump — asserted in
+    /// `rust/tests/batch_eval.rs`); a miss decodes through `scratch` so its
+    /// only allocations are the memoized output itself.
+    pub fn decode_scratch(
         &self,
         nets: &[Network],
         genome: &Genome,
         profiler: &Profiler<'_>,
         comm: &CommModel,
+        scratch: &mut DecodeScratch,
     ) -> Arc<PlanSet> {
         let fp = genome.fingerprint();
         {
@@ -235,7 +308,7 @@ impl DecodedPlanCache {
                 }
             }
         }
-        let plans = decode(nets, genome, profiler, comm);
+        let plans = decode_with(nets, genome, profiler, comm, scratch);
         let compiled = compile_plans(&plans);
         let set = Arc::new(PlanSet { plans, compiled });
         self.misses.fetch_add(1, Ordering::Relaxed);
@@ -249,6 +322,17 @@ impl DecodedPlanCache {
             }
         }
         set
+    }
+
+    /// [`Self::decode_scratch`] with a throwaway scratch (tests, benches).
+    pub fn decode(
+        &self,
+        nets: &[Network],
+        genome: &Genome,
+        profiler: &Profiler<'_>,
+        comm: &CommModel,
+    ) -> Arc<PlanSet> {
+        self.decode_scratch(nets, genome, profiler, comm, &mut DecodeScratch::new())
     }
 
     /// (memo hits, decode misses).

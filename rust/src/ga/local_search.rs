@@ -13,47 +13,71 @@ use crate::util::rng::Rng;
 use super::chromosome::{decode_network, Genome};
 use crate::graph::Network;
 
-/// All candidate "merge" moves for a genome: (network, edge) pairs whose
-/// edge is currently cut.
-fn cut_edges(genome: &Genome) -> Vec<(usize, usize)> {
-    let mut out = Vec::new();
+/// Number of cut edges across the whole genome.
+fn count_cut(genome: &Genome) -> usize {
+    genome
+        .networks
+        .iter()
+        .map(|g| g.cuts.iter().filter(|&&c| c).count())
+        .sum()
+}
+
+/// The `k`-th cut edge in (network, edge-index) scan order.
+fn nth_cut(genome: &Genome, mut k: usize) -> (usize, usize) {
     for (n, genes) in genome.networks.iter().enumerate() {
         for (e, &cut) in genes.cuts.iter().enumerate() {
             if cut {
-                out.push((n, e));
+                if k == 0 {
+                    return (n, e);
+                }
+                k -= 1;
             }
         }
     }
-    out
+    unreachable!("nth_cut called with k >= count_cut")
+}
+
+/// Merge move into a reusable child buffer: uncut one randomly chosen cut
+/// edge. Returns false (child untouched, no RNG draw) when nothing is cut.
+/// `clone_from` reuses the child's buffers, so a warmed child makes this
+/// move allocation-free — the local-search tier attempts two moves per
+/// candidate, almost all rejected, and the seed cloned a fresh genome for
+/// every attempt.
+pub fn merge_neighbors_into(genome: &Genome, child: &mut Genome, rng: &mut Rng) -> bool {
+    let total = count_cut(genome);
+    if total == 0 {
+        return false;
+    }
+    let (n, e) = nth_cut(genome, rng.gen_range(0, total));
+    child.clone_from(genome);
+    child.networks[n].cuts[e] = false;
+    true
 }
 
 /// Merge move: uncut one randomly chosen cut edge. Returns the mutated
 /// clone, or `None` if nothing is cut.
 pub fn merge_neighbors(genome: &Genome, rng: &mut Rng) -> Option<Genome> {
-    let cands = cut_edges(genome);
-    if cands.is_empty() {
-        return None;
-    }
-    let (n, e) = cands[rng.gen_range(0, cands.len())];
-    let mut child = genome.clone();
-    child.networks[n].cuts[e] = false;
-    Some(child)
+    let mut child = Genome::default();
+    merge_neighbors_into(genome, &mut child, rng).then_some(child)
 }
 
-/// Reposition move: pick a cut edge `src -> dst`; pull `dst`'s layer into
-/// `src`'s side by uncutting that edge and cutting `dst`'s outgoing edges
-/// instead (or symmetrically push `src` forward). The moved layer adopts
-/// the processor preference of the side it joins, so the majority vote
-/// follows the move.
-pub fn reposition_adjacent(nets: &[Network], genome: &Genome, rng: &mut Rng) -> Option<Genome> {
-    let cands = cut_edges(genome);
-    if cands.is_empty() {
-        return None;
+/// Reposition move into a reusable child buffer (see
+/// [`reposition_adjacent`] for the move semantics). Returns false (no RNG
+/// draw) when nothing is cut.
+pub fn reposition_adjacent_into(
+    nets: &[Network],
+    genome: &Genome,
+    child: &mut Genome,
+    rng: &mut Rng,
+) -> bool {
+    let total = count_cut(genome);
+    if total == 0 {
+        return false;
     }
-    let (n, e) = cands[rng.gen_range(0, cands.len())];
+    let (n, e) = nth_cut(genome, rng.gen_range(0, total));
     let net = &nets[n];
     let edge = net.edge(crate::graph::EdgeId(e));
-    let mut child = genome.clone();
+    child.clone_from(genome);
     let genes = &mut child.networks[n];
 
     if rng.gen_bool(0.5) {
@@ -76,7 +100,17 @@ pub fn reposition_adjacent(nets: &[Network], genome: &Genome, rng: &mut Rng) -> 
         }
         genes.mapping[edge.src.0] = genes.mapping[edge.dst.0];
     }
-    Some(child)
+    true
+}
+
+/// Reposition move: pick a cut edge `src -> dst`; pull `dst`'s layer into
+/// `src`'s side by uncutting that edge and cutting `dst`'s outgoing edges
+/// instead (or symmetrically push `src` forward). The moved layer adopts
+/// the processor preference of the side it joins, so the majority vote
+/// follows the move.
+pub fn reposition_adjacent(nets: &[Network], genome: &Genome, rng: &mut Rng) -> Option<Genome> {
+    let mut child = Genome::default();
+    reposition_adjacent_into(nets, genome, &mut child, rng).then_some(child)
 }
 
 /// Sanity helper used by the analyzer: a local-search child must still
@@ -131,6 +165,47 @@ mod tests {
         let g = Genome::all_on(&nets, crate::Processor::Npu);
         let mut rng = Rng::seed_from_u64(1);
         assert!(merge_neighbors(&g, &mut rng).is_none());
+    }
+
+    #[test]
+    fn into_variants_match_owning_variants() {
+        let nets = nets();
+        let mut rng = Rng::seed_from_u64(77);
+        let mut child = Genome::default();
+        for i in 0..50u64 {
+            let g = Genome::random(&nets, 0.4, &mut rng);
+            let owned = merge_neighbors(&g, &mut Rng::seed_from_u64(i));
+            let got = merge_neighbors_into(&g, &mut child, &mut Rng::seed_from_u64(i));
+            assert_eq!(owned.is_some(), got);
+            if let Some(o) = owned {
+                assert_eq!(o, child);
+            }
+            let seed = i * 31 + 1;
+            let owned = reposition_adjacent(&nets, &g, &mut Rng::seed_from_u64(seed));
+            let got =
+                reposition_adjacent_into(&nets, &g, &mut child, &mut Rng::seed_from_u64(seed));
+            assert_eq!(owned.is_some(), got);
+            if let Some(o) = owned {
+                assert_eq!(o, child);
+            }
+        }
+    }
+
+    #[test]
+    fn into_moves_are_allocation_free_when_warm() {
+        let nets = nets();
+        let mut rng = Rng::seed_from_u64(5);
+        let mut g = Genome::random(&nets, 0.5, &mut rng);
+        g.networks[0].cuts[0] = true; // ensure at least one move exists
+        let mut child = Genome::default();
+        child.clone_from(&g); // warm the clone target to the genome's shape
+        let before = crate::util::alloc::thread_allocations();
+        for _ in 0..20 {
+            assert!(merge_neighbors_into(&g, &mut child, &mut rng));
+            assert!(reposition_adjacent_into(&nets, &g, &mut child, &mut rng));
+        }
+        let after = crate::util::alloc::thread_allocations();
+        assert_eq!(after - before, 0, "warm local-search moves allocated");
     }
 
     #[test]

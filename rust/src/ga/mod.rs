@@ -19,7 +19,15 @@ mod local_search;
 mod nsga3;
 mod operators;
 
-pub use chromosome::{decode, decode_network, DecodedPlanCache, Genome, NetworkGenes, PlanSet};
-pub use local_search::{debug_check, merge_neighbors, reposition_adjacent};
-pub use nsga3::{fast_non_dominated_sort, nsga3_select, reference_points, Dominance};
-pub use operators::{mutate, one_point_crossover, upmx};
+pub use chromosome::{
+    decode, decode_network, decode_with, DecodeScratch, DecodedPlanCache, Genome, NetworkGenes,
+    PlanSet,
+};
+pub use local_search::{
+    debug_check, merge_neighbors, merge_neighbors_into, reposition_adjacent,
+    reposition_adjacent_into,
+};
+pub use nsga3::{
+    fast_non_dominated_sort, nsga3_select, reference_points, Dominance, SelectionWorkspace,
+};
+pub use operators::{breed_pair, mutate, one_point_crossover, upmx, MutationRates};

@@ -2,10 +2,34 @@
 //! replacement the paper uses ("the population is updated using the NSGA3
 //! algorithm", §4.3).
 //!
-//! Pipeline: fast non-dominated sort → fill whole fronts while they fit →
-//! for the splitting front, normalize objectives, associate individuals with
+//! Pipeline: non-dominated sort → fill whole fronts while they fit → for the
+//! splitting front, normalize objectives, associate individuals with
 //! Das–Dennis reference directions, and fill by niche count (preferring
 //! under-represented directions, closest-distance first).
+//!
+//! ## Two implementations, one contract (§Perf, this PR)
+//!
+//! * [`nsga3_select`] — the straightforward reference: `fast_non_dominated_sort`
+//!   (O(n²) dominance matrix + BFS peeling) and linear-scan niching. Kept as
+//!   the executable specification.
+//! * [`SelectionWorkspace`] — the production path the analyzer runs every
+//!   generation: an **ENS-BS** front builder (lexicographic presort + binary
+//!   search over fronts, checking only already-placed members) and
+//!   **binary-heap niching** (one live heap entry per niche keyed by
+//!   `(niche count, earliest remaining candidate position)`), all scratch
+//!   owned by the workspace so steady-state selection performs **zero heap
+//!   allocation** (asserted in `rust/tests/batch_eval.rs`).
+//!
+//! Both paths emit fronts in **canonical order** — each front's indices
+//! ascending — and the heap keys reproduce the reference's tie-breaking
+//! exactly (least niche count, then earliest remaining split-front position;
+//! within a niche, closest distance, then earliest position), so
+//! [`SelectionWorkspace::select`] returns **bit-identical indices** to
+//! [`nsga3_select`] on every input (property-tested in
+//! `rust/tests/proptests.rs`).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// Pareto dominance for minimization objectives.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -33,7 +57,27 @@ pub fn dominance(a: &[f64], b: &[f64]) -> Dominance {
     }
 }
 
+/// `a` strictly dominates `b` (≤ everywhere, < somewhere). Early-exits on
+/// the first losing objective; boolean-equivalent to
+/// `dominance(a, b) == Dominance::Dominates`.
+#[inline]
+fn dominates(a: &[f64], b: &[f64]) -> bool {
+    let mut strict = false;
+    for (&x, &y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strict = true;
+        }
+    }
+    strict
+}
+
 /// Fast non-dominated sort: returns fronts (vectors of indices), best first.
+/// Front 0 is ascending by construction; deeper fronts come out in BFS
+/// order — callers needing the canonical (ascending) order sort each front,
+/// as [`nsga3_select`] does.
 pub fn fast_non_dominated_sort(objs: &[Vec<f64>]) -> Vec<Vec<usize>> {
     let n = objs.len();
     let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // i dominates these
@@ -91,6 +135,46 @@ pub fn reference_points(m: usize, divisions: usize) -> Vec<Vec<f64>> {
     out
 }
 
+/// `reference_points(m, divisions).len()` without materializing the points:
+/// the number of compositions of `divisions` into `m` parts,
+/// C(divisions + m - 1, m - 1). Computed incrementally so every
+/// intermediate is itself an exact binomial; if one overflows `u128` the
+/// true count is astronomically larger than any population, so saturate —
+/// callers only compare it against a population size.
+fn das_dennis_count(m: usize, divisions: usize) -> u128 {
+    let k = m.saturating_sub(1) as u128;
+    let n = divisions as u128 + k;
+    let mut res: u128 = 1;
+    for i in 1..=k {
+        // res = C(n - k + i - 1, i - 1) entering the step; the identity
+        // C(a, i) = C(a - 1, i - 1) · a / i keeps the division exact.
+        res = match res.checked_mul(n - k + i) {
+            Some(v) => v / i,
+            None => return u128::MAX,
+        };
+    }
+    res
+}
+
+/// Append the Das–Dennis directions as flat rows to `out` — identical values
+/// in identical order to [`reference_points`], without the nested `Vec`s.
+fn reference_points_into(m: usize, divisions: usize, out: &mut Vec<f64>) {
+    out.clear();
+    let mut point = vec![0usize; m];
+    fn recurse(m: usize, left: usize, dim: usize, point: &mut [usize], out: &mut Vec<f64>, divisions: usize) {
+        if dim == m - 1 {
+            point[dim] = left;
+            out.extend(point.iter().map(|&x| x as f64 / divisions as f64));
+            return;
+        }
+        for v in 0..=left {
+            point[dim] = v;
+            recurse(m, left - v, dim + 1, point, out, divisions);
+        }
+    }
+    recurse(m, divisions, 0, &mut point, out, divisions);
+}
+
 /// Perpendicular distance from (normalized) objective vector `f` to the ray
 /// through reference direction `w`.
 fn perpendicular_distance(f: &[f64], w: &[f64]) -> f64 {
@@ -107,17 +191,61 @@ fn perpendicular_distance(f: &[f64], w: &[f64]) -> f64 {
         .sqrt()
 }
 
+/// The smallest `divisions` whose Das–Dennis set offers at least
+/// `need.max(4)` directions (capped at 32) — shared by both selection paths.
+fn divisions_for(m: usize, need: usize) -> usize {
+    let mut divisions = 4;
+    while das_dennis_count(m, divisions) < need.max(4) as u128 && divisions < 32 {
+        divisions += 1;
+    }
+    divisions
+}
+
+/// Normalize solution `i`'s objectives into `row` (ideal/nadir min-max, same
+/// arithmetic in both selection paths).
+fn normalize_into(objs: &[f64], i: usize, m: usize, ideal: &[f64], nadir: &[f64], row: &mut Vec<f64>) {
+    row.clear();
+    for d in 0..m {
+        let range = (nadir[d] - ideal[d]).max(1e-12);
+        row.push((objs[i * m + d] - ideal[d]) / range);
+    }
+}
+
+/// Closest reference direction for a normalized row: (ref index, distance),
+/// ties broken by the lower index (strict `<` while scanning in order).
+fn associate(row: &[f64], refs: &[f64], m: usize) -> (usize, f64) {
+    let mut best = (0usize, f64::INFINITY);
+    for (r, w) in refs.chunks_exact(m).enumerate() {
+        let d = perpendicular_distance(row, w);
+        if d < best.1 {
+            best = (r, d);
+        }
+    }
+    best
+}
+
 /// NSGA-III environmental selection: choose `k` survivors from `objs`
-/// (minimization). Deterministic given input order (ties broken by index;
-/// niching picks the closest individual rather than a random one — a common
-/// deterministic variant).
+/// (minimization). Deterministic given input order: fronts are used in
+/// canonical (index-ascending) order, ties in niching break toward the
+/// earliest remaining candidate, and the niching pick is the closest
+/// individual rather than a random one — a common deterministic variant.
+///
+/// This is the O(n²) reference implementation; the search itself runs
+/// [`SelectionWorkspace::select`], which returns identical indices.
 pub fn nsga3_select(objs: &[Vec<f64>], k: usize) -> Vec<usize> {
     let n = objs.len();
     if k >= n {
         return (0..n).collect();
     }
     let m = objs.first().map(|o| o.len()).unwrap_or(0);
-    let fronts = fast_non_dominated_sort(objs);
+    let mut fronts = fast_non_dominated_sort(objs);
+    // Canonical front order (shared contract with SelectionWorkspace): the
+    // BFS peel emits deeper fronts in discovery order, which is an artifact
+    // of the dominance structure; selection tie-breaking is defined over
+    // index-ascending fronts instead.
+    for f in &mut fronts {
+        f.sort_unstable();
+    }
 
     let mut chosen: Vec<usize> = Vec::with_capacity(k);
     let mut split_front: Option<Vec<usize>> = None;
@@ -154,10 +282,7 @@ pub fn nsga3_select(objs: &[Vec<f64>], k: usize) -> Vec<usize> {
     };
 
     // Das–Dennis directions sized to the population (>= need niches).
-    let mut divisions = 4;
-    while reference_points(m, divisions).len() < need.max(4) && divisions < 32 {
-        divisions += 1;
-    }
+    let divisions = divisions_for(m, need);
     let refs = reference_points(m, divisions);
 
     // Associate: everyone already chosen contributes to niche counts.
@@ -220,9 +345,370 @@ pub fn nsga3_select(objs: &[Vec<f64>], k: usize) -> Vec<usize> {
     chosen
 }
 
+/// Reusable scratch for the production selection path: ENS-BS non-dominated
+/// sorting plus binary-heap niching. Create once (per analyzer run), call
+/// [`SelectionWorkspace::select`] per generation; after the first call at a
+/// given population shape, selection performs zero heap allocation.
+///
+/// Results are **bit-identical** to [`nsga3_select`] for every input (see
+/// module docs for the shared tie-break contract).
+#[derive(Default)]
+pub struct SelectionWorkspace {
+    // --- ENS front builder ---
+    /// Indices sorted lexicographically by objective vector (tie: index).
+    lex: Vec<usize>,
+    /// Per front: most recently placed member (intrusive list head).
+    head: Vec<usize>,
+    /// Per solution: previously placed member of its front.
+    next_in: Vec<usize>,
+    /// Per solution: assigned front.
+    front_of: Vec<usize>,
+    /// Per front: member count / placement cursor (counting sort scratch).
+    counts: Vec<usize>,
+    /// All indices grouped by front, ascending within each front.
+    sorted: Vec<usize>,
+    /// Per front: offset into `sorted` (length `fronts + 1`).
+    starts: Vec<usize>,
+    // --- niching ---
+    ideal: Vec<f64>,
+    nadir: Vec<f64>,
+    norm_row: Vec<f64>,
+    /// Memoized flat Das–Dennis sets: (m, divisions, rows). Bounded —
+    /// divisions is capped at 32 — so steady state never regenerates.
+    refs_cache: Vec<(usize, usize, Vec<f64>)>,
+    niche_count: Vec<usize>,
+    cand_niche: Vec<usize>,
+    cand_dist: Vec<f64>,
+    /// Split-front candidates grouped by niche, each group sorted by
+    /// (distance, split position): (distance, position, solution index).
+    grouped: Vec<(f64, usize, usize)>,
+    /// Per niche: offset into `grouped` (length `refs + 1`).
+    g_start: Vec<usize>,
+    bucket_cursor: Vec<usize>,
+    /// Per grouped entry: min split position over the remaining suffix of
+    /// its niche group — the "earliest remaining candidate" key in O(1).
+    suffix_min_pos: Vec<usize>,
+    /// Per niche: candidates already taken (prefix of its sorted group).
+    taken: Vec<usize>,
+    /// One live entry per niche with remaining candidates:
+    /// (niche count, earliest remaining position, niche).
+    heap: BinaryHeap<Reverse<(usize, usize, usize)>>,
+    /// Selected indices of the last [`SelectionWorkspace::select`] call.
+    out: Vec<usize>,
+}
+
+impl SelectionWorkspace {
+    pub fn new() -> SelectionWorkspace {
+        SelectionWorkspace::default()
+    }
+
+    /// Select `k` survivors from `objs` — a flat row-major `n × m` matrix of
+    /// minimized objectives (`m ≥ 1`). Returns the selected indices in the
+    /// same order as [`nsga3_select`]: whole fronts ascending, then niched
+    /// picks. The slice borrows workspace storage; copy it out before the
+    /// next call.
+    pub fn select(&mut self, objs: &[f64], m: usize, k: usize) -> &[usize] {
+        assert!(m > 0, "need at least one objective");
+        assert_eq!(objs.len() % m, 0, "flat objective matrix must be n × m");
+        self.select_inner(objs, m, k);
+        &self.out
+    }
+
+    /// [`SelectionWorkspace::select`] over nested rows (tests, benches);
+    /// allocates the flattened copy and the returned vector.
+    pub fn select_objs(&mut self, objs: &[Vec<f64>], k: usize) -> Vec<usize> {
+        let n = objs.len();
+        if k >= n {
+            return (0..n).collect();
+        }
+        let m = objs.first().map(|o| o.len()).unwrap_or(0);
+        let flat: Vec<f64> = objs.iter().flat_map(|o| o.iter().copied()).collect();
+        self.select(&flat, m, k).to_vec()
+    }
+
+    /// Non-dominated fronts (canonical ascending order within each front)
+    /// via the ENS builder — the testable surface for equivalence with
+    /// [`fast_non_dominated_sort`]. Allocates the returned nesting.
+    pub fn non_dominated_fronts(&mut self, objs: &[Vec<f64>]) -> Vec<Vec<usize>> {
+        let n = objs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let m = objs.first().map(|o| o.len()).unwrap_or(0);
+        if m == 0 {
+            // Degenerate: nothing dominates anything.
+            return vec![(0..n).collect()];
+        }
+        let flat: Vec<f64> = objs.iter().flat_map(|o| o.iter().copied()).collect();
+        self.build_fronts(&flat, n, m);
+        (0..self.num_fronts())
+            .map(|f| self.front(f).to_vec())
+            .collect()
+    }
+
+    /// Number of fronts built by the last sort.
+    pub fn num_fronts(&self) -> usize {
+        self.starts.len().saturating_sub(1)
+    }
+
+    /// Members of front `f` (ascending indices) from the last sort.
+    pub fn front(&self, f: usize) -> &[usize] {
+        &self.sorted[self.starts[f]..self.starts[f + 1]]
+    }
+
+    /// ENS-BS: lexicographic presort, then place each solution into the
+    /// first front none of whose already-placed members dominates it (binary
+    /// search over fronts — validity follows from dominance transitivity: a
+    /// solution dominated by a member of front j is dominated by a member of
+    /// every earlier front). Any dominator of `s` precedes `s`
+    /// lexicographically, so checking placed members suffices.
+    fn build_fronts(&mut self, objs: &[f64], n: usize, m: usize) {
+        let SelectionWorkspace { lex, head, next_in, front_of, counts, sorted, starts, .. } =
+            self;
+        lex.clear();
+        lex.extend(0..n);
+        lex.sort_unstable_by(|&a, &b| {
+            let ra = &objs[a * m..a * m + m];
+            let rb = &objs[b * m..b * m + m];
+            for (x, y) in ra.iter().zip(rb) {
+                match x.partial_cmp(y).expect("comparable objective") {
+                    std::cmp::Ordering::Equal => continue,
+                    o => return o,
+                }
+            }
+            a.cmp(&b)
+        });
+
+        head.clear();
+        next_in.clear();
+        next_in.resize(n, usize::MAX);
+        front_of.clear();
+        front_of.resize(n, 0);
+        let front_has_dominator = |head: &[usize], next_in: &[usize], f: usize, s: usize| {
+            let srow = &objs[s * m..s * m + m];
+            let mut cur = head[f];
+            while cur != usize::MAX {
+                if dominates(&objs[cur * m..cur * m + m], srow) {
+                    return true;
+                }
+                cur = next_in[cur];
+            }
+            false
+        };
+        for &s in lex.iter() {
+            let (mut lo, mut hi) = (0usize, head.len());
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                if front_has_dominator(head, next_in, mid, s) {
+                    lo = mid + 1;
+                } else {
+                    hi = mid;
+                }
+            }
+            if lo == head.len() {
+                head.push(usize::MAX);
+            }
+            front_of[s] = lo;
+            next_in[s] = head[lo];
+            head[lo] = s;
+        }
+
+        // Counting sort by front: ascending indices within each front.
+        let nf = head.len();
+        counts.clear();
+        counts.resize(nf, 0);
+        for &f in front_of.iter() {
+            counts[f] += 1;
+        }
+        starts.clear();
+        starts.resize(nf + 1, 0);
+        for f in 0..nf {
+            starts[f + 1] = starts[f] + counts[f];
+        }
+        counts.copy_from_slice(&starts[..nf]);
+        sorted.clear();
+        sorted.resize(n, 0);
+        for i in 0..n {
+            let f = front_of[i];
+            sorted[counts[f]] = i;
+            counts[f] += 1;
+        }
+    }
+
+    /// Index of the (m, divisions) entry in the refs cache, generating it on
+    /// first use.
+    fn ensure_refs(&mut self, m: usize, divisions: usize) -> usize {
+        if let Some(pos) = self
+            .refs_cache
+            .iter()
+            .position(|&(cm, cd, _)| cm == m && cd == divisions)
+        {
+            return pos;
+        }
+        let mut flat = Vec::new();
+        reference_points_into(m, divisions, &mut flat);
+        self.refs_cache.push((m, divisions, flat));
+        self.refs_cache.len() - 1
+    }
+
+    fn select_inner(&mut self, objs: &[f64], m: usize, k: usize) {
+        let n = objs.len() / m;
+        self.out.clear();
+        if k >= n {
+            self.out.extend(0..n);
+            return;
+        }
+        self.build_fronts(objs, n, m);
+
+        // Fill whole fronts while they fit; the first that does not is the
+        // splitting front.
+        let nf = self.num_fronts();
+        let mut split_f = None;
+        for f in 0..nf {
+            let fr = &self.sorted[self.starts[f]..self.starts[f + 1]];
+            if self.out.len() + fr.len() <= k {
+                self.out.extend_from_slice(fr);
+            } else {
+                split_f = Some(f);
+                break;
+            }
+        }
+        let Some(sf) = split_f else { return };
+        let need = k - self.out.len();
+        if need == 0 {
+            return;
+        }
+        let divisions = divisions_for(m, need);
+        let cache_pos = self.ensure_refs(m, divisions);
+
+        let SelectionWorkspace {
+            ideal,
+            nadir,
+            norm_row,
+            refs_cache,
+            niche_count,
+            cand_niche,
+            cand_dist,
+            grouped,
+            g_start,
+            bucket_cursor,
+            suffix_min_pos,
+            taken,
+            heap,
+            out,
+            sorted,
+            starts,
+            ..
+        } = self;
+        let split = &sorted[starts[sf]..starts[sf + 1]];
+        let refs = refs_cache[cache_pos].2.as_slice();
+        let nrefs = refs.len() / m;
+
+        // Ideal/nadir over chosen ∪ split.
+        ideal.clear();
+        ideal.resize(m, f64::INFINITY);
+        nadir.clear();
+        nadir.resize(m, f64::NEG_INFINITY);
+        for &i in out.iter().chain(split) {
+            for d in 0..m {
+                ideal[d] = ideal[d].min(objs[i * m + d]);
+                nadir[d] = nadir[d].max(objs[i * m + d]);
+            }
+        }
+
+        // Niche counts from the already-chosen members.
+        niche_count.clear();
+        niche_count.resize(nrefs, 0);
+        for &i in out.iter() {
+            normalize_into(objs, i, m, ideal, nadir, norm_row);
+            let (r, _) = associate(norm_row, refs, m);
+            niche_count[r] += 1;
+        }
+        // Candidate association (split-front position order).
+        cand_niche.clear();
+        cand_dist.clear();
+        for &i in split {
+            normalize_into(objs, i, m, ideal, nadir, norm_row);
+            let (r, d) = associate(norm_row, refs, m);
+            cand_niche.push(r);
+            cand_dist.push(d);
+        }
+
+        // Group candidates by niche (counting sort), then order each group
+        // by (distance, position) — the within-niche pick order.
+        let sl = split.len();
+        g_start.clear();
+        g_start.resize(nrefs + 1, 0);
+        for &r in cand_niche.iter() {
+            g_start[r + 1] += 1;
+        }
+        for r in 0..nrefs {
+            g_start[r + 1] += g_start[r];
+        }
+        bucket_cursor.clear();
+        bucket_cursor.extend_from_slice(&g_start[..nrefs]);
+        grouped.clear();
+        grouped.resize(sl, (0.0, 0, 0));
+        for pos in 0..sl {
+            let r = cand_niche[pos];
+            grouped[bucket_cursor[r]] = (cand_dist[pos], pos, split[pos]);
+            bucket_cursor[r] += 1;
+        }
+        for r in 0..nrefs {
+            let g = &mut grouped[g_start[r]..g_start[r + 1]];
+            if g.len() > 1 {
+                g.sort_unstable_by(|a, b| {
+                    a.0.partial_cmp(&b.0)
+                        .expect("comparable niche distance")
+                        .then(a.1.cmp(&b.1))
+                });
+            }
+        }
+        // Suffix-min of positions within each group: after taking a group's
+        // first t entries, its earliest remaining position is O(1).
+        suffix_min_pos.clear();
+        suffix_min_pos.resize(sl, usize::MAX);
+        for r in 0..nrefs {
+            let (lo, hi) = (g_start[r], g_start[r + 1]);
+            let mut min_pos = usize::MAX;
+            for j in (lo..hi).rev() {
+                min_pos = min_pos.min(grouped[j].1);
+                suffix_min_pos[j] = min_pos;
+            }
+        }
+
+        // Heap niching: one live entry per niche with remaining candidates,
+        // keyed (count, earliest remaining position, niche). Popping the
+        // minimum reproduces the reference scan: least-crowded niche first,
+        // ties to the niche whose remaining candidate appears earliest in
+        // the split front.
+        taken.clear();
+        taken.resize(nrefs, 0);
+        heap.clear();
+        for r in 0..nrefs {
+            if g_start[r] < g_start[r + 1] {
+                heap.push(Reverse((niche_count[r], suffix_min_pos[g_start[r]], r)));
+            }
+        }
+        for _ in 0..need {
+            let Some(Reverse((cnt, _pos, r))) = heap.pop() else { break };
+            debug_assert_eq!(cnt, niche_count[r], "stale niche heap entry");
+            let gi = g_start[r] + taken[r];
+            out.push(grouped[gi].2);
+            niche_count[r] += 1;
+            taken[r] += 1;
+            let next = g_start[r] + taken[r];
+            if next < g_start[r + 1] {
+                heap.push(Reverse((niche_count[r], suffix_min_pos[next], r)));
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn dominance_basics() {
@@ -259,6 +745,30 @@ mod tests {
     }
 
     #[test]
+    fn das_dennis_count_matches_materialized() {
+        for m in 1..=5 {
+            for d in 1..=8 {
+                assert_eq!(
+                    das_dennis_count(m, d),
+                    reference_points(m, d).len() as u128,
+                    "m={m} d={d}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn flat_reference_points_match_nested() {
+        for (m, d) in [(2, 4), (3, 5), (4, 6)] {
+            let nested = reference_points(m, d);
+            let mut flat = Vec::new();
+            reference_points_into(m, d, &mut flat);
+            let reflat: Vec<f64> = nested.into_iter().flatten().collect();
+            assert_eq!(flat, reflat, "m={m} d={d}");
+        }
+    }
+
+    #[test]
     fn select_never_drops_first_front_when_it_fits() {
         let objs = vec![
             vec![1.0, 5.0],
@@ -285,6 +795,8 @@ mod tests {
     fn select_everything_when_k_ge_n() {
         let objs = vec![vec![1.0], vec![2.0]];
         assert_eq!(nsga3_select(&objs, 5), vec![0, 1]);
+        let mut ws = SelectionWorkspace::new();
+        assert_eq!(ws.select_objs(&objs, 5), vec![0, 1]);
     }
 
     #[test]
@@ -302,5 +814,71 @@ mod tests {
         let sel = nsga3_select(&objs, 3);
         assert!(sel.contains(&0));
         assert!(sel.contains(&4), "outlier dropped: {sel:?}");
+    }
+
+    fn random_objs(rng: &mut Rng, n: usize, m: usize, dup_prob: f64) -> Vec<Vec<f64>> {
+        let mut objs: Vec<Vec<f64>> = Vec::with_capacity(n);
+        for i in 0..n {
+            if i > 0 && rng.gen_bool(dup_prob) {
+                // Duplicate an earlier row to exercise tie handling.
+                let j = rng.gen_range(0, i);
+                objs.push(objs[j].clone());
+            } else {
+                objs.push((0..m).map(|_| (rng.gen_range(0, 12) as f64) * 0.5).collect());
+            }
+        }
+        objs
+    }
+
+    #[test]
+    fn ens_fronts_match_naive_sort() {
+        let mut ws = SelectionWorkspace::new();
+        let mut rng = Rng::seed_from_u64(71);
+        for _ in 0..80 {
+            let n = rng.gen_range(1, 40);
+            let m = rng.gen_range(1, 5);
+            let objs = random_objs(&mut rng, n, m, 0.2);
+            let mut naive = fast_non_dominated_sort(&objs);
+            for f in &mut naive {
+                f.sort_unstable();
+            }
+            let ens = ws.non_dominated_fronts(&objs);
+            assert_eq!(ens, naive, "objs {objs:?}");
+        }
+    }
+
+    #[test]
+    fn workspace_select_matches_reference() {
+        let mut ws = SelectionWorkspace::new();
+        let mut rng = Rng::seed_from_u64(72);
+        for _ in 0..80 {
+            let n = rng.gen_range(2, 40);
+            let m = rng.gen_range(2, 5);
+            let objs = random_objs(&mut rng, n, m, 0.2);
+            let k = rng.gen_range(1, n);
+            let reference = nsga3_select(&objs, k);
+            let fast = ws.select_objs(&objs, k);
+            assert_eq!(fast, reference, "n={n} m={m} k={k} objs {objs:?}");
+        }
+    }
+
+    #[test]
+    fn workspace_select_replay_is_allocation_free() {
+        // Replaying the same input after a warm-up call must allocate
+        // nothing: every scratch buffer retains capacity and the refs cache
+        // hits. (The population-512 version lives in tests/batch_eval.rs.)
+        let mut rng = Rng::seed_from_u64(9);
+        let objs: Vec<Vec<f64>> = (0..64)
+            .map(|_| (0..4).map(|_| rng.gen_f64()).collect())
+            .collect();
+        let flat: Vec<f64> = objs.iter().flatten().copied().collect();
+        let mut ws = SelectionWorkspace::new();
+        let expect = ws.select(&flat, 4, 24).to_vec();
+        let before = crate::util::alloc::thread_allocations();
+        let got_len = ws.select(&flat, 4, 24).len();
+        let after = crate::util::alloc::thread_allocations();
+        assert_eq!(after - before, 0, "steady-state selection allocated");
+        assert_eq!(got_len, expect.len());
+        assert_eq!(ws.select(&flat, 4, 24), expect.as_slice());
     }
 }

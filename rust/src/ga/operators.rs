@@ -67,6 +67,30 @@ pub fn upmx(a: &mut [usize], b: &mut [usize], rng: &mut Rng, swap_prob: f64) {
     }
 }
 
+/// Per-chromosome mutation probabilities, bundled so offspring jobs carry
+/// one value across the fan-out.
+#[derive(Debug, Clone, Copy)]
+pub struct MutationRates {
+    pub cut: f64,
+    pub map: f64,
+    pub prio: f64,
+}
+
+/// Breed one parent pair into two children: clone both parents, apply
+/// one-point crossover, then mutate each child — the per-pair work unit the
+/// analyzer's offspring fan-out ships to worker threads. All randomness
+/// comes from `rng`; seed it from a per-pair derived seed and the children
+/// are a pure function of `(parents, seed)`, independent of which thread
+/// breeds them.
+pub fn breed_pair(a: &Genome, b: &Genome, rates: MutationRates, rng: &mut Rng) -> (Genome, Genome) {
+    let mut ca = a.clone();
+    let mut cb = b.clone();
+    one_point_crossover(&mut ca, &mut cb, rng);
+    mutate(&mut ca, rates.cut, rates.map, rates.prio, rng);
+    mutate(&mut cb, rates.cut, rates.map, rates.prio, rng);
+    (ca, cb)
+}
+
 /// Mutation: each partition bit flips with `p_cut`, each mapping gene
 /// re-draws with `p_map`, and the priority permutation swaps a random pair
 /// with `p_prio`.
@@ -181,6 +205,28 @@ mod tests {
             }
         }
         assert!(any_changed);
+    }
+
+    #[test]
+    fn breed_pair_is_pure_in_parents_and_seed() {
+        // The offspring fan-out contract: children depend only on the
+        // parent pair and the derived seed, never on scheduling.
+        let nets = vec![build_model(0, 1), build_model(1, 6)];
+        let mut rng = Rng::seed_from_u64(7);
+        let a = Genome::random(&nets, 0.3, &mut rng);
+        let b = Genome::random(&nets, 0.3, &mut rng);
+        let rates = MutationRates { cut: 0.05, map: 0.05, prio: 0.3 };
+        let c1 = breed_pair(&a, &b, rates, &mut Rng::seed_from_u64(99));
+        let c2 = breed_pair(&a, &b, rates, &mut Rng::seed_from_u64(99));
+        assert_eq!(c1, c2);
+        assert!(c1.0.is_valid(&nets) && c1.1.is_valid(&nets));
+        // And it matches the inline clone → crossover → mutate sequence.
+        let mut rng2 = Rng::seed_from_u64(99);
+        let (mut ma, mut mb) = (a.clone(), b.clone());
+        one_point_crossover(&mut ma, &mut mb, &mut rng2);
+        mutate(&mut ma, rates.cut, rates.map, rates.prio, &mut rng2);
+        mutate(&mut mb, rates.cut, rates.map, rates.prio, &mut rng2);
+        assert_eq!((ma, mb), c1);
     }
 
     #[test]

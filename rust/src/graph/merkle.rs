@@ -94,40 +94,80 @@ pub fn merkle_hash_network(net: &Network) -> MerkleHash {
     MerkleHash(root)
 }
 
-/// Merkle root over a subgraph's layers (leaf per layer, folded pairwise)
-/// plus its internal edges in canonical (local-index) form.
-pub fn merkle_hash_subgraph(net: &Network, sg: &Subgraph) -> MerkleHash {
-    // Leaves in the subgraph's canonical layer order.
-    let mut level: Vec<u64> = sg.layers.iter().map(|&l| leaf(net, l)).collect();
+/// Reusable buffers for subgraph hashing: the leaf/fold level and the
+/// local-index internal edge list. The GA's decode path hashes every
+/// subgraph of every memo-missed genome, so the per-call `Vec`s the seed
+/// allocated here were hot; with a scratch, [`merkle_hash_layers`] performs
+/// zero heap allocation once warmed to a network's size.
+#[derive(Default)]
+pub struct MerkleScratch {
+    level: Vec<u64>,
+    internal: Vec<(usize, usize)>,
+}
+
+impl MerkleScratch {
+    pub fn new() -> MerkleScratch {
+        MerkleScratch::default()
+    }
+}
+
+/// Merkle root over a layer set (must be sorted ascending, as
+/// [`Subgraph::layers`] is): leaf per layer folded pairwise, plus the
+/// internal edges in canonical (local-index) form. Scratch-based workhorse
+/// behind [`merkle_hash_subgraph`].
+pub fn merkle_hash_layers(
+    net: &Network,
+    layers: &[LayerId],
+    scratch: &mut MerkleScratch,
+) -> MerkleHash {
+    debug_assert!(layers.windows(2).all(|w| w[0] < w[1]), "layers must be sorted");
+    let level = &mut scratch.level;
+    level.clear();
+    level.extend(layers.iter().map(|&l| leaf(net, l)));
     if level.is_empty() {
         return MerkleHash(FNV_OFFSET);
     }
-    // Pairwise fold to the root.
-    while level.len() > 1 {
-        let mut next = Vec::with_capacity(level.len().div_ceil(2));
-        for pair in level.chunks(2) {
-            next.push(if pair.len() == 2 { combine(pair[0], pair[1]) } else { pair[0] });
+    // Pairwise fold to the root, in place (same combine order as folding
+    // through chunks-of-two levels).
+    let mut len = level.len();
+    while len > 1 {
+        let mut w = 0;
+        let mut r = 0;
+        while r + 1 < len {
+            level[w] = combine(level[r], level[r + 1]);
+            w += 1;
+            r += 2;
         }
-        level = next;
+        if r < len {
+            level[w] = level[r];
+            w += 1;
+        }
+        len = w;
     }
     let mut root = level[0];
 
     // Internal edges, re-indexed to subgraph-local positions so the hash is
     // network-position independent.
-    let local_index = |l: LayerId| sg.layers.binary_search(&l).ok();
-    let mut internal: Vec<(usize, usize)> = net
-        .edges()
-        .iter()
-        .filter_map(|e| match (local_index(e.src), local_index(e.dst)) {
+    let local_index = |l: LayerId| layers.binary_search(&l).ok();
+    let internal = &mut scratch.internal;
+    internal.clear();
+    internal.extend(net.edges().iter().filter_map(|e| {
+        match (local_index(e.src), local_index(e.dst)) {
             (Some(a), Some(b)) => Some((a, b)),
             _ => None,
-        })
-        .collect();
-    internal.sort();
-    for (a, b) in internal {
+        }
+    }));
+    internal.sort_unstable();
+    for &(a, b) in internal.iter() {
         root = combine(root, combine(a as u64, b as u64));
     }
     MerkleHash(root)
+}
+
+/// Merkle root over a subgraph's layers (leaf per layer, folded pairwise)
+/// plus its internal edges in canonical (local-index) form.
+pub fn merkle_hash_subgraph(net: &Network, sg: &Subgraph) -> MerkleHash {
+    merkle_hash_layers(net, &sg.layers, &mut MerkleScratch::new())
 }
 
 #[cfg(test)]

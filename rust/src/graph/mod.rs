@@ -13,10 +13,11 @@ mod partition;
 
 pub use layer::{Layer, LayerId, LayerKind, TensorShape};
 pub use merkle::{
-    fnv1a, fnv1a_u64, merkle_hash_network, merkle_hash_subgraph, MerkleHash, FNV_OFFSET,
+    fnv1a, fnv1a_u64, merkle_hash_layers, merkle_hash_network, merkle_hash_subgraph, MerkleHash,
+    MerkleScratch, FNV_OFFSET,
 };
 pub use network::{Edge, EdgeId, Network, NetworkId};
-pub use partition::{partition, Partition, Subgraph, SubgraphId};
+pub use partition::{partition, Partition, PartitionWorkspace, Subgraph, SubgraphId};
 
 #[cfg(test)]
 mod tests {

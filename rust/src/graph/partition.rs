@@ -16,6 +16,18 @@
 //! graph. Rejected kept edges behave as cut — a deterministic genome repair,
 //! standard GA practice for infeasible encodings.
 //!
+//! **Workspace decode (§Perf, this PR).** Partitioning sits on the GA's
+//! first-touch decode path (every memo-missed genome partitions every
+//! network), and the seed implementation allocated per call: the union-find,
+//! the cycle-check adjacency/visited scratch, one `Vec` per component, and
+//! the output lists. [`PartitionWorkspace`] owns all of it as flat arenas
+//! (layer lists and dependency lists are CSR slices, components are found
+//! through the same union-find) — [`PartitionWorkspace::partition_into`]
+//! performs **zero heap allocation** once warmed to a network's size
+//! (asserted in `rust/tests/batch_eval.rs`). The owned [`partition`] entry
+//! point is a thin materialization of the workspace result, so both paths
+//! are one algorithm.
+//!
 //! Invariants (enforced here, property-tested in `rust/tests/`):
 //! * every layer belongs to exactly one subgraph;
 //! * the condensed subgraph graph is acyclic (by the repair above).
@@ -96,25 +108,43 @@ impl Partition {
 /// the condensed graph over ALL network edges? True iff some directed path
 /// runs b ⇝ a, or a ⇝ b without using a direct a→b edge.
 ///
-/// §Perf L3-3: flat Vec adjacency + bitset visited (component roots are
-/// layer indices < n), replacing the HashMap/HashSet version — partition is
-/// on the GA decode hot path.
-fn merge_creates_cycle(net: &Network, uf: &mut UnionFind, a: usize, b: usize) -> bool {
+/// Scratch (`adj_head`/`adj_pool` intrusive adjacency, `seen` bitset,
+/// DFS `stack`) is caller-owned — partition is on the GA decode hot path
+/// and this runs once per attempted merge.
+#[allow(clippy::too_many_arguments)]
+fn merge_creates_cycle(
+    net: &Network,
+    uf: &mut UnionFind,
+    adj_head: &mut Vec<usize>,
+    adj_pool: &mut Vec<(usize, usize)>,
+    seen: &mut Vec<bool>,
+    stack: &mut Vec<usize>,
+    a: usize,
+    b: usize,
+) -> bool {
     let n = net.num_layers();
-    // Condensed adjacency under the current union-find, as (head, next)
-    // intrusive lists over a flat pool to avoid per-node Vec allocations.
-    let mut head = vec![usize::MAX; n];
-    let mut pool: Vec<(usize, usize)> = Vec::with_capacity(net.num_edges()); // (target, next)
+    // Condensed adjacency under the current union-find, as (target, next)
+    // intrusive lists over a flat pool.
+    adj_head.clear();
+    adj_head.resize(n, usize::MAX);
+    adj_pool.clear();
     for e in net.edges() {
         let (s, d) = (uf.find(e.src.0), uf.find(e.dst.0));
         if s != d {
-            pool.push((d, head[s]));
-            head[s] = pool.len() - 1;
+            adj_pool.push((d, adj_head[s]));
+            adj_head[s] = adj_pool.len() - 1;
         }
     }
-    let mut seen = vec![false; n];
-    let mut stack: Vec<usize> = Vec::with_capacity(n);
-    let mut reach = |from: usize, to: usize, seen: &mut Vec<bool>| -> bool {
+    seen.clear();
+    seen.resize(n, false);
+    fn reach(
+        adj_head: &[usize],
+        adj_pool: &[(usize, usize)],
+        seen: &mut [bool],
+        stack: &mut Vec<usize>,
+        from: usize,
+        to: usize,
+    ) -> bool {
         seen.iter_mut().for_each(|s| *s = false);
         stack.clear();
         stack.push(from);
@@ -126,25 +156,25 @@ fn merge_creates_cycle(net: &Network, uf: &mut UnionFind, a: usize, b: usize) ->
                 continue;
             }
             seen[x] = true;
-            let mut cursor = head[x];
+            let mut cursor = adj_head[x];
             while cursor != usize::MAX {
-                let (tgt, next) = pool[cursor];
+                let (tgt, next) = adj_pool[cursor];
                 stack.push(tgt);
                 cursor = next;
             }
         }
         false
-    };
+    }
     // Path b ⇝ a closes a cycle outright.
-    if reach(b, a, &mut seen) {
+    if reach(adj_head, adj_pool, seen, stack, b, a) {
         return true;
     }
     // A second a ⇝ b path (not the direct edge) would sandwich whatever it
     // passes through between the merged component and itself.
-    let mut cursor = head[a];
+    let mut cursor = adj_head[a];
     while cursor != usize::MAX {
-        let (s, next) = pool[cursor];
-        if s != b && reach(s, b, &mut seen) {
+        let (s, next) = adj_pool[cursor];
+        if s != b && reach(adj_head, adj_pool, seen, stack, s, b) {
             return true;
         }
         cursor = next;
@@ -152,77 +182,248 @@ fn merge_creates_cycle(net: &Network, uf: &mut UnionFind, a: usize, b: usize) ->
     false
 }
 
+/// Reusable partitioning arena: union-find, cycle-check scratch, and flat
+/// CSR output storage (subgraph layer lists, dependency lists, owners, cut
+/// edges). Create one per evaluator thread; [`Self::partition_into`]
+/// overwrites the result in place — after the first call at a network's
+/// size, partitioning allocates nothing whatever the cut pattern (every
+/// buffer is bounded by the layer/edge count).
+#[derive(Default)]
+pub struct PartitionWorkspace {
+    uf: UnionFind,
+    adj_head: Vec<usize>,
+    adj_pool: Vec<(usize, usize)>,
+    seen: Vec<bool>,
+    stack: Vec<usize>,
+    /// Component root (layer index) → subgraph id, `usize::MAX` = unseen.
+    sg_of_root: Vec<usize>,
+    sg_count: usize,
+    owner: Vec<SubgraphId>,
+    /// Per subgraph: offset into `sg_layers` (length `sg_count + 1`).
+    sg_starts: Vec<usize>,
+    /// All layers grouped by subgraph, ascending `LayerId` within each.
+    sg_layers: Vec<LayerId>,
+    sg_proc: Vec<Processor>,
+    cursor: Vec<usize>,
+    cut_edges: Vec<EdgeId>,
+    /// (consumer, producer) subgraph pairs, sorted + deduplicated.
+    dep_pairs: Vec<(usize, usize)>,
+    /// Per subgraph: offset into `deps` (length `sg_count + 1`).
+    dep_starts: Vec<usize>,
+    deps: Vec<SubgraphId>,
+}
+
+impl PartitionWorkspace {
+    pub fn new() -> PartitionWorkspace {
+        PartitionWorkspace::default()
+    }
+
+    /// Partition `net` into the workspace arenas (see [`partition`] for the
+    /// semantics — both run this one algorithm). Overwrites the previous
+    /// result; read it back through the accessors.
+    pub fn partition_into(&mut self, net: &Network, cuts: &[bool], mapping: &[Processor]) {
+        assert_eq!(cuts.len(), net.num_edges(), "one cut bit per edge");
+        assert_eq!(mapping.len(), net.num_layers(), "one processor per layer");
+        let n = net.num_layers();
+        let PartitionWorkspace {
+            uf,
+            adj_head,
+            adj_pool,
+            seen,
+            stack,
+            sg_of_root,
+            sg_count,
+            owner,
+            sg_starts,
+            sg_layers,
+            sg_proc,
+            cursor,
+            cut_edges,
+            dep_pairs,
+            dep_starts,
+            deps,
+        } = self;
+
+        // Pre-size every arena to its bound (layer or edge count) up front,
+        // clearing first — `reserve` counts from the current length, so a
+        // stale length from the previous call would inflate the request past
+        // the warmed capacity and force a realloc. After one call at a
+        // network's size, any cut pattern on same-or-smaller networks stays
+        // within these capacities: that is the zero-allocation-when-warm
+        // contract the replay test asserts.
+        let n_edges = net.num_edges();
+        adj_pool.clear();
+        adj_pool.reserve(n_edges);
+        adj_head.clear();
+        adj_head.reserve(n);
+        seen.clear();
+        seen.reserve(n);
+        stack.clear();
+        stack.reserve(n_edges + 1); // DFS pushes ≤ 1 root + one per condensed edge
+        owner.clear();
+        owner.reserve(n);
+        sg_starts.clear();
+        sg_starts.reserve(n + 1);
+        dep_starts.clear();
+        dep_starts.reserve(n + 1);
+        sg_proc.clear();
+        sg_proc.reserve(n);
+        cursor.clear();
+        cursor.reserve(n);
+        cut_edges.clear();
+        cut_edges.reserve(n_edges);
+        dep_pairs.clear();
+        dep_pairs.reserve(n_edges);
+        deps.clear();
+        deps.reserve(n_edges);
+
+        // Union-find over layers via kept edges, with convexity repair:
+        // merges are applied in edge-index order and skipped if they would
+        // close a cycle between components.
+        uf.reset(n);
+        for (i, e) in net.edges().iter().enumerate() {
+            if !cuts[i] {
+                let (a, b) = (uf.find(e.src.0), uf.find(e.dst.0));
+                if a != b && !merge_creates_cycle(net, uf, adj_head, adj_pool, seen, stack, a, b)
+                {
+                    uf.union(a, b);
+                }
+            }
+        }
+
+        // Subgraph ids by first touch in topological order, so the condensed
+        // DAG comes out topologically numbered.
+        sg_of_root.clear();
+        sg_of_root.resize(n, usize::MAX);
+        let mut nsg = 0usize;
+        for &l in net.topological_order() {
+            let r = uf.find(l.0);
+            if sg_of_root[r] == usize::MAX {
+                sg_of_root[r] = nsg;
+                nsg += 1;
+            }
+        }
+        *sg_count = nsg;
+        owner.clear();
+        for l in 0..n {
+            owner.push(SubgraphId(sg_of_root[uf.find(l)]));
+        }
+
+        // Layer lists: counting sort by owner over ascending LayerId, so
+        // each subgraph's slice is in LayerId order (the canonical order the
+        // owned path sorted into).
+        sg_starts.clear();
+        sg_starts.resize(nsg + 1, 0);
+        for o in owner.iter() {
+            sg_starts[o.0 + 1] += 1;
+        }
+        for s in 0..nsg {
+            sg_starts[s + 1] += sg_starts[s];
+        }
+        cursor.clear();
+        cursor.extend_from_slice(&sg_starts[..nsg]);
+        sg_layers.clear();
+        sg_layers.resize(n, LayerId(0));
+        for l in 0..n {
+            let s = owner[l].0;
+            sg_layers[cursor[s]] = LayerId(l);
+            cursor[s] += 1;
+        }
+
+        // Majority-vote processor per subgraph.
+        sg_proc.clear();
+        for s in 0..nsg {
+            let layers = &sg_layers[sg_starts[s]..sg_starts[s + 1]];
+            sg_proc.push(majority_vote(layers.iter().map(|l| mapping[l.0])));
+        }
+
+        // Dependencies: every cross-component edge (cut by the chromosome or
+        // by the convexity repair) makes owner(dst) depend on owner(src).
+        cut_edges.clear();
+        dep_pairs.clear();
+        for (i, e) in net.edges().iter().enumerate() {
+            let from = owner[e.src.0];
+            let to = owner[e.dst.0];
+            if from != to {
+                cut_edges.push(EdgeId(i));
+                dep_pairs.push((to.0, from.0));
+            }
+        }
+        dep_pairs.sort_unstable();
+        dep_pairs.dedup();
+        dep_starts.clear();
+        dep_starts.resize(nsg + 1, 0);
+        for &(to, _) in dep_pairs.iter() {
+            dep_starts[to + 1] += 1;
+        }
+        for s in 0..nsg {
+            dep_starts[s + 1] += dep_starts[s];
+        }
+        deps.clear();
+        deps.extend(dep_pairs.iter().map(|&(_, from)| SubgraphId(from)));
+    }
+
+    pub fn num_subgraphs(&self) -> usize {
+        self.sg_count
+    }
+
+    /// Member layers of subgraph `s`, ascending `LayerId`.
+    pub fn subgraph_layers(&self, s: usize) -> &[LayerId] {
+        &self.sg_layers[self.sg_starts[s]..self.sg_starts[s + 1]]
+    }
+
+    /// Majority-vote processor of subgraph `s`.
+    pub fn subgraph_processor(&self, s: usize) -> Processor {
+        self.sg_proc[s]
+    }
+
+    /// Producers subgraph `s` consumes tensors from (sorted, deduplicated).
+    pub fn subgraph_deps(&self, s: usize) -> &[SubgraphId] {
+        &self.deps[self.dep_starts[s]..self.dep_starts[s + 1]]
+    }
+
+    /// Subgraph owning a layer.
+    pub fn owner_of(&self, l: LayerId) -> SubgraphId {
+        self.owner[l.0]
+    }
+
+    /// Cut edges of the last partitioning, edge-index order.
+    pub fn cut_edges(&self) -> &[EdgeId] {
+        &self.cut_edges
+    }
+
+    /// Materialize the workspace result as an owned [`Partition`].
+    pub fn to_partition(&self, network: NetworkId) -> Partition {
+        let subgraphs = (0..self.sg_count)
+            .map(|s| Subgraph {
+                id: SubgraphId(s),
+                network,
+                layers: self.subgraph_layers(s).to_vec(),
+                processor: self.sg_proc[s],
+                deps: self.subgraph_deps(s).to_vec(),
+            })
+            .collect();
+        Partition {
+            network,
+            subgraphs,
+            owner: self.owner.clone(),
+            cut_edges: self.cut_edges.clone(),
+        }
+    }
+}
+
 /// Partition `net` by cutting the edges flagged in `cuts` (one bool per edge,
 /// insertion order), assigning each subgraph the majority-vote processor of
 /// `mapping` (one preference per layer). Kept edges whose merge would create
 /// a cyclic condensed graph are repaired to cut (module docs).
+///
+/// Convenience entry point: one throwaway [`PartitionWorkspace`] plus an
+/// owned materialization. Hot loops keep a workspace and call
+/// [`PartitionWorkspace::partition_into`] directly.
 pub fn partition(net: &Network, cuts: &[bool], mapping: &[Processor]) -> Partition {
-    assert_eq!(cuts.len(), net.num_edges(), "one cut bit per edge");
-    assert_eq!(mapping.len(), net.num_layers(), "one processor per layer");
-
-    // Union-find over layers via kept edges, with convexity repair: merges
-    // are applied in edge-index order and skipped if they would close a
-    // cycle between components.
-    let mut uf = UnionFind::new(net.num_layers());
-    for (i, e) in net.edges().iter().enumerate() {
-        if !cuts[i] {
-            let (a, b) = (uf.find(e.src.0), uf.find(e.dst.0));
-            if a != b && !merge_creates_cycle(net, &mut uf, a, b) {
-                uf.union(a, b);
-            }
-        }
-    }
-
-    // Group layers by component root, in topological layer order so each
-    // subgraph's layer list is executable front-to-back (flat Vec keyed by
-    // root index; roots are layer ids).
-    let mut comp_layers: Vec<Vec<LayerId>> = vec![Vec::new(); net.num_layers()];
-    let mut roots: Vec<usize> = Vec::new();
-    for &l in net.topological_order() {
-        let r = uf.find(l.0);
-        if comp_layers[r].is_empty() {
-            roots.push(r); // first touch = earliest topological position
-        }
-        comp_layers[r].push(l);
-    }
-
-    let mut owner = vec![SubgraphId(usize::MAX); net.num_layers()];
-    let mut subgraphs = Vec::with_capacity(roots.len());
-    for (sg_idx, root) in roots.iter().enumerate() {
-        let mut layers = std::mem::take(&mut comp_layers[*root]);
-        layers.sort(); // LayerId order; `contains` binary-searches this.
-        let id = SubgraphId(sg_idx);
-        for &l in &layers {
-            owner[l.0] = id;
-        }
-        let processor = majority_vote(layers.iter().map(|l| mapping[l.0]));
-        subgraphs.push(Subgraph {
-            id,
-            network: net.id,
-            layers,
-            processor,
-            deps: Vec::new(),
-        });
-    }
-
-    // Dependencies: every cross-component edge (cut by the chromosome or by
-    // the convexity repair) makes owner(dst) depend on owner(src).
-    let mut cut_edges = Vec::new();
-    for (i, e) in net.edges().iter().enumerate() {
-        let from = owner[e.src.0];
-        let to = owner[e.dst.0];
-        if from != to {
-            cut_edges.push(EdgeId(i));
-            if !subgraphs[to.0].deps.contains(&from) {
-                subgraphs[to.0].deps.push(from);
-            }
-        }
-    }
-    for sg in &mut subgraphs {
-        sg.deps.sort();
-    }
-
-    Partition { network: net.id, subgraphs, owner, cut_edges }
+    let mut ws = PartitionWorkspace::new();
+    ws.partition_into(net, cuts, mapping);
+    ws.to_partition(net.id)
 }
 
 /// Majority vote with deterministic tie-breaking (lowest processor index).
@@ -239,14 +440,19 @@ fn majority_vote(votes: impl Iterator<Item = Processor>) -> Processor {
 }
 
 /// Minimal union-find with path compression + union by size.
+#[derive(Default)]
 struct UnionFind {
     parent: Vec<usize>,
     size: Vec<usize>,
 }
 
 impl UnionFind {
-    fn new(n: usize) -> Self {
-        UnionFind { parent: (0..n).collect(), size: vec![1; n] }
+    /// Reinitialize for `n` singleton elements, retaining capacity.
+    fn reset(&mut self, n: usize) {
+        self.parent.clear();
+        self.parent.extend(0..n);
+        self.size.clear();
+        self.size.resize(n, 1);
     }
 
     fn find(&mut self, mut x: usize) -> usize {
@@ -324,5 +530,67 @@ mod tests {
         for l in 0..net.num_layers() {
             assert!(p.owner[l].0 != usize::MAX);
         }
+    }
+
+    #[test]
+    fn workspace_view_matches_owned_partition() {
+        // One reused workspace across many cut patterns must agree with the
+        // owned materialization field for field.
+        let net = crate::models::build_model(0, 5);
+        let mut ws = PartitionWorkspace::new();
+        let mut rng = crate::util::rng::Rng::seed_from_u64(13);
+        for _ in 0..40 {
+            let cuts: Vec<bool> = (0..net.num_edges()).map(|_| rng.gen_bool(0.4)).collect();
+            let mapping: Vec<Processor> = (0..net.num_layers())
+                .map(|_| Processor::from_index(rng.gen_range(0, 3)))
+                .collect();
+            let owned = partition(&net, &cuts, &mapping);
+            ws.partition_into(&net, &cuts, &mapping);
+            assert_eq!(ws.num_subgraphs(), owned.num_subgraphs());
+            for (s, sg) in owned.subgraphs.iter().enumerate() {
+                assert_eq!(ws.subgraph_layers(s), sg.layers.as_slice());
+                assert_eq!(ws.subgraph_processor(s), sg.processor);
+                assert_eq!(ws.subgraph_deps(s), sg.deps.as_slice());
+            }
+            assert_eq!(ws.cut_edges(), owned.cut_edges.as_slice());
+            for l in 0..net.num_layers() {
+                assert_eq!(ws.owner_of(LayerId(l)), owned.owner_of(LayerId(l)));
+            }
+            let rebuilt = ws.to_partition(net.id);
+            assert_eq!(rebuilt.owner, owned.owner);
+            assert_eq!(rebuilt.cut_edges, owned.cut_edges);
+        }
+    }
+
+    #[test]
+    fn workspace_partition_is_allocation_free_once_warm() {
+        // One warm call at a network's size must cover ANY later cut
+        // pattern on it: every arena is pre-reserved to its layer/edge
+        // bound, not just to the sizes the warm pattern happened to touch.
+        let net = crate::models::build_model(0, 5);
+        let mut rng = crate::util::rng::Rng::seed_from_u64(29);
+        let mut ws = PartitionWorkspace::new();
+        // Warm with an all-cut pattern (no merges attempted — the cycle
+        // scratch must still be covered for patterns that do merge).
+        let all_cut = vec![true; net.num_edges()];
+        let all_cpu = vec![Processor::Cpu; net.num_layers()];
+        ws.partition_into(&net, &all_cut, &all_cpu);
+        let patterns: Vec<(Vec<bool>, Vec<Processor>)> = (0..12)
+            .map(|_| {
+                (
+                    (0..net.num_edges()).map(|_| rng.gen_bool(0.4)).collect(),
+                    (0..net.num_layers())
+                        .map(|_| Processor::from_index(rng.gen_range(0, 3)))
+                        .collect(),
+                )
+            })
+            .collect();
+        let before = crate::util::alloc::thread_allocations();
+        for (cuts, mapping) in &patterns {
+            ws.partition_into(&net, cuts, mapping);
+        }
+        let after = crate::util::alloc::thread_allocations();
+        assert_eq!(after - before, 0, "workspace partitioning allocated");
+        assert!(ws.num_subgraphs() >= 1);
     }
 }

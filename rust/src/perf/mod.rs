@@ -274,6 +274,25 @@ impl PerfModel {
         let z = rng.gen_normal();
         (nominal * (1.0 + sigma * z)).max(nominal * 0.25)
     }
+
+    /// The multiplicative factor of one [`Self::sample`] draw, independent
+    /// of the nominal: `nominal * sample_factor(p, rng)` equals
+    /// `sample(nominal, p, rng)` **bit-for-bit** for positive nominals and
+    /// consumes the same RNG draws — both branches of `sample` scale the
+    /// nominal by a nominal-independent factor, and the 0.25 floor commutes
+    /// with positive scaling (f64 rounding is monotone, so the max picks the
+    /// same side). The measurement tier samples factors in one flat pass
+    /// over cached (nominal, processor) arrays instead of rewriting whole
+    /// plan clones per repetition; equivalence is asserted in
+    /// `rust/tests/batch_eval.rs`.
+    pub fn sample_factor(&self, p: Processor, rng: &mut Rng) -> f64 {
+        if p == Processor::Cpu && rng.gen_bool(CPU_SPIKE_PROB) {
+            return rng.gen_f64_range(1.5, 2.5);
+        }
+        let sigma = noise_sigma(p);
+        let z = rng.gen_normal();
+        (1.0 + sigma * z).max(0.25)
+    }
 }
 
 #[cfg(test)]

@@ -25,6 +25,10 @@
 //!    after [`MIN_CUTOFF_ROUNDS`] observations, a config whose *minimum*
 //!    observed relative time exceeds [`CUTOFF_RATIO`] is skipped outright.
 //!
+//! Probing runs through a caller-owned [`ProbeScratch`] (hashing buffers,
+//! config list, stats snapshot, probe order): a memo hit allocates nothing,
+//! a miss only for cache storage — see [`Profiler::best_on_layers`].
+//!
 //! The cutoff is conservative by construction for the calibrated model:
 //! launch overhead and the fusion factor are shared by every config on a
 //! processor, so within one (network, processor) the config ordering is
@@ -46,7 +50,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
-use crate::graph::{merkle_hash_subgraph, LayerId, MerkleHash, Network, Subgraph};
+use crate::graph::{merkle_hash_layers, LayerId, MerkleHash, MerkleScratch, Network, Subgraph};
 use crate::perf::PerfModel;
 use crate::{DataType, ExecConfig, Processor};
 
@@ -115,14 +119,38 @@ impl<'d> ProbeSource<'d> {
     }
 }
 
+/// Reusable per-thread probing scratch: the merkle hashing buffers, the
+/// candidate-config list, a snapshot of the ordering stats, the best-first
+/// probe order, and this round's measurements. The seed's `best_on`
+/// allocated all five per call (plus a `String` key clone) on the decode
+/// hot path; with a scratch, a **memo-hit** [`Profiler::best_on_layers`]
+/// performs zero heap allocation, and a miss allocates only for cache
+/// storage (the profile DB / memo inserts themselves).
+#[derive(Default)]
+pub struct ProbeScratch {
+    merkle: MerkleScratch,
+    configs: Vec<ExecConfig>,
+    stats: Vec<ConfigStat>,
+    probe_order: Vec<usize>,
+    measured: Vec<(usize, f64)>,
+}
+
+impl ProbeScratch {
+    pub fn new() -> ProbeScratch {
+        ProbeScratch::default()
+    }
+}
+
 /// The profiler with its Merkle-keyed cache.
 pub struct Profiler<'d> {
     probe: ProbeSource<'d>,
     db: RwLock<HashMap<ProfileKey, f64>>,
     /// (merkle, processor) → winning (config, time) of a completed scan.
     best: RwLock<HashMap<(MerkleHash, Processor), (ExecConfig, f64)>>,
-    /// (network name, processor) → per-config ordering stats.
-    order: RwLock<HashMap<(String, Processor), Vec<ConfigStat>>>,
+    /// network name → per-processor per-config ordering stats. Keyed by the
+    /// name alone (not `(String, Processor)`) so the hot read path can look
+    /// up by `&str` without cloning the name.
+    order: RwLock<HashMap<String, [Vec<ConfigStat>; 3]>>,
     hits: AtomicU64,
     misses: AtomicU64,
     probes_skipped: AtomicU64,
@@ -154,15 +182,15 @@ impl<'d> Profiler<'d> {
     }
 
     /// Candidate (backend, dtype) pairs for a processor in canonical order —
-    /// the legacy scan order, used for deterministic tie-breaks.
-    fn candidate_configs(p: Processor) -> Vec<ExecConfig> {
-        let mut out = Vec::new();
+    /// the legacy scan order, used for deterministic tie-breaks. Written
+    /// into a caller-owned buffer (cleared first).
+    fn candidate_configs_into(p: Processor, out: &mut Vec<ExecConfig>) {
+        out.clear();
         for &b in crate::Backend::for_processor(p) {
             for d in [DataType::Fp32, DataType::Fp16] {
                 out.push(ExecConfig::new(p, b, d));
             }
         }
-        out
     }
 
     /// Number of candidate configs for a processor, without materializing
@@ -171,14 +199,28 @@ impl<'d> Profiler<'d> {
         crate::Backend::for_processor(p).len() * 2
     }
 
-    /// Profile one subgraph under a config (cached).
+    /// Profile one subgraph under a config (cached). Convenience wrapper
+    /// over [`Self::profile_hashed`] with a throwaway hashing scratch.
     pub fn profile(&self, net: &Network, sg: &Subgraph, cfg: ExecConfig) -> f64 {
-        let key = ProfileKey { merkle: merkle_hash_subgraph(net, sg), cfg };
+        let merkle = merkle_hash_layers(net, &sg.layers, &mut MerkleScratch::new());
+        self.profile_hashed(net, &sg.layers, merkle, cfg)
+    }
+
+    /// Profile a layer set whose merkle hash the caller already computed
+    /// (the best-first sweep hashes once and probes many configs).
+    fn profile_hashed(
+        &self,
+        net: &Network,
+        layers: &[LayerId],
+        merkle: MerkleHash,
+        cfg: ExecConfig,
+    ) -> f64 {
+        let key = ProfileKey { merkle, cfg };
         if let Some(&t) = self.db.read().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return t;
         }
-        let t = self.probe.get().measure(net, &sg.layers, cfg);
+        let t = self.probe.get().measure(net, layers, cfg);
         self.misses.fetch_add(1, Ordering::Relaxed);
         self.db.write().unwrap().insert(key, t);
         t
@@ -191,12 +233,27 @@ impl<'d> Profiler<'d> {
         self.best_on(net, sg, sg.processor)
     }
 
-    /// Best config for a subgraph on an explicit processor: best-config
+    /// Best config for a subgraph on an explicit processor. Convenience
+    /// wrapper over [`Self::best_on_layers`] with a throwaway scratch; hot
+    /// loops (the GA decode path) hold a [`ProbeScratch`] per thread.
+    pub fn best_on(&self, net: &Network, sg: &Subgraph, p: Processor) -> (ExecConfig, f64) {
+        self.best_on_layers(net, &sg.layers, p, &mut ProbeScratch::new())
+    }
+
+    /// Best config for a layer set on an explicit processor: best-config
     /// memo, then a best-first probe sweep with the dominance cutoff (module
     /// docs). Equivalent to the exhaustive scan in result; cheaper in
-    /// probes.
-    pub fn best_on(&self, net: &Network, sg: &Subgraph, p: Processor) -> (ExecConfig, f64) {
-        let merkle = merkle_hash_subgraph(net, sg);
+    /// probes. `layers` must be sorted ascending (as [`Subgraph::layers`]
+    /// is). A memo hit touches no heap; a miss allocates only for cache
+    /// storage.
+    pub fn best_on_layers(
+        &self,
+        net: &Network,
+        layers: &[LayerId],
+        p: Processor,
+        scratch: &mut ProbeScratch,
+    ) -> (ExecConfig, f64) {
+        let merkle = merkle_hash_layers(net, layers, &mut scratch.merkle);
         if let Some(&(cfg, t)) = self.best.read().unwrap().get(&(merkle, p)) {
             // Account the avoided per-config lookups as hits, keeping the
             // hit/measure ratio comparable with the pre-memo accounting.
@@ -204,21 +261,27 @@ impl<'d> Profiler<'d> {
             self.hits.fetch_add(Self::candidate_config_count(p) as u64, Ordering::Relaxed);
             return (cfg, t);
         }
-        let configs = Self::candidate_configs(p);
+        Self::candidate_configs_into(p, &mut scratch.configs);
+        let configs = &scratch.configs;
 
         // Best-first order: ascending historical mean relative time;
         // unseen configs first (they must be measured); canonical index
-        // breaks ties so the order is stable.
-        let key = (net.name.clone(), p);
-        let stats: Vec<ConfigStat> = {
+        // breaks ties so the order is stable. The stats snapshot is copied
+        // out under the read lock, as before.
+        {
             let order = self.order.read().unwrap();
-            match order.get(&key) {
-                Some(v) => v.clone(),
-                None => vec![ConfigStat::NEW; configs.len()],
+            scratch.stats.clear();
+            match order.get(net.name.as_str()) {
+                Some(per_proc) if !per_proc[p.index()].is_empty() => {
+                    scratch.stats.extend_from_slice(&per_proc[p.index()])
+                }
+                _ => scratch.stats.resize(configs.len(), ConfigStat::NEW),
             }
-        };
-        let mut probe_order: Vec<usize> = (0..configs.len()).collect();
-        probe_order.sort_by(|&a, &b| {
+        }
+        let stats = &scratch.stats;
+        scratch.probe_order.clear();
+        scratch.probe_order.extend(0..configs.len());
+        scratch.probe_order.sort_unstable_by(|&a, &b| {
             stats[a]
                 .mean_ratio()
                 .partial_cmp(&stats[b].mean_ratio())
@@ -227,8 +290,8 @@ impl<'d> Profiler<'d> {
         });
 
         let mut best: Option<(usize, f64)> = None;
-        let mut measured: Vec<(usize, f64)> = Vec::with_capacity(configs.len());
-        for &ci in &probe_order {
+        scratch.measured.clear();
+        for &ci in &scratch.probe_order {
             let st = &stats[ci];
             if st.rounds >= MIN_CUTOFF_ROUNDS && st.min_ratio > CUTOFF_RATIO {
                 // Dominated in every observed round by more than the safety
@@ -236,8 +299,8 @@ impl<'d> Profiler<'d> {
                 self.probes_skipped.fetch_add(1, Ordering::Relaxed);
                 continue;
             }
-            let t = self.profile(net, sg, configs[ci]);
-            measured.push((ci, t));
+            let t = self.profile_hashed(net, layers, merkle, configs[ci]);
+            scratch.measured.push((ci, t));
             best = match best {
                 None => Some((ci, t)),
                 Some((bi, bt)) if t < bt || (t == bt && ci < bi) => Some((ci, t)),
@@ -246,13 +309,21 @@ impl<'d> Profiler<'d> {
         }
         let (best_ci, best_t) = best.expect("at least one config probed");
 
-        // Fold this round's relative times into the ordering stats.
+        // Fold this round's relative times into the ordering stats. The
+        // double lookup (contains_key, then get_mut) avoids cloning the
+        // network name on the steady-state path.
         if best_t.is_finite() && best_t > 0.0 {
             let mut order = self.order.write().unwrap();
-            let entry = order
-                .entry(key)
-                .or_insert_with(|| vec![ConfigStat::NEW; configs.len()]);
-            for &(ci, t) in &measured {
+            if !order.contains_key(net.name.as_str()) {
+                order.insert(net.name.clone(), Default::default());
+            }
+            let entry = &mut order
+                .get_mut(net.name.as_str())
+                .expect("entry just ensured")[p.index()];
+            if entry.is_empty() {
+                entry.resize(configs.len(), ConfigStat::NEW);
+            }
+            for &(ci, t) in &scratch.measured {
                 let ratio = t / best_t;
                 let st = &mut entry[ci];
                 st.rounds += 1;
@@ -397,6 +468,29 @@ mod tests {
         let (skipped, memo_hits) = prof.probe_stats();
         assert!(skipped > 0, "dominance cutoff never engaged");
         assert!(memo_hits > 0, "best-config memo never hit");
+    }
+
+    #[test]
+    fn best_on_memo_hit_is_allocation_free() {
+        // The decode hot path re-proposes structurally identical subgraphs
+        // constantly; with a per-thread ProbeScratch a best-config memo hit
+        // must not touch the heap at all.
+        let pm = PerfModel::paper_calibrated();
+        let prof = Profiler::new(&pm);
+        let net = build_model(0, 6);
+        let part = partition(
+            &net,
+            &vec![false; net.num_edges()],
+            &vec![Processor::Gpu; net.num_layers()],
+        );
+        let sg = &part.subgraphs[0];
+        let mut scratch = ProbeScratch::new();
+        let first = prof.best_on_layers(&net, &sg.layers, Processor::Gpu, &mut scratch);
+        let before = crate::util::alloc::thread_allocations();
+        let second = prof.best_on_layers(&net, &sg.layers, Processor::Gpu, &mut scratch);
+        let after = crate::util::alloc::thread_allocations();
+        assert_eq!(after - before, 0, "memo-hit best_on_layers allocated");
+        assert_eq!(first, second);
     }
 
     #[test]

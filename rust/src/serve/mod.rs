@@ -285,6 +285,48 @@ impl LoadSpec {
         self.policy = policy;
         self
     }
+
+    /// Long-run mean arrival rate (requests per simulated second) per
+    /// group: `1/period` for periodic, `1/mean` for Poisson, and the burst
+    /// long-run rate `1/period` for bursty — the λ of the utilization
+    /// certificate ρ = λ · E[work].
+    pub fn mean_rates(&self) -> Vec<f64> {
+        self.groups
+            .iter()
+            .map(|g| match g.process {
+                ArrivalProcess::Periodic { period } => 1.0 / period,
+                ArrivalProcess::Poisson { mean, .. } => 1.0 / mean,
+                ArrivalProcess::Bursty { period, .. } => 1.0 / period,
+            })
+            .collect()
+    }
+}
+
+/// Offered per-processor utilization ρ of a solution set under per-group
+/// mean arrival rates (requests/second): ρ_p = Σ_g rate_g × (seconds of
+/// processor-`p` work one group-`g` request schedules). Transfer and
+/// dispatch overheads are *not* counted, so this is a **lower bound** on
+/// the true load — ρ > 1 on any processor is a queueing-theoretic
+/// infeasibility certificate (backlog grows without bound), which lets
+/// [`saturation_via_runtime`] reject an α-probe without deploying a
+/// runtime.
+pub fn offered_utilization(
+    solutions: &[NetworkSolution],
+    groups: &[Vec<usize>],
+    rates: &[f64],
+    perf: &PerfModel,
+) -> [f64; 3] {
+    let mut rho = [0.0f64; 3];
+    for (members, &rate) in groups.iter().zip(rates) {
+        for &n in members {
+            let sol = &solutions[n];
+            for (sg, cfg) in sol.partition.subgraphs.iter().zip(&sol.configs) {
+                rho[sg.processor.index()] +=
+                    rate * perf.subgraph_time(&sol.network, &sg.layers, *cfg);
+            }
+        }
+    }
+    rho
 }
 
 /// Merge every group's arrival process into one time-ordered open-loop
@@ -329,6 +371,12 @@ pub struct ServeReport {
     pub attainment: f64,
     /// Wall-clock duration of the run.
     pub wall_seconds: f64,
+    /// Offered per-processor utilization ρ of this load against the served
+    /// solutions ([`offered_utilization`]; overheads excluded, so a lower
+    /// bound). Populated by [`RuntimeHarness`] runs; `None` when the caller
+    /// pushed a load through an existing coordinator without solution
+    /// context.
+    pub rho: Option<[f64; 3]>,
 }
 
 impl ServeReport {
@@ -383,6 +431,7 @@ impl ServeReport {
             score,
             attainment,
             wall_seconds,
+            rho: None,
         }
     }
 
@@ -569,6 +618,12 @@ impl RuntimeHarness {
         }
     }
 
+    /// Offered per-processor utilization of `spec` against this harness's
+    /// solutions (see [`offered_utilization`]).
+    pub fn utilization(&self, spec: &LoadSpec) -> [f64; 3] {
+        offered_utilization(&self.solutions, &self.groups, &spec.mean_rates(), &self.perf)
+    }
+
     /// Deploy a fresh Coordinator/Worker stack, run the load, shut down.
     pub fn run(&self, spec: &LoadSpec) -> ServeReport {
         let (report, _) = self.run_with_log(spec);
@@ -595,7 +650,8 @@ impl RuntimeHarness {
         let engine: Arc<dyn Engine> =
             Arc::new(SimEngine::new(self.perf.clone(), engine_scale, self.noisy, self.seed));
         let mut coord = Coordinator::new(self.solutions.clone(), engine, self.options.clone());
-        let report = run_load(&mut coord, &self.groups, spec, self.time_scale);
+        let mut report = run_load(&mut coord, &self.groups, spec, self.time_scale);
+        report.rho = Some(self.utilization(spec));
         let log = coord.served().to_vec();
         coord.shutdown();
         (report, log)
@@ -644,6 +700,10 @@ pub struct ProbeProgress {
     pub score: f64,
     /// Probes evaluated so far (including this one).
     pub probes: usize,
+    /// Solution sets of this probe whose deploy was skipped by the
+    /// utilization certificate (ρ > 1 on some processor ⇒ score 0 without
+    /// touching the runtime).
+    pub certified_infeasible: usize,
 }
 
 /// Runtime-measured saturation multiplier α* of a set of candidate
@@ -652,6 +712,15 @@ pub struct ProbeProgress {
 /// threshold. Every probe deploys a fresh virtual-clock runtime and pushes
 /// periodic open-loop load at Φ(α) through the real Coordinator. Returns
 /// `None` when even `alpha_max` fails.
+///
+/// Probes whose offered utilization exceeds 1 on any processor are
+/// **certified infeasible** without a deploy ([`offered_utilization`]):
+/// sustained ρ > 1 load is unservable regardless of what a short finite
+/// probe run happens to score, so the certificate both skips pointless
+/// runtime stacks *and* makes α* robust to short-run measurement artifacts
+/// (a 12-request probe at ρ ≈ 1.02 can fluke past the threshold that a
+/// longer run would fail). Consequence: α* can come out slightly larger —
+/// never smaller — than the pre-certificate, purely-measured search.
 pub fn saturation_via_runtime(
     solution_sets: &[Vec<NetworkSolution>],
     scenario: &Scenario,
@@ -681,25 +750,36 @@ pub fn saturation_via_runtime_observed(
     // Median runtime score at one multiplier; None = cancelled.
     let mut score_at = |alpha: f64| -> Option<f64> {
         let spec = LoadSpec::periodic(&scenario.periods(alpha, perf), opts.requests);
-        let mut scores: Vec<f64> = solution_sets
-            .iter()
-            .enumerate()
-            .map(|(i, sols)| {
-                let mut harness = RuntimeHarness::for_solutions(
-                    sols.clone(),
-                    groups.clone(),
-                    perf.clone(),
-                    probe_seed(opts.seed, i, alpha),
-                );
-                harness.options = opts.options.clone();
-                harness.noisy = opts.noisy;
-                harness.run(&spec).score
-            })
-            .collect();
+        let rates = spec.mean_rates();
+        let mut skipped = 0usize;
+        let mut scores: Vec<f64> = Vec::with_capacity(solution_sets.len());
+        for (i, sols) in solution_sets.iter().enumerate() {
+            // Utilization certificate: ρ > 1 on any processor means the
+            // offered work exceeds capacity before any overhead — sustained
+            // load is unservable, so score 0 without deploying a ~6-thread
+            // runtime stack for a probe that cannot pass.
+            let rho = offered_utilization(sols, &groups, &rates, perf);
+            if rho.iter().any(|&r| r > 1.0) {
+                skipped += 1;
+                scores.push(0.0);
+                continue;
+            }
+            let mut harness = RuntimeHarness::for_solutions(
+                sols.clone(),
+                groups.clone(),
+                perf.clone(),
+                probe_seed(opts.seed, i, alpha),
+            );
+            harness.options = opts.options.clone();
+            harness.noisy = opts.noisy;
+            scores.push(harness.run(&spec).score);
+        }
         scores.sort_by(|a, b| a.partial_cmp(b).expect("finite scores"));
         let median = scores[scores.len() / 2];
         probes += 1;
-        if on_probe(&ProbeProgress { alpha, score: median, probes }).is_break() {
+        let progress =
+            ProbeProgress { alpha, score: median, probes, certified_infeasible: skipped };
+        if on_probe(&progress).is_break() {
             return None;
         }
         Some(median)
@@ -846,6 +926,60 @@ mod tests {
         // Reproducible: the same search lands on the same knee.
         let again = saturation_via_runtime(&sets, &scenario, &perf, &opts).unwrap();
         assert_eq!(a, again);
+    }
+
+    #[test]
+    fn utilization_matches_hand_math_and_is_logged() {
+        // One network, whole on the NPU: a periodic load at period 2T gives
+        // exactly rho_NPU = 0.5 and zero on the other processors.
+        let scenario = Scenario::from_groups("rho-test", &[vec![0]]);
+        let perf = Arc::new(PerfModel::paper_calibrated());
+        let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+        let sols = materialize_solutions(&scenario.networks, &genome, &perf);
+        let groups: Vec<Vec<usize>> =
+            scenario.groups.iter().map(|g| g.members.clone()).collect();
+        let t = perf.subgraph_time(
+            &sols[0].network,
+            &sols[0].partition.subgraphs[0].layers,
+            sols[0].configs[0],
+        );
+        let spec = LoadSpec::periodic(&[2.0 * t], 4);
+        let rho = offered_utilization(&sols, &groups, &spec.mean_rates(), &perf);
+        assert!((rho[Processor::Npu.index()] - 0.5).abs() < 1e-9, "{rho:?}");
+        assert_eq!(rho[Processor::Cpu.index()], 0.0);
+        assert_eq!(rho[Processor::Gpu.index()], 0.0);
+        // Harness runs log the certificate input in the report.
+        let harness = RuntimeHarness::for_solutions(sols, groups, perf.clone(), 7);
+        let report = harness.run(&spec);
+        let logged = report.rho.expect("harness logs utilization");
+        assert!((logged[Processor::Npu.index()] - 0.5).abs() < 1e-9, "{logged:?}");
+    }
+
+    #[test]
+    fn saturation_certificate_skips_overloaded_probes() {
+        // alpha_max so tight that offered utilization exceeds 1: the driver
+        // must certify infeasibility and bail out without deploying any
+        // runtime (observer sees the skip count).
+        let scenario = Scenario::from_groups("cert-test", &[vec![0, 1]]);
+        let perf = Arc::new(PerfModel::paper_calibrated());
+        let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+        let sets = vec![materialize_solutions(&scenario.networks, &genome, &perf)];
+        let opts = SaturationOptions {
+            requests: 4,
+            alpha_min: 0.001,
+            alpha_max: 0.002,
+            ..Default::default()
+        };
+        let mut skips = 0usize;
+        let mut probes = 0usize;
+        let out = saturation_via_runtime_observed(&sets, &scenario, &perf, &opts, &mut |p| {
+            skips += p.certified_infeasible;
+            probes = p.probes;
+            ControlFlow::Continue(())
+        });
+        assert!(out.is_none(), "overloaded scenario must not saturate");
+        assert_eq!(probes, 1, "certificate still counts as one probe");
+        assert_eq!(skips, 1, "the one probe must be certified infeasible");
     }
 
     #[test]

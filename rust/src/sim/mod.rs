@@ -449,6 +449,33 @@ mod tests {
     }
 
     #[test]
+    fn duration_overrides_equal_plan_durations_reproduce_run() {
+        // run_with_durations with the plans' own durations must be
+        // bit-identical to run() — the identity case of the measurement
+        // tier's noisy-override path.
+        let plans = [
+            single_task_plan(0.010, Processor::Npu),
+            single_task_plan(0.020, Processor::Gpu),
+        ];
+        let groups = [GroupSpec::periodic(vec![0, 1], 0.05)];
+        let comm = CommModel::paper_calibrated();
+        let o = opts(5);
+        let compiled = compile_plans(&plans);
+        let mut a = SimWorkspace::new();
+        a.run(&plans, &compiled, &groups, &comm, &o);
+        let ra = a.to_result();
+        let durs: Vec<f64> =
+            plans.iter().flat_map(|p| p.tasks.iter().map(|t| t.duration)).collect();
+        let mut b = SimWorkspace::new();
+        b.run_with_durations(&plans, &compiled, &durs, &groups, &comm, &o);
+        let rb = b.to_result();
+        assert_eq!(ra.makespans, rb.makespans);
+        assert_eq!(ra.busy, rb.busy);
+        assert_eq!(ra.span, rb.span);
+        assert_eq!(ra.tasks_run, rb.tasks_run);
+    }
+
+    #[test]
     fn percentile_nearest_rank() {
         let xs = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
         assert_eq!(percentile(&xs, 0.90), 9.0);

@@ -101,6 +101,9 @@ pub struct SimWorkspace {
     /// Scratch for percentile computation (sorted copy of one group's
     /// makespans).
     sort_scratch: Vec<f64>,
+    /// Per-plan offsets into a flat duration-override slice
+    /// ([`SimWorkspace::run_with_durations`]).
+    dur_base: Vec<usize>,
     busy: [f64; 3],
     span: f64,
     tasks_run: usize,
@@ -125,6 +128,7 @@ impl SimWorkspace {
             finish: Vec::new(),
             arrivals_scratch: Vec::new(),
             sort_scratch: Vec::new(),
+            dur_base: Vec::new(),
             busy: [0.0; 3],
             span: 0.0,
             tasks_run: 0,
@@ -163,14 +167,65 @@ impl SimWorkspace {
         comm: &CommModel,
         opts: &SimOptions,
     ) {
+        self.run_inner(plans, compiled, groups, comm, opts, None)
+    }
+
+    /// [`SimWorkspace::run`] with a flat per-task duration override:
+    /// `durations[base(p) + t]` replaces `plans[p].tasks[t].duration`, where
+    /// `base(p)` is the total task count of plans `0..p`. Structure
+    /// (dependencies, processors, transfers, priorities) still comes from
+    /// `plans`/`compiled` — the measurement tier's noisy repetitions share
+    /// one plan set and one compilation and vary **only** this slice,
+    /// instead of cloning and rewriting whole plans per repetition. With
+    /// `durations` equal to the plans' own durations, output is
+    /// bit-identical to [`SimWorkspace::run`] (tested).
+    pub fn run_with_durations(
+        &mut self,
+        plans: &[ExecutionPlan],
+        compiled: &[CompiledPlan],
+        durations: &[f64],
+        groups: &[GroupSpec],
+        comm: &CommModel,
+        opts: &SimOptions,
+    ) {
+        debug_assert_eq!(
+            durations.len(),
+            plans.iter().map(|p| p.tasks.len()).sum::<usize>(),
+            "one duration override per task"
+        );
+        self.run_inner(plans, compiled, groups, comm, opts, Some(durations))
+    }
+
+    fn run_inner(
+        &mut self,
+        plans: &[ExecutionPlan],
+        compiled: &[CompiledPlan],
+        groups: &[GroupSpec],
+        comm: &CommModel,
+        opts: &SimOptions,
+        durs: Option<&[f64]>,
+    ) {
         debug_assert_eq!(plans.len(), compiled.len());
         self.reset(groups.len(), opts.requests_per_group);
         let requests = opts.requests_per_group;
 
         // Split the workspace into disjoint field borrows so the event loop
         // below reads exactly like the seed implementation's locals.
-        let SimWorkspace { heap, ready, instances, arrival, finish, arrivals_scratch, .. } =
-            self;
+        let SimWorkspace {
+            heap, ready, instances, arrival, finish, arrivals_scratch, dur_base, ..
+        } = self;
+        dur_base.clear();
+        let mut base_acc = 0usize;
+        for p in plans {
+            dur_base.push(base_acc);
+            base_acc += p.tasks.len();
+        }
+        let task_duration = |plan: usize, task: usize| -> f64 {
+            match durs {
+                Some(d) => d[dur_base[plan] + task],
+                None => plans[plan].tasks[task].duration,
+            }
+        };
 
         let mut seq: u64 = 0;
         let mut worker_busy = [false; 3];
@@ -206,11 +261,11 @@ impl SimWorkspace {
                 if !worker_busy[$p] {
                     if let Some(Reverse((_, _, inst))) = ready[$p].pop() {
                         let i = &instances[inst];
-                        let task = &plans[i.plan].tasks[i.task];
+                        let d = task_duration(i.plan, i.task);
                         let in_bytes = compiled[i.plan].in_bytes[i.task];
                         let dur = opts.dispatch_overhead
-                            + alloc_overhead(task.duration as usize + in_bytes)
-                            + task.duration;
+                            + alloc_overhead(d as usize + in_bytes)
+                            + d;
                         worker_busy[$p] = true;
                         busy_time[$p] += dur;
                         tasks_run += 1;

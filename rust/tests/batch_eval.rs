@@ -1,25 +1,36 @@
 //! Equivalence and allocation guarantees of the batch evaluation pipeline
-//! (parallel GA scoring + reusable `SimWorkspace` + decode memoization +
+//! (parallel GA scoring with offspring-in-fan-out + reusable `SimWorkspace`
+//! / `DecodeScratch` / `SelectionWorkspace` + decode memoization +
 //! `Arc<PlanSet>`-shared solutions):
 //!
-//! 1. parallel batch evaluation is **bit-identical** to the serial path for
-//!    several seeds (objectives, Pareto genomes, evaluation counts);
+//! 1. full searches — offspring breeding included, since reproduction runs
+//!    inside the fan-out — are **bit-identical** across thread counts
+//!    (1, 2, 4, 8) for several seeds (objectives, Pareto genomes,
+//!    evaluation counts);
 //! 2. a reused workspace reproduces fresh-allocation `simulate()` exactly;
 //! 3. steady-state workspace simulation performs **zero** heap allocation
 //!    (asserted against the counting global allocator);
-//! 4. the genome→plan memo returns plans identical to a fresh decode;
-//! 5. the operations Pareto bookkeeping is built from — moving `Solution`s
+//! 4. the genome→plan memo returns plans identical to a fresh decode, and
+//!    its **hit path is allocation-free**;
+//! 5. ENS selection at population 512 performs zero steady-state heap
+//!    allocation, and memo-miss decode through a warmed `DecodeScratch`
+//!    allocates only for its output (strictly less than a cold decode);
+//! 6. the vectorized measurement tier (flat noise factors +
+//!    `run_with_durations`) is bit-identical to the per-task plan-rewriting
+//!    path it replaced;
+//! 7. the operations Pareto bookkeeping is built from — moving `Solution`s
 //!    between buffers and cloning their plan handles — are plan-copy-free:
-//!    plans are `Arc`-shared, never deep-cloned. (The replacement step's
-//!    selection scratch still allocates per generation; that belongs to the
-//!    NSGA-III ROADMAP item.)
+//!    plans are `Arc`-shared, never deep-cloned.
 
 use std::sync::Arc;
 
 use puzzle::analyzer::{GaConfig, Solution};
 use puzzle::api::{Analysis, SessionBuilder};
 use puzzle::comm::CommModel;
-use puzzle::ga::{decode, DecodedPlanCache, Genome, PlanSet};
+use puzzle::ga::{
+    decode, decode_with, nsga3_select, DecodeScratch, DecodedPlanCache, Genome, PlanSet,
+    SelectionWorkspace,
+};
 use puzzle::perf::PerfModel;
 use puzzle::profiler::Profiler;
 use puzzle::scenario::Scenario;
@@ -27,6 +38,7 @@ use puzzle::sim::{
     compile_plans, simulate, ArrivalPattern, GroupSpec, SimOptions, SimWorkspace,
 };
 use puzzle::util::rng::Rng;
+use puzzle::Processor;
 
 fn quick_cfg(seed: u64, threads: usize) -> GaConfig {
     GaConfig {
@@ -58,21 +70,48 @@ fn pareto_signature(r: &Analysis) -> Vec<(Vec<f64>, Genome)> {
 #[test]
 fn deterministic_across_thread_counts() {
     // The tentpole contract: identical results whatever the thread count,
-    // including threads = 1 (the serial path). Cache hit/miss *counters*
-    // may differ under racing; search output never does.
+    // including threads = 1 (the serial path). Since this PR, *offspring
+    // generation* (clone → crossover → mutation) also runs inside the
+    // fan-out on per-pair derived seeds, so this covers breeding as well as
+    // scoring. Cache hit/miss *counters* may differ under racing; search
+    // output never does.
     let scenario = Scenario::from_groups("par", &[vec![0, 1, 6]]);
     let pm = PerfModel::paper_calibrated();
     for seed in [1u64, 5, 9] {
         let serial = run_session(&scenario, &pm, quick_cfg(seed, 1));
-        let par2 = run_session(&scenario, &pm, quick_cfg(seed, 2));
-        let par4 = run_session(&scenario, &pm, quick_cfg(seed, 4));
-        assert_eq!(serial.generations_run, par4.generations_run, "seed {seed}");
-        assert_eq!(serial.evaluations, par2.evaluations, "seed {seed}");
-        assert_eq!(serial.evaluations, par4.evaluations, "seed {seed}");
         let sig = pareto_signature(&serial);
-        assert_eq!(sig, pareto_signature(&par2), "seed {seed}: 2 threads diverged");
-        assert_eq!(sig, pareto_signature(&par4), "seed {seed}: 4 threads diverged");
+        for threads in [2usize, 4, 8] {
+            let par = run_session(&scenario, &pm, quick_cfg(seed, threads));
+            assert_eq!(serial.generations_run, par.generations_run, "seed {seed}");
+            assert_eq!(serial.evaluations, par.evaluations, "seed {seed}");
+            assert_eq!(
+                sig,
+                pareto_signature(&par),
+                "seed {seed}: {threads} threads diverged"
+            );
+        }
     }
+}
+
+#[test]
+fn offspring_fanout_deterministic_with_odd_population() {
+    // An odd population exercises the surplus-child truncation (the last
+    // pair emits only one child); results must still be thread-count
+    // independent and the population must hold its size.
+    let scenario = Scenario::from_groups("odd", &[vec![0, 1]]);
+    let pm = PerfModel::paper_calibrated();
+    let cfg = |threads| GaConfig {
+        population: 13,
+        max_generations: 4,
+        sim_requests: 6,
+        measure_reps: 1,
+        threads,
+        ..GaConfig::quick(3)
+    };
+    let serial = run_session(&scenario, &pm, cfg(1));
+    let par = run_session(&scenario, &pm, cfg(8));
+    assert_eq!(serial.evaluations, par.evaluations);
+    assert_eq!(pareto_signature(&serial), pareto_signature(&par));
 }
 
 #[test]
@@ -244,6 +283,168 @@ fn solution_clone_never_copies_plans() {
     let _c2 = small.clone();
     let b2 = puzzle::util::alloc::thread_allocations();
     assert_eq!(mid - b1, b2 - mid, "clone cost depends on plan-set size");
+}
+
+#[test]
+fn selection_is_allocation_free_at_population_512() {
+    // The analyzer's replacement input at population 512: a 1024-candidate
+    // pool (parents + children) with 4 objectives. Quantized values create
+    // heavy dominance/duplicate ties, stressing the canonical tie-breaks.
+    // After one warm pass over six such generations, replaying the same
+    // generations must perform zero heap allocation — and the selected
+    // indices must match the O(n²) reference selector exactly.
+    let mut rng = Rng::seed_from_u64(99);
+    let rounds: Vec<Vec<f64>> = (0..6)
+        .map(|_| (0..1024 * 4).map(|_| (rng.gen_range(0, 64) as f64) * 0.125).collect())
+        .collect();
+    let mut ws = SelectionWorkspace::new();
+    let mut expect: Vec<Vec<usize>> = Vec::new();
+    for r in &rounds {
+        expect.push(ws.select(r, 4, 512).to_vec());
+    }
+    // Cross-check one round against the reference implementation.
+    let nested: Vec<Vec<f64>> = rounds[0].chunks(4).map(|c| c.to_vec()).collect();
+    assert_eq!(expect[0], nsga3_select(&nested, 512), "ENS path diverged from reference");
+
+    let before = puzzle::util::alloc::thread_allocations();
+    for r in &rounds {
+        let _ = ws.select(r, 4, 512);
+    }
+    let after = puzzle::util::alloc::thread_allocations();
+    assert_eq!(after - before, 0, "steady-state selection allocated");
+    for (r, e) in rounds.iter().zip(&expect) {
+        assert_eq!(ws.select(r, 4, 512), e.as_slice(), "replay drifted");
+    }
+}
+
+#[test]
+fn plan_memo_hit_is_allocation_free() {
+    // Re-decoding a memoized genome — the dominant decode path in a real
+    // search — is a fingerprint + bucket probe + Arc bump: zero heap
+    // allocations.
+    let scenario = Scenario::from_groups("memo-hit", &[vec![0, 2]]);
+    let pm = PerfModel::paper_calibrated();
+    let comm = CommModel::paper_calibrated();
+    let profiler = Profiler::new(&pm);
+    let cache = DecodedPlanCache::new();
+    let mut rng = Rng::seed_from_u64(31);
+    let genome = Genome::random(&scenario.networks, 0.3, &mut rng);
+    let primed = cache.decode(&scenario.networks, &genome, &profiler, &comm);
+    let before = puzzle::util::alloc::thread_allocations();
+    for _ in 0..10 {
+        let hit = cache.decode(&scenario.networks, &genome, &profiler, &comm);
+        assert!(Arc::ptr_eq(&hit, &primed));
+    }
+    let after = puzzle::util::alloc::thread_allocations();
+    assert_eq!(after - before, 0, "memo-hit decode allocated");
+}
+
+#[test]
+fn memo_miss_decode_scratch_removes_transient_allocations() {
+    // First-touch decode: with the profiler warm (every subgraph's best
+    // config memoized) and a warmed DecodeScratch, a fresh decode allocates
+    // only for its output plan vectors — strictly less than the same decode
+    // through a cold scratch, whose extra allocations are exactly the
+    // transient partition/probe/hashing buffers this PR moved into the
+    // workspace.
+    let scenario = Scenario::from_groups("miss", &[vec![0, 2, 6]]);
+    let pm = PerfModel::paper_calibrated();
+    let comm = CommModel::paper_calibrated();
+    let profiler = Profiler::new(&pm);
+    let mut rng = Rng::seed_from_u64(47);
+    let genome = Genome::random(&scenario.networks, 0.35, &mut rng);
+
+    let mut warm = DecodeScratch::new();
+    // Warm the profiler (DB + best memo + ordering stats) and the scratch.
+    let reference = decode_with(&scenario.networks, &genome, &profiler, &comm, &mut warm);
+
+    let b = puzzle::util::alloc::thread_allocations();
+    let warm_plans = decode_with(&scenario.networks, &genome, &profiler, &comm, &mut warm);
+    let warm_cost = puzzle::util::alloc::thread_allocations() - b;
+
+    let b = puzzle::util::alloc::thread_allocations();
+    let mut cold = DecodeScratch::new();
+    let cold_plans = decode_with(&scenario.networks, &genome, &profiler, &comm, &mut cold);
+    let cold_cost = puzzle::util::alloc::thread_allocations() - b;
+
+    assert_eq!(warm_plans, reference);
+    assert_eq!(cold_plans, reference);
+    assert!(
+        warm_cost < cold_cost,
+        "warmed scratch saved nothing: warm {warm_cost} vs cold {cold_cost}"
+    );
+    // Output-only budget: one tasks Vec + one (growing) transfers Vec per
+    // network, plus the outer collect. 8 covers transfer-vector doubling
+    // with room to spare; the pre-workspace decode was far above this.
+    let budget = 1 + 8 * scenario.networks.len() as u64;
+    assert!(
+        warm_cost <= budget,
+        "warmed memo-miss decode allocated {warm_cost} times (budget {budget}) — transient \
+         scratch is leaking back into the hot path"
+    );
+}
+
+#[test]
+fn vectorized_measurement_noise_matches_per_task_sampling() {
+    // The measurement tier now samples multiplicative factors in one flat
+    // pass and replays the shared compilation via run_with_durations. This
+    // pins its bit-equality to the path it replaced: clone the plans and
+    // rewrite every task duration with PerfModel::sample per repetition.
+    let scenario = Scenario::from_groups("noise", &[vec![0, 4], vec![1, 6]]);
+    let pm = PerfModel::paper_calibrated();
+    let comm = CommModel::paper_calibrated();
+    let profiler = Profiler::new(&pm);
+    let mut rng = Rng::seed_from_u64(61);
+    let genome = Genome::random(&scenario.networks, 0.4, &mut rng);
+    let plans = decode(&scenario.networks, &genome, &profiler, &comm);
+    let compiled = compile_plans(&plans);
+    let periods = scenario.periods(1.0, &pm);
+    let groups: Vec<GroupSpec> = scenario
+        .groups
+        .iter()
+        .zip(&periods)
+        .map(|(g, &p)| GroupSpec::periodic(g.members.clone(), p))
+        .collect();
+    let opts = SimOptions { requests_per_group: 10, ..Default::default() };
+    let reps = 5;
+
+    // Legacy path: per-task sample() into cloned plans.
+    let mut rng_old = Rng::seed_from_u64(7);
+    let mut noisy = plans.clone();
+    let mut ws_old = SimWorkspace::new();
+    let mut old_objs: Vec<f64> = Vec::new();
+    for _ in 0..reps {
+        for (np, p) in noisy.iter_mut().zip(&plans) {
+            for (nt, t) in np.tasks.iter_mut().zip(&p.tasks) {
+                nt.duration = pm.sample(t.duration, t.processor, &mut rng_old);
+            }
+        }
+        ws_old.run(&noisy, &compiled, &groups, &comm, &opts);
+        let mut o = Vec::new();
+        ws_old.objectives_into(&mut o);
+        old_objs.extend(o);
+    }
+
+    // Vectorized path: flat factors over cached nominals + durations
+    // override.
+    let mut rng_new = Rng::seed_from_u64(7);
+    let nominal: Vec<f64> =
+        plans.iter().flat_map(|p| p.tasks.iter().map(|t| t.duration)).collect();
+    let procs: Vec<Processor> =
+        plans.iter().flat_map(|p| p.tasks.iter().map(|t| t.processor)).collect();
+    let mut durs = vec![0.0; nominal.len()];
+    let mut ws_new = SimWorkspace::new();
+    let mut new_objs: Vec<f64> = Vec::new();
+    for _ in 0..reps {
+        for i in 0..nominal.len() {
+            durs[i] = nominal[i] * pm.sample_factor(procs[i], &mut rng_new);
+        }
+        ws_new.run_with_durations(&plans, &compiled, &durs, &groups, &comm, &opts);
+        let mut o = Vec::new();
+        ws_new.objectives_into(&mut o);
+        new_objs.extend(o);
+    }
+    assert_eq!(old_objs, new_objs, "vectorized measurement tier diverged bit-wise");
 }
 
 #[test]

@@ -4,7 +4,10 @@
 //! seeds are reported for exact reproduction.
 
 use puzzle::comm::CommModel;
-use puzzle::ga::{decode_network, mutate, one_point_crossover, upmx, Genome, NetworkGenes};
+use puzzle::ga::{
+    decode_network, fast_non_dominated_sort, mutate, nsga3_select, one_point_crossover, upmx,
+    Genome, NetworkGenes, SelectionWorkspace,
+};
 use puzzle::graph::{partition, Layer, LayerId, Network};
 use puzzle::metrics;
 use puzzle::models::{build_model, MODEL_COUNT};
@@ -131,6 +134,65 @@ fn prop_partition_subgraph_layers_internally_connected_or_singleton() {
                     sg.id, seen.len(), sg.layers.len()
                 ));
             }
+        }
+        Ok(())
+    });
+}
+
+/// Random objective matrix with deliberate ties: quantized values plus
+/// occasional duplicated rows (dominance-equal candidates are common in real
+/// populations — crossover clones, memoized genomes).
+fn random_objectives(rng: &mut Rng, n: usize, m: usize) -> Vec<Vec<f64>> {
+    let mut objs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for i in 0..n {
+        if i > 0 && rng.gen_bool(0.2) {
+            let j = rng.gen_range(0, i);
+            objs.push(objs[j].clone());
+        } else {
+            objs.push((0..m).map(|_| (rng.gen_range(0, 10) as f64) * 0.25).collect());
+        }
+    }
+    objs
+}
+
+#[test]
+fn prop_ens_fronts_equal_fast_non_dominated_sort() {
+    // The ENS-BS front builder must produce exactly the fronts of the O(n²)
+    // reference sort (canonical index-ascending order within each front),
+    // on any objective set — duplicates, single fronts, one-point sets.
+    let mut ws = SelectionWorkspace::new();
+    check("ens fronts ≡ naive fronts", 300, |rng| {
+        let n = rng.gen_range(1, 64);
+        let m = rng.gen_range(1, 6);
+        let objs = random_objectives(rng, n, m);
+        let mut naive = fast_non_dominated_sort(&objs);
+        for f in &mut naive {
+            f.sort_unstable();
+        }
+        let ens = ws.non_dominated_fronts(&objs);
+        if ens != naive {
+            return Err(format!("ens {ens:?} != naive {naive:?} for {objs:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_selection_workspace_equals_reference_selector() {
+    // The full production selection (ENS + binary-heap niching) must return
+    // bit-identical indices to nsga3_select for every (objs, k).
+    let mut ws = SelectionWorkspace::new();
+    check("workspace select ≡ nsga3_select", 250, |rng| {
+        let n = rng.gen_range(2, 64);
+        let m = rng.gen_range(2, 6);
+        let objs = random_objectives(rng, n, m);
+        let k = rng.gen_range(1, n + 4); // occasionally k >= n
+        let reference = nsga3_select(&objs, k);
+        let fast = ws.select_objs(&objs, k);
+        if fast != reference {
+            return Err(format!(
+                "k={k}: workspace {fast:?} != reference {reference:?} for {objs:?}"
+            ));
         }
         Ok(())
     });
