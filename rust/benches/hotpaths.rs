@@ -21,7 +21,7 @@ use puzzle::mem::TensorPool;
 use puzzle::perf::PerfModel;
 use puzzle::profiler::Profiler;
 use puzzle::scenario::Scenario;
-use puzzle::serve::{LoadSpec, RuntimeHarness};
+use puzzle::serve::{probe_seed, ClockMode, LoadSpec, RuntimeHarness};
 use puzzle::sim::{compile_plans, simulate, ExecutionPlan, GroupSpec, SimOptions, SimWorkspace};
 use puzzle::util::bench::{bench, black_box, write_json, BenchStats};
 use puzzle::util::rng::Rng;
@@ -291,6 +291,32 @@ fn main() {
     let wall_spec = LoadSpec::periodic(&lt_periods, 10).wall(std::time::Duration::from_secs(10));
     all.push(bench("serve/loadtest_wall_clock", 3.0, 5, || {
         black_box(lt_wall.run(&wall_spec).served);
+    }));
+
+    // Saturation-probe deployment reuse: the same four α-probes, paying a
+    // fresh Coordinator/Worker stack (~6 threads) per probe vs one warm
+    // deployment reset between probes. Probes are bit-identical either way
+    // (tested in serve_runtime); bench_guard asserts reused <= fresh as a
+    // same-run invariant — the whole point of probe reuse.
+    let sat_alphas = [2.0, 3.0, 4.0, 5.0];
+    let sat_specs: Vec<LoadSpec> = sat_alphas
+        .iter()
+        .map(|&a| LoadSpec::periodic(&lt_scenario.periods(a, &pm), 8))
+        .collect();
+    let sat_harness = RuntimeHarness::for_genome(&lt_scenario, &lt_genome, &lt_perf, 7);
+    all.push(bench("serve/saturation_fresh_deploys", 3.0, 10, || {
+        for (&a, spec) in sat_alphas.iter().zip(&sat_specs) {
+            let mut h = sat_harness.clone();
+            h.seed = probe_seed(7, 0, a);
+            black_box(h.run(spec).served);
+        }
+    }));
+    all.push(bench("serve/saturation_reused_deploy", 3.0, 10, || {
+        let mut warm = sat_harness.deploy(ClockMode::Virtual);
+        for (&a, spec) in sat_alphas.iter().zip(&sat_specs) {
+            black_box(warm.probe(spec, probe_seed(7, 0, a)).served);
+        }
+        warm.shutdown();
     }));
 
     // Machine-readable trajectory for future PRs.

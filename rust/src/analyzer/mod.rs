@@ -73,8 +73,9 @@ use crate::util::rng::Rng;
 
 use crate::comm::CommModel;
 use crate::ga::{
-    breed_pair, decode, fast_non_dominated_sort, merge_neighbors_into, reposition_adjacent_into,
-    DecodeScratch, DecodedPlanCache, Genome, MutationRates, PlanSet, SelectionWorkspace,
+    breed_pair_with, decode, fast_non_dominated_sort, merge_neighbors_into,
+    reposition_adjacent_into, DecodeScratch, DecodedPlanCache, Genome, MutationRates, PlanSet,
+    SelectionWorkspace, UpmxScratch,
 };
 
 use crate::perf::PerfModel;
@@ -267,6 +268,9 @@ struct EvalScratch {
     cand_objectives: Vec<f64>,
     /// Local-search candidate clone target (buffer-reusing `clone_from`).
     cand: Genome,
+    /// UPMX position-index buffers for [`crate::ga::breed_pair_with`] (the
+    /// last per-pair allocations of the offspring fan-out).
+    upmx: UpmxScratch,
 }
 
 /// Shared, thread-safe evaluation context: the profile DB, the genome→plan
@@ -499,8 +503,13 @@ impl<'a> StaticAnalyzer<'a> {
         scratch: &mut EvalScratch,
     ) -> (Solution, Option<Solution>) {
         let mut rng = Rng::seed_from_u64(job.pair_seed);
-        let (mut a, mut b) =
-            breed_pair(&parents[job.a].genome, &parents[job.b].genome, rates, &mut rng);
+        let (mut a, mut b) = breed_pair_with(
+            &parents[job.a].genome,
+            &parents[job.b].genome,
+            rates,
+            &mut rng,
+            &mut scratch.upmx,
+        );
         self.enforce_ablation_switches(&mut a);
         self.enforce_ablation_switches(&mut b);
         let sol_a = self.eval_one(a, job.seed_a, true, job.measure, ctx, scratch);

@@ -36,6 +36,7 @@
 //! plan vectors. New scenario types slot in through [`ScenarioSpec`]
 //! (including [`ScenarioSpec::Custom`] for networks outside the zoo); new
 //! execution backends through [`Analysis::deploy_with_engine`].
+#![warn(missing_docs)]
 
 use std::ops::ControlFlow;
 use std::path::Path;
@@ -61,7 +62,7 @@ use crate::util::error::Result;
 pub use crate::analyzer::{GaConfig, Solution};
 pub use crate::coordinator::{OverloadPolicy, RuntimeOptions};
 pub use crate::serve::{
-    ArrivalProcess, ClockMode, GroupLoad, LoadSpec, SaturationOptions, ServeReport,
+    Admission, ArrivalProcess, ClockMode, GroupLoad, LoadSpec, SaturationOptions, ServeReport,
 };
 
 /// Wall-seconds per simulated second used by [`Analysis::deploy`]'s default
@@ -73,16 +74,39 @@ pub const DEFAULT_TIME_SCALE: f64 = 0.05;
 pub enum ScenarioSpec {
     /// Named model groups drawn from the nine-model zoo: one inner `Vec`
     /// of zoo indices per group.
-    ZooGroups { name: String, groups: Vec<Vec<usize>> },
+    ZooGroups {
+        /// Scenario name (reports, solution files).
+        name: String,
+        /// Zoo indices per model group.
+        groups: Vec<Vec<usize>>,
+    },
     /// Scenario `index` (0..10) of the paper's random single-group
     /// generator (Fig 11 top), deterministic in `seed`.
-    GeneratedSingle { seed: u64, index: usize },
+    GeneratedSingle {
+        /// Generator seed.
+        seed: u64,
+        /// Which of the ten generated scenarios to pick.
+        index: usize,
+    },
     /// Scenario `index` (0..10) of the random two-group generator (Fig 11
     /// bottom).
-    GeneratedMulti { seed: u64, index: usize },
+    GeneratedMulti {
+        /// Generator seed.
+        seed: u64,
+        /// Which of the ten generated scenarios to pick.
+        index: usize,
+    },
     /// Caller-provided networks (models outside the zoo). `groups`
     /// partitions the network indices into model groups.
-    Custom { name: String, networks: Vec<Network>, groups: Vec<Vec<usize>> },
+    Custom {
+        /// Scenario name (reports, solution files).
+        name: String,
+        /// The networks themselves (unique names required — the profiler
+        /// keys statistics by name).
+        networks: Vec<Network>,
+        /// Network indices per model group (a partition of `networks`).
+        groups: Vec<Vec<usize>>,
+    },
     /// An already-built scenario, adopted as-is.
     Prebuilt(Scenario),
 }
@@ -180,6 +204,7 @@ pub enum PerfSource {
 /// Generation 0 is the evaluated initial population.
 #[derive(Debug)]
 pub struct GenerationProgress<'a> {
+    /// Generation just evaluated (0 = the initial population).
     pub generation: usize,
     /// Candidate evaluations so far (including local-search probes).
     pub evaluations: usize,
@@ -190,9 +215,13 @@ pub struct GenerationProgress<'a> {
     pub avg_aggregate: f64,
     /// Generations since the average last improved (patience counter).
     pub stale_generations: usize,
+    /// Profile-DB lookups answered from the merkle-keyed cache so far.
     pub profile_cache_hits: u64,
+    /// Device measurements the profile DB had to perform so far.
     pub profile_measurements: u64,
+    /// Genome→plan memo hits so far.
     pub plan_cache_hits: u64,
+    /// Genome→plan memo misses (full decodes) so far.
     pub plan_cache_misses: u64,
     /// Config probes skipped so far by the profiler's dominance cutoff
     /// (best-first probing at work during long searches).
@@ -239,6 +268,7 @@ pub struct BatchProgress {
 /// interruptible from a CLI or serving layer without losing the
 /// evaluations already paid for.
 pub trait Observer {
+    /// Per-generation progress (after each replacement step).
     fn on_generation(&mut self, progress: &GenerationProgress<'_>) -> ControlFlow<()>;
 
     /// Per-batch (mid-generation) progress. Default: keep running.
@@ -261,7 +291,28 @@ pub fn null_observer() -> impl Observer {
     |_: &GenerationProgress<'_>| {}
 }
 
-/// Builder for an [`AnalysisSession`].
+/// Builder for an [`AnalysisSession`]: pick the workload
+/// ([`ScenarioSpec`]), the device model ([`PerfSource`]), the GA budget
+/// ([`GaConfig`]), and the communication model, then [`SessionBuilder::build`].
+///
+/// ```no_run
+/// use puzzle::analyzer::GaConfig;
+/// use puzzle::api::{RuntimeOptions, ScenarioSpec, SessionBuilder};
+///
+/// # fn main() -> puzzle::util::error::Result<()> {
+/// // A camera-synchronized group of three zoo models, quick search budget.
+/// let session = SessionBuilder::new(ScenarioSpec::single_group("demo", vec![0, 1, 6]))
+///     .config(GaConfig::quick(42))
+///     .build()?;
+/// let analysis = session.run();
+///
+/// // Deploy the best Pareto solution and push an open-loop load through it.
+/// let mut deployment = analysis.deploy(analysis.best_index(), RuntimeOptions::default())?;
+/// deployment.serve(0, 10, std::time::Duration::from_secs(10));
+/// deployment.shutdown();
+/// # Ok(())
+/// # }
+/// ```
 pub struct SessionBuilder {
     spec: ScenarioSpec,
     perf: PerfSource,
@@ -270,6 +321,8 @@ pub struct SessionBuilder {
 }
 
 impl SessionBuilder {
+    /// Start a builder for the given workload, with the calibrated device
+    /// model and default GA budget.
     pub fn new(spec: ScenarioSpec) -> SessionBuilder {
         SessionBuilder {
             spec,
@@ -284,6 +337,7 @@ impl SessionBuilder {
         SessionBuilder::new(ScenarioSpec::Prebuilt(scenario))
     }
 
+    /// Choose where the session's device model comes from.
     pub fn perf(mut self, source: PerfSource) -> SessionBuilder {
         self.perf = source;
         self
@@ -295,11 +349,14 @@ impl SessionBuilder {
         self
     }
 
+    /// Set the GA search budget and seed.
     pub fn config(mut self, config: GaConfig) -> SessionBuilder {
         self.config = config;
         self
     }
 
+    /// Replace the communication-cost model pricing cross-subgraph
+    /// transfers.
     pub fn comm(mut self, comm: CommModel) -> SessionBuilder {
         self.comm = comm;
         self
@@ -332,10 +389,12 @@ pub struct AnalysisSession {
 }
 
 impl AnalysisSession {
+    /// The scenario this session analyzes.
     pub fn scenario(&self) -> &Arc<Scenario> {
         &self.scenario
     }
 
+    /// The session's device model.
     pub fn perf(&self) -> &Arc<PerfModel> {
         &self.perf
     }
@@ -345,6 +404,7 @@ impl AnalysisSession {
         &self.profiler
     }
 
+    /// The GA budget this session runs with.
     pub fn config(&self) -> &GaConfig {
         &self.config
     }
@@ -427,12 +487,19 @@ pub struct Analysis {
     scenario: Arc<Scenario>,
     perf: Arc<PerfModel>,
     profiler: Arc<Profiler<'static>>,
+    /// The Pareto front of the search (plan sets `Arc`-shared).
     pub pareto: Vec<Solution>,
+    /// Generations the search ran before converging or being cancelled.
     pub generations_run: usize,
+    /// Total candidate evaluations (including local-search probes).
     pub evaluations: usize,
+    /// Profile-DB lookups answered from the merkle-keyed cache.
     pub profile_cache_hits: u64,
+    /// Device measurements the profile DB had to perform.
     pub profile_measurements: u64,
+    /// Genome→plan memo hits.
     pub plan_cache_hits: u64,
+    /// Genome→plan memo misses (full decodes).
     pub plan_cache_misses: u64,
     /// True when the search was cancelled through an [`Observer`] hook: the
     /// front reflects the population at cancellation, not convergence.
@@ -440,10 +507,12 @@ pub struct Analysis {
 }
 
 impl Analysis {
+    /// The analyzed scenario.
     pub fn scenario(&self) -> &Arc<Scenario> {
         &self.scenario
     }
 
+    /// The device model the analysis ran against.
     pub fn perf(&self) -> &Arc<PerfModel> {
         &self.perf
     }
@@ -552,23 +621,70 @@ impl Analysis {
             coordinator,
             time_scale,
             groups: self.scenario.groups.iter().map(|g| g.members.clone()).collect(),
+            perf: self.perf.clone(),
         })
     }
 }
 
 /// A live runtime serving one deployed solution: the [`Coordinator`] plus
 /// the scenario's group membership, ready for group submissions.
+///
+/// Deployments are **persistent**: [`Deployment::serve_load`] can be called
+/// any number of times (each report covers only its own load), and
+/// [`Deployment::reset`] / [`Deployment::reset_seeded`] return the warm
+/// stack to its post-deploy state — with a seeded reset, a replayed
+/// virtual-clock load is bit-identical to the same load on a fresh
+/// deployment.
 pub struct Deployment {
+    /// The live Coordinator owning the worker threads.
     pub coordinator: Coordinator,
     /// Wall-seconds per simulated second of the backing engine (1.0 for
     /// real engines).
     pub time_scale: f64,
     groups: Vec<Vec<usize>>,
+    perf: Arc<PerfModel>,
 }
 
 impl Deployment {
+    /// Number of model groups in the deployed scenario.
     pub fn num_groups(&self) -> usize {
         self.groups.len()
+    }
+
+    /// Return the warm runtime to its post-deploy state **without tearing
+    /// the worker threads down**: drain in-flight work, then clear the
+    /// served/dropped logs and request sequencing
+    /// ([`Coordinator::reset`]). Returns the completions drained while
+    /// settling.
+    pub fn reset(&mut self) -> usize {
+        self.coordinator.reset()
+    }
+
+    /// [`Deployment::reset`], additionally re-seeding the engine's
+    /// execution-noise stream: a subsequent virtual-clock
+    /// [`Deployment::serve_load`] is bit-identical to the same load on a
+    /// fresh deployment seeded with `seed`.
+    pub fn reset_seeded(&mut self, seed: u64) -> usize {
+        let settled = self.coordinator.reset();
+        self.coordinator.engine().reseed(seed);
+        settled
+    }
+
+    /// Derive a [`OverloadPolicy::DropAfter`] admission cap for `spec` from
+    /// Little's law against this deployment's solutions
+    /// ([`crate::serve::little_inflight_cap`]): `slack ×` the expected
+    /// in-flight population `Σ_g λ_g·W_g`, with a floor of one request per
+    /// group. Pass [`Admission::DEFAULT_SLACK`] unless tuning.
+    pub fn little_law_policy(&self, spec: &LoadSpec, slack: f64) -> OverloadPolicy {
+        OverloadPolicy::DropAfter {
+            max_inflight: serve::little_inflight_cap(
+                self.coordinator.solutions(),
+                &self.groups,
+                &spec.mean_rates(),
+                &self.perf,
+                slack,
+            ),
+        }
     }
 
     /// Network indices of one model group. Panics on an out-of-range group

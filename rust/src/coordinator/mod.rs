@@ -219,6 +219,7 @@ impl Ord for VEvent {
 pub struct Coordinator {
     solutions: Vec<NetworkSolution>,
     workers: Vec<Worker>,
+    engine: Arc<dyn Engine>,
     completion_rx: Receiver<CompletionMsg>,
     completion_tx: Sender<CompletionMsg>,
     pool: TensorPool,
@@ -272,6 +273,7 @@ impl Coordinator {
         Coordinator {
             solutions,
             workers,
+            engine,
             completion_rx,
             completion_tx,
             pool,
@@ -503,6 +505,62 @@ impl Coordinator {
             return 0;
         }
         self.pump(timeout)
+    }
+
+    /// Return the runtime to its post-construction state **without tearing
+    /// the worker threads down**: finish any in-flight work
+    /// ([`Coordinator::settle`]), drop straggler completions, then clear the
+    /// served/dropped logs, per-request bookkeeping, ready queues, and the
+    /// request/dispatch sequence counters. After a reset (plus
+    /// [`Engine::reseed`] on stochastic engines) a warm coordinator replays
+    /// a load **bit-identically** to a freshly constructed one — the
+    /// contract behind probe reuse in
+    /// [`crate::serve::saturation_via_runtime`]. The admission policy and
+    /// the pool/arena accounting are left as set: loads manage the policy
+    /// themselves ([`crate::serve::run_load`] saves/restores it), and the
+    /// Table-5 memory statistics deliberately accumulate across loads.
+    /// Returns the completions drained while settling.
+    pub fn reset(&mut self) -> usize {
+        let settled = self.settle(std::time::Duration::from_secs(30));
+        // A timed-out settle (wall mode only — virtual runs settle exactly)
+        // can leave workers mid-task. Because reset restarts request
+        // sequencing at 0, a completion surfacing *after* the clear could
+        // alias a post-reset request carrying the same (group, seq,
+        // network) tag — so block until every busy worker has reported (or
+        // is provably gone) before clearing. Newly-ready dependents are
+        // deliberately dropped: the request state they belong to is about
+        // to be cleared.
+        while self.busy.iter().any(|&b| b) {
+            match self.completion_rx.recv_timeout(std::time::Duration::from_secs(30)) {
+                Ok(msg) => {
+                    let now = self.clock.now();
+                    let _ = self.handle_completion(msg, now, None);
+                }
+                Err(_) => break, // worker dead/hung: nothing more will arrive
+            }
+        }
+        // Drain any completions that raced the settle.
+        while self.completion_rx.try_recv().is_ok() {}
+        self.live.clear();
+        self.group_progress.clear();
+        self.tensors.clear();
+        for q in &mut self.ready {
+            q.clear();
+        }
+        for b in &mut self.busy {
+            *b = false;
+        }
+        self.ready_order = 0;
+        self.served.clear();
+        self.dropped.clear();
+        self.next_request = 0;
+        settled
+    }
+
+    /// The engine backing this runtime's workers (e.g. to
+    /// [`Engine::reseed`] noise between reused-deployment probes).
+    pub fn engine(&self) -> &Arc<dyn Engine> {
+        &self.engine
     }
 
     /// Non-blocking wall-clock step: dispatch ready work, drain any
@@ -986,6 +1044,30 @@ mod tests {
         // Makespans grow monotonically under backlog.
         let ms: Vec<f64> = coord.served().iter().map(|s| s.makespan).collect();
         assert!(ms.windows(2).all(|w| w[1] >= w[0] - 1e-12), "{ms:?}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn reset_clears_logs_and_restarts_sequencing() {
+        let sol = solution_for(build_model(0, 0), 0, None);
+        let mut coord = sim_coordinator(vec![sol], RuntimeOptions::default());
+        coord.set_overload_policy(OverloadPolicy::DropAfter { max_inflight: 1 });
+        coord.submit_group(0, &[0]);
+        coord.submit_group(0, &[0]); // cap 1, no pump in between: dropped
+        coord.pump(std::time::Duration::from_secs(5));
+        assert_eq!(coord.served().len(), 1);
+        assert_eq!(coord.dropped().len(), 1);
+        coord.reset();
+        assert!(coord.served().is_empty(), "reset left served records");
+        assert!(coord.dropped().is_empty(), "reset left dropped records");
+        assert_eq!(coord.outstanding(), 0);
+        // Sequencing restarts: the next admission is request 0 again, and
+        // the workers are still alive to serve it.
+        coord.set_overload_policy(OverloadPolicy::Queue);
+        assert_eq!(coord.submit_group(0, &[0]), 0);
+        coord.pump(std::time::Duration::from_secs(5));
+        assert_eq!(coord.served().len(), 1);
+        assert_eq!(coord.served()[0].request, 0);
         coord.shutdown();
     }
 

@@ -51,6 +51,14 @@ pub trait Engine: Send + Sync {
 
     /// Engine name for logs/metrics.
     fn name(&self) -> &str;
+
+    /// Re-seed the engine's stochastic state (execution-noise RNG) so a
+    /// *warm* engine replays the same noise stream as one freshly
+    /// constructed with `seed`. Together with
+    /// [`crate::coordinator::Coordinator::reset`] this is what makes a
+    /// reused deployment's probe bit-identical to a fresh one. Default:
+    /// no-op (real hardware has no re-seedable noise).
+    fn reseed(&self, _seed: u64) {}
 }
 
 /// Simulated engine: consumes simulated time according to the calibrated
@@ -113,6 +121,10 @@ impl Engine for SimEngine {
 
     fn name(&self) -> &str {
         "sim"
+    }
+
+    fn reseed(&self, seed: u64) {
+        *self.rng.lock().unwrap() = Rng::seed_from_u64(seed);
     }
 }
 
@@ -311,6 +323,35 @@ mod tests {
         assert_ne!(a, c);
         // Noise actually varies across calls.
         assert!(a.windows(2).any(|w| (w[0] - w[1]).abs() > 1e-9));
+    }
+
+    #[test]
+    fn reseed_replays_the_noise_stream() {
+        // A warm engine reseeded to `s` must produce the same durations as
+        // a fresh engine constructed with `s` — the probe-reuse contract.
+        let pm = Arc::new(PerfModel::paper_calibrated());
+        let net = build_model(0, 1);
+        let part = partition(&net, &vec![false; net.num_edges()], &vec![Processor::Cpu; net.num_layers()]);
+        let cfg = ExecConfig::new(Processor::Cpu, Backend::Xnnpack, DataType::Fp32);
+        let sample = |engine: &SimEngine| -> Vec<f64> {
+            (0..4)
+                .map(|_| {
+                    let task = EngineTask {
+                        network: &net,
+                        subgraph: &part.subgraphs[0],
+                        config: cfg,
+                        inputs: vec![],
+                    };
+                    engine.execute(&task).unwrap().elapsed
+                })
+                .collect()
+        };
+        let warm = SimEngine::new(pm.clone(), 0.0, true, 3);
+        let _burn = sample(&warm); // advance the stream
+        warm.reseed(41);
+        let reused = sample(&warm);
+        let fresh = sample(&SimEngine::new(pm, 0.0, true, 41));
+        assert_eq!(reused, fresh);
     }
 
     #[test]

@@ -21,7 +21,7 @@ use crate::coordinator::NetworkSolution;
 use crate::metrics::mean_sd;
 use crate::perf::PerfModel;
 use crate::scenario::{multi_group_scenarios, scenario10_analog, single_group_scenarios, Scenario};
-use crate::serve::{self, LoadSpec, RuntimeHarness, SaturationOptions};
+use crate::serve::{self, Admission, ClockMode, LoadSpec, RuntimeHarness, SaturationOptions};
 use crate::sim::ExecutionPlan;
 
 /// Per-scenario saturation multipliers for the three methods.
@@ -40,6 +40,11 @@ pub struct ServingBudget {
     pub ga: GaSize,
     pub sim_requests: usize,
     pub scenarios: usize,
+    /// Probe admission policy of the saturation searches
+    /// ([`Admission::Queue`] reproduces the paper's unbounded-queue
+    /// protocol; [`Admission::LittleCap`] bounds probe backlog with a
+    /// Little's-law in-flight cap).
+    pub admission: Admission,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -50,11 +55,21 @@ pub enum GaSize {
 
 impl ServingBudget {
     pub fn full() -> Self {
-        ServingBudget { ga: GaSize::Full, sim_requests: 30, scenarios: 10 }
+        ServingBudget {
+            ga: GaSize::Full,
+            sim_requests: 30,
+            scenarios: 10,
+            admission: Admission::Queue,
+        }
     }
 
     pub fn quick() -> Self {
-        ServingBudget { ga: GaSize::Quick, sim_requests: 12, scenarios: 3 }
+        ServingBudget {
+            ga: GaSize::Quick,
+            sim_requests: 12,
+            scenarios: 3,
+            admission: Admission::Queue,
+        }
     }
 
     fn ga_config(&self, seed: u64) -> GaConfig {
@@ -139,7 +154,12 @@ pub fn solve_scenario_runtime(
 }
 
 fn sat_opts(budget: &ServingBudget, seed: u64) -> SaturationOptions {
-    SaturationOptions { requests: budget.sim_requests, seed, ..Default::default() }
+    SaturationOptions {
+        requests: budget.sim_requests,
+        seed,
+        admission: budget.admission,
+        ..Default::default()
+    }
 }
 
 /// Figure 12 / 15 core: runtime-measured saturation multiplier per scenario
@@ -195,38 +215,42 @@ pub struct MethodCurve {
     pub curves: Vec<ScoreCurve>,
 }
 
-/// Runtime-measured score band of a set of candidate solutions at one
-/// period multiplier: periodic open-loop load at Φ(α) through a fresh
-/// virtual-clock runtime per solution, deterministic per seed.
-fn runtime_score_band(
+/// Runtime-measured score bands of a set of candidate solutions over a
+/// whole α grid: periodic open-loop load at Φ(α) through **one warm
+/// virtual-clock deployment per solution** (reset + re-seeded between
+/// probes — bit-identical to fresh deployments, at one deploy per set
+/// instead of one per (set, α) pair). Deterministic per seed.
+fn runtime_score_bands(
     sets: &[Vec<NetworkSolution>],
     scenario: &Scenario,
-    alpha: f64,
+    alphas: &[f64],
     perf: &Arc<PerfModel>,
     requests: usize,
     seed: u64,
-) -> (f64, f64, f64) {
+) -> Vec<(f64, f64, f64)> {
     if sets.is_empty() {
-        return (0.0, 0.0, 0.0);
+        return alphas.iter().map(|_| (0.0, 0.0, 0.0)).collect();
     }
-    let spec = LoadSpec::for_scenario(scenario, perf, alpha, requests);
     let groups: Vec<Vec<usize>> = scenario.groups.iter().map(|g| g.members.clone()).collect();
-    let mut scores: Vec<f64> = sets
-        .iter()
-        .enumerate()
-        .map(|(i, sols)| {
-            RuntimeHarness::for_solutions(
-                sols.clone(),
-                groups.clone(),
-                perf.clone(),
-                serve::probe_seed(seed, i, alpha),
-            )
-            .run(&spec)
-            .score
+    // per_alpha[k][i] = score of set i at alphas[k].
+    let mut per_alpha: Vec<Vec<f64>> = vec![Vec::with_capacity(sets.len()); alphas.len()];
+    for (i, sols) in sets.iter().enumerate() {
+        let harness =
+            RuntimeHarness::for_solutions(sols.clone(), groups.clone(), perf.clone(), seed);
+        let mut deployment = harness.deploy(ClockMode::Virtual);
+        for (k, &alpha) in alphas.iter().enumerate() {
+            let spec = LoadSpec::for_scenario(scenario, perf, alpha, requests);
+            per_alpha[k].push(deployment.probe(&spec, serve::probe_seed(seed, i, alpha)).score);
+        }
+        deployment.shutdown();
+    }
+    per_alpha
+        .into_iter()
+        .map(|mut scores| {
+            scores.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            (scores[0], scores[scores.len() / 2], scores[scores.len() - 1])
         })
-        .collect();
-    scores.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    (scores[0], scores[scores.len() / 2], scores[scores.len() - 1])
+        .collect()
 }
 
 /// Score-vs-α curves for a scenario (Figure 13 for single-group scenarios,
@@ -243,10 +267,7 @@ pub fn score_curves(
     let make = |name: &str, sets: &[Vec<NetworkSolution>]| ScoreCurve {
         method: name.to_string(),
         alphas: alphas.to_vec(),
-        scores: alphas
-            .iter()
-            .map(|&a| runtime_score_band(sets, scenario, a, &perf, budget.sim_requests, seed))
-            .collect(),
+        scores: runtime_score_bands(sets, scenario, alphas, &perf, budget.sim_requests, seed),
     };
     MethodCurve {
         scenario: scenario.name.clone(),

@@ -30,4 +30,7 @@ pub use local_search::{
 pub use nsga3::{
     fast_non_dominated_sort, nsga3_select, reference_points, Dominance, SelectionWorkspace,
 };
-pub use operators::{breed_pair, mutate, one_point_crossover, upmx, MutationRates};
+pub use operators::{
+    breed_pair, breed_pair_with, mutate, one_point_crossover, one_point_crossover_with, upmx,
+    upmx_with, MutationRates, UpmxScratch,
+};

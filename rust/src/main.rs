@@ -76,8 +76,8 @@ const USAGE: &str = "usage: puzzle <analyze|serve|loadtest|profile|comm-bench|sc
   analyze      --models 0,1,6 --population 48 --generations 40 --seed 23 [--save sol.txt] [--quiet]
   serve        --models 0,1,6 --requests 30 --time-scale 0.05 [--solution sol.txt]
   loadtest     --models 0,1,6 --alpha 1.0 --requests 40 --pattern periodic|poisson|bursty
-               [--burst 4] [--max-inflight N] [--wall] [--time-scale 0.05]
-               [--quick] [--no-saturation] [--seed 23]
+               [--burst 4] [--max-inflight N] [--admission queue|little] [--all-patterns]
+               [--wall] [--time-scale 0.05] [--quick] [--no-saturation] [--seed 23]
   profile
   comm-bench
   scenario-gen --seed 23
@@ -244,12 +244,15 @@ fn serve_cmd(
 }
 
 /// Open-loop load test through the arrival-driven runtime: analyze a model
-/// group, deploy the best Pareto solution, push an arrival process through
-/// it (virtual clock by default — deterministic and fast; `--wall` for real
-/// time), report deadline attainment, then binary-search the
-/// runtime-measured saturation multiplier.
+/// group, deploy the best Pareto solution **once**, push an arrival process
+/// through it (virtual clock by default — deterministic and fast; `--wall`
+/// for real time), report deadline attainment, optionally replay the other
+/// arrival patterns against the same warm deployment (`--all-patterns`),
+/// then binary-search the runtime-measured saturation multiplier (one
+/// persistent deployment reused across every α-probe). `--admission little`
+/// swaps the unbounded queue for a Little's-law derived in-flight cap.
 fn loadtest_cmd(pm: &PerfModel, args: &Args) -> Result<()> {
-    use puzzle::api::{LoadSpec, OverloadPolicy};
+    use puzzle::api::{Admission, LoadSpec, OverloadPolicy};
     use std::ops::ControlFlow;
 
     let idx = parse_models(&args.get_str("models", "0,1,6"));
@@ -286,15 +289,19 @@ fn loadtest_cmd(pm: &PerfModel, args: &Args) -> Result<()> {
     let alpha = args.get("alpha", 1.0f64);
     let requests: usize = args.get("requests", if quick { 10 } else { 40 });
     let periods = scenario.periods(alpha, pm);
-    let pattern = args.get_str("pattern", "periodic");
-    let mut spec = match pattern.as_str() {
+    // Resolve the pattern name up front: an unrecognized value falls back
+    // to periodic, and every later use (labels, --all-patterns skip) must
+    // agree with what actually ran.
+    let pattern = match args.get_str("pattern", "periodic").as_str() {
+        "poisson" => "poisson",
+        "bursty" => "bursty",
+        _ => "periodic",
+    };
+    let mut spec = match pattern {
         "poisson" => LoadSpec::poisson(&periods, requests, seed),
         "bursty" => LoadSpec::bursty(&periods, args.get("burst", 4usize), requests),
         _ => LoadSpec::periodic(&periods, requests),
     };
-    if let Some(max_inflight) = args.options.get("max-inflight").and_then(|v| v.parse().ok()) {
-        spec = spec.with_policy(OverloadPolicy::DropAfter { max_inflight });
-    }
     let wall = args.flags.contains("wall");
     let time_scale = args.get("time-scale", 0.05);
     if wall {
@@ -307,8 +314,22 @@ fn loadtest_cmd(pm: &PerfModel, args: &Args) -> Result<()> {
         true,
         seed,
     )?;
+    let admission = match args.get_str("admission", "queue").as_str() {
+        "little" => Admission::little(),
+        _ => Admission::Queue,
+    };
+    if let Some(max_inflight) = args.options.get("max-inflight").and_then(|v| v.parse().ok()) {
+        spec = spec.with_policy(OverloadPolicy::DropAfter { max_inflight });
+    } else if let Admission::LittleCap { slack } = admission {
+        // Derive the in-flight cap from Little's law instead of a fixed
+        // constant: slack x (mean rate x profiled service time).
+        let policy = deployment.little_law_policy(&spec, slack);
+        if let OverloadPolicy::DropAfter { max_inflight } = policy {
+            println!("admission: Little's-law cap of {max_inflight} in-flight group requests");
+        }
+        spec = spec.with_policy(policy);
+    }
     let report = deployment.serve_load(&spec);
-    deployment.shutdown();
 
     println!(
         "loadtest: pattern {pattern}, alpha {alpha:.2}, {} clock",
@@ -336,13 +357,39 @@ fn loadtest_cmd(pm: &PerfModel, args: &Args) -> Result<()> {
         );
     }
 
+    if args.flags.contains("all-patterns") {
+        // Replay the remaining arrival patterns against the SAME warm
+        // deployment: reset + re-seed between loads, no re-deploy.
+        for (name, alt) in [
+            ("periodic", LoadSpec::periodic(&periods, requests)),
+            ("poisson", LoadSpec::poisson(&periods, requests, seed)),
+            ("bursty", LoadSpec::bursty(&periods, args.get("burst", 4usize), requests)),
+        ] {
+            if name == pattern {
+                continue;
+            }
+            let mut alt = alt.with_policy(spec.policy);
+            if wall {
+                alt = alt.wall(std::time::Duration::from_secs(60));
+            }
+            deployment.reset_seeded(seed);
+            let r = deployment.serve_load(&alt);
+            println!(
+                "  [warm replay] {name:<8}: served {} dropped {} violations {} | score {:.3}",
+                r.served, r.dropped, r.violations, r.score
+            );
+        }
+    }
+    deployment.shutdown();
+
     if !args.flags.contains("no-saturation") {
-        println!("saturation search (runtime-measured, virtual clock):");
+        println!("saturation search (runtime-measured, one warm deployment per solution set):");
         let sets = vec![analysis.runtime_solutions(best)?];
         let opts = puzzle::serve::SaturationOptions {
             requests,
             tolerance: if quick { 0.05 } else { 0.01 },
             seed,
+            admission,
             ..Default::default()
         };
         let sat = puzzle::serve::saturation_via_runtime_observed(
@@ -351,7 +398,10 @@ fn loadtest_cmd(pm: &PerfModel, args: &Args) -> Result<()> {
             session.perf(),
             &opts,
             &mut |p| {
-                println!("  probe {:>2}: alpha {:.3} -> score {:.3}", p.probes, p.alpha, p.score);
+                println!(
+                    "  probe {:>2}: alpha {:.3} -> score {:.3} ({} deploys, {} certified)",
+                    p.probes, p.alpha, p.score, p.deploys, p.certified_infeasible
+                );
                 ControlFlow::Continue(())
             },
         );

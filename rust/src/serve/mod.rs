@@ -16,14 +16,25 @@
 //!   Coordinator (existing or freshly deployed) and summarize the
 //!   [`ServedRequest`] log as a [`ServeReport`] (attainment, violations,
 //!   drops, XRBench score);
+//! * [`WarmDeployment`] — a **persistent** Coordinator/Worker stack for one
+//!   solution set: deploy once ([`RuntimeHarness::deploy`]), then replay any
+//!   number of loads against the warm runtime. Between probes the stack is
+//!   [`Coordinator::reset`] and its engine noise re-seeded, so a reused
+//!   probe is bit-identical to one on a fresh deployment (tested);
 //! * [`saturation_via_runtime`] — the saturation driver: binary-search the
 //!   smallest period multiplier α whose **runtime-measured** score clears
 //!   the SLO-attainment threshold, replacing the analytic-only
-//!   `experiments::saturation_of` path for the serving figures.
+//!   `experiments::saturation_of` path for the serving figures. The driver
+//!   deploys **exactly once per solution set** and reuses that warm stack
+//!   for every α-probe, seeds the bisection bracket at the queueing-
+//!   theoretic ρ = 1 point ([`rho_bracket_floor`]), and can apply
+//!   Little's-law admission control ([`Admission`], [`little_inflight_cap`])
+//!   instead of unbounded queueing.
 //!
 //! Every method (Puzzle, Best Mapping, NPU Only) is measured through this
 //! one harness — [`materialize_solutions`] turns any genome into runtime
 //! [`NetworkSolution`]s — so the comparison is apples-to-apples.
+#![warn(missing_docs)]
 
 use std::ops::ControlFlow;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -48,6 +59,7 @@ use crate::util::rng::Rng;
 /// A monotonic time source for the runtime, in seconds. Wall time for real
 /// serving; a virtual clock for reproducible, fast load tests.
 pub trait Clock: Send + Sync {
+    /// Current reading, seconds since the clock's epoch.
     fn now(&self) -> f64;
     /// True for clocks advanced by an event loop rather than the OS.
     fn is_virtual(&self) -> bool {
@@ -61,6 +73,7 @@ pub struct WallClock {
 }
 
 impl WallClock {
+    /// A wall clock whose epoch is *now*.
     pub fn new() -> WallClock {
         WallClock { epoch: Instant::now() }
     }
@@ -85,6 +98,7 @@ pub struct VirtualClock {
 }
 
 impl VirtualClock {
+    /// A virtual clock starting at t = 0.
     pub fn new() -> VirtualClock {
         VirtualClock { bits: AtomicU64::new(0f64.to_bits()) }
     }
@@ -119,7 +133,9 @@ impl Clock for VirtualClock {
 /// scales to wall seconds at the engine's time scale).
 #[derive(Debug, Clone)]
 pub struct Arrival {
+    /// Arrival timestamp, simulated seconds from the load's start.
     pub time: f64,
+    /// Model group this request targets.
     pub group: usize,
     /// Relative SLO deadline of this request (= the group period under the
     /// paper's protocol).
@@ -133,14 +149,27 @@ pub struct Arrival {
 pub enum ArrivalProcess {
     /// Fixed-rate arrivals every `period` seconds (camera / microphone —
     /// the paper's protocol).
-    Periodic { period: f64 },
+    Periodic {
+        /// Inter-arrival time, simulated seconds.
+        period: f64,
+    },
     /// Poisson arrivals with mean inter-arrival `mean` seconds (user-driven
     /// aperiodic events), deterministic per seed.
-    Poisson { mean: f64, seed: u64 },
+    Poisson {
+        /// Mean inter-arrival time, simulated seconds.
+        mean: f64,
+        /// Seed of the deterministic exponential draws.
+        seed: u64,
+    },
     /// On/off bursts: `burst` requests spaced `period / 10` apart, bursts
     /// starting every `burst × period` seconds — the long-run rate matches
     /// `Periodic { period }` but queueing is adversarial.
-    Bursty { period: f64, burst: usize },
+    Bursty {
+        /// Long-run mean inter-arrival time, simulated seconds.
+        period: f64,
+        /// Requests per burst.
+        burst: usize,
+    },
 }
 
 impl ArrivalProcess {
@@ -178,10 +207,12 @@ impl ArrivalProcess {
 /// The load offered to one model group.
 #[derive(Debug, Clone)]
 pub struct GroupLoad {
+    /// Arrival process generating this group's request timestamps.
     pub process: ArrivalProcess,
     /// Relative SLO deadline stamped on each request (the group period in
     /// the paper's protocol; `None` disables deadline accounting).
     pub deadline: Option<f64>,
+    /// Number of requests offered to this group.
     pub requests: usize,
 }
 
@@ -192,16 +223,47 @@ pub enum ClockMode {
     Virtual,
     /// Real time: arrivals scheduled on the wall clock at the deployment's
     /// time scale; `timeout` bounds the post-arrival drain.
-    Wall { timeout: Duration },
+    Wall {
+        /// Wall-clock bound on draining in-flight work after the last
+        /// arrival.
+        timeout: Duration,
+    },
 }
 
 /// A complete load test description, consumed by [`run_load`] /
 /// [`crate::api::Deployment::serve_load`].
+///
+/// Constructors cover the paper's protocol and its stress variants; the
+/// builder-style methods ([`LoadSpec::wall`], [`LoadSpec::with_policy`])
+/// adjust clocking and admission:
+///
+/// ```
+/// use puzzle::serve::{ArrivalProcess, LoadSpec};
+///
+/// // Two groups at 10 ms / 25 ms periods, 100 requests each; each request
+/// // carries its group period as the SLO deadline.
+/// let spec = LoadSpec::periodic(&[0.010, 0.025], 100);
+/// assert_eq!(spec.groups.len(), 2);
+/// assert_eq!(spec.groups[0].deadline, Some(0.010));
+///
+/// // Long-run mean arrival rates feed the utilization certificate
+/// // (ρ = λ·E[work]): 1/period per group.
+/// let rates = spec.mean_rates();
+/// assert!((rates[0] - 100.0).abs() < 1e-9 && (rates[1] - 40.0).abs() < 1e-9);
+///
+/// // Same mean rates, adversarial clumping.
+/// let bursty = LoadSpec::bursty(&[0.010, 0.025], 4, 100);
+/// assert_eq!(bursty.mean_rates(), rates);
+/// assert!(matches!(bursty.groups[0].process, ArrivalProcess::Bursty { .. }));
+/// ```
 #[derive(Debug, Clone)]
 pub struct LoadSpec {
     /// One entry per model group of the deployment.
     pub groups: Vec<GroupLoad>,
+    /// Which clock drives the load (deterministic virtual replay, or real
+    /// time).
     pub mode: ClockMode,
+    /// Admission policy applied for the duration of the load.
     pub policy: OverloadPolicy,
     /// Prices cross-subgraph tensor transfers into virtual ready times
     /// (wall runs pay real staging cost instead).
@@ -281,6 +343,8 @@ impl LoadSpec {
         self
     }
 
+    /// Replace the admission policy (queue everything, or drop past an
+    /// in-flight cap — see [`little_inflight_cap`] for a derived cap).
     pub fn with_policy(mut self, policy: OverloadPolicy) -> LoadSpec {
         self.policy = policy;
         self
@@ -329,6 +393,77 @@ pub fn offered_utilization(
     rho
 }
 
+/// Little's-law admission cap for [`OverloadPolicy::DropAfter`]: the
+/// expected in-flight group-request population is L = Σ_g λ_g · W_g
+/// (mean arrival rate × profiled per-request service time, summed over the
+/// request's member networks' subgraphs), and the cap admits `slack` times
+/// that — headroom for transient queueing — with a floor of one in-flight
+/// request per group so light loads are never strangled.
+///
+/// The estimate is only meaningful at feasible load (ρ ≤ 1; past it the
+/// stationary population is unbounded and L tracks the *offered* work
+/// instead). That pairs naturally with the saturation driver, whose
+/// utilization certificate skips ρ > 1 probes before admission control
+/// could matter.
+pub fn little_inflight_cap(
+    solutions: &[NetworkSolution],
+    groups: &[Vec<usize>],
+    rates: &[f64],
+    perf: &PerfModel,
+    slack: f64,
+) -> usize {
+    let mut expected_inflight = 0.0f64;
+    for (members, &rate) in groups.iter().zip(rates) {
+        let mut work = 0.0f64;
+        for &n in members {
+            let sol = &solutions[n];
+            for (sg, cfg) in sol.partition.subgraphs.iter().zip(&sol.configs) {
+                work += perf.subgraph_time(&sol.network, &sg.layers, *cfg);
+            }
+        }
+        expected_inflight += rate * work;
+    }
+    ((slack * expected_inflight).ceil() as usize).max(groups.len()).max(1)
+}
+
+/// The α below which the utilization certificate alone forces the
+/// saturation probe's **median** score to zero — a queueing-informed lower
+/// bound for the bisection bracket of [`saturation_via_runtime`].
+///
+/// Periods scale linearly in α (Φ(α, Gi) = α·φ̄), so rates scale as 1/α and
+/// each solution set's certificate boundary is exactly its maximum
+/// per-processor utilization at α = 1. The driver passes a probe on the
+/// *median* score over the sets, so the bracket floor is the
+/// (⌊n/2⌋ + 1)-th largest of those boundaries: strictly below it, more than
+/// half the sets are certified infeasible (ρ > 1 ⇒ score 0) and the median
+/// cannot clear any positive threshold. The returned value is backed off by
+/// one part in 10⁹ so float rounding in the per-probe ρ computation can
+/// never flip the certificate at the boundary: every α strictly below the
+/// floor is certified infeasible, and **no feasible α is ever excluded**
+/// (property-tested).
+pub fn rho_bracket_floor(
+    solution_sets: &[Vec<NetworkSolution>],
+    scenario: &Scenario,
+    perf: &PerfModel,
+) -> f64 {
+    if solution_sets.is_empty() {
+        return 0.0;
+    }
+    let rates: Vec<f64> = scenario.periods(1.0, perf).iter().map(|p| 1.0 / p).collect();
+    let groups: Vec<Vec<usize>> = scenario.groups.iter().map(|g| g.members.clone()).collect();
+    let mut maxes: Vec<f64> = solution_sets
+        .iter()
+        .map(|sols| {
+            offered_utilization(sols, &groups, &rates, perf)
+                .iter()
+                .fold(0.0f64, |a, &b| a.max(b))
+        })
+        .collect();
+    maxes.sort_by(|a, b| a.partial_cmp(b).expect("finite utilizations"));
+    let n = maxes.len();
+    maxes[n - 1 - n / 2] * (1.0 - 1e-9)
+}
+
 /// Merge every group's arrival process into one time-ordered open-loop
 /// schedule (stable: simultaneous arrivals keep group order, then per-group
 /// generation order).
@@ -352,7 +487,9 @@ pub struct ServeReport {
     /// Requests offered by the arrival schedule (= served + dropped +
     /// unfinished-at-timeout).
     pub submitted: usize,
+    /// Requests served to completion during this load.
     pub served: usize,
+    /// Requests rejected by the admission policy during this load.
     pub dropped: usize,
     /// Requests still in flight when a wall-mode drain timeout expired
     /// (always 0 under the virtual clock, which runs to completion).
@@ -557,18 +694,25 @@ pub fn materialize_solutions(
         .collect()
 }
 
-/// Everything needed to push loads through a *fresh* runtime per run: used
-/// by the saturation driver and benches, where each probe must start from an
-/// empty backlog.
+/// Everything needed to push loads through the runtime: the solution set,
+/// group membership, device model, and engine knobs. One-shot runs
+/// ([`RuntimeHarness::run`]) deploy → probe → shut down; the saturation
+/// driver and the figure sweeps instead [`RuntimeHarness::deploy`] once and
+/// replay every probe against the resulting [`WarmDeployment`].
 #[derive(Clone)]
 pub struct RuntimeHarness {
+    /// Runtime solutions, one per network of the scenario.
     pub solutions: Vec<NetworkSolution>,
     /// Member network indices per model group.
     pub groups: Vec<Vec<usize>>,
+    /// The calibrated device model backing the simulated engine.
     pub perf: Arc<PerfModel>,
+    /// Runtime ablation switches (tensor pool, zero-copy).
     pub options: RuntimeOptions,
     /// Apply the calibrated execution-noise model (as on the real device).
     pub noisy: bool,
+    /// Engine noise seed for one-shot [`RuntimeHarness::run`] probes
+    /// (warm-deployment probes pass an explicit per-probe seed instead).
     pub seed: u64,
     /// Engine wall-seconds per simulated second for wall-mode runs (virtual
     /// runs always use a non-sleeping engine).
@@ -624,20 +768,18 @@ impl RuntimeHarness {
         offered_utilization(&self.solutions, &self.groups, &spec.mean_rates(), &self.perf)
     }
 
-    /// Deploy a fresh Coordinator/Worker stack, run the load, shut down.
-    pub fn run(&self, spec: &LoadSpec) -> ServeReport {
-        let (report, _) = self.run_with_log(spec);
-        report
-    }
-
-    /// [`RuntimeHarness::run`], also returning the raw [`ServedRequest`]
-    /// log (for determinism checks and custom accounting).
-    pub fn run_with_log(&self, spec: &LoadSpec) -> (ServeReport, Vec<ServedRequest>) {
-        // Wall mode must use the same fallback scale as the wall driver's
-        // arrival pacing (`run_load`): with a never-sleeping engine under
-        // real-time arrivals, every makespan would be ~0 and the report
-        // would measure nothing.
-        let engine_scale = match spec.mode {
+    /// Deploy the Coordinator/Worker stack **once** for reuse across
+    /// probes. `mode` fixes the engine pacing at spawn time: virtual probes
+    /// need a non-sleeping engine, wall probes sleep at the harness time
+    /// scale — probe a [`WarmDeployment`] only with specs of the mode it
+    /// was deployed for.
+    ///
+    /// Wall mode uses the same fallback scale as the wall driver's arrival
+    /// pacing ([`run_load`]): with a never-sleeping engine under real-time
+    /// arrivals, every makespan would be ~0 and the report would measure
+    /// nothing.
+    pub fn deploy(&self, mode: ClockMode) -> WarmDeployment {
+        let engine_scale = match mode {
             ClockMode::Virtual => 0.0,
             ClockMode::Wall { .. } => {
                 if self.time_scale > 0.0 {
@@ -649,32 +791,146 @@ impl RuntimeHarness {
         };
         let engine: Arc<dyn Engine> =
             Arc::new(SimEngine::new(self.perf.clone(), engine_scale, self.noisy, self.seed));
-        let mut coord = Coordinator::new(self.solutions.clone(), engine, self.options.clone());
-        let mut report = run_load(&mut coord, &self.groups, spec, self.time_scale);
-        report.rho = Some(self.utilization(spec));
-        let log = coord.served().to_vec();
-        coord.shutdown();
+        WarmDeployment {
+            coordinator: Coordinator::new(self.solutions.clone(), engine, self.options.clone()),
+            groups: self.groups.clone(),
+            perf: self.perf.clone(),
+            time_scale: self.time_scale,
+        }
+    }
+
+    /// Deploy a fresh Coordinator/Worker stack, run the load, shut down.
+    pub fn run(&self, spec: &LoadSpec) -> ServeReport {
+        let (report, _) = self.run_with_log(spec);
+        report
+    }
+
+    /// [`RuntimeHarness::run`], also returning the raw [`ServedRequest`]
+    /// log (for determinism checks and custom accounting).
+    pub fn run_with_log(&self, spec: &LoadSpec) -> (ServeReport, Vec<ServedRequest>) {
+        let mut deployment = self.deploy(spec.mode);
+        let out = deployment.probe_with_log(spec, self.seed);
+        deployment.shutdown();
+        out
+    }
+}
+
+/// A deployed, **reusable** Coordinator/Worker stack for one solution set.
+///
+/// Construction ([`RuntimeHarness::deploy`]) spawns the runtime's worker
+/// threads once; [`WarmDeployment::probe`] then replays any number of loads
+/// — different α multipliers, different arrival patterns — against the warm
+/// stack. Between probes the coordinator is [`Coordinator::reset`] (drain
+/// in-flight work, clear logs and sequence counters) and the engine's noise
+/// stream re-seeded, so a reused probe produces a [`ServeReport`] and
+/// served log **bit-identical** to the same probe on a fresh deployment
+/// (tested under the virtual clock). This is what lets the saturation
+/// search pay one deployment per solution set instead of one per α-probe.
+pub struct WarmDeployment {
+    coordinator: Coordinator,
+    groups: Vec<Vec<usize>>,
+    perf: Arc<PerfModel>,
+    time_scale: f64,
+}
+
+impl WarmDeployment {
+    /// Read access to the live coordinator (inspection, tests).
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coordinator
+    }
+
+    /// Reset the warm stack, re-seed engine noise to `seed`, and push one
+    /// load through it. Equivalent to [`RuntimeHarness::run`] with that
+    /// seed on a freshly deployed stack, minus the deploy.
+    pub fn probe(&mut self, spec: &LoadSpec, seed: u64) -> ServeReport {
+        self.coordinator.reset();
+        self.coordinator.engine().reseed(seed);
+        let mut report = run_load(&mut self.coordinator, &self.groups, spec, self.time_scale);
+        report.rho = Some(offered_utilization(
+            self.coordinator.solutions(),
+            &self.groups,
+            &spec.mean_rates(),
+            &self.perf,
+        ));
+        report
+    }
+
+    /// [`WarmDeployment::probe`], also returning the raw [`ServedRequest`]
+    /// log of this probe (the reset guarantees the coordinator log contains
+    /// exactly this load).
+    pub fn probe_with_log(
+        &mut self,
+        spec: &LoadSpec,
+        seed: u64,
+    ) -> (ServeReport, Vec<ServedRequest>) {
+        let report = self.probe(spec, seed);
+        let log = self.coordinator.served().to_vec();
         (report, log)
+    }
+
+    /// Shut the workers down and join their threads.
+    pub fn shutdown(self) {
+        self.coordinator.shutdown();
     }
 }
 
 // ---------------------------------------------------------------------------
 // Saturation driver
 
+/// How the saturation driver admits probe arrivals.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Admission {
+    /// Queue every arrival — the paper's implicit protocol, and the
+    /// default: past saturation the backlog grows and the score collapses.
+    Queue,
+    /// Admission control: drop arrivals beyond a per-solution-set
+    /// [`little_inflight_cap`] of `slack ×` the Little's-law expected
+    /// in-flight population. Bounds probe backlog without hand-picking a
+    /// constant per scenario.
+    LittleCap {
+        /// Headroom multiplier over the Little's-law estimate
+        /// ([`Admission::DEFAULT_SLACK`] unless tuned).
+        slack: f64,
+    },
+}
+
+impl Admission {
+    /// Default headroom multiplier for [`Admission::LittleCap`]: 3× the
+    /// stationary estimate tolerates transient bursts at feasible load.
+    pub const DEFAULT_SLACK: f64 = 3.0;
+
+    /// [`Admission::LittleCap`] at the default slack.
+    pub fn little() -> Admission {
+        Admission::LittleCap { slack: Admission::DEFAULT_SLACK }
+    }
+}
+
 /// Knobs of the runtime saturation search.
 #[derive(Debug, Clone)]
 pub struct SaturationOptions {
     /// Requests per group per probe.
     pub requests: usize,
+    /// Lower edge of the bisection bracket. The driver may *raise* it to
+    /// the ρ = 1 point ([`rho_bracket_floor`]) — everything below is
+    /// certified infeasible, so passing probes are never spent there.
     pub alpha_min: f64,
+    /// Upper edge of the bisection bracket; failing here means the
+    /// solutions cannot saturate at any probed load.
     pub alpha_max: f64,
+    /// Bisection convergence width on α.
     pub tolerance: f64,
     /// Score treated as "meets the SLO" (XRBench rounds at two decimals).
     pub threshold: f64,
+    /// Base seed of the deterministic per-probe noise schedule
+    /// ([`probe_seed`]).
     pub seed: u64,
     /// Execution noise on (the paper measures on the fluctuating device).
     pub noisy: bool,
+    /// Runtime ablation switches applied to every probe deployment.
     pub options: RuntimeOptions,
+    /// Probe admission policy ([`Admission::Queue`] by default — the
+    /// paper's protocol).
+    pub admission: Admission,
 }
 
 impl Default for SaturationOptions {
@@ -688,6 +944,7 @@ impl Default for SaturationOptions {
             seed: 23,
             noisy: true,
             options: RuntimeOptions::default(),
+            admission: Admission::Queue,
         }
     }
 }
@@ -695,32 +952,43 @@ impl Default for SaturationOptions {
 /// One probe of the saturation search, streamed to the observer.
 #[derive(Debug, Clone)]
 pub struct ProbeProgress {
+    /// Period multiplier probed.
     pub alpha: f64,
     /// Median runtime-measured score across the solution sets at `alpha`.
     pub score: f64,
     /// Probes evaluated so far (including this one).
     pub probes: usize,
-    /// Solution sets of this probe whose deploy was skipped by the
+    /// Solution sets of this probe whose runtime run was skipped by the
     /// utilization certificate (ρ > 1 on some processor ⇒ score 0 without
     /// touching the runtime).
     pub certified_infeasible: usize,
+    /// Runtime deployments performed so far across the whole search. The
+    /// probe-reuse contract: at most one per solution set, however many
+    /// α-probes the bisection takes.
+    pub deploys: usize,
 }
 
 /// Runtime-measured saturation multiplier α* of a set of candidate
 /// solutions on a scenario: the smallest α whose **median runtime score**
 /// (over the solution sets, the paper's multi-solution rule) clears the
-/// threshold. Every probe deploys a fresh virtual-clock runtime and pushes
-/// periodic open-loop load at Φ(α) through the real Coordinator. Returns
-/// `None` when even `alpha_max` fails.
+/// threshold. The driver deploys **one persistent virtual-clock runtime
+/// per solution set** ([`WarmDeployment`], asserted in tests) and replays
+/// every α-probe against that warm stack, pushing periodic open-loop load
+/// at Φ(α) through the real Coordinator. Returns `None` when even
+/// `alpha_max` fails.
 ///
 /// Probes whose offered utilization exceeds 1 on any processor are
-/// **certified infeasible** without a deploy ([`offered_utilization`]):
-/// sustained ρ > 1 load is unservable regardless of what a short finite
-/// probe run happens to score, so the certificate both skips pointless
-/// runtime stacks *and* makes α* robust to short-run measurement artifacts
-/// (a 12-request probe at ρ ≈ 1.02 can fluke past the threshold that a
-/// longer run would fail). Consequence: α* can come out slightly larger —
-/// never smaller — than the pre-certificate, purely-measured search.
+/// **certified infeasible** without touching the runtime
+/// ([`offered_utilization`]): sustained ρ > 1 load is unservable
+/// regardless of what a short finite probe run happens to score, so the
+/// certificate both skips pointless runtime work *and* makes α* robust to
+/// short-run measurement artifacts (a 12-request probe at ρ ≈ 1.02 can
+/// fluke past the threshold that a longer run would fail). The same
+/// certificate **seeds the bisection bracket**: `alpha_min` is raised to
+/// the ρ = 1 point ([`rho_bracket_floor`]), below which the median score
+/// is certified zero — passing probes are never spent on a certainly-
+/// failing region. Consequence of both: α* can come out slightly larger —
+/// never smaller — than a purely-measured search.
 pub fn saturation_via_runtime(
     solution_sets: &[Vec<NetworkSolution>],
     scenario: &Scenario,
@@ -746,63 +1014,104 @@ pub fn saturation_via_runtime_observed(
         return None;
     }
     let groups: Vec<Vec<usize>> = scenario.groups.iter().map(|g| g.members.clone()).collect();
+    // ρ-seeded bracket: below this point the certificate alone forces the
+    // median score to zero, so the bisection never probes there.
+    let alpha_min = opts
+        .alpha_min
+        .max(rho_bracket_floor(solution_sets, scenario, perf))
+        .min(opts.alpha_max);
+    // One warm deployment per solution set, created lazily at the set's
+    // first non-certified probe and reused for every probe after it.
+    let mut deployments: Vec<Option<WarmDeployment>> =
+        solution_sets.iter().map(|_| None).collect();
     let mut probes = 0usize;
-    // Median runtime score at one multiplier; None = cancelled.
-    let mut score_at = |alpha: f64| -> Option<f64> {
-        let spec = LoadSpec::periodic(&scenario.periods(alpha, perf), opts.requests);
-        let rates = spec.mean_rates();
-        let mut skipped = 0usize;
-        let mut scores: Vec<f64> = Vec::with_capacity(solution_sets.len());
-        for (i, sols) in solution_sets.iter().enumerate() {
-            // Utilization certificate: ρ > 1 on any processor means the
-            // offered work exceeds capacity before any overhead — sustained
-            // load is unservable, so score 0 without deploying a ~6-thread
-            // runtime stack for a probe that cannot pass.
-            let rho = offered_utilization(sols, &groups, &rates, perf);
-            if rho.iter().any(|&r| r > 1.0) {
-                skipped += 1;
-                scores.push(0.0);
-                continue;
+    let mut deploys = 0usize;
+
+    let outcome = 'search: {
+        // Median runtime score at one multiplier; None = cancelled.
+        let mut score_at = |alpha: f64, deployments: &mut [Option<WarmDeployment>]| -> Option<f64> {
+            let spec = LoadSpec::periodic(&scenario.periods(alpha, perf), opts.requests);
+            let rates = spec.mean_rates();
+            let mut skipped = 0usize;
+            let mut scores: Vec<f64> = Vec::with_capacity(solution_sets.len());
+            for (i, sols) in solution_sets.iter().enumerate() {
+                // Utilization certificate: ρ > 1 on any processor means the
+                // offered work exceeds capacity before any overhead —
+                // sustained load is unservable, so score 0 without touching
+                // the runtime.
+                let rho = offered_utilization(sols, &groups, &rates, perf);
+                if rho.iter().any(|&r| r > 1.0) {
+                    skipped += 1;
+                    scores.push(0.0);
+                    continue;
+                }
+                if deployments[i].is_none() {
+                    deploys += 1;
+                    let mut harness = RuntimeHarness::for_solutions(
+                        sols.clone(),
+                        groups.clone(),
+                        perf.clone(),
+                        opts.seed,
+                    );
+                    harness.options = opts.options.clone();
+                    harness.noisy = opts.noisy;
+                    deployments[i] = Some(harness.deploy(ClockMode::Virtual));
+                }
+                let deployment = deployments[i].as_mut().expect("deployed above");
+                let spec_i = match opts.admission {
+                    Admission::Queue => spec.clone(),
+                    Admission::LittleCap { slack } => {
+                        spec.clone().with_policy(OverloadPolicy::DropAfter {
+                            max_inflight: little_inflight_cap(sols, &groups, &rates, perf, slack),
+                        })
+                    }
+                };
+                scores.push(deployment.probe(&spec_i, probe_seed(opts.seed, i, alpha)).score);
             }
-            let mut harness = RuntimeHarness::for_solutions(
-                sols.clone(),
-                groups.clone(),
-                perf.clone(),
-                probe_seed(opts.seed, i, alpha),
-            );
-            harness.options = opts.options.clone();
-            harness.noisy = opts.noisy;
-            scores.push(harness.run(&spec).score);
+            scores.sort_by(|a, b| a.partial_cmp(b).expect("finite scores"));
+            let median = scores[scores.len() / 2];
+            probes += 1;
+            let progress = ProbeProgress {
+                alpha,
+                score: median,
+                probes,
+                certified_infeasible: skipped,
+                deploys,
+            };
+            if on_probe(&progress).is_break() {
+                return None;
+            }
+            Some(median)
+        };
+
+        // Same grid + bisection as `metrics::saturation_multiplier`, but
+        // cancellable per probe and bracketed from the ρ-seeded floor.
+        match score_at(opts.alpha_max, &mut deployments) {
+            None => break 'search None,
+            Some(s) if s < opts.threshold => break 'search None,
+            Some(_) => {}
         }
-        scores.sort_by(|a, b| a.partial_cmp(b).expect("finite scores"));
-        let median = scores[scores.len() / 2];
-        probes += 1;
-        let progress =
-            ProbeProgress { alpha, score: median, probes, certified_infeasible: skipped };
-        if on_probe(&progress).is_break() {
-            return None;
+        match score_at(alpha_min, &mut deployments) {
+            None => break 'search None,
+            Some(s) if s >= opts.threshold => break 'search Some(alpha_min),
+            Some(_) => {}
         }
-        Some(median)
+        let (mut lo, mut hi) = (alpha_min, opts.alpha_max);
+        while hi - lo > opts.tolerance {
+            let mid = 0.5 * (lo + hi);
+            match score_at(mid, &mut deployments) {
+                None => break 'search None,
+                Some(s) if s >= opts.threshold => hi = mid,
+                Some(_) => lo = mid,
+            }
+        }
+        Some(hi)
     };
 
-    // Same grid + bisection as `metrics::saturation_multiplier`, but
-    // cancellable per probe.
-    if score_at(opts.alpha_max)? < opts.threshold {
-        return None;
+    for deployment in deployments.into_iter().flatten() {
+        deployment.shutdown();
     }
-    if score_at(opts.alpha_min)? >= opts.threshold {
-        return Some(opts.alpha_min);
-    }
-    let (mut lo, mut hi) = (opts.alpha_min, opts.alpha_max);
-    while hi - lo > opts.tolerance {
-        let mid = 0.5 * (lo + hi);
-        if score_at(mid)? >= opts.threshold {
-            hi = mid;
-        } else {
-            lo = mid;
-        }
-    }
-    Some(hi)
+    outcome
 }
 
 #[cfg(test)]
@@ -972,14 +1281,66 @@ mod tests {
         };
         let mut skips = 0usize;
         let mut probes = 0usize;
+        let mut deploys = usize::MAX;
         let out = saturation_via_runtime_observed(&sets, &scenario, &perf, &opts, &mut |p| {
             skips += p.certified_infeasible;
             probes = p.probes;
+            deploys = p.deploys;
             ControlFlow::Continue(())
         });
         assert!(out.is_none(), "overloaded scenario must not saturate");
         assert_eq!(probes, 1, "certificate still counts as one probe");
         assert_eq!(skips, 1, "the one probe must be certified infeasible");
+        assert_eq!(deploys, 0, "a fully certified probe must not deploy a runtime");
+    }
+
+    #[test]
+    fn little_cap_matches_hand_math() {
+        // One network whole on the NPU at period 2T: L = λ·W = T/(2T) = 0.5
+        // expected in-flight requests; slack 3 → ceil(1.5) = 2.
+        let scenario = Scenario::from_groups("little-test", &[vec![0]]);
+        let perf = Arc::new(PerfModel::paper_calibrated());
+        let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+        let sols = materialize_solutions(&scenario.networks, &genome, &perf);
+        let groups: Vec<Vec<usize>> =
+            scenario.groups.iter().map(|g| g.members.clone()).collect();
+        let t = perf.subgraph_time(
+            &sols[0].network,
+            &sols[0].partition.subgraphs[0].layers,
+            sols[0].configs[0],
+        );
+        let rates = LoadSpec::periodic(&[2.0 * t], 4).mean_rates();
+        assert_eq!(little_inflight_cap(&sols, &groups, &rates, &perf, 3.0), 2);
+        // The per-group floor: a vanishing load still admits one in-flight
+        // request per group.
+        let idle = LoadSpec::periodic(&[1e6 * t], 4).mean_rates();
+        assert_eq!(little_inflight_cap(&sols, &groups, &idle, &perf, 3.0), 1);
+    }
+
+    #[test]
+    fn rho_floor_is_median_certificate_boundary() {
+        // One set: the floor is (within the 1e-9 backoff) the set's maximum
+        // per-processor utilization at α = 1.
+        let scenario = Scenario::from_groups("floor-test", &[vec![0, 1]]);
+        let perf = Arc::new(PerfModel::paper_calibrated());
+        let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+        let sols = materialize_solutions(&scenario.networks, &genome, &perf);
+        let groups: Vec<Vec<usize>> =
+            scenario.groups.iter().map(|g| g.members.clone()).collect();
+        let rates: Vec<f64> =
+            scenario.periods(1.0, &perf).iter().map(|p| 1.0 / p).collect();
+        let expect = offered_utilization(&sols, &groups, &rates, &perf)
+            .iter()
+            .fold(0.0f64, |a, &b| a.max(b));
+        let sets = vec![sols];
+        let floor = rho_bracket_floor(&sets, &scenario, &perf);
+        assert!(floor > 0.0 && floor <= expect, "floor {floor} vs boundary {expect}");
+        assert!((floor - expect).abs() < 1e-6 * expect, "floor {floor} vs boundary {expect}");
+        // And the driver's result never lands below the floor.
+        let opts = SaturationOptions { requests: 8, tolerance: 0.02, ..Default::default() };
+        let alpha = saturation_via_runtime(&sets, &scenario, &perf, &opts)
+            .expect("light scenario saturates");
+        assert!(alpha >= floor, "alpha* {alpha} below the certified floor {floor}");
     }
 
     #[test]

@@ -1,17 +1,60 @@
 //! Integration tests of the arrival-driven serving runtime: virtual-clock
 //! determinism, priority-ordered dispatch under contention, deadline
-//! accounting above saturation, overload policies, and the
-//! `Deployment::serve_load` api surface.
+//! accounting above saturation, overload policies, persistent-deployment
+//! reuse (warm probes bit-identical to fresh deploys; one deployment per
+//! solution set in the saturation search; the ρ-seeded bisection bracket),
+//! and the `Deployment::serve_load` api surface.
 
+use std::ops::ControlFlow;
 use std::sync::Arc;
 
 use puzzle::analyzer::GaConfig;
 use puzzle::api::{LoadSpec, OverloadPolicy, RuntimeOptions, ScenarioSpec, SessionBuilder};
+use puzzle::coordinator::ServedRequest;
 use puzzle::ga::Genome;
 use puzzle::perf::PerfModel;
 use puzzle::scenario::Scenario;
-use puzzle::serve::{materialize_solutions, RuntimeHarness};
+use puzzle::serve::{
+    self, materialize_solutions, offered_utilization, rho_bracket_floor, ClockMode,
+    RuntimeHarness, SaturationOptions, ServeReport,
+};
 use puzzle::Processor;
+
+/// Bitwise equality of two served logs (every field, every f64 bit).
+fn assert_logs_identical(a: &[ServedRequest], b: &[ServedRequest]) {
+    assert_eq!(a.len(), b.len(), "log lengths differ");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!((x.group, x.request), (y.group, y.request));
+        assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+        assert_eq!(x.completion.to_bits(), y.completion.to_bits());
+        assert_eq!(x.makespan.to_bits(), y.makespan.to_bits());
+        assert_eq!(x.deadline.map(f64::to_bits), y.deadline.map(f64::to_bits));
+        assert_eq!(x.violated, y.violated);
+    }
+}
+
+/// Bitwise equality of the deterministic report fields (wall_seconds is
+/// real time and legitimately differs between runs).
+fn assert_reports_identical(a: &ServeReport, b: &ServeReport) {
+    assert_eq!(a.submitted, b.submitted);
+    assert_eq!(a.served, b.served);
+    assert_eq!(a.dropped, b.dropped);
+    assert_eq!(a.unfinished, b.unfinished);
+    assert_eq!(a.violations, b.violations);
+    assert_eq!(a.score.to_bits(), b.score.to_bits());
+    assert_eq!(a.attainment.to_bits(), b.attainment.to_bits());
+    assert_eq!(a.group_makespans.len(), b.group_makespans.len());
+    for (ga, gb) in a.group_makespans.iter().zip(&b.group_makespans) {
+        assert_eq!(ga.len(), gb.len());
+        for (ma, mb) in ga.iter().zip(gb) {
+            assert_eq!(ma.to_bits(), mb.to_bits());
+        }
+    }
+    let (ra, rb) = (a.rho.expect("harness logs rho"), b.rho.expect("harness logs rho"));
+    for (x, y) in ra.iter().zip(&rb) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
 
 fn harness_for(scenario: &Scenario, genome: &Genome, seed: u64) -> RuntimeHarness {
     let perf = Arc::new(PerfModel::paper_calibrated());
@@ -183,6 +226,180 @@ fn deployment_serve_load_end_to_end() {
     assert_eq!(report.served, 12);
     assert!(report.score > 0.5, "relaxed load should score well: {report:?}");
     assert!(report.group_makespans[0].iter().all(|&m| m > 0.0));
+}
+
+#[test]
+fn warm_probes_bit_identical_to_fresh_deploys() {
+    // The tentpole contract: a reused deployment, reset + re-seeded between
+    // loads, replays every probe bit-identically to a fresh
+    // Coordinator/Worker stack — across different α loads AND different
+    // arrival patterns, including a replay after intervening traffic.
+    let scenario = Scenario::from_groups("warm", &[vec![0, 1]]);
+    let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+    let harness = harness_for(&scenario, &genome, 11);
+    let perf = PerfModel::paper_calibrated();
+    let periodic = LoadSpec::for_scenario(&scenario, &perf, 1.0, 12);
+    let poisson = LoadSpec::poisson(&scenario.periods(1.0, &perf), 12, 5);
+
+    let mut warm = harness.deploy(ClockMode::Virtual);
+    let (wr_periodic, wl_periodic) = warm.probe_with_log(&periodic, 41);
+    let (wr_poisson, wl_poisson) = warm.probe_with_log(&poisson, 43);
+    let (wr_again, wl_again) = warm.probe_with_log(&periodic, 41);
+    warm.shutdown();
+
+    let fresh = |seed: u64, spec: &LoadSpec| {
+        let mut h = harness.clone();
+        h.seed = seed;
+        h.run_with_log(spec)
+    };
+    let (fr_periodic, fl_periodic) = fresh(41, &periodic);
+    let (fr_poisson, fl_poisson) = fresh(43, &poisson);
+
+    assert!(!wl_periodic.is_empty() && !wl_poisson.is_empty());
+    assert_logs_identical(&wl_periodic, &fl_periodic);
+    assert_reports_identical(&wr_periodic, &fr_periodic);
+    assert_logs_identical(&wl_poisson, &fl_poisson);
+    assert_reports_identical(&wr_poisson, &fr_poisson);
+    // Replaying after other traffic leaves no trace: bit-identical again.
+    assert_logs_identical(&wl_again, &wl_periodic);
+    assert_reports_identical(&wr_again, &wr_periodic);
+}
+
+#[test]
+fn deployment_reset_leaves_no_stale_state() {
+    // api surface: serve_load → reset → the warm runtime looks freshly
+    // deployed (no served/dropped/in-flight state, request ids restart).
+    let session = SessionBuilder::new(ScenarioSpec::single_group("api-reset", vec![0, 2]))
+        .config(GaConfig { population: 10, max_generations: 3, ..GaConfig::quick(7) })
+        .build()
+        .unwrap();
+    let analysis = session.run();
+    let mut deployment = analysis
+        .deploy_sim(analysis.best_index(), RuntimeOptions::default(), 0.0, true, 7)
+        .unwrap();
+    let overload = LoadSpec::for_scenario(analysis.scenario(), analysis.perf(), 0.05, 8)
+        .with_policy(OverloadPolicy::DropAfter { max_inflight: 2 });
+    let first = deployment.serve_load(&overload);
+    assert!(first.dropped > 0, "overload with a tight cap must drop");
+    assert!(!deployment.coordinator.served().is_empty());
+    assert!(!deployment.coordinator.dropped().is_empty());
+
+    deployment.reset_seeded(7);
+    assert!(deployment.coordinator.served().is_empty(), "reset left served state");
+    assert!(deployment.coordinator.dropped().is_empty(), "reset left dropped state");
+    assert_eq!(deployment.coordinator.outstanding(), 0, "reset left in-flight state");
+
+    // The replayed load is bit-identical to the first (same engine seed,
+    // same request sequencing from 0).
+    let second = deployment.serve_load(&overload);
+    let min_id = deployment.coordinator.served().iter().map(|s| s.request).min();
+    assert_eq!(min_id, Some(0), "request sequencing did not restart at 0");
+    deployment.shutdown();
+    assert_eq!(first.served, second.served);
+    assert_eq!(first.dropped, second.dropped);
+    assert_eq!(first.score.to_bits(), second.score.to_bits());
+}
+
+#[test]
+fn saturation_deploys_exactly_once_per_solution_set() {
+    // The acceptance bar: however many α-probes the bisection takes, the
+    // driver spawns one runtime per solution set and reuses it.
+    let scenario = Scenario::from_groups("one-deploy", &[vec![0, 1]]);
+    let perf = Arc::new(PerfModel::paper_calibrated());
+    // Two distinct solution sets, both NPU-mapped (so neither can be
+    // certificate-skipped at alpha_max and both must deploy), differing in
+    // dispatch priority.
+    let genome_a = Genome::all_on(&scenario.networks, Processor::Npu);
+    let mut genome_b = genome_a.clone();
+    genome_b.priority.reverse();
+    let sets = vec![
+        materialize_solutions(&scenario.networks, &genome_a, &perf),
+        materialize_solutions(&scenario.networks, &genome_b, &perf),
+    ];
+    let opts = SaturationOptions { requests: 8, tolerance: 0.05, ..Default::default() };
+    let mut probes = 0usize;
+    let mut deploys = 0usize;
+    let _ = serve::saturation_via_runtime_observed(&sets, &scenario, &perf, &opts, &mut |p| {
+        probes = p.probes;
+        deploys = p.deploys;
+        assert!(p.deploys <= sets.len(), "more deployments than solution sets");
+        ControlFlow::Continue(())
+    });
+    assert!(probes >= 3, "bisection should take several probes, took {probes}");
+    assert_eq!(
+        deploys,
+        sets.len(),
+        "expected exactly one deployment per solution set over {probes} probes"
+    );
+}
+
+#[test]
+fn rho_seeded_bracket_never_skips_a_feasible_alpha() {
+    // Property-style over random solution sets (hence random per-processor
+    // rates): every α strictly below `rho_bracket_floor` is certified
+    // infeasible for strictly more than half the sets — exactly the
+    // driver's certificate on the driver's own ρ computation — so the
+    // median score there is 0 and no feasible α is ever excluded from the
+    // bisection bracket.
+    let scenario = Scenario::from_groups("rho-prop", &[vec![0, 1]]);
+    let perf = Arc::new(PerfModel::paper_calibrated());
+    let groups: Vec<Vec<usize>> = scenario.groups.iter().map(|g| g.members.clone()).collect();
+    puzzle::util::prop::check("rho-seeded bracket", 12, |rng| {
+        let n_sets = rng.gen_range(1, 4);
+        let sets: Vec<_> = (0..n_sets)
+            .map(|_| {
+                let genome = Genome::random(&scenario.networks, 0.3, rng);
+                materialize_solutions(&scenario.networks, &genome, &perf)
+            })
+            .collect();
+        let floor = rho_bracket_floor(&sets, &scenario, &perf);
+        puzzle::prop_assert!(floor > 0.0, "floor must be positive, got {floor}");
+        for _ in 0..8 {
+            let alpha = floor * rng.gen_f64().max(1e-3) * 0.999;
+            let spec = LoadSpec::periodic(&scenario.periods(alpha, &perf), 4);
+            let rates = spec.mean_rates();
+            let certified = sets
+                .iter()
+                .filter(|sols| {
+                    offered_utilization(sols, &groups, &rates, &perf).iter().any(|&r| r > 1.0)
+                })
+                .count();
+            puzzle::prop_assert!(
+                certified > sets.len() / 2,
+                "alpha {alpha} below floor {floor} but only {certified}/{} sets certified",
+                sets.len()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn little_cap_admission_is_invisible_at_feasible_load() {
+    // At comfortably feasible load the Little's-law cap never engages: the
+    // capped run is bit-identical to unbounded queueing. (Under certified
+    // overload the saturation driver skips the probe before admission
+    // control could matter — that pairing is the design.)
+    let scenario = Scenario::from_groups("little-feasible", &[vec![0, 1]]);
+    let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+    let mut harness = harness_for(&scenario, &genome, 19);
+    harness.noisy = false;
+    let perf = PerfModel::paper_calibrated();
+    let spec = LoadSpec::for_scenario(&scenario, &perf, 2.0, 12);
+    let cap = serve::little_inflight_cap(
+        &harness.solutions,
+        &harness.groups,
+        &spec.mean_rates(),
+        &perf,
+        3.0,
+    );
+    assert!(cap >= 1);
+    let (queue_report, queue_log) = harness.run_with_log(&spec);
+    let capped_spec = spec.with_policy(OverloadPolicy::DropAfter { max_inflight: cap });
+    let (cap_report, cap_log) = harness.run_with_log(&capped_spec);
+    assert_eq!(cap_report.dropped, 0, "cap {cap} engaged at feasible load");
+    assert_logs_identical(&queue_log, &cap_log);
+    assert_eq!(queue_report.score.to_bits(), cap_report.score.to_bits());
 }
 
 #[test]
