@@ -21,7 +21,7 @@ use puzzle::mem::TensorPool;
 use puzzle::perf::PerfModel;
 use puzzle::profiler::Profiler;
 use puzzle::scenario::Scenario;
-use puzzle::serve::{probe_seed, ClockMode, LoadSpec, RuntimeHarness};
+use puzzle::serve::{probe_seed, ClockMode, FaultPlan, LoadSpec, RuntimeHarness};
 use puzzle::sim::{compile_plans, simulate, ExecutionPlan, GroupSpec, SimOptions, SimWorkspace};
 use puzzle::util::bench::{bench, black_box, write_json, BenchStats};
 use puzzle::util::rng::Rng;
@@ -292,6 +292,24 @@ fn main() {
     all.push(bench("serve/loadtest_wall_clock", 3.0, 5, || {
         black_box(lt_wall.run(&wall_spec).served);
     }));
+
+    // Zero-overhead contract of the fault-injection layer: the same warm
+    // virtual-clock probe through the plain engine vs an empty-plan
+    // FaultyEngine with the watchdog/recovery machinery armed. Probes are
+    // bit-identical (tested in serve_runtime); bench_guard asserts
+    // chaos-off <= plain × 1.05 as a same-run invariant — an empty plan
+    // must cost one branch per task, not a measurable slowdown.
+    let mut lt_plain_dep = lt_virtual.deploy(ClockMode::Virtual);
+    all.push(bench("serve/loadtest_plain", 3.0, 20, || {
+        black_box(lt_plain_dep.probe(&virtual_spec, 7).served);
+    }));
+    lt_plain_dep.shutdown();
+    let lt_chaos_off = lt_virtual.clone().with_fault_plan(FaultPlan::default());
+    let mut lt_chaos_dep = lt_chaos_off.deploy(ClockMode::Virtual);
+    all.push(bench("serve/loadtest_chaos_off", 3.0, 20, || {
+        black_box(lt_chaos_dep.probe(&virtual_spec, 7).served);
+    }));
+    lt_chaos_dep.shutdown();
 
     // Saturation-probe deployment reuse: the same four α-probes, paying a
     // fresh Coordinator/Worker stack (~6 threads) per probe vs one warm

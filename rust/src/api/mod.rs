@@ -60,9 +60,10 @@ use crate::sim::compile_plans;
 use crate::util::error::Result;
 
 pub use crate::analyzer::{GaConfig, Solution};
-pub use crate::coordinator::{OverloadPolicy, RuntimeOptions};
+pub use crate::coordinator::{OverloadPolicy, RecoveryOptions, RuntimeOptions};
 pub use crate::serve::{
-    Admission, ArrivalProcess, ClockMode, GroupLoad, LoadSpec, SaturationOptions, ServeReport,
+    Admission, ArrivalProcess, ClockMode, FaultEvent, FaultPlan, GroupLoad, LoadSpec,
+    SaturationOptions, ServeReport,
 };
 
 /// Wall-seconds per simulated second used by [`Analysis::deploy`]'s default
@@ -602,6 +603,35 @@ impl Analysis {
         let engine: Arc<dyn Engine> =
             Arc::new(SimEngine::new(self.perf.clone(), time_scale, noisy, seed));
         self.deploy_with_engine(solution_idx, options, engine, time_scale)
+    }
+
+    /// Deploy under **chaos testing**: the simulated engine is wrapped in a
+    /// [`crate::serve::FaultyEngine`] pricing `plan`'s slowdowns and stalls
+    /// into task durations (and injecting transient failures), and the
+    /// Coordinator's watchdog/retry/remap recovery is enabled with default
+    /// [`RecoveryOptions`]. Same `seed` + same `plan` ⇒ bit-identical
+    /// virtual-clock replay, including retries and remaps.
+    pub fn deploy_chaos(
+        &self,
+        solution_idx: usize,
+        options: RuntimeOptions,
+        time_scale: f64,
+        noisy: bool,
+        seed: u64,
+        plan: FaultPlan,
+    ) -> Result<Deployment> {
+        let engine: Arc<dyn Engine> = Arc::new(crate::serve::FaultyEngine::new(
+            self.perf.clone(),
+            time_scale,
+            noisy,
+            seed,
+            plan,
+        ));
+        let mut deployment = self.deploy_with_engine(solution_idx, options, engine, time_scale)?;
+        deployment
+            .coordinator
+            .enable_recovery(self.perf.clone(), RecoveryOptions::default());
+        Ok(deployment)
     }
 
     /// Deploy onto a caller-provided engine (e.g. the PJRT engine executing

@@ -87,7 +87,7 @@ fn main() {
     }
 
     // Layer 2: same-run invariants (machine-independent).
-    let invariants: [(&str, &str, f64); 9] = [
+    let invariants: [(&str, &str, f64); 10] = [
         // Parallel must not lose to serial by more than scheduling jitter
         // (on a single-core runner both take the same path).
         ("analyzer/parallel_generation", "analyzer/serial_generation", 1.10),
@@ -110,6 +110,10 @@ fn main() {
         // The virtual-clock load test replays the same schedule the wall
         // driver sleeps through: it must never be slower.
         ("serve/loadtest_virtual_clock", "serve/loadtest_wall_clock", 1.00),
+        // An empty FaultPlan (FaultyEngine wrapper + armed recovery) is one
+        // branch per task: the chaos-off probe must track the plain probe
+        // to within jitter — the fault layer's zero-overhead contract.
+        ("serve/loadtest_chaos_off", "serve/loadtest_plain", 1.05),
         // Reusing one warm deployment across saturation probes saves the
         // per-probe Coordinator/Worker spawn: it must never lose to fresh
         // deploys running the identical probe sequence.

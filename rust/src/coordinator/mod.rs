@@ -43,9 +43,10 @@ use crate::comm::CommModel;
 use crate::engine::Engine;
 use crate::graph::{Network, Partition, Subgraph, SubgraphId};
 use crate::mem::{SharedArena, TensorPool};
+use crate::perf::PerfModel;
 use crate::serve::{Arrival, Clock, VirtualClock, WallClock};
 use crate::worker::Worker;
-use crate::{DataType, ExecConfig};
+use crate::{DataType, ExecConfig, Processor};
 
 /// A registered solution for one network: its partition and per-subgraph
 /// exec configs (from the Static Analyzer).
@@ -87,6 +88,63 @@ pub enum OverloadPolicy {
     DropAfter { max_inflight: usize },
 }
 
+/// Tunables of the self-healing machinery
+/// ([`Coordinator::enable_recovery`]). A failed task attempt is retried
+/// with exponential backoff up to `max_retries` times; exhausting the
+/// budget remaps the subgraph onto the next-best processor (fresh budget);
+/// a failure *after* a remap sheds the whole group request. The watchdog
+/// aborts any task running longer than `watchdog_factor ×` its profiled
+/// duration — the factor must clear the noise model's worst case (CPU
+/// spikes top out at 2.5×) so healthy tasks never trip it.
+#[derive(Debug, Clone)]
+pub struct RecoveryOptions {
+    /// Failed attempts tolerated per (task, processor) before remapping.
+    pub max_retries: u32,
+    /// First backoff = `backoff_factor ×` the task's profiled duration;
+    /// doubles per subsequent attempt.
+    pub backoff_factor: f64,
+    /// Watchdog deadline as a multiple of the profiled duration.
+    pub watchdog_factor: f64,
+}
+
+impl Default for RecoveryOptions {
+    fn default() -> Self {
+        RecoveryOptions { max_retries: 2, backoff_factor: 0.5, watchdog_factor: 4.0 }
+    }
+}
+
+/// Per-group-request fault accounting, folded into [`ServedRequest`] when
+/// the request completes.
+#[derive(Debug, Clone, Copy, Default)]
+struct RequestFaults {
+    retries: u32,
+    remaps: u32,
+    degraded: f64,
+}
+
+/// Self-healing state (present only when recovery is enabled; `None` keeps
+/// the dispatch path bit-identical to the recovery-less runtime).
+struct Recovery {
+    perf: Arc<PerfModel>,
+    opts: RecoveryOptions,
+    /// Profiled nominal duration per `[net_idx][subgraph]` under the
+    /// solution-assigned config — the watchdog/backoff baseline.
+    profiled: Vec<Vec<f64>>,
+    /// Failed attempts per (group, seq, net_idx, subgraph).
+    attempts: HashMap<(usize, u64, usize, usize), u32>,
+    /// Remap overrides per (group, seq, net_idx, subgraph).
+    remapped: HashMap<(usize, u64, usize, usize), ExecConfig>,
+    /// Accumulated fault record per (group, seq).
+    request_faults: HashMap<(usize, u64), RequestFaults>,
+}
+
+/// What a retry/remap/shed decision resolved to (borrow-scoped helper).
+enum FaultAction {
+    Retry { backoff: f64 },
+    Remap,
+    Shed,
+}
+
 /// Per-request live state.
 struct LiveRequest {
     /// Remaining dependency count per subgraph.
@@ -125,14 +183,32 @@ pub struct ServedRequest {
     pub deadline: Option<f64>,
     /// `makespan > deadline` (always false for deadline-less requests).
     pub violated: bool,
+    /// Failed attempts re-tried in place (recovery enabled; else 0).
+    pub retries: u32,
+    /// Subgraph tasks remapped to another processor (recovery enabled).
+    pub remaps: u32,
+    /// Processor-seconds lost to failed attempts and retry backoff.
+    pub degraded: f64,
 }
 
-/// Record of a group request rejected by [`OverloadPolicy::DropAfter`].
+/// Why a group request was dropped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DropReason {
+    /// Rejected at admission by [`OverloadPolicy::DropAfter`].
+    Overload,
+    /// Shed by recovery: a subgraph task kept failing after retry and
+    /// remap, so the whole request was abandoned.
+    FaultShed,
+}
+
+/// Record of a group request rejected at admission
+/// ([`OverloadPolicy::DropAfter`]) or shed by recovery.
 #[derive(Debug, Clone)]
 pub struct DroppedRequest {
     pub group: usize,
     pub request: u64,
     pub arrival: f64,
+    pub reason: DropReason,
 }
 
 /// A schedulable subgraph waiting for its processor's worker. Max-heap
@@ -242,6 +318,9 @@ pub struct Coordinator {
     served: Vec<ServedRequest>,
     dropped: Vec<DroppedRequest>,
     next_request: u64,
+    /// Watchdog/retry/remap state; `None` (the default) keeps the dispatch
+    /// and completion paths bit-identical to the recovery-less runtime.
+    recovery: Option<Recovery>,
 }
 
 impl Coordinator {
@@ -290,7 +369,38 @@ impl Coordinator {
             served: Vec::new(),
             dropped: Vec::new(),
             next_request: 0,
+            recovery: None,
         }
+    }
+
+    /// Turn on the self-healing machinery: per-task watchdog deadlines,
+    /// bounded retry with exponential backoff on task failure, and
+    /// remap-on-persistent-fault onto the next-best processor (chosen via
+    /// `perf`'s per-(subgraph, processor) best-config memo). Profiled
+    /// durations are snapshotted per registered subgraph now, so the
+    /// completion path never re-profiles. Without this call the runtime
+    /// treats task errors exactly as before (logged into the completion,
+    /// otherwise ignored).
+    pub fn enable_recovery(&mut self, perf: Arc<PerfModel>, opts: RecoveryOptions) {
+        let profiled = self
+            .solutions
+            .iter()
+            .map(|sol| {
+                sol.partition
+                    .subgraphs
+                    .iter()
+                    .map(|sg| perf.subgraph_time(&sol.network, &sg.layers, sol.configs[sg.id.0]))
+                    .collect()
+            })
+            .collect();
+        self.recovery = Some(Recovery {
+            perf,
+            opts,
+            profiled,
+            attempts: HashMap::new(),
+            remapped: HashMap::new(),
+            request_faults: HashMap::new(),
+        });
     }
 
     /// Replace the runtime clock (timestamps of subsequent admissions and
@@ -342,7 +452,12 @@ impl Coordinator {
         self.next_request += 1;
         if let OverloadPolicy::DropAfter { max_inflight } = self.policy {
             if self.group_progress.len() >= max_inflight {
-                self.dropped.push(DroppedRequest { group, request: seq, arrival });
+                self.dropped.push(DroppedRequest {
+                    group,
+                    request: seq,
+                    arrival,
+                    reason: DropReason::Overload,
+                });
                 return None;
             }
         }
@@ -379,20 +494,52 @@ impl Coordinator {
         Some(seq)
     }
 
+    /// The exec config this task actually runs under: the solution's
+    /// assignment, unless recovery has remapped it. The remap lookup is
+    /// double-gated (recovery enabled *and* at least one remap recorded) so
+    /// the nominal path costs one branch and never hashes.
+    fn effective_config(
+        &self,
+        group: usize,
+        seq: u64,
+        net_idx: usize,
+        sg: SubgraphId,
+    ) -> ExecConfig {
+        if let Some(rec) = &self.recovery {
+            if !rec.remapped.is_empty() {
+                if let Some(cfg) = rec.remapped.get(&(group, seq, net_idx, sg.0)) {
+                    return *cfg;
+                }
+            }
+        }
+        self.solutions[net_idx].configs[sg.0]
+    }
+
     /// Put a schedulable subgraph into its processor's ready queue.
     fn enqueue_ready(&mut self, group: usize, seq: u64, net_idx: usize, sg: SubgraphId) {
-        let sol = &self.solutions[net_idx];
-        let p = sol.configs[sg.0].processor.index();
+        let p = self.effective_config(group, seq, net_idx, sg).processor.index();
         let order = self.ready_order;
         self.ready_order += 1;
         self.ready[p].push(ReadyTask {
-            precedence: sol.priority,
+            precedence: self.solutions[net_idx].priority,
             order,
             group,
             seq,
             net_idx,
             sg,
         });
+    }
+
+    /// Pop the next dispatchable task for processor `p`, skipping tasks
+    /// whose request was shed by recovery after they were enqueued. Without
+    /// recovery this is a plain pop.
+    fn pop_ready(&mut self, p: usize) -> Option<ReadyTask> {
+        loop {
+            let t = self.ready[p].pop()?;
+            if self.recovery.is_none() || self.live.contains_key(&(t.group, t.seq, t.net_idx)) {
+                return Some(t);
+            }
+        }
     }
 
     /// Dispatch ready subgraphs to idle workers, highest priority first
@@ -405,7 +552,7 @@ impl Coordinator {
             if self.busy[p] {
                 continue;
             }
-            if let Some(t) = self.ready[p].pop() {
+            if let Some(t) = self.pop_ready(p) {
                 let sol = self.solutions[t.net_idx].clone();
                 self.dispatch(&sol, t.group, t.seq, t.net_idx, t.sg);
                 self.busy[p] = true;
@@ -417,7 +564,7 @@ impl Coordinator {
 
     fn dispatch(&self, sol: &NetworkSolution, group: usize, seq: u64, net_idx: usize, sg: SubgraphId) {
         let subgraph = Arc::new(sol.subgraph(sg).clone());
-        let config = sol.configs[sg.0];
+        let config = self.effective_config(group, seq, net_idx, sg);
         // Gather input tensors in the engine's consumption order: for each
         // member layer (subgraph order), each predecessor outside the
         // subgraph contributes one external input; root layers with no
@@ -467,6 +614,7 @@ impl Coordinator {
             subgraph,
             config,
             inputs,
+            start: self.clock.now(),
         };
         self.workers[config.processor.index()].submit(task);
     }
@@ -554,6 +702,11 @@ impl Coordinator {
         self.served.clear();
         self.dropped.clear();
         self.next_request = 0;
+        if let Some(rec) = self.recovery.as_mut() {
+            rec.attempts.clear();
+            rec.remapped.clear();
+            rec.request_faults.clear();
+        }
         settled
     }
 
@@ -640,7 +793,7 @@ impl Coordinator {
                 if self.busy[p] {
                     continue;
                 }
-                if let Some(t) = self.ready[p].pop() {
+                if let Some(t) = self.pop_ready(p) {
                     let sol = self.solutions[t.net_idx].clone();
                     self.dispatch(&sol, t.group, t.seq, t.net_idx, t.sg);
                     self.busy[p] = true;
@@ -648,7 +801,11 @@ impl Coordinator {
                         .completion_rx
                         .recv_timeout(std::time::Duration::from_secs(30))
                     {
-                        Ok(msg) => {
+                        Ok(mut msg) => {
+                            // Apply the watchdog *before* scheduling so an
+                            // aborted task's completion event lands at its
+                            // watchdog deadline, not the stalled finish.
+                            self.watchdog_abort(&mut msg);
                             let finish = now + msg.elapsed.max(0.0);
                             events.push(VEvent {
                                 time: finish,
@@ -736,22 +893,178 @@ impl Coordinator {
         total
     }
 
+    /// Profiled duration of one live task under its *effective* config —
+    /// the solution snapshot normally, recomputed when recovery remapped it.
+    /// Recovery must be enabled.
+    fn profiled_duration(&self, group: usize, seq: u64, net_idx: usize, sg: SubgraphId) -> f64 {
+        let rec = self.recovery.as_ref().expect("recovery enabled");
+        if !rec.remapped.is_empty() {
+            if let Some(cfg) = rec.remapped.get(&(group, seq, net_idx, sg.0)) {
+                let sol = &self.solutions[net_idx];
+                return rec.perf.subgraph_time(&sol.network, &sol.subgraph(sg).layers, *cfg);
+            }
+        }
+        rec.profiled[net_idx][sg.0]
+    }
+
+    /// Watchdog (recovery only): a completion whose duration exceeds
+    /// `watchdog_factor ×` the profiled duration is rewritten into a
+    /// failure that consumed exactly the watchdog deadline — as if the
+    /// coordinator had aborted the task at its deadline. Idempotent (a
+    /// message already marked failed is left alone), one branch when
+    /// recovery is off.
+    fn watchdog_abort(&self, msg: &mut CompletionMsg) {
+        let Some(rec) = &self.recovery else { return };
+        if msg.error.is_some() {
+            return;
+        }
+        let (group, seq, net_idx) = unpack_request(msg.request);
+        if !self.live.contains_key(&(group, seq, net_idx)) {
+            return; // request already gone; nothing to abort against
+        }
+        let deadline =
+            rec.opts.watchdog_factor * self.profiled_duration(group, seq, net_idx, msg.subgraph);
+        if msg.elapsed > deadline {
+            let ran = msg.elapsed;
+            msg.elapsed = deadline;
+            msg.outputs.clear();
+            msg.error = Some(format!(
+                "watchdog: ran {:.3} ms, deadline {:.3} ms",
+                ran * 1e3,
+                deadline * 1e3
+            ));
+        }
+    }
+
+    /// React to a failed task attempt (recovery only): retry with
+    /// exponential backoff while the budget lasts, then remap to the
+    /// next-best processor with a fresh budget, then shed the whole group
+    /// request. Returns the re-enqueued task (empty on shed). Under the
+    /// virtual clock the backoff delays the task's ready event; the wall
+    /// drivers re-enqueue immediately (their completions already arrive
+    /// late, so the backoff would double-count).
+    fn handle_failure(&mut self, msg: &CompletionMsg, now: f64) -> Vec<ReadySub> {
+        let (group, seq, net_idx) = unpack_request(msg.request);
+        let sg = msg.subgraph;
+        if !self.live.contains_key(&(group, seq, net_idx)) {
+            return Vec::new(); // already shed or completed
+        }
+        let profiled = self.profiled_duration(group, seq, net_idx, sg);
+        let key = (group, seq, net_idx, sg.0);
+        let action = {
+            let rec = self.recovery.as_mut().expect("recovery enabled");
+            let attempts = rec.attempts.entry(key).or_insert(0);
+            *attempts += 1;
+            let attempt = *attempts;
+            let faults = rec.request_faults.entry((group, seq)).or_default();
+            faults.degraded += msg.elapsed.max(0.0);
+            if attempt <= rec.opts.max_retries {
+                let backoff =
+                    rec.opts.backoff_factor * profiled * (1u64 << (attempt - 1)) as f64;
+                faults.retries += 1;
+                faults.degraded += backoff;
+                FaultAction::Retry { backoff }
+            } else if !rec.remapped.contains_key(&key) {
+                FaultAction::Remap
+            } else {
+                FaultAction::Shed
+            }
+        };
+        match action {
+            FaultAction::Retry { backoff } => {
+                vec![ReadySub { group, seq, net_idx, sg, ready_at: now + backoff }]
+            }
+            FaultAction::Remap => {
+                // Next-best processor by the perf model's best-config memo,
+                // excluding the one that keeps failing.
+                let perf = self.recovery.as_ref().expect("recovery enabled").perf.clone();
+                let current = self.effective_config(group, seq, net_idx, sg).processor;
+                let sol = &self.solutions[net_idx];
+                let mut best_cfg = None;
+                let mut best_t = f64::INFINITY;
+                for p in Processor::ALL {
+                    if p == current {
+                        continue;
+                    }
+                    let (cfg, t) = perf.best_config_for(&sol.network, &sol.subgraph(sg).layers, p);
+                    if t < best_t {
+                        best_t = t;
+                        best_cfg = Some(cfg);
+                    }
+                }
+                let Some(cfg) = best_cfg else {
+                    // No alternative processor can run this subgraph.
+                    self.shed_request(group, seq);
+                    return Vec::new();
+                };
+                let rec = self.recovery.as_mut().expect("recovery enabled");
+                rec.remapped.insert(key, cfg);
+                rec.attempts.insert(key, 0);
+                rec.request_faults.entry((group, seq)).or_default().remaps += 1;
+                vec![ReadySub { group, seq, net_idx, sg, ready_at: now }]
+            }
+            FaultAction::Shed => {
+                self.shed_request(group, seq);
+                Vec::new()
+            }
+        }
+    }
+
+    /// Abandon a group request that recovery could not heal: drop all its
+    /// live state and record it as [`DropReason::FaultShed`]. Tasks of the
+    /// request already sitting in ready queues are skipped at pop time.
+    fn shed_request(&mut self, group: usize, seq: u64) {
+        let Some(progress) = self.group_progress.remove(&(group, seq)) else {
+            return;
+        };
+        self.live.retain(|k, _| !(k.0 == group && k.1 == seq));
+        self.tensors.retain(|k, _| !(k.0 == group && k.1 == seq));
+        self.dropped.push(DroppedRequest {
+            group,
+            request: seq,
+            arrival: progress.arrival,
+            reason: DropReason::FaultShed,
+        });
+        if let Some(rec) = self.recovery.as_mut() {
+            rec.request_faults.remove(&(group, seq));
+            if !rec.attempts.is_empty() {
+                rec.attempts.retain(|k, _| !(k.0 == group && k.1 == seq));
+            }
+            if !rec.remapped.is_empty() {
+                rec.remapped.retain(|k, _| !(k.0 == group && k.1 == seq));
+            }
+        }
+    }
+
     /// Process one completion at clock time `now` (Fig 9 steps ④–⑥): free
     /// the worker, publish boundary tensors, resolve dependents, and record
     /// the [`ServedRequest`] when the group's last network finishes. Returns
     /// the dependents that became schedulable (with their data-ready times
     /// when `comm` prices transfers — virtual mode).
+    ///
+    /// With recovery enabled, a failed completion (task error or watchdog
+    /// abort) is routed to [`Coordinator::handle_failure`] instead. Without
+    /// it, errors keep their historical treatment: the completion counts,
+    /// outputs are simply absent.
     fn handle_completion(
         &mut self,
-        msg: CompletionMsg,
+        mut msg: CompletionMsg,
         now: f64,
         comm: Option<&CommModel>,
     ) -> Vec<ReadySub> {
+        // Wall drivers reach here without the virtual pre-schedule hook, so
+        // apply the watchdog now (idempotent for the virtual path).
+        self.watchdog_abort(&mut msg);
         let (group, seq, net_idx) = unpack_request(msg.request);
         // The worker that ran this subgraph is idle again, whether or not
-        // the request is still live.
-        let proc = self.solutions[net_idx].configs[msg.subgraph.0].processor.index();
-        self.busy[proc] = false;
+        // the request is still live. Keyed on the *reporting* worker:
+        // recovery can run a subgraph away from its solution-assigned
+        // processor.
+        self.busy[msg.processor.index()] = false;
+
+        if self.recovery.is_some() && msg.error.is_some() {
+            return self.handle_failure(&msg, now);
+        }
 
         let mut newly_ready = Vec::new();
         let Some(live) = self.live.get_mut(&(group, seq, net_idx)) else {
@@ -839,6 +1152,22 @@ impl Coordinator {
                 let GroupProgress { arrival, deadline, .. } =
                     self.group_progress.remove(&(group, seq)).unwrap();
                 let makespan = (now - arrival).max(0.0);
+                // Fold in (and release) the request's fault accounting;
+                // (0, 0, 0.0) without recovery or without faults.
+                let (retries, remaps, degraded) = match self.recovery.as_mut() {
+                    Some(rec) => {
+                        let faults =
+                            rec.request_faults.remove(&(group, seq)).unwrap_or_default();
+                        if !rec.attempts.is_empty() {
+                            rec.attempts.retain(|k, _| !(k.0 == group && k.1 == seq));
+                        }
+                        if !rec.remapped.is_empty() {
+                            rec.remapped.retain(|k, _| !(k.0 == group && k.1 == seq));
+                        }
+                        (faults.retries, faults.remaps, faults.degraded)
+                    }
+                    None => (0, 0, 0.0),
+                };
                 self.served.push(ServedRequest {
                     group,
                     request: seq,
@@ -847,6 +1176,9 @@ impl Coordinator {
                     makespan,
                     deadline,
                     violated: deadline.is_some_and(|d| makespan > d),
+                    retries,
+                    remaps,
+                    degraded,
                 });
             }
         }

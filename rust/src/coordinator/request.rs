@@ -4,7 +4,7 @@
 use std::sync::Arc;
 
 use crate::graph::{Network, Subgraph, SubgraphId};
-use crate::{DataType, ExecConfig};
+use crate::{DataType, ExecConfig, Processor};
 
 /// Identifies one network's inference inside a group request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -46,6 +46,9 @@ pub struct TaskMsg {
     pub subgraph: Arc<Subgraph>,
     pub config: ExecConfig,
     pub inputs: Vec<TensorInput>,
+    /// Coordinator clock at dispatch, seconds. Fault-injecting engines key
+    /// their timelines on it; plain engines ignore it.
+    pub start: f64,
 }
 
 /// Worker → coordinator completion notification.
@@ -55,6 +58,10 @@ pub struct CompletionMsg {
     pub subgraph: SubgraphId,
     /// Engine-reported execution duration, seconds.
     pub elapsed: f64,
+    /// The worker (= processor) that executed the task. The coordinator
+    /// frees this processor's busy slot — load-bearing once recovery can
+    /// remap a task away from its solution-assigned processor.
+    pub processor: Processor,
     pub outputs: Vec<Vec<f32>>,
     pub error: Option<String>,
 }

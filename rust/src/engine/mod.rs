@@ -34,6 +34,10 @@ pub struct EngineTask<'a> {
     /// Flat f32 input tensors (one per network input feeding this subgraph;
     /// engines that only model time may ignore these).
     pub inputs: Vec<Vec<f32>>,
+    /// Dispatch timestamp, clock seconds (the coordinator's clock at the
+    /// moment the task was handed to the worker). Fault-injecting engines
+    /// key timeline events on this; time-only engines ignore it.
+    pub start: f64,
 }
 
 /// Result of one engine execution.
@@ -42,6 +46,12 @@ pub struct EngineOutput {
     pub tensors: Vec<Vec<f32>>,
     /// Wall-clock duration of the execution, seconds (unscaled).
     pub elapsed: f64,
+    /// `Some(reason)` when the execution *failed after consuming*
+    /// `elapsed` seconds (a recoverable fault — e.g. an injected transient
+    /// error), with `tensors` empty. `None` on success. Distinct from the
+    /// `Err` return, which signals an engine-level failure with no time
+    /// attributable to the task.
+    pub error: Option<String>,
 }
 
 /// The unified engine interface.
@@ -116,7 +126,7 @@ impl Engine for SimEngine {
                 std::hint::spin_loop();
             }
         }
-        Ok(EngineOutput { tensors: Vec::new(), elapsed: duration })
+        Ok(EngineOutput { tensors: Vec::new(), elapsed: duration, error: None })
     }
 
     fn name(&self) -> &str {
@@ -224,7 +234,7 @@ impl Engine for PjrtEngine {
             }
             produced.insert(l.0, tensor);
         }
-        Ok(EngineOutput { tensors: outputs, elapsed: t0.elapsed().as_secs_f64() })
+        Ok(EngineOutput { tensors: outputs, elapsed: t0.elapsed().as_secs_f64(), error: None })
     }
 
     fn name(&self) -> &str {
@@ -290,6 +300,7 @@ mod tests {
             subgraph: &part.subgraphs[0],
             config: npu_cfg(),
             inputs: vec![],
+            start: 0.0,
         };
         let out = engine.execute(&task).unwrap();
         let expected = pm.subgraph_time(&net, &part.subgraphs[0].layers, npu_cfg());
@@ -311,6 +322,7 @@ mod tests {
                         subgraph: &part.subgraphs[0],
                         config: ExecConfig::new(Processor::Cpu, Backend::Xnnpack, DataType::Fp32),
                         inputs: vec![],
+                        start: 0.0,
                     };
                     engine.execute(&task).unwrap().elapsed
                 })
@@ -341,6 +353,7 @@ mod tests {
                         subgraph: &part.subgraphs[0],
                         config: cfg,
                         inputs: vec![],
+                        start: 0.0,
                     };
                     engine.execute(&task).unwrap().elapsed
                 })
@@ -361,7 +374,13 @@ mod tests {
         let engine = SimEngine::new(pm, 10.0, false, 1);
         let net = build_model(0, 0);
         let part = partition(&net, &vec![false; net.num_edges()], &vec![Processor::Npu; net.num_layers()]);
-        let task = EngineTask { network: &net, subgraph: &part.subgraphs[0], config: npu_cfg(), inputs: vec![] };
+        let task = EngineTask {
+            network: &net,
+            subgraph: &part.subgraphs[0],
+            config: npu_cfg(),
+            inputs: vec![],
+            start: 0.0,
+        };
         let t0 = Instant::now();
         engine.execute(&task).unwrap();
         assert!(t0.elapsed().as_secs_f64() >= 0.5 * 10.0 * 0.3e-3);

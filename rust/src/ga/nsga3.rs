@@ -30,6 +30,28 @@
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::sync::{Arc, Mutex};
+
+/// Process-wide Das–Dennis memo keyed by `(m, divisions)`: every
+/// [`SelectionWorkspace`] across every concurrent GA search shares the same
+/// `Arc`'d flat point sets instead of regenerating them per workspace. The
+/// key space is tiny (`divisions` is capped at 32 by [`divisions_for`]), so
+/// a linear scan under the lock beats hashing.
+static REF_CACHE: Mutex<Vec<(usize, usize, Arc<Vec<f64>>)>> = Mutex::new(Vec::new());
+
+/// Shared flat Das–Dennis rows for `(m, divisions)` from the process-wide
+/// memo, generating (once, process-lifetime) on first use.
+fn shared_reference_points(m: usize, divisions: usize) -> Arc<Vec<f64>> {
+    let mut cache = REF_CACHE.lock().expect("ref cache poisoned");
+    if let Some((_, _, flat)) = cache.iter().find(|&&(cm, cd, _)| cm == m && cd == divisions) {
+        return flat.clone();
+    }
+    let mut flat = Vec::new();
+    reference_points_into(m, divisions, &mut flat);
+    let flat = Arc::new(flat);
+    cache.push((m, divisions, flat.clone()));
+    flat
+}
 
 /// Pareto dominance for minimization objectives.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -373,9 +395,11 @@ pub struct SelectionWorkspace {
     ideal: Vec<f64>,
     nadir: Vec<f64>,
     norm_row: Vec<f64>,
-    /// Memoized flat Das–Dennis sets: (m, divisions, rows). Bounded —
-    /// divisions is capped at 32 — so steady state never regenerates.
-    refs_cache: Vec<(usize, usize, Vec<f64>)>,
+    /// Memoized flat Das–Dennis sets: (m, divisions, rows), `Arc`-shared
+    /// with the process-wide [`REF_CACHE`]. Bounded — divisions is capped
+    /// at 32 — so steady state never regenerates, and a fresh workspace
+    /// never recomputes a set any workspace in the process has built.
+    refs_cache: Vec<(usize, usize, Arc<Vec<f64>>)>,
     niche_count: Vec<usize>,
     cand_niche: Vec<usize>,
     cand_dist: Vec<f64>,
@@ -535,8 +559,9 @@ impl SelectionWorkspace {
         }
     }
 
-    /// Index of the (m, divisions) entry in the refs cache, generating it on
-    /// first use.
+    /// Index of the (m, divisions) entry in the workspace refs cache; on a
+    /// workspace miss the `Arc` is fetched from (or built into) the
+    /// process-wide [`REF_CACHE`], so generation happens once per process.
     fn ensure_refs(&mut self, m: usize, divisions: usize) -> usize {
         if let Some(pos) = self
             .refs_cache
@@ -545,8 +570,7 @@ impl SelectionWorkspace {
         {
             return pos;
         }
-        let mut flat = Vec::new();
-        reference_points_into(m, divisions, &mut flat);
+        let flat = shared_reference_points(m, divisions);
         self.refs_cache.push((m, divisions, flat));
         self.refs_cache.len() - 1
     }
@@ -742,6 +766,18 @@ mod tests {
         }
         let refs3 = reference_points(3, 4);
         assert_eq!(refs3.len(), 15); // C(6,2)
+    }
+
+    #[test]
+    fn das_dennis_cache_is_process_wide() {
+        // Two independent lookups share one Arc'd point set, and the cached
+        // rows are exactly what direct generation produces.
+        let a = shared_reference_points(3, 4);
+        let b = shared_reference_points(3, 4);
+        assert!(Arc::ptr_eq(&a, &b), "second lookup regenerated the set");
+        let mut reference = Vec::new();
+        reference_points_into(3, 4, &mut reference);
+        assert_eq!(*a, reference);
     }
 
     #[test]

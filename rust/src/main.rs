@@ -78,6 +78,7 @@ const USAGE: &str = "usage: puzzle <analyze|serve|loadtest|profile|comm-bench|sc
   loadtest     --models 0,1,6 --alpha 1.0 --requests 40 --pattern periodic|poisson|bursty
                [--burst 4] [--max-inflight N] [--admission queue|little] [--all-patterns]
                [--wall] [--time-scale 0.05] [--quick] [--no-saturation] [--seed 23]
+               [--chaos slowdown:npu:2.0:0:0.5,stall:gpu:0.1:0.05,transient:0.02]
   profile
   comm-bench
   scenario-gen --seed 23
@@ -307,13 +308,25 @@ fn loadtest_cmd(pm: &PerfModel, args: &Args) -> Result<()> {
     if wall {
         spec = spec.wall(std::time::Duration::from_secs(60));
     }
-    let mut deployment = analysis.deploy_sim(
-        best,
-        RuntimeOptions::default(),
-        if wall { time_scale } else { 0.0 },
-        true,
-        seed,
-    )?;
+    // `--chaos <spec>` injects a deterministic fault scenario (and enables
+    // the coordinator's watchdog/retry/remap recovery) into the main load
+    // and the saturation search, which then also reports robust-α*.
+    let chaos: Option<puzzle::serve::FaultPlan> = match args.options.get("chaos") {
+        Some(s) => Some(puzzle::serve::FaultPlan::parse(s, seed)?),
+        None => None,
+    };
+    let engine_scale = if wall { time_scale } else { 0.0 };
+    let mut deployment = match &chaos {
+        Some(plan) => analysis.deploy_chaos(
+            best,
+            RuntimeOptions::default(),
+            engine_scale,
+            true,
+            seed,
+            plan.clone(),
+        )?,
+        None => analysis.deploy_sim(best, RuntimeOptions::default(), engine_scale, true, seed)?,
+    };
     let admission = match args.get_str("admission", "queue").as_str() {
         "little" => Admission::little(),
         _ => Admission::Queue,
@@ -346,6 +359,15 @@ fn loadtest_cmd(pm: &PerfModel, args: &Args) -> Result<()> {
         report.score,
         report.wall_seconds
     );
+    if chaos.is_some() {
+        println!(
+            "  chaos: {} retries, {} remaps, {} fault-shed, degraded time {:.2}ms",
+            report.retries,
+            report.remaps,
+            report.fault_shed,
+            report.degraded_time * 1e3
+        );
+    }
     for g in 0..report.group_makespans.len() {
         println!(
             "  group {g}: avg {:.2}ms p50 {:.2}ms p90 {:.2}ms over {} served (deadline {:.2}ms)",
@@ -408,6 +430,28 @@ fn loadtest_cmd(pm: &PerfModel, args: &Args) -> Result<()> {
         match sat {
             Some(a) => println!("saturation multiplier alpha* = {a:.3}"),
             None => println!("no saturation within alpha <= {:.1}", opts.alpha_max),
+        }
+        if let Some(plan) = &chaos {
+            // Same search with the fault plan attached to every probe
+            // deployment: the rate sustainable *under* the chaos scenario.
+            let robust_opts = puzzle::serve::SaturationOptions {
+                fault_plan: Some(plan.clone()),
+                ..opts
+            };
+            let robust = puzzle::serve::saturation_via_runtime(
+                &sets,
+                &scenario,
+                session.perf(),
+                &robust_opts,
+            );
+            match robust {
+                Some(a) => {
+                    println!("robust saturation multiplier alpha* = {a:.3} (under --chaos)")
+                }
+                None => {
+                    println!("no robust saturation within alpha <= {:.1}", robust_opts.alpha_max)
+                }
+            }
         }
     }
     Ok(())

@@ -1,0 +1,429 @@
+//! Deterministic processor-fault injection (chaos testing for the serving
+//! runtime).
+//!
+//! Real mobile SoCs violate the profiler's assumptions constantly: thermal
+//! throttling and DVFS steps slow a processor for seconds at a time, driver
+//! resets and co-runner preemption stall it outright, and transient
+//! execution errors fail individual tasks. A [`FaultPlan`] describes such a
+//! scenario as a seeded timeline of [`FaultEvent`]s, and [`FaultyEngine`]
+//! prices it into the simulated engine's task durations — slowdowns and
+//! stalls stretch `elapsed`, transient faults surface as fallible
+//! [`EngineOutput`]s — so the Coordinator's watchdog/retry/remap machinery
+//! (see [`crate::coordinator::RecoveryOptions`]) can be exercised
+//! reproducibly.
+//!
+//! Determinism contract: the per-task transient draws come from the same
+//! seeded-RNG discipline as the engine's execution noise
+//! ([`crate::util::rng::Rng`]), and [`FaultyEngine::reseed`] re-derives the
+//! fault stream from the probe seed. Same seed + same plan ⇒ bit-identical
+//! served/dropped logs on the virtual clock, including every retry and
+//! remap. Zero-overhead contract: an **empty** plan short-circuits to the
+//! wrapped [`SimEngine`] before any pricing or draw, so the no-fault path
+//! stays bit-identical to (and allocates exactly as much as) the plain
+//! runtime.
+
+use std::sync::Mutex;
+
+use crate::engine::{Engine, EngineOutput, EngineTask, SimEngine};
+use crate::perf::PerfModel;
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+use crate::{anyhow, Processor};
+
+/// One injected fault on the processor timeline. Times are clock seconds
+/// (virtual seconds under [`crate::serve::VirtualClock`], which restarts at
+/// 0 for every load — so a plan replays identically across probes).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultEvent {
+    /// Thermal throttle / DVFS step: every task starting on `processor`
+    /// inside `[from, until)` runs `factor` times slower.
+    Slowdown {
+        /// Degraded processor.
+        processor: Processor,
+        /// Duration multiplier (> 1 slows the processor down).
+        factor: f64,
+        /// Window start, clock seconds.
+        from: f64,
+        /// Window end (exclusive), clock seconds.
+        until: f64,
+    },
+    /// Driver reset / co-runner preemption: a task starting on `processor`
+    /// inside `[at, at + duration)` cannot begin executing until the stall
+    /// clears — its elapsed time absorbs the remaining stall.
+    Stall {
+        /// Stalled processor.
+        processor: Processor,
+        /// Stall start, clock seconds.
+        at: f64,
+        /// Stall length, seconds.
+        duration: f64,
+    },
+    /// Per-task transient execution failure (driver error, bad DMA): each
+    /// task independently fails with probability `prob`, consuming its
+    /// (priced) duration before the failure surfaces.
+    Transient {
+        /// Per-task failure probability in `[0, 1]`.
+        prob: f64,
+    },
+}
+
+/// A seeded chaos scenario: a set of [`FaultEvent`]s plus the seed salt of
+/// the transient-failure draw stream. [`FaultPlan::default`] (no events,
+/// seed 0) is the **empty plan**: attached to a [`FaultyEngine`] it is
+/// contractually invisible — bit-identical logs, zero extra steady-state
+/// allocation (both tested).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// The injected faults (order is irrelevant; windows may overlap, in
+    /// which case slowdown factors multiply and the longest stall wins).
+    pub events: Vec<FaultEvent>,
+    /// Seed salt of the transient draw stream, XOR-ed with the engine's
+    /// probe seed so distinct probes draw distinct-but-reproducible faults.
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// An empty plan with the given transient-stream seed salt.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { events: Vec::new(), seed }
+    }
+
+    /// Add a [`FaultEvent::Slowdown`] window (builder style).
+    pub fn slowdown(mut self, processor: Processor, factor: f64, from: f64, until: f64) -> Self {
+        self.events.push(FaultEvent::Slowdown { processor, factor, from, until });
+        self
+    }
+
+    /// Add a [`FaultEvent::Stall`] window (builder style).
+    pub fn stall(mut self, processor: Processor, at: f64, duration: f64) -> Self {
+        self.events.push(FaultEvent::Stall { processor, at, duration });
+        self
+    }
+
+    /// Add a [`FaultEvent::Transient`] failure probability (builder style).
+    pub fn transient(mut self, prob: f64) -> Self {
+        self.events.push(FaultEvent::Transient { prob });
+        self
+    }
+
+    /// True when the plan injects nothing — the zero-overhead fast path.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Combined per-task transient failure probability: independent
+    /// [`FaultEvent::Transient`] events compose as `1 − Π(1 − pᵢ)`.
+    pub fn transient_prob(&self) -> f64 {
+        let mut survive = 1.0f64;
+        for ev in &self.events {
+            if let FaultEvent::Transient { prob } = ev {
+                survive *= 1.0 - prob.clamp(0.0, 1.0);
+            }
+        }
+        1.0 - survive
+    }
+
+    /// Seconds a task starting on `p` at time `t` must wait before it can
+    /// begin executing (the remainder of the longest active stall; 0 when
+    /// no stall covers `t`).
+    pub fn stall_wait(&self, p: Processor, t: f64) -> f64 {
+        let mut wait = 0.0f64;
+        for ev in &self.events {
+            if let FaultEvent::Stall { processor, at, duration } = *ev {
+                if processor == p && t >= at && t < at + duration {
+                    wait = wait.max(at + duration - t);
+                }
+            }
+        }
+        wait
+    }
+
+    /// Duration multiplier for a task starting on `p` at time `t`: the
+    /// product of all active [`FaultEvent::Slowdown`] factors (1.0 when
+    /// none is active).
+    pub fn slowdown_factor(&self, p: Processor, t: f64) -> f64 {
+        let mut factor = 1.0f64;
+        for ev in &self.events {
+            if let FaultEvent::Slowdown { processor, factor: f, from, until } = *ev {
+                if processor == p && t >= from && t < until {
+                    factor *= f.max(0.0);
+                }
+            }
+        }
+        factor
+    }
+
+    /// Parse a CLI chaos spec: comma-separated events, each
+    /// colon-separated —
+    ///
+    /// * `slowdown:<proc>:<factor>:<from>:<until>`
+    /// * `stall:<proc>:<at>:<duration>`
+    /// * `transient:<prob>`
+    ///
+    /// with `<proc>` one of `cpu`/`gpu`/`npu` (case-insensitive) and times
+    /// in simulated seconds. Example:
+    /// `stall:npu:0.005:0.05,slowdown:gpu:1.5:0:1,transient:0.02`.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::new(seed);
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let fields: Vec<&str> = part.split(':').map(str::trim).collect();
+            let num = |i: usize| -> Result<f64> {
+                fields
+                    .get(i)
+                    .ok_or_else(|| anyhow!("chaos event `{part}` is missing field {i}"))?
+                    .parse::<f64>()
+                    .map_err(|e| anyhow!("chaos event `{part}` field {i}: {e}"))
+            };
+            match fields[0].to_ascii_lowercase().as_str() {
+                "slowdown" => {
+                    if fields.len() != 5 {
+                        return Err(anyhow!(
+                            "slowdown takes proc:factor:from:until, got `{part}`"
+                        ));
+                    }
+                    let p = parse_processor(fields[1], part)?;
+                    plan = plan.slowdown(p, num(2)?, num(3)?, num(4)?);
+                }
+                "stall" => {
+                    if fields.len() != 4 {
+                        return Err(anyhow!("stall takes proc:at:duration, got `{part}`"));
+                    }
+                    let p = parse_processor(fields[1], part)?;
+                    plan = plan.stall(p, num(2)?, num(3)?);
+                }
+                "transient" => {
+                    if fields.len() != 2 {
+                        return Err(anyhow!("transient takes one probability, got `{part}`"));
+                    }
+                    plan = plan.transient(num(1)?);
+                }
+                other => {
+                    return Err(anyhow!(
+                        "unknown chaos event `{other}` (expected slowdown/stall/transient)"
+                    ))
+                }
+            }
+        }
+        Ok(plan)
+    }
+}
+
+fn parse_processor(s: &str, context: &str) -> Result<Processor> {
+    match s.to_ascii_lowercase().as_str() {
+        "cpu" => Ok(Processor::Cpu),
+        "gpu" => Ok(Processor::Gpu),
+        "npu" => Ok(Processor::Npu),
+        other => Err(anyhow!("unknown processor `{other}` in chaos event `{context}`")),
+    }
+}
+
+/// Seed of the fault-injection draw stream: derived from the probe seed and
+/// the plan's salt, and deliberately decorrelated from the execution-noise
+/// stream (which is seeded with the probe seed directly) so attaching a
+/// plan never perturbs the noise draws themselves.
+fn fault_stream_seed(seed: u64, plan_seed: u64) -> u64 {
+    seed ^ plan_seed.rotate_left(17) ^ 0xFA11_7BAD_5EED_0001
+}
+
+/// [`Engine`] wrapper that injects a [`FaultPlan`] into a [`SimEngine`]:
+/// slowdowns and stalls are priced into the reported task durations
+/// (keyed on the task's dispatch timestamp, [`EngineTask::start`]), and
+/// transient failures surface as [`EngineOutput`]s with
+/// [`EngineOutput::error`] set after consuming their priced duration.
+///
+/// [`FaultyEngine::reseed`] re-derives **both** streams — the inner
+/// engine's execution noise and the fault draws — from the probe seed, so
+/// warm-deployment probes replay chaos scenarios bit-identically.
+pub struct FaultyEngine {
+    inner: SimEngine,
+    plan: FaultPlan,
+    /// Cached combined transient probability (events never change).
+    transient: f64,
+    rng: Mutex<Rng>,
+}
+
+impl FaultyEngine {
+    /// Wrap a fresh [`SimEngine`] (same knobs as [`SimEngine::new`]) with a
+    /// fault plan.
+    pub fn new(
+        perf: std::sync::Arc<PerfModel>,
+        time_scale: f64,
+        noisy: bool,
+        seed: u64,
+        plan: FaultPlan,
+    ) -> FaultyEngine {
+        let transient = plan.transient_prob();
+        let rng = Mutex::new(Rng::seed_from_u64(fault_stream_seed(seed, plan.seed)));
+        FaultyEngine { inner: SimEngine::new(perf, time_scale, noisy, seed), plan, transient, rng }
+    }
+
+    /// The attached plan.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+}
+
+impl Engine for FaultyEngine {
+    fn execute(&self, task: &EngineTask<'_>) -> Result<EngineOutput> {
+        // Zero-overhead contract: an empty plan is one branch, then the
+        // plain engine — no pricing, no draw, no allocation.
+        if self.plan.is_empty() {
+            return self.inner.execute(task);
+        }
+        let mut out = self.inner.execute(task)?;
+        let p = task.config.processor;
+        // Stalls gate the task's start; slowdowns stretch what then runs.
+        // Both key on the dispatch timestamp — an idle-worker dispatch, so
+        // it coincides with the execution start under the virtual clock.
+        let wait = self.plan.stall_wait(p, task.start);
+        let factor = self.plan.slowdown_factor(p, task.start + wait);
+        let base = out.elapsed;
+        out.elapsed = wait + base * factor;
+        if self.inner.time_scale > 0.0 && out.elapsed > base {
+            // Wall mode: the inner engine already slept the nominal
+            // duration; sleep the injected remainder so wall timestamps
+            // track the degraded schedule.
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                (out.elapsed - base) * self.inner.time_scale,
+            ));
+        }
+        if self.transient > 0.0 && self.rng.lock().unwrap().gen_bool(self.transient) {
+            out.tensors.clear();
+            out.error = Some(format!("transient fault on {}", p.name()));
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &str {
+        "faulty-sim"
+    }
+
+    fn reseed(&self, seed: u64) {
+        self.inner.reseed(seed);
+        *self.rng.lock().unwrap() =
+            Rng::seed_from_u64(fault_stream_seed(seed, self.plan.seed));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::partition;
+    use crate::models::build_model;
+    use crate::{Backend, DataType, ExecConfig};
+    use std::sync::Arc;
+
+    fn run_at(
+        engine: &dyn Engine,
+        net: &crate::graph::Network,
+        part: &crate::graph::Partition,
+        start: f64,
+    ) -> EngineOutput {
+        let task = EngineTask {
+            network: net,
+            subgraph: &part.subgraphs[0],
+            config: ExecConfig::new(Processor::Npu, Backend::Qnn, DataType::Fp16),
+            inputs: vec![],
+            start,
+        };
+        engine.execute(&task).unwrap()
+    }
+
+    fn fixture() -> (crate::graph::Network, crate::graph::Partition, Arc<PerfModel>) {
+        let net = build_model(0, 0);
+        let part = partition(
+            &net,
+            &vec![false; net.num_edges()],
+            &vec![Processor::Npu; net.num_layers()],
+        );
+        (net, part, Arc::new(PerfModel::paper_calibrated()))
+    }
+
+    #[test]
+    fn empty_plan_matches_plain_engine_bit_for_bit() {
+        let (net, part, pm) = fixture();
+        let plain = SimEngine::new(pm.clone(), 0.0, true, 7);
+        let faulty = FaultyEngine::new(pm, 0.0, true, 7, FaultPlan::new(0));
+        for i in 0..8 {
+            let a = run_at(&plain, &net, &part, i as f64);
+            let b = run_at(&faulty, &net, &part, i as f64);
+            assert_eq!(a.elapsed.to_bits(), b.elapsed.to_bits(), "draw {i}");
+            assert!(a.error.is_none() && b.error.is_none());
+        }
+    }
+
+    #[test]
+    fn slowdown_prices_only_inside_its_window() {
+        let (net, part, pm) = fixture();
+        let plan = FaultPlan::new(0).slowdown(Processor::Npu, 3.0, 1.0, 2.0);
+        let eng = FaultyEngine::new(pm.clone(), 0.0, false, 7, plan);
+        let nominal = run_at(&SimEngine::new(pm, 0.0, false, 7), &net, &part, 0.0).elapsed;
+        let before = run_at(&eng, &net, &part, 0.5).elapsed;
+        let inside = run_at(&eng, &net, &part, 1.5).elapsed;
+        let after = run_at(&eng, &net, &part, 2.5).elapsed;
+        assert_eq!(before.to_bits(), nominal.to_bits());
+        assert_eq!(after.to_bits(), nominal.to_bits());
+        assert!((inside - 3.0 * nominal).abs() < 1e-12, "{inside} vs 3x{nominal}");
+    }
+
+    #[test]
+    fn stall_absorbs_the_remaining_window() {
+        let (net, part, pm) = fixture();
+        let plan = FaultPlan::new(0).stall(Processor::Npu, 1.0, 0.5);
+        let eng = FaultyEngine::new(pm.clone(), 0.0, false, 7, plan);
+        let nominal = run_at(&SimEngine::new(pm, 0.0, false, 7), &net, &part, 0.0).elapsed;
+        // Task starting 0.2 s into the stall waits the remaining 0.3 s.
+        let stalled = run_at(&eng, &net, &part, 1.2).elapsed;
+        assert!((stalled - (0.3 + nominal)).abs() < 1e-12, "{stalled}");
+        // Other processors are unaffected.
+        assert_eq!(eng.plan().stall_wait(Processor::Gpu, 1.2), 0.0);
+    }
+
+    #[test]
+    fn transient_draws_are_seed_deterministic_and_reseedable() {
+        let (net, part, pm) = fixture();
+        let mk = |seed| {
+            FaultyEngine::new(pm.clone(), 0.0, true, seed, FaultPlan::new(9).transient(0.5))
+        };
+        let outcomes = |eng: &FaultyEngine| -> Vec<bool> {
+            (0..32).map(|_| run_at(eng, &net, &part, 0.0).error.is_some()).collect()
+        };
+        let a = outcomes(&mk(7));
+        let b = outcomes(&mk(7));
+        assert_eq!(a, b, "same seed must replay the same failures");
+        assert!(a.iter().any(|&f| f) && a.iter().any(|&f| !f), "p=0.5 should mix");
+        // A warm engine reseeded to s matches a fresh engine seeded s.
+        let warm = mk(3);
+        let _burn = outcomes(&warm);
+        warm.reseed(7);
+        assert_eq!(outcomes(&warm), a);
+    }
+
+    #[test]
+    fn spec_parsing_roundtrips_and_rejects_garbage() {
+        let plan =
+            FaultPlan::parse("stall:npu:0.005:0.05, slowdown:gpu:1.5:0:1, transient:0.02", 5)
+                .unwrap();
+        assert_eq!(plan.events.len(), 3);
+        assert_eq!(plan.seed, 5);
+        assert!(plan.stall_wait(Processor::Npu, 0.01) > 0.0);
+        assert!((plan.slowdown_factor(Processor::Gpu, 0.5) - 1.5).abs() < 1e-12);
+        assert!((plan.transient_prob() - 0.02).abs() < 1e-12);
+        assert!(FaultPlan::parse("melt:npu:1", 0).is_err());
+        assert!(FaultPlan::parse("stall:tpu:0:1", 0).is_err());
+        assert!(FaultPlan::parse("slowdown:npu:2:0", 0).is_err());
+        assert!(FaultPlan::parse("transient:lots", 0).is_err());
+    }
+
+    #[test]
+    fn overlapping_faults_compose() {
+        let plan = FaultPlan::new(0)
+            .slowdown(Processor::Cpu, 2.0, 0.0, 10.0)
+            .slowdown(Processor::Cpu, 1.5, 5.0, 10.0)
+            .transient(0.1)
+            .transient(0.1);
+        assert!((plan.slowdown_factor(Processor::Cpu, 6.0) - 3.0).abs() < 1e-12);
+        assert!((plan.slowdown_factor(Processor::Cpu, 1.0) - 2.0).abs() < 1e-12);
+        assert!((plan.transient_prob() - 0.19).abs() < 1e-12);
+    }
+}

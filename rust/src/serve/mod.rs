@@ -36,6 +36,10 @@
 //! [`NetworkSolution`]s — so the comparison is apples-to-apples.
 #![warn(missing_docs)]
 
+mod fault;
+
+pub use fault::{FaultEvent, FaultPlan, FaultyEngine};
+
 use std::ops::ControlFlow;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -43,7 +47,8 @@ use std::time::{Duration, Instant};
 
 use crate::comm::CommModel;
 use crate::coordinator::{
-    Coordinator, NetworkSolution, OverloadPolicy, RuntimeOptions, ServedRequest,
+    Coordinator, DropReason, NetworkSolution, OverloadPolicy, RecoveryOptions, RuntimeOptions,
+    ServedRequest,
 };
 use crate::engine::{Engine, SimEngine};
 use crate::ga::{decode_network, Genome};
@@ -481,6 +486,45 @@ pub fn generate_arrivals(groups: &[GroupLoad]) -> Vec<Arrival> {
 // ---------------------------------------------------------------------------
 // Reports
 
+/// Delta of one memory-accounting counter set across a single load —
+/// Table 5's columns, snapshotted per load by [`run_load`] so reused
+/// deployments (whose coordinators deliberately accumulate pool/arena
+/// statistics across loads) can still be attributed load-by-load. Counts
+/// are deterministic under the virtual clock; the millisecond fields are
+/// wall-measured and are **not** part of any bit-identity contract.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MemDelta {
+    /// (De)allocation time spent, milliseconds.
+    pub malloc_ms: f64,
+    /// Buffer allocations performed.
+    pub mallocs: u64,
+    /// Marshalling memcpy time, milliseconds.
+    pub memcpy_ms: f64,
+    /// Free time, milliseconds.
+    pub free_ms: f64,
+}
+
+impl MemDelta {
+    fn between(before: (f64, u64, f64, f64), after: (f64, u64, f64, f64)) -> MemDelta {
+        MemDelta {
+            malloc_ms: after.0 - before.0,
+            mallocs: after.1.saturating_sub(before.1),
+            memcpy_ms: after.2 - before.2,
+            free_ms: after.3 - before.3,
+        }
+    }
+}
+
+/// Per-load memory accounting: the tensor pool's and the shared arena's
+/// counter deltas across one load.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LoadMemStats {
+    /// Worker-side tensor-pool delta (staging buffers).
+    pub pool: MemDelta,
+    /// Coordinator-side shared-arena delta (published boundary tensors).
+    pub arena: MemDelta,
+}
+
 /// Summary of one load pushed through the runtime.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
@@ -489,7 +533,9 @@ pub struct ServeReport {
     pub submitted: usize,
     /// Requests served to completion during this load.
     pub served: usize,
-    /// Requests rejected by the admission policy during this load.
+    /// Requests rejected by the admission policy **or shed by fault
+    /// recovery** during this load ([`ServeReport::fault_shed`] is the
+    /// recovery subset).
     pub dropped: usize,
     /// Requests still in flight when a wall-mode drain timeout expired
     /// (always 0 under the virtual clock, which runs to completion).
@@ -514,6 +560,22 @@ pub struct ServeReport {
     /// pushed a load through an existing coordinator without solution
     /// context.
     pub rho: Option<[f64; 3]>,
+    /// Failed task attempts retried in place across the served requests
+    /// (0 unless recovery is enabled and faults occurred).
+    pub retries: u64,
+    /// Subgraph tasks remapped to another processor across the served
+    /// requests.
+    pub remaps: u64,
+    /// Requests shed by recovery after retry and remap were exhausted
+    /// (subset of `dropped`). Filled by [`run_load`]; 0 from
+    /// [`ServeReport::from_log`] alone.
+    pub fault_shed: usize,
+    /// Processor-seconds lost to failed attempts and retry backoff across
+    /// the served requests.
+    pub degraded_time: f64,
+    /// Pool/arena accounting deltas for this load (Table 5). Filled by
+    /// [`run_load`]; default from [`ServeReport::from_log`] alone.
+    pub mem: LoadMemStats,
 }
 
 impl ServeReport {
@@ -535,6 +597,9 @@ impl ServeReport {
         let mut group_makespans = vec![Vec::new(); n_groups];
         let mut violations = 0usize;
         let mut met = 0usize;
+        let mut retries = 0u64;
+        let mut remaps = 0u64;
+        let mut degraded_time = 0.0f64;
         for s in served {
             if s.group < n_groups {
                 group_makespans[s.group].push(s.makespan / scale);
@@ -544,6 +609,9 @@ impl ServeReport {
             } else {
                 met += 1;
             }
+            retries += s.retries as u64;
+            remaps += s.remaps as u64;
+            degraded_time += s.degraded;
         }
         let submitted = offered.max(served.len() + dropped);
         let unfinished = submitted - served.len() - dropped;
@@ -569,6 +637,11 @@ impl ServeReport {
             attainment,
             wall_seconds,
             rho: None,
+            retries,
+            remaps,
+            fault_shed: 0,
+            degraded_time,
+            mem: LoadMemStats::default(),
         }
     }
 
@@ -606,6 +679,12 @@ pub fn run_load(
     coord.set_overload_policy(spec.policy);
     let served_before = coord.served().len();
     let dropped_before = coord.dropped().len();
+    // Pool/arena counters accumulate across loads on a warm coordinator
+    // (Coordinator::reset deliberately leaves them); snapshot-delta them
+    // here — mirroring the served-log snapshot above — so the report's
+    // Table-5 numbers cover exactly this load.
+    let pool_before = coord.pool_stats();
+    let arena_before = coord.arena.stats.snapshot();
     let arrivals = generate_arrivals(&spec.groups);
     let offered = arrivals.len();
     let t0 = Instant::now();
@@ -623,14 +702,22 @@ pub fn run_load(
     let wall_seconds = t0.elapsed().as_secs_f64();
     coord.set_overload_policy(prev_policy);
     let deadlines: Vec<Option<f64>> = spec.groups.iter().map(|g| g.deadline).collect();
-    ServeReport::from_log(
+    let new_drops = &coord.dropped()[dropped_before..];
+    let mut report = ServeReport::from_log(
         &coord.served()[served_before..],
-        coord.dropped().len() - dropped_before,
+        new_drops.len(),
         offered,
         &deadlines,
         scale,
         wall_seconds,
-    )
+    );
+    report.fault_shed =
+        new_drops.iter().filter(|d| d.reason == DropReason::FaultShed).count();
+    report.mem = LoadMemStats {
+        pool: MemDelta::between(pool_before, coord.pool_stats()),
+        arena: MemDelta::between(arena_before, coord.arena.stats.snapshot()),
+    };
+    report
 }
 
 /// Wall-clock open-loop driver: release each arrival when the wall reaches
@@ -717,6 +804,13 @@ pub struct RuntimeHarness {
     /// Engine wall-seconds per simulated second for wall-mode runs (virtual
     /// runs always use a non-sleeping engine).
     pub time_scale: f64,
+    /// Chaos scenario injected into every deployment of this harness:
+    /// `Some(plan)` wraps the engine in a [`FaultyEngine`] and enables the
+    /// coordinator's watchdog/retry/remap recovery (even for an *empty*
+    /// plan, which is how the no-fault identity contract is tested).
+    /// `None` (the default) deploys the plain engine with recovery off —
+    /// bit-identical to the pre-fault-injection runtime.
+    pub fault_plan: Option<FaultPlan>,
 }
 
 /// Deterministic per-probe seed: stable in (base seed, solution-set index,
@@ -759,7 +853,16 @@ impl RuntimeHarness {
             noisy: true,
             seed,
             time_scale: 0.0,
+            fault_plan: None,
         }
+    }
+
+    /// Attach a chaos scenario (builder style): deployments get a
+    /// [`FaultyEngine`] and self-healing recovery. See
+    /// [`RuntimeHarness::fault_plan`].
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> RuntimeHarness {
+        self.fault_plan = Some(plan);
+        self
     }
 
     /// Offered per-processor utilization of `spec` against this harness's
@@ -789,10 +892,25 @@ impl RuntimeHarness {
                 }
             }
         };
-        let engine: Arc<dyn Engine> =
-            Arc::new(SimEngine::new(self.perf.clone(), engine_scale, self.noisy, self.seed));
+        let engine: Arc<dyn Engine> = match &self.fault_plan {
+            Some(plan) => Arc::new(FaultyEngine::new(
+                self.perf.clone(),
+                engine_scale,
+                self.noisy,
+                self.seed,
+                plan.clone(),
+            )),
+            None => {
+                Arc::new(SimEngine::new(self.perf.clone(), engine_scale, self.noisy, self.seed))
+            }
+        };
+        let mut coordinator =
+            Coordinator::new(self.solutions.clone(), engine, self.options.clone());
+        if self.fault_plan.is_some() {
+            coordinator.enable_recovery(self.perf.clone(), RecoveryOptions::default());
+        }
         WarmDeployment {
-            coordinator: Coordinator::new(self.solutions.clone(), engine, self.options.clone()),
+            coordinator,
             groups: self.groups.clone(),
             perf: self.perf.clone(),
             time_scale: self.time_scale,
@@ -931,6 +1049,11 @@ pub struct SaturationOptions {
     /// Probe admission policy ([`Admission::Queue`] by default — the
     /// paper's protocol).
     pub admission: Admission,
+    /// Chaos scenario injected into every probe deployment: the search then
+    /// measures **robust-α*** — the request rate sustainable *under* the
+    /// fault scenario, with the coordinator's recovery active — instead of
+    /// nominal α*. `None` (the default) measures on pristine processors.
+    pub fault_plan: Option<FaultPlan>,
 }
 
 impl Default for SaturationOptions {
@@ -945,6 +1068,7 @@ impl Default for SaturationOptions {
             noisy: true,
             options: RuntimeOptions::default(),
             admission: Admission::Queue,
+            fault_plan: None,
         }
     }
 }
@@ -1055,6 +1179,7 @@ pub fn saturation_via_runtime_observed(
                     );
                     harness.options = opts.options.clone();
                     harness.noisy = opts.noisy;
+                    harness.fault_plan = opts.fault_plan.clone();
                     deployments[i] = Some(harness.deploy(ClockMode::Virtual));
                 }
                 let deployment = deployments[i].as_mut().expect("deployed above");
@@ -1178,6 +1303,9 @@ mod tests {
                 makespan: 0.005,
                 deadline: Some(0.01),
                 violated: false,
+                retries: 1,
+                remaps: 0,
+                degraded: 0.002,
             },
             ServedRequest {
                 group: 0,
@@ -1187,6 +1315,9 @@ mod tests {
                 makespan: 0.04,
                 deadline: Some(0.01),
                 violated: true,
+                retries: 0,
+                remaps: 1,
+                degraded: 0.01,
             },
         ];
         let r = ServeReport::from_log(&served, 1, 3, &[Some(0.01)], 1.0, 0.1);
@@ -1198,6 +1329,9 @@ mod tests {
         assert!((r.attainment - 1.0 / 3.0).abs() < 1e-12);
         assert!(r.score > 0.0 && r.score < 1.0);
         assert_eq!(r.group_makespans[0].len(), 2);
+        // Fault accounting folds across the served entries.
+        assert_eq!((r.retries, r.remaps), (1, 1));
+        assert!((r.degraded_time - 0.012).abs() < 1e-12);
         // Requests a wall-mode drain timeout never finished count as
         // misses, not as a smaller denominator.
         let r = ServeReport::from_log(&served, 1, 5, &[Some(0.01)], 1.0, 0.1);

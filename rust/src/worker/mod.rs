@@ -84,22 +84,28 @@ impl Worker {
                             subgraph: &task.subgraph,
                             config: task.config,
                             inputs: staged,
+                            start: task.start,
                         };
                         let result = engine.execute(&engine_task);
                         let msg = match result {
+                            // A task-level fault (out.error set) keeps the
+                            // engine-priced elapsed: the failed attempt
+                            // consumed that time on the processor.
                             Ok(out) => CompletionMsg {
                                 request: task.request,
                                 network: task.network_idx,
                                 subgraph: task.subgraph.id,
                                 elapsed: out.elapsed,
+                                processor,
                                 outputs: out.tensors,
-                                error: None,
+                                error: out.error,
                             },
                             Err(e) => CompletionMsg {
                                 request: task.request,
                                 network: task.network_idx,
                                 subgraph: task.subgraph.id,
                                 elapsed: 0.0,
+                                processor,
                                 outputs: Vec::new(),
                                 error: Some(e.to_string()),
                             },
@@ -185,6 +191,7 @@ mod tests {
             subgraph: Arc::new(part.subgraphs[0].clone()),
             config: ExecConfig::new(Processor::Npu, Backend::Qnn, DataType::Fp16),
             inputs: vec![],
+            start: 0.0,
         }
     }
 

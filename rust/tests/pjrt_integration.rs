@@ -114,6 +114,7 @@ fn pjrt_engine_runs_subgraphs() {
         subgraph: &part.subgraphs[0],
         config: ExecConfig::new(Processor::Npu, Backend::Qnn, DataType::Fp16),
         inputs: vec![vec![0.1f32; 32 * 32 * 3]],
+        start: 0.0,
     };
     let out = engine.execute(&task).expect("execute");
     assert_eq!(out.tensors.len(), 1, "one sink tensor");
@@ -131,6 +132,7 @@ fn pjrt_engine_runs_subgraphs() {
             subgraph: sg,
             config: ExecConfig::new(Processor::Npu, Backend::Qnn, DataType::Fp16),
             inputs: vec![],
+            start: 0.0,
         };
         let out = engine.execute(&task).expect("execute split");
         assert!(!out.tensors.is_empty());

@@ -3,7 +3,9 @@
 //! accounting above saturation, overload policies, persistent-deployment
 //! reuse (warm probes bit-identical to fresh deploys; one deployment per
 //! solution set in the saturation search; the ρ-seeded bisection bracket),
-//! and the `Deployment::serve_load` api surface.
+//! chaos injection (deterministic fault replay, watchdog/retry/remap
+//! recovery, the empty-plan zero-overhead contract, robust-α*), and the
+//! `Deployment::serve_load` api surface.
 
 use std::ops::ControlFlow;
 use std::sync::Arc;
@@ -15,26 +17,37 @@ use puzzle::ga::Genome;
 use puzzle::perf::PerfModel;
 use puzzle::scenario::Scenario;
 use puzzle::serve::{
-    self, materialize_solutions, offered_utilization, rho_bracket_floor, ClockMode,
+    self, materialize_solutions, offered_utilization, rho_bracket_floor, ClockMode, FaultPlan,
     RuntimeHarness, SaturationOptions, ServeReport,
 };
 use puzzle::Processor;
 
+/// Bitwise equality of one served-log entry (every field, every f64 bit,
+/// including the fault-recovery accounting).
+fn log_entries_equal(x: &ServedRequest, y: &ServedRequest) -> bool {
+    (x.group, x.request) == (y.group, y.request)
+        && x.arrival.to_bits() == y.arrival.to_bits()
+        && x.completion.to_bits() == y.completion.to_bits()
+        && x.makespan.to_bits() == y.makespan.to_bits()
+        && x.deadline.map(f64::to_bits) == y.deadline.map(f64::to_bits)
+        && x.violated == y.violated
+        && (x.retries, x.remaps) == (y.retries, y.remaps)
+        && x.degraded.to_bits() == y.degraded.to_bits()
+}
+
 /// Bitwise equality of two served logs (every field, every f64 bit).
 fn assert_logs_identical(a: &[ServedRequest], b: &[ServedRequest]) {
     assert_eq!(a.len(), b.len(), "log lengths differ");
-    for (x, y) in a.iter().zip(b) {
-        assert_eq!((x.group, x.request), (y.group, y.request));
-        assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
-        assert_eq!(x.completion.to_bits(), y.completion.to_bits());
-        assert_eq!(x.makespan.to_bits(), y.makespan.to_bits());
-        assert_eq!(x.deadline.map(f64::to_bits), y.deadline.map(f64::to_bits));
-        assert_eq!(x.violated, y.violated);
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(log_entries_equal(x, y), "log entry {i} differs: {x:?} vs {y:?}");
     }
 }
 
 /// Bitwise equality of the deterministic report fields (wall_seconds is
-/// real time and legitimately differs between runs).
+/// real time, and the `mem` millisecond fields are wall-measured — both
+/// legitimately differ between runs; `mem` counts additionally differ
+/// between a deployment's cold first probe and warm later ones, so the
+/// whole block stays out of the identity contract).
 fn assert_reports_identical(a: &ServeReport, b: &ServeReport) {
     assert_eq!(a.submitted, b.submitted);
     assert_eq!(a.served, b.served);
@@ -43,6 +56,8 @@ fn assert_reports_identical(a: &ServeReport, b: &ServeReport) {
     assert_eq!(a.violations, b.violations);
     assert_eq!(a.score.to_bits(), b.score.to_bits());
     assert_eq!(a.attainment.to_bits(), b.attainment.to_bits());
+    assert_eq!((a.retries, a.remaps, a.fault_shed), (b.retries, b.remaps, b.fault_shed));
+    assert_eq!(a.degraded_time.to_bits(), b.degraded_time.to_bits());
     assert_eq!(a.group_makespans.len(), b.group_makespans.len());
     for (ga, gb) in a.group_makespans.iter().zip(&b.group_makespans) {
         assert_eq!(ga.len(), gb.len());
@@ -400,6 +415,199 @@ fn little_cap_admission_is_invisible_at_feasible_load() {
     assert_eq!(cap_report.dropped, 0, "cap {cap} engaged at feasible load");
     assert_logs_identical(&queue_log, &cap_log);
     assert_eq!(queue_report.score.to_bits(), cap_report.score.to_bits());
+}
+
+#[test]
+fn chaos_probes_replay_bit_identically_including_recovery() {
+    // The chaos determinism contract: same seed + same FaultPlan ⇒
+    // bit-identical served logs and reports — including every retry and
+    // every degraded-time bit — on fresh deployments AND on a warm
+    // deployment replaying after intervening traffic.
+    let scenario = Scenario::from_groups("chaos-replay", &[vec![0], vec![1]]);
+    let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+    let perf = PerfModel::paper_calibrated();
+    let plan = FaultPlan::new(5).slowdown(Processor::Npu, 2.0, 0.0, 1e3).transient(0.25);
+    let harness = harness_for(&scenario, &genome, 11).with_fault_plan(plan);
+    let spec = LoadSpec::for_scenario(&scenario, &perf, 2.0, 12);
+
+    let (report_a, log_a) = harness.run_with_log(&spec);
+    let (report_b, log_b) = harness.run_with_log(&spec);
+    assert!(!log_a.is_empty());
+    assert_logs_identical(&log_a, &log_b);
+    assert_reports_identical(&report_a, &report_b);
+    assert!(
+        report_a.retries > 0,
+        "transient p=0.25 over 24 requests should force retries: {report_a:?}"
+    );
+    assert!(report_a.degraded_time > 0.0, "retries must book degraded time");
+
+    // Warm replay: reseed re-derives both the execution-noise stream and
+    // the fault draw stream, so the chaos scenario replays bit-identically
+    // even after the deployment served unrelated traffic.
+    let mut warm = harness.deploy(ClockMode::Virtual);
+    let _intervening = warm.probe_with_log(&spec, 99);
+    let (wr, wl) = warm.probe_with_log(&spec, harness.seed);
+    warm.shutdown();
+    assert_logs_identical(&wl, &log_a);
+    assert_reports_identical(&wr, &report_a);
+}
+
+#[test]
+fn npu_stall_recovers_via_remap_and_measures_robust_alpha() {
+    // Acceptance scenario: a persistent NPU stall on a multi-group,
+    // all-NPU-mapped scenario. Every request must discover the stall
+    // through the watchdog → retry → remap ladder and still complete (on
+    // the next-best processor), and the degradation-aware saturation
+    // search must report a positive robust-α* under the same plan.
+    let scenario = Scenario::from_groups("chaos-stall", &[vec![0], vec![1]]);
+    let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+    let perf = Arc::new(PerfModel::paper_calibrated());
+    let plan = FaultPlan::new(3).stall(Processor::Npu, 0.0, 1e3);
+    let harness = harness_for(&scenario, &genome, 7).with_fault_plan(plan.clone());
+    let spec = LoadSpec::for_scenario(&scenario, &perf, 20.0, 6);
+
+    let (report, log) = harness.run_with_log(&spec);
+    assert_eq!(
+        report.served, report.submitted,
+        "every request must complete via remap: {report:?}"
+    );
+    assert_eq!(report.fault_shed, 0, "remap must succeed, not shed: {report:?}");
+    assert!(report.remaps > 0 && report.retries > 0, "{report:?}");
+    assert!(report.degraded_time > 0.0, "the discovery ladder must book degraded time");
+    // Each group request is one single-subgraph network: the ladder is
+    // exactly max_retries failed attempts, then one remap.
+    assert!(
+        log.iter().all(|s| s.remaps == 1 && s.retries == 2 && s.degraded > 0.0),
+        "per-request recovery accounting off: {log:?}"
+    );
+    // Chaos replay holds for remaps too.
+    let (_, log_again) = harness.run_with_log(&spec);
+    assert_logs_identical(&log, &log_again);
+
+    // Degradation-aware search: the same plan threaded through the
+    // saturation driver yields a positive robust-α*. The stall prices a
+    // full discovery ladder into every request, so the SLO threshold and
+    // bracket are relaxed relative to the strict nominal defaults.
+    let sets = vec![materialize_solutions(&scenario.networks, &genome, &perf)];
+    let opts = SaturationOptions {
+        requests: 6,
+        alpha_max: 40.0,
+        tolerance: 0.5,
+        threshold: 0.5,
+        fault_plan: Some(plan),
+        ..Default::default()
+    };
+    let robust = serve::saturation_via_runtime(&sets, &scenario, &perf, &opts);
+    let alpha = robust.expect("a relaxed-load probe under the stall must meet the threshold");
+    assert!(alpha > 0.0, "robust alpha* must be positive, got {alpha}");
+}
+
+#[test]
+fn empty_fault_plan_is_contractually_invisible() {
+    // Zero-overhead contract, behavioral half: an empty FaultPlan (which
+    // still wraps the engine in FaultyEngine and arms recovery) must be
+    // bit-identical to the plain runtime across random genomes, loads, and
+    // arrival patterns.
+    let scenario = Scenario::from_groups("chaos-empty", &[vec![0, 1]]);
+    let perf = PerfModel::paper_calibrated();
+    puzzle::util::prop::check("empty fault plan identity", 10, |rng| {
+        let genome = Genome::random(&scenario.networks, 0.3, rng);
+        let seed = rng.gen_range(1, 1 << 16) as u64;
+        let alpha = 0.8 + 1.7 * rng.gen_f64();
+        let requests = rng.gen_range(4, 10);
+        let periods = scenario.periods(alpha, &perf);
+        let spec = match rng.gen_range(0, 3) {
+            0 => LoadSpec::periodic(&periods, requests),
+            1 => LoadSpec::poisson(&periods, requests, seed ^ 0xA5A5),
+            _ => LoadSpec::bursty(&periods, 3, requests),
+        };
+        let plain = harness_for(&scenario, &genome, seed);
+        let chaos = plain.clone().with_fault_plan(FaultPlan::default());
+        let (pr, pl) = plain.run_with_log(&spec);
+        let (cr, cl) = chaos.run_with_log(&spec);
+        puzzle::prop_assert!(
+            pl.len() == cl.len() && pl.iter().zip(&cl).all(|(x, y)| log_entries_equal(x, y)),
+            "served logs diverged (seed {seed}, alpha {alpha:.3})"
+        );
+        puzzle::prop_assert!(
+            pr.score.to_bits() == cr.score.to_bits()
+                && (pr.served, pr.dropped, pr.violations)
+                    == (cr.served, cr.dropped, cr.violations),
+            "reports diverged (seed {seed}, alpha {alpha:.3}): {pr:?} vs {cr:?}"
+        );
+        puzzle::prop_assert!(
+            (cr.retries, cr.remaps, cr.fault_shed) == (0, 0, 0),
+            "an empty plan must never trip recovery: {cr:?}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn empty_plan_recovery_adds_zero_dispatch_allocations() {
+    // Zero-overhead contract, allocation half: a steady-state probe on the
+    // coordinator's dispatch thread performs exactly as many heap
+    // allocations with an empty-plan FaultyEngine + armed recovery as with
+    // the plain engine (the counting allocator is per-thread, so worker
+    // threads cannot flake this).
+    let scenario = Scenario::from_groups("chaos-alloc", &[vec![0, 1]]);
+    let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+    let harness = harness_for(&scenario, &genome, 29);
+    let perf = PerfModel::paper_calibrated();
+    let spec = LoadSpec::for_scenario(&scenario, &perf, 1.2, 10);
+    let measure = |h: &RuntimeHarness| -> (u64, ServeReport) {
+        let mut d = h.deploy(ClockMode::Virtual);
+        let _cold = d.probe(&spec, 41); // warm the pool, maps, and log capacity
+        let before = puzzle::util::alloc::thread_allocations();
+        let report = d.probe(&spec, 41);
+        let delta = puzzle::util::alloc::thread_allocations() - before;
+        d.shutdown();
+        (delta, report)
+    };
+    let (plain_allocs, plain_report) = measure(&harness);
+    let (chaos_allocs, chaos_report) =
+        measure(&harness.clone().with_fault_plan(FaultPlan::default()));
+    assert_eq!(
+        chaos_allocs, plain_allocs,
+        "empty-plan recovery changed the dispatch thread's allocation count"
+    );
+    assert_reports_identical(&chaos_report, &plain_report);
+}
+
+#[test]
+fn mem_deltas_attribute_pool_traffic_per_load() {
+    // Table 5 satellite: each report's pool counters cover exactly its own
+    // load (snapshot deltas around run_load), and the per-load deltas sum
+    // back to the warm coordinator's cumulative counters, which
+    // Coordinator::reset deliberately leaves untouched.
+    let scenario = Scenario::from_groups("mem-snap", &[vec![0, 1]]);
+    let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+    let harness = harness_for(&scenario, &genome, 31);
+    let perf = PerfModel::paper_calibrated();
+    let spec = LoadSpec::for_scenario(&scenario, &perf, 1.5, 8);
+    let mut d = harness.deploy(ClockMode::Virtual);
+    let first = d.probe(&spec, 41);
+    let second = d.probe(&spec, 41);
+    let cumulative = d.coordinator().pool_stats();
+    d.shutdown();
+    assert!(first.mem.pool.mallocs > 0, "cold pool staged nothing: {:?}", first.mem);
+    assert!(
+        second.mem.pool.mallocs <= first.mem.pool.mallocs,
+        "a warm pool must not allocate more than a cold one: {:?} then {:?}",
+        first.mem,
+        second.mem
+    );
+    assert_eq!(
+        first.mem.pool.mallocs + second.mem.pool.mallocs,
+        cumulative.1,
+        "per-load deltas must sum to the cumulative pool counters"
+    );
+    // Identical warm probes replay identical pool traffic.
+    let mut d2 = harness.deploy(ClockMode::Virtual);
+    let _cold = d2.probe(&spec, 41);
+    let again = d2.probe(&spec, 41);
+    d2.shutdown();
+    assert_eq!(again.mem.pool.mallocs, second.mem.pool.mallocs);
 }
 
 #[test]
