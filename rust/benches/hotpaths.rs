@@ -311,6 +311,26 @@ fn main() {
     }));
     lt_chaos_dep.shutdown();
 
+    // Zero-overhead contract of the telemetry plane: the same warm
+    // virtual-clock probe with no subscriber (disarmed — one relaxed atomic
+    // load per would-be event) vs an armed subscriber drained after every
+    // probe. bench_guard asserts telemetry-off <= plain × 1.05 as a
+    // same-run invariant; the subscriber bench is reported for the
+    // trajectory but unguarded (publishing real events has a real cost).
+    let mut lt_tel_off_dep = lt_virtual.deploy(ClockMode::Virtual);
+    all.push(bench("serve/loadtest_telemetry_off", 3.0, 20, || {
+        black_box(lt_tel_off_dep.probe(&virtual_spec, 7).served);
+    }));
+    lt_tel_off_dep.shutdown();
+    let mut lt_tel_sub_dep = lt_virtual.deploy(ClockMode::Virtual);
+    let mut lt_tel_rx = lt_tel_sub_dep.subscribe();
+    all.push(bench("serve/loadtest_telemetry_sub", 3.0, 20, || {
+        black_box(lt_tel_sub_dep.probe(&virtual_spec, 7).served);
+        black_box(lt_tel_rx.drain().len());
+    }));
+    drop(lt_tel_rx);
+    lt_tel_sub_dep.shutdown();
+
     // Saturation-probe deployment reuse: the same four α-probes, paying a
     // fresh Coordinator/Worker stack (~6 threads) per probe vs one warm
     // deployment reset between probes. Probes are bit-identical either way

@@ -65,6 +65,7 @@ pub use crate::serve::{
     Admission, ArrivalProcess, ClockMode, FaultEvent, FaultPlan, GroupLoad, LoadSpec,
     SaturationOptions, ServeReport,
 };
+pub use crate::telemetry::{MetricsAggregator, TelemetryEvent, TelemetryRx};
 
 /// Wall-seconds per simulated second used by [`Analysis::deploy`]'s default
 /// simulated engine (1 simulated ms replays in 50 µs).
@@ -715,6 +716,17 @@ impl Deployment {
                 slack,
             ),
         }
+    }
+
+    /// Subscribe to this deployment's telemetry stream: arms the
+    /// coordinator's pre-allocated event ring so subsequent loads emit
+    /// [`TelemetryEvent`]s, and returns the non-blocking receiver. Drain
+    /// with [`TelemetryRx::drain`]; fold into a [`MetricsAggregator`] to
+    /// cross-check a [`ServeReport`]. Dropping the receiver disarms the
+    /// stream (unsubscribed deployments pay one relaxed atomic load per
+    /// would-be event and allocate nothing).
+    pub fn subscribe(&self) -> TelemetryRx {
+        self.coordinator.subscribe()
     }
 
     /// Network indices of one model group. Panics on an out-of-range group

@@ -87,7 +87,7 @@ fn main() {
     }
 
     // Layer 2: same-run invariants (machine-independent).
-    let invariants: [(&str, &str, f64); 10] = [
+    let invariants: [(&str, &str, f64); 11] = [
         // Parallel must not lose to serial by more than scheduling jitter
         // (on a single-core runner both take the same path).
         ("analyzer/parallel_generation", "analyzer/serial_generation", 1.10),
@@ -114,6 +114,12 @@ fn main() {
         // branch per task: the chaos-off probe must track the plain probe
         // to within jitter — the fault layer's zero-overhead contract.
         ("serve/loadtest_chaos_off", "serve/loadtest_plain", 1.05),
+        // With no telemetry subscriber the event bus is one relaxed atomic
+        // load per would-be event: the telemetry-off probe must track the
+        // plain probe to within jitter — the no-subscriber invisibility
+        // contract (the armed `loadtest_telemetry_sub` bench is recorded
+        // for the trajectory but unguarded: real events have a real cost).
+        ("serve/loadtest_telemetry_off", "serve/loadtest_plain", 1.05),
         // Reusing one warm deployment across saturation probes saves the
         // per-probe Coordinator/Worker spawn: it must never lose to fresh
         // deploys running the identical probe sequence.

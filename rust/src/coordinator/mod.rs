@@ -45,6 +45,7 @@ use crate::graph::{Network, Partition, Subgraph, SubgraphId};
 use crate::mem::{SharedArena, TensorPool};
 use crate::perf::PerfModel;
 use crate::serve::{Arrival, Clock, VirtualClock, WallClock};
+use crate::telemetry::{Telemetry, TelemetryEvent, TelemetryRx};
 use crate::worker::Worker;
 use crate::{DataType, ExecConfig, Processor};
 
@@ -321,6 +322,10 @@ pub struct Coordinator {
     /// Watchdog/retry/remap state; `None` (the default) keeps the dispatch
     /// and completion paths bit-identical to the recovery-less runtime.
     recovery: Option<Recovery>,
+    /// The telemetry plane ([`crate::telemetry`]): disarmed (no subscriber)
+    /// every emission site is one relaxed atomic load and a branch, so the
+    /// dispatch path stays allocation-free and bit-identical.
+    telemetry: Telemetry,
 }
 
 impl Coordinator {
@@ -370,7 +375,47 @@ impl Coordinator {
             dropped: Vec::new(),
             next_request: 0,
             recovery: None,
+            telemetry: Telemetry::new(),
         }
+    }
+
+    /// Attach a telemetry subscriber: subsequent serving activity is
+    /// published to the returned [`TelemetryRx`] as [`TelemetryEvent`]s
+    /// (non-blocking drain, counted drop-on-full). While no subscriber is
+    /// attached the telemetry plane is contractually invisible — see
+    /// [`crate::telemetry`].
+    pub fn subscribe(&self) -> TelemetryRx {
+        self.telemetry.subscribe()
+    }
+
+    /// Change the telemetry heartbeat period (clock seconds; default
+    /// [`crate::telemetry::DEFAULT_HEARTBEAT_PERIOD`]). Takes effect at the
+    /// next load window.
+    pub fn set_telemetry_heartbeat(&mut self, period: f64) {
+        self.telemetry.set_heartbeat_period(period);
+    }
+
+    /// Start a new telemetry load window: heartbeat schedule and ρ
+    /// accumulators rewind to t = 0 so warm replays emit the same stream
+    /// as fresh deployments. Load drivers call this at load start.
+    pub(crate) fn begin_telemetry_window(&mut self) {
+        self.telemetry.begin_window();
+    }
+
+    /// Emit every telemetry heartbeat due at clock time `now`, carrying the
+    /// coordinator-side gauges (ready-queue depths, busy workers, in-flight
+    /// group requests). One load + branch when disarmed or not yet due.
+    fn telemetry_heartbeat(&mut self, now: f64) {
+        if !self.telemetry.heartbeat_due(now) {
+            return;
+        }
+        let mut queue = [0u32; 3];
+        for (q, r) in queue.iter_mut().zip(self.ready.iter()) {
+            *q = r.len() as u32;
+        }
+        let busy = self.busy.iter().filter(|&&b| b).count() as u32;
+        let in_flight = self.group_progress.len() as u32;
+        self.telemetry.emit_heartbeats(now, queue, busy, in_flight);
     }
 
     /// Turn on the self-healing machinery: per-task watchdog deadlines,
@@ -458,6 +503,12 @@ impl Coordinator {
                     arrival,
                     reason: DropReason::Overload,
                 });
+                self.telemetry.emit(TelemetryEvent::Dropped {
+                    time: arrival,
+                    group,
+                    request: seq,
+                    reason: DropReason::Overload,
+                });
                 return None;
             }
         }
@@ -465,6 +516,7 @@ impl Coordinator {
             (group, seq),
             GroupProgress { outstanding: members.len(), arrival, deadline },
         );
+        self.telemetry.emit(TelemetryEvent::Admitted { time: arrival, group, request: seq });
         for &net_idx in members {
             let n_sg = self.solutions[net_idx].partition.subgraphs.len();
             let mut pending: Vec<usize> = vec![0; n_sg];
@@ -616,6 +668,14 @@ impl Coordinator {
             inputs,
             start: self.clock.now(),
         };
+        self.telemetry.emit(TelemetryEvent::TaskDispatch {
+            time: task.start,
+            group,
+            request: seq,
+            network: net_idx,
+            subgraph: sg.0,
+            processor: config.processor,
+        });
         self.workers[config.processor.index()].submit(task);
     }
 
@@ -627,6 +687,10 @@ impl Coordinator {
         let mut processed = 0;
         self.dispatch_ready();
         while !self.live.is_empty() && Instant::now() < deadline {
+            if self.telemetry.armed() {
+                let now = self.clock.now();
+                self.telemetry_heartbeat(now);
+            }
             match self.completion_rx.recv_timeout(std::time::Duration::from_millis(20)) {
                 Ok(msg) => {
                     let now = self.clock.now();
@@ -707,6 +771,7 @@ impl Coordinator {
             rec.remapped.clear();
             rec.request_faults.clear();
         }
+        self.telemetry.begin_window();
         settled
     }
 
@@ -720,6 +785,10 @@ impl Coordinator {
     /// already-available completions. Returns completions processed.
     pub fn poll(&mut self) -> usize {
         let mut processed = 0;
+        if self.telemetry.armed() {
+            let now = self.clock.now();
+            self.telemetry_heartbeat(now);
+        }
         loop {
             self.dispatch_ready();
             match self.completion_rx.try_recv() {
@@ -763,6 +832,9 @@ impl Coordinator {
         let vdyn: Arc<dyn Clock> = vclock.clone();
         let prev_clock = std::mem::replace(&mut self.clock, vdyn);
         let served_before = self.served.len();
+        // Telemetry heartbeats derive from the virtual event times, so the
+        // emitted stream is part of the deterministic-replay contract.
+        self.telemetry.begin_window();
 
         let mut events: BinaryHeap<VEvent> = BinaryHeap::new();
         let mut order: u64 = 0;
@@ -778,6 +850,10 @@ impl Coordinator {
         while let Some(ev) = events.pop() {
             let now = ev.time;
             vclock.advance_to(now);
+            // Heartbeats due before this event fire first, stamped with
+            // their schedule times (deterministic: derived from event times,
+            // not the OS clock).
+            self.telemetry_heartbeat(now);
             self.process_virtual_event(ev, now, comm, groups, &mut events, &mut order);
             // Drain co-temporal events before dispatching, so a completion
             // and a ready edge at the same instant cannot race the priority
@@ -951,14 +1027,14 @@ impl Coordinator {
         }
         let profiled = self.profiled_duration(group, seq, net_idx, sg);
         let key = (group, seq, net_idx, sg.0);
-        let action = {
+        let (action, attempt) = {
             let rec = self.recovery.as_mut().expect("recovery enabled");
             let attempts = rec.attempts.entry(key).or_insert(0);
             *attempts += 1;
             let attempt = *attempts;
             let faults = rec.request_faults.entry((group, seq)).or_default();
             faults.degraded += msg.elapsed.max(0.0);
-            if attempt <= rec.opts.max_retries {
+            let action = if attempt <= rec.opts.max_retries {
                 let backoff =
                     rec.opts.backoff_factor * profiled * (1u64 << (attempt - 1)) as f64;
                 faults.retries += 1;
@@ -968,10 +1044,20 @@ impl Coordinator {
                 FaultAction::Remap
             } else {
                 FaultAction::Shed
-            }
+            };
+            (action, attempt)
         };
         match action {
             FaultAction::Retry { backoff } => {
+                self.telemetry.emit(TelemetryEvent::Retry {
+                    time: now,
+                    group,
+                    request: seq,
+                    network: net_idx,
+                    subgraph: sg.0,
+                    attempt,
+                    backoff,
+                });
                 vec![ReadySub { group, seq, net_idx, sg, ready_at: now + backoff }]
             }
             FaultAction::Remap => {
@@ -994,17 +1080,26 @@ impl Coordinator {
                 }
                 let Some(cfg) = best_cfg else {
                     // No alternative processor can run this subgraph.
-                    self.shed_request(group, seq);
+                    self.shed_request(group, seq, now);
                     return Vec::new();
                 };
                 let rec = self.recovery.as_mut().expect("recovery enabled");
                 rec.remapped.insert(key, cfg);
                 rec.attempts.insert(key, 0);
                 rec.request_faults.entry((group, seq)).or_default().remaps += 1;
+                self.telemetry.emit(TelemetryEvent::Remap {
+                    time: now,
+                    group,
+                    request: seq,
+                    network: net_idx,
+                    subgraph: sg.0,
+                    from: current,
+                    to: cfg.processor,
+                });
                 vec![ReadySub { group, seq, net_idx, sg, ready_at: now }]
             }
             FaultAction::Shed => {
-                self.shed_request(group, seq);
+                self.shed_request(group, seq, now);
                 Vec::new()
             }
         }
@@ -1013,7 +1108,9 @@ impl Coordinator {
     /// Abandon a group request that recovery could not heal: drop all its
     /// live state and record it as [`DropReason::FaultShed`]. Tasks of the
     /// request already sitting in ready queues are skipped at pop time.
-    fn shed_request(&mut self, group: usize, seq: u64) {
+    /// `now` stamps the shed decision in the telemetry stream (the record
+    /// itself keeps the arrival timestamp, as admission drops do).
+    fn shed_request(&mut self, group: usize, seq: u64, now: f64) {
         let Some(progress) = self.group_progress.remove(&(group, seq)) else {
             return;
         };
@@ -1023,6 +1120,12 @@ impl Coordinator {
             group,
             request: seq,
             arrival: progress.arrival,
+            reason: DropReason::FaultShed,
+        });
+        self.telemetry.emit(TelemetryEvent::Dropped {
+            time: now,
+            group,
+            request: seq,
             reason: DropReason::FaultShed,
         });
         if let Some(rec) = self.recovery.as_mut() {
@@ -1061,10 +1164,21 @@ impl Coordinator {
         // recovery can run a subgraph away from its solution-assigned
         // processor.
         self.busy[msg.processor.index()] = false;
+        self.telemetry.on_busy(msg.processor, msg.elapsed.max(0.0));
 
         if self.recovery.is_some() && msg.error.is_some() {
             return self.handle_failure(&msg, now);
         }
+
+        self.telemetry.emit(TelemetryEvent::TaskComplete {
+            time: now,
+            group,
+            request: seq,
+            network: net_idx,
+            subgraph: msg.subgraph.0,
+            processor: msg.processor,
+            elapsed: msg.elapsed,
+        });
 
         let mut newly_ready = Vec::new();
         let Some(live) = self.live.get_mut(&(group, seq, net_idx)) else {
@@ -1168,6 +1282,7 @@ impl Coordinator {
                     }
                     None => (0, 0, 0.0),
                 };
+                let violated = deadline.is_some_and(|d| makespan > d);
                 self.served.push(ServedRequest {
                     group,
                     request: seq,
@@ -1175,11 +1290,32 @@ impl Coordinator {
                     completion: now,
                     makespan,
                     deadline,
-                    violated: deadline.is_some_and(|d| makespan > d),
+                    violated,
                     retries,
                     remaps,
                     degraded,
                 });
+                self.telemetry.emit(TelemetryEvent::Served {
+                    time: now,
+                    group,
+                    request: seq,
+                    arrival,
+                    makespan,
+                    deadline,
+                    violated,
+                    retries,
+                    remaps,
+                    degraded,
+                });
+                if violated {
+                    self.telemetry.emit(TelemetryEvent::DeadlineViolation {
+                        time: now,
+                        group,
+                        request: seq,
+                        makespan,
+                        deadline: deadline.expect("violated implies a deadline"),
+                    });
+                }
             }
         }
         newly_ready

@@ -324,6 +324,12 @@ pub fn fig14_makespan_distribution(
         let mut deployment =
             RuntimeHarness::for_solutions(sols.clone(), groups.clone(), perf.clone(), 41)
                 .deploy(ClockMode::Virtual);
+        // Telemetry cross-check: one subscription across every probe of
+        // this deployment; each probe's drained events, folded on their
+        // own, must reproduce that probe's ServeReport exactly (the
+        // aggregation-consistency contract, exercised here on a production
+        // figure path rather than only in tests).
+        let mut telemetry = deployment.subscribe();
         for &alpha in &[1.4, 0.9] {
             // Paper omits NPU Only at tight periods (system failure from
             // accumulated tasks); we keep it at the lenient period only.
@@ -332,9 +338,14 @@ pub fn fig14_makespan_distribution(
             }
             let spec = LoadSpec::for_scenario(&scenario, pm, alpha, budget.sim_requests);
             let report = deployment.probe(&spec, serve::probe_seed(41, 0, alpha));
+            let mut agg = crate::telemetry::MetricsAggregator::new();
+            agg.fold_all(&telemetry.drain());
+            agg.consistent_with(&report)
+                .expect("fig14 telemetry aggregation must match the probe's serve report");
             let avgs: Vec<f64> = (0..groups.len()).map(|g| report.avg_makespan(g)).collect();
             rows.push((name.to_string(), alpha, avgs));
         }
+        drop(telemetry);
         deployment.shutdown();
     }
     rows

@@ -53,6 +53,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod serve;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 pub mod worker;
 

@@ -79,6 +79,7 @@ const USAGE: &str = "usage: puzzle <analyze|serve|loadtest|profile|comm-bench|sc
                [--burst 4] [--max-inflight N] [--admission queue|little] [--all-patterns]
                [--wall] [--time-scale 0.05] [--quick] [--no-saturation] [--seed 23]
                [--chaos slowdown:npu:2.0:0:0.5,stall:gpu:0.1:0.05,transient:0.02]
+               [--monitor] [--monitor-json FILE]
   profile
   comm-bench
   scenario-gen --seed 23
@@ -253,7 +254,7 @@ fn serve_cmd(
 /// persistent deployment reused across every α-probe). `--admission little`
 /// swaps the unbounded queue for a Little's-law derived in-flight cap.
 fn loadtest_cmd(pm: &PerfModel, args: &Args) -> Result<()> {
-    use puzzle::api::{Admission, LoadSpec, OverloadPolicy};
+    use puzzle::api::{Admission, LoadSpec, MetricsAggregator, OverloadPolicy, TelemetryEvent};
     use std::ops::ControlFlow;
 
     let idx = parse_models(&args.get_str("models", "0,1,6"));
@@ -342,7 +343,70 @@ fn loadtest_cmd(pm: &PerfModel, args: &Args) -> Result<()> {
         }
         spec = spec.with_policy(policy);
     }
+    // `--monitor` / `--monitor-json` subscribe to the deployment's
+    // telemetry stream for the primary load: a background thread drains the
+    // event ring while the load runs (live heartbeat lines on the TTY with
+    // `--monitor`), and the folded totals are cross-checked against the
+    // ServeReport after the run. The subscription is dropped before the
+    // warm replays and the saturation search, so those run disarmed.
+    let monitor_json = args.options.get("monitor-json").cloned();
+    let monitor = args.flags.contains("monitor") || monitor_json.is_some();
+    let monitor_thread = if monitor {
+        let mut rx = deployment.subscribe();
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop_signal = stop.clone();
+        let live = args.flags.contains("monitor");
+        let handle = std::thread::spawn(move || {
+            let mut events: Vec<TelemetryEvent> = Vec::new();
+            loop {
+                let done = stop_signal.load(std::sync::atomic::Ordering::Acquire);
+                for ev in rx.drain() {
+                    if live {
+                        if let TelemetryEvent::Heartbeat { time, rho, queue, busy, in_flight } = ev
+                        {
+                            println!(
+                                "[monitor] t={time:9.4}s rho cpu/gpu/npu {:.2}/{:.2}/{:.2} queue {:?} busy {busy} in-flight {in_flight}",
+                                rho[0], rho[1], rho[2], queue
+                            );
+                        }
+                    }
+                    events.push(ev);
+                }
+                if done {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+            let dropped = rx.dropped();
+            (events, dropped)
+        });
+        Some((handle, stop))
+    } else {
+        None
+    };
+
     let report = deployment.serve_load(&spec);
+
+    if let Some((handle, stop)) = monitor_thread {
+        stop.store(true, std::sync::atomic::Ordering::Release);
+        let (events, ring_dropped) = handle.join().expect("monitor thread panicked");
+        let mut agg = MetricsAggregator::new();
+        agg.fold_all(&events);
+        println!("telemetry: {} events ({} lost to ring overflow)", events.len(), ring_dropped);
+        println!("  {}", agg.summary_line());
+        match agg.consistent_with(&report) {
+            Ok(()) => println!("  aggregator totals match the serve report"),
+            Err(e) => println!("  WARNING: aggregator/report mismatch: {e}"),
+        }
+        if let Some(path) = &monitor_json {
+            use std::io::Write;
+            let mut f = std::fs::File::create(path)?;
+            for ev in &events {
+                writeln!(f, "{}", ev.to_json_line())?;
+            }
+            println!("  wrote {} JSON-lines telemetry events to {path}", events.len());
+        }
+    }
 
     println!(
         "loadtest: pattern {pattern}, alpha {alpha:.2}, {} clock",

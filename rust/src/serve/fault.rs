@@ -65,7 +65,28 @@ pub enum FaultEvent {
         /// Per-task failure probability in `[0, 1]`.
         prob: f64,
     },
+    /// Correlated fault bursts: `processor` flaps between healthy and
+    /// transient-prone windows. Each `period` seconds, the first
+    /// `duty × period` seconds are faulty — tasks starting inside a faulty
+    /// window fail with probability [`FLAP_TRANSIENT_PROB`], drawn from the
+    /// same seeded fault stream as [`FaultEvent::Transient`]. Clustered
+    /// failures on one processor drive recovery through retry exhaustion
+    /// into the remap memo far harder than independent transients do.
+    Flap {
+        /// Flapping processor.
+        processor: Processor,
+        /// Full healthy + faulty cycle length, clock seconds.
+        period: f64,
+        /// Fraction of each period spent transient-prone, in `[0, 1]`.
+        duty: f64,
+    },
 }
+
+/// Per-task failure probability inside a [`FaultEvent::Flap`] faulty
+/// window. A constant: the flap's knobs are *where* the bad windows fall
+/// (`period`, `duty`), while the failure draws come from the plan's
+/// existing seeded fault stream.
+pub const FLAP_TRANSIENT_PROB: f64 = 0.5;
 
 /// A seeded chaos scenario: a set of [`FaultEvent`]s plus the seed salt of
 /// the transient-failure draw stream. [`FaultPlan::default`] (no events,
@@ -106,6 +127,12 @@ impl FaultPlan {
         self
     }
 
+    /// Add a [`FaultEvent::Flap`] healthy/faulty cycle (builder style).
+    pub fn flap(mut self, processor: Processor, period: f64, duty: f64) -> Self {
+        self.events.push(FaultEvent::Flap { processor, period, duty });
+        self
+    }
+
     /// True when the plan injects nothing — the zero-overhead fast path.
     pub fn is_empty(&self) -> bool {
         self.events.is_empty()
@@ -138,6 +165,23 @@ impl FaultPlan {
         wait
     }
 
+    /// True when a task starting on `p` at time `t` falls inside a faulty
+    /// window of some [`FaultEvent::Flap`] on that processor: the first
+    /// `duty × period` seconds of each cycle are faulty.
+    pub fn flap_active(&self, p: Processor, t: f64) -> bool {
+        for ev in &self.events {
+            if let FaultEvent::Flap { processor, period, duty } = *ev {
+                if processor == p
+                    && period > 0.0
+                    && t.rem_euclid(period) < duty.clamp(0.0, 1.0) * period
+                {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
     /// Duration multiplier for a task starting on `p` at time `t`: the
     /// product of all active [`FaultEvent::Slowdown`] factors (1.0 when
     /// none is active).
@@ -159,6 +203,7 @@ impl FaultPlan {
     /// * `slowdown:<proc>:<factor>:<from>:<until>`
     /// * `stall:<proc>:<at>:<duration>`
     /// * `transient:<prob>`
+    /// * `flap:<proc>:<period>:<duty>`
     ///
     /// with `<proc>` one of `cpu`/`gpu`/`npu` (case-insensitive) and times
     /// in simulated seconds. Example:
@@ -197,9 +242,16 @@ impl FaultPlan {
                     }
                     plan = plan.transient(num(1)?);
                 }
+                "flap" => {
+                    if fields.len() != 4 {
+                        return Err(anyhow!("flap takes proc:period:duty, got `{part}`"));
+                    }
+                    let p = parse_processor(fields[1], part)?;
+                    plan = plan.flap(p, num(2)?, num(3)?);
+                }
                 other => {
                     return Err(anyhow!(
-                        "unknown chaos event `{other}` (expected slowdown/stall/transient)"
+                        "unknown chaos event `{other}` (expected slowdown/stall/transient/flap)"
                     ))
                 }
             }
@@ -239,6 +291,10 @@ pub struct FaultyEngine {
     plan: FaultPlan,
     /// Cached combined transient probability (events never change).
     transient: f64,
+    /// Cached "plan has a flap event" flag: plans without one must not
+    /// reach the flap check at all, so their fault-stream draw order stays
+    /// exactly what it was before flaps existed (replay compatibility).
+    has_flap: bool,
     rng: Mutex<Rng>,
 }
 
@@ -253,8 +309,15 @@ impl FaultyEngine {
         plan: FaultPlan,
     ) -> FaultyEngine {
         let transient = plan.transient_prob();
+        let has_flap = plan.events.iter().any(|e| matches!(e, FaultEvent::Flap { .. }));
         let rng = Mutex::new(Rng::seed_from_u64(fault_stream_seed(seed, plan.seed)));
-        FaultyEngine { inner: SimEngine::new(perf, time_scale, noisy, seed), plan, transient, rng }
+        FaultyEngine {
+            inner: SimEngine::new(perf, time_scale, noisy, seed),
+            plan,
+            transient,
+            has_flap,
+            rng,
+        }
     }
 
     /// The attached plan.
@@ -290,6 +353,17 @@ impl Engine for FaultyEngine {
         if self.transient > 0.0 && self.rng.lock().unwrap().gen_bool(self.transient) {
             out.tensors.clear();
             out.error = Some(format!("transient fault on {}", p.name()));
+        }
+        // Flap windows draw from the same fault stream, but only when the
+        // task actually starts inside one — and never for flap-less plans,
+        // whose draw order must match the pre-flap fault stream exactly.
+        if out.error.is_none()
+            && self.has_flap
+            && self.plan.flap_active(p, task.start)
+            && self.rng.lock().unwrap().gen_bool(FLAP_TRANSIENT_PROB)
+        {
+            out.tensors.clear();
+            out.error = Some(format!("flap fault on {}", p.name()));
         }
         Ok(out)
     }
@@ -401,18 +475,78 @@ mod tests {
 
     #[test]
     fn spec_parsing_roundtrips_and_rejects_garbage() {
-        let plan =
-            FaultPlan::parse("stall:npu:0.005:0.05, slowdown:gpu:1.5:0:1, transient:0.02", 5)
-                .unwrap();
-        assert_eq!(plan.events.len(), 3);
+        let plan = FaultPlan::parse(
+            "stall:npu:0.005:0.05, slowdown:gpu:1.5:0:1, transient:0.02, flap:npu:1.0:0.5",
+            5,
+        )
+        .unwrap();
+        assert_eq!(plan.events.len(), 4);
         assert_eq!(plan.seed, 5);
         assert!(plan.stall_wait(Processor::Npu, 0.01) > 0.0);
         assert!((plan.slowdown_factor(Processor::Gpu, 0.5) - 1.5).abs() < 1e-12);
         assert!((plan.transient_prob() - 0.02).abs() < 1e-12);
+        assert_eq!(
+            plan.events[3],
+            FaultEvent::Flap { processor: Processor::Npu, period: 1.0, duty: 0.5 }
+        );
         assert!(FaultPlan::parse("melt:npu:1", 0).is_err());
         assert!(FaultPlan::parse("stall:tpu:0:1", 0).is_err());
         assert!(FaultPlan::parse("slowdown:npu:2:0", 0).is_err());
         assert!(FaultPlan::parse("transient:lots", 0).is_err());
+        assert!(FaultPlan::parse("flap:npu:1.0", 0).is_err());
+        assert!(FaultPlan::parse("flap:dsp:1.0:0.5", 0).is_err());
+    }
+
+    #[test]
+    fn flap_windows_gate_where_failures_can_happen() {
+        let (net, part, pm) = fixture();
+        // 1 s cycle, first half faulty.
+        let plan = FaultPlan::new(0).flap(Processor::Npu, 1.0, 0.5);
+        assert!(plan.flap_active(Processor::Npu, 0.2));
+        assert!(!plan.flap_active(Processor::Npu, 0.7));
+        assert!(plan.flap_active(Processor::Npu, 7.3), "windows repeat every period");
+        assert!(!plan.flap_active(Processor::Gpu, 0.2), "other processors unaffected");
+        let eng = FaultyEngine::new(pm, 0.0, false, 7, plan);
+        // Outside the faulty window a task can never fail...
+        for i in 0..32 {
+            let healthy = run_at(&eng, &net, &part, 0.6 + (i as f64) * 1.0);
+            assert!(healthy.error.is_none(), "healthy-window task {i} failed");
+        }
+        // ...inside it, failures occur at FLAP_TRANSIENT_PROB and mix.
+        let faulty: Vec<bool> = (0..32)
+            .map(|i| run_at(&eng, &net, &part, 0.1 + (i as f64) * 1.0).error.is_some())
+            .collect();
+        assert!(faulty.iter().any(|&f| f) && faulty.iter().any(|&f| !f), "{faulty:?}");
+    }
+
+    #[test]
+    fn flap_draws_replay_bit_identically_across_reseeds() {
+        let (net, part, pm) = fixture();
+        let mk = |seed| {
+            FaultyEngine::new(
+                pm.clone(),
+                0.0,
+                true,
+                seed,
+                FaultPlan::new(11).flap(Processor::Npu, 0.01, 0.4).transient(0.1),
+            )
+        };
+        let outcomes = |eng: &FaultyEngine| -> Vec<(u64, bool)> {
+            (0..48)
+                .map(|i| {
+                    let out = run_at(eng, &net, &part, (i as f64) * 0.003);
+                    (out.elapsed.to_bits(), out.error.is_some())
+                })
+                .collect()
+        };
+        let a = outcomes(&mk(7));
+        assert_eq!(a, outcomes(&mk(7)), "same seed must replay the same flap stream");
+        assert_ne!(a, outcomes(&mk(8)), "distinct seeds must draw distinct streams");
+        // A warm engine reseeded to s matches a fresh engine seeded s.
+        let warm = mk(3);
+        let _burn = outcomes(&warm);
+        warm.reseed(7);
+        assert_eq!(outcomes(&warm), a);
     }
 
     #[test]

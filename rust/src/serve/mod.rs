@@ -38,7 +38,7 @@
 
 mod fault;
 
-pub use fault::{FaultEvent, FaultPlan, FaultyEngine};
+pub use fault::{FaultEvent, FaultPlan, FaultyEngine, FLAP_TRANSIENT_PROB};
 
 use std::ops::ControlFlow;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -56,6 +56,7 @@ use crate::graph::Network;
 use crate::metrics;
 use crate::perf::PerfModel;
 use crate::scenario::Scenario;
+use crate::telemetry::TelemetryRx;
 use crate::util::rng::Rng;
 
 // ---------------------------------------------------------------------------
@@ -687,6 +688,9 @@ pub fn run_load(
     let arena_before = coord.arena.stats.snapshot();
     let arrivals = generate_arrivals(&spec.groups);
     let offered = arrivals.len();
+    // New telemetry window: heartbeat schedule and ρ accumulators rewind to
+    // this load's t = 0 (run_virtual re-begins its own window — idempotent).
+    coord.begin_telemetry_window();
     let t0 = Instant::now();
     let scale = match spec.mode {
         ClockMode::Virtual => {
@@ -723,6 +727,14 @@ pub fn run_load(
 /// Wall-clock open-loop driver: release each arrival when the wall reaches
 /// its (scaled) timestamp, polling completions in between; drain the tail
 /// under `timeout`.
+///
+/// Release timing is a park/spin-tail precise sleeper: coarse waits go
+/// through `std::thread::park_timeout` in ≤ 500 µs slices (so completions
+/// keep being polled at the historical cadence), and the last
+/// [`SPIN_TAIL`] before the target busy-spins — release error is bounded
+/// by scheduler wakeup jitter *within* the spin tail instead of the ~0.5 ms
+/// sleep granularity of the former `thread::sleep` loop (asserted in the
+/// wall-mode release-error test).
 fn drive_wall(
     coord: &mut Coordinator,
     groups: &[Vec<usize>],
@@ -730,16 +742,25 @@ fn drive_wall(
     scale: f64,
     timeout: Duration,
 ) {
+    /// Busy-spin window before each release target: long enough to absorb
+    /// `park_timeout`'s wakeup overshoot, short enough to keep the burned
+    /// CPU negligible at serving periods.
+    const SPIN_TAIL: f64 = 300e-6;
     let t0 = Instant::now();
     for a in arrivals {
         let target = a.time * scale;
         loop {
             coord.poll();
-            let elapsed = t0.elapsed().as_secs_f64();
-            if elapsed >= target {
+            let remaining = target - t0.elapsed().as_secs_f64();
+            if remaining <= SPIN_TAIL {
                 break;
             }
-            std::thread::sleep(Duration::from_secs_f64((target - elapsed).min(500e-6)));
+            std::thread::park_timeout(Duration::from_secs_f64(
+                (remaining - SPIN_TAIL).min(500e-6),
+            ));
+        }
+        while t0.elapsed().as_secs_f64() < target {
+            std::hint::spin_loop();
         }
         let now = coord.now();
         coord.submit_group_at(a.group, &groups[a.group], now, a.deadline.map(|d| d * scale));
@@ -955,6 +976,15 @@ impl WarmDeployment {
     /// Read access to the live coordinator (inspection, tests).
     pub fn coordinator(&self) -> &Coordinator {
         &self.coordinator
+    }
+
+    /// Attach a telemetry subscriber to the warm stack: subsequent probes
+    /// publish their [`crate::telemetry::TelemetryEvent`] stream to the
+    /// returned handle (non-blocking drain, counted drop-on-full). Without
+    /// a subscriber the telemetry plane is contractually invisible — see
+    /// [`crate::telemetry`].
+    pub fn subscribe(&self) -> TelemetryRx {
+        self.coordinator.subscribe()
     }
 
     /// Reset the warm stack, re-seed engine noise to `seed`, and push one

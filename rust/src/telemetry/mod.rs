@@ -1,0 +1,1097 @@
+//! Telemetry plane: a bounded, lock-free serving event bus with a
+//! subscriber API and in-process aggregation (observability for the
+//! serving runtime).
+//!
+//! The serving stack historically reported only post-mortem: a
+//! [`crate::serve::ServeReport`] after the load finished. This module adds
+//! the *during*: the Coordinator emits compact, fixed-size
+//! [`TelemetryEvent`]s — admissions, drops (with reason), per-processor
+//! task dispatch/completion, recovery activity (retry/remap/shed), served
+//! records, and periodic heartbeats carrying per-processor utilization,
+//! ready-queue depths, and in-flight counts — into a bounded
+//! single-producer ring ([`TelemetryBus`]). A subscriber
+//! ([`TelemetryBus::subscribe`] → [`TelemetryRx`]) drains the ring without
+//! ever blocking the producer: when the ring is full the event is counted
+//! and dropped ([`TelemetryRx::dropped`]), never waited on — a slow
+//! subscriber cannot stall dispatch.
+//!
+//! ## The fifth determinism contract: no-subscriber invisibility
+//!
+//! With no subscriber attached the bus is **disarmed**: every emission
+//! site costs one relaxed atomic load and a branch — no event is built, no
+//! slot is written, no allocation happens (counting-allocator tested), and
+//! the serving schedule is bit-identical to the subscriber-less runtime
+//! (bench-guarded within 1.05× of the plain load test). Events are stamped
+//! with the active [`crate::serve::Clock`], so virtual-clock replays of the
+//! same seed emit bit-identical streams — fresh deployment or warm
+//! ([`crate::serve::WarmDeployment`]) — including every retry and remap
+//! under a chaos plan.
+//!
+//! [`MetricsAggregator`] folds a drained stream back into totals that
+//! exactly reproduce the final report
+//! ([`MetricsAggregator::consistent_with`], tested per arrival pattern).
+#![warn(missing_docs)]
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::DropReason;
+use crate::Processor;
+
+/// Default event-ring capacity (events). Allocated once at deployment
+/// time, never on the dispatch path.
+pub const DEFAULT_RING_CAPACITY: usize = 16_384;
+
+/// Default heartbeat period, clock seconds (virtual seconds under the
+/// virtual clock, wall seconds otherwise).
+pub const DEFAULT_HEARTBEAT_PERIOD: f64 = 0.01;
+
+/// One serving-runtime event. Every variant is `Copy` and heap-free, so
+/// publishing an event writes a fixed-size slot and nothing else.
+/// Timestamps come from the coordinator's active [`crate::serve::Clock`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TelemetryEvent {
+    /// A group request passed admission.
+    Admitted {
+        /// Arrival timestamp, clock seconds.
+        time: f64,
+        /// Model group of the request.
+        group: usize,
+        /// Request sequence number.
+        request: u64,
+    },
+    /// A group request was rejected at admission ([`DropReason::Overload`])
+    /// or abandoned by recovery ([`DropReason::FaultShed`]).
+    Dropped {
+        /// Drop timestamp, clock seconds (the arrival time for admission
+        /// rejections, the shed decision time for recovery sheds).
+        time: f64,
+        /// Model group of the request.
+        group: usize,
+        /// Request sequence number.
+        request: u64,
+        /// Why the request was dropped.
+        reason: DropReason,
+    },
+    /// A subgraph task was handed to a worker.
+    TaskDispatch {
+        /// Dispatch timestamp, clock seconds.
+        time: f64,
+        /// Model group of the owning request.
+        group: usize,
+        /// Request sequence number.
+        request: u64,
+        /// Network index within the deployment.
+        network: usize,
+        /// Subgraph index within the network's partition.
+        subgraph: usize,
+        /// Processor the task was dispatched to.
+        processor: Processor,
+    },
+    /// A subgraph task completed on its worker (successfully, or — without
+    /// recovery enabled — with an engine error logged into the record).
+    TaskComplete {
+        /// Completion timestamp, clock seconds.
+        time: f64,
+        /// Model group of the owning request.
+        group: usize,
+        /// Request sequence number.
+        request: u64,
+        /// Network index within the deployment.
+        network: usize,
+        /// Subgraph index within the network's partition.
+        subgraph: usize,
+        /// Processor that executed the task.
+        processor: Processor,
+        /// Engine-reported execution duration, seconds.
+        elapsed: f64,
+    },
+    /// Recovery retried a failed task attempt in place.
+    Retry {
+        /// Decision timestamp, clock seconds.
+        time: f64,
+        /// Model group of the owning request.
+        group: usize,
+        /// Request sequence number.
+        request: u64,
+        /// Network index within the deployment.
+        network: usize,
+        /// Subgraph index within the network's partition.
+        subgraph: usize,
+        /// Failed attempts so far on this (task, processor).
+        attempt: u32,
+        /// Backoff delay before the re-dispatch, seconds.
+        backoff: f64,
+    },
+    /// Recovery remapped a persistently failing task onto another
+    /// processor.
+    Remap {
+        /// Decision timestamp, clock seconds.
+        time: f64,
+        /// Model group of the owning request.
+        group: usize,
+        /// Request sequence number.
+        request: u64,
+        /// Network index within the deployment.
+        network: usize,
+        /// Subgraph index within the network's partition.
+        subgraph: usize,
+        /// Processor the task kept failing on.
+        from: Processor,
+        /// Processor the task was remapped to.
+        to: Processor,
+    },
+    /// A group request was served to completion (its last member network
+    /// finished). Carries the same fault accounting the
+    /// [`crate::coordinator::ServedRequest`] record folds, so an aggregated
+    /// stream reproduces the report's totals exactly.
+    Served {
+        /// Completion timestamp, clock seconds.
+        time: f64,
+        /// Model group of the request.
+        group: usize,
+        /// Request sequence number.
+        request: u64,
+        /// Open-loop arrival timestamp, clock seconds.
+        arrival: f64,
+        /// Makespan (completion − arrival), seconds.
+        makespan: f64,
+        /// Relative SLO deadline, when the load declared one.
+        deadline: Option<f64>,
+        /// `makespan > deadline`.
+        violated: bool,
+        /// Failed attempts retried in place for this request.
+        retries: u32,
+        /// Subgraph tasks remapped to another processor for this request.
+        remaps: u32,
+        /// Processor-seconds lost to failed attempts and retry backoff.
+        degraded: f64,
+    },
+    /// A served request missed its deadline (emitted immediately after the
+    /// corresponding [`TelemetryEvent::Served`]).
+    DeadlineViolation {
+        /// Completion timestamp, clock seconds.
+        time: f64,
+        /// Model group of the request.
+        group: usize,
+        /// Request sequence number.
+        request: u64,
+        /// Makespan of the violating request, seconds.
+        makespan: f64,
+        /// The deadline it missed, seconds.
+        deadline: f64,
+    },
+    /// Periodic runtime gauge snapshot, emitted every heartbeat period of
+    /// clock time while a subscriber is attached. Under the virtual clock
+    /// heartbeat times derive from the event schedule, so replays emit
+    /// bit-identical heartbeats.
+    Heartbeat {
+        /// Heartbeat timestamp, clock seconds (a multiple of the period).
+        time: f64,
+        /// Per-processor utilization since the load started: completed
+        /// busy seconds / elapsed clock seconds, indexed by
+        /// [`Processor::index`].
+        rho: [f64; 3],
+        /// Ready-queue depth per processor (schedulable tasks waiting for
+        /// an idle worker).
+        queue: [u32; 3],
+        /// Workers with a task in flight.
+        busy: u32,
+        /// Admitted, unfinished group requests.
+        in_flight: u32,
+    },
+}
+
+impl TelemetryEvent {
+    /// Short machine-readable tag of the variant (the `"event"` field of
+    /// the JSON encoding).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TelemetryEvent::Admitted { .. } => "admitted",
+            TelemetryEvent::Dropped { .. } => "dropped",
+            TelemetryEvent::TaskDispatch { .. } => "task_dispatch",
+            TelemetryEvent::TaskComplete { .. } => "task_complete",
+            TelemetryEvent::Retry { .. } => "retry",
+            TelemetryEvent::Remap { .. } => "remap",
+            TelemetryEvent::Served { .. } => "served",
+            TelemetryEvent::DeadlineViolation { .. } => "deadline_violation",
+            TelemetryEvent::Heartbeat { .. } => "heartbeat",
+        }
+    }
+
+    /// The event's clock timestamp, seconds.
+    pub fn time(&self) -> f64 {
+        match *self {
+            TelemetryEvent::Admitted { time, .. }
+            | TelemetryEvent::Dropped { time, .. }
+            | TelemetryEvent::TaskDispatch { time, .. }
+            | TelemetryEvent::TaskComplete { time, .. }
+            | TelemetryEvent::Retry { time, .. }
+            | TelemetryEvent::Remap { time, .. }
+            | TelemetryEvent::Served { time, .. }
+            | TelemetryEvent::DeadlineViolation { time, .. }
+            | TelemetryEvent::Heartbeat { time, .. } => time,
+        }
+    }
+
+    /// Encode the event as one JSON object (no trailing newline).
+    /// Hand-rolled — serde is unavailable offline — with fixed field names;
+    /// floats use Rust's shortest round-trip formatting, so equal streams
+    /// encode to byte-identical lines.
+    pub fn to_json_line(&self) -> String {
+        fn opt(d: Option<f64>) -> String {
+            d.map_or_else(|| "null".to_string(), |v| format!("{v}"))
+        }
+        match *self {
+            TelemetryEvent::Admitted { time, group, request } => format!(
+                "{{\"event\":\"admitted\",\"t\":{time},\"group\":{group},\"request\":{request}}}"
+            ),
+            TelemetryEvent::Dropped { time, group, request, reason } => {
+                let reason = match reason {
+                    DropReason::Overload => "overload",
+                    DropReason::FaultShed => "fault_shed",
+                };
+                format!(
+                    "{{\"event\":\"dropped\",\"t\":{time},\"group\":{group},\"request\":{request},\"reason\":\"{reason}\"}}"
+                )
+            }
+            TelemetryEvent::TaskDispatch { time, group, request, network, subgraph, processor } => {
+                format!(
+                    "{{\"event\":\"task_dispatch\",\"t\":{time},\"group\":{group},\"request\":{request},\"network\":{network},\"subgraph\":{subgraph},\"processor\":\"{}\"}}",
+                    processor.name()
+                )
+            }
+            TelemetryEvent::TaskComplete {
+                time,
+                group,
+                request,
+                network,
+                subgraph,
+                processor,
+                elapsed,
+            } => format!(
+                "{{\"event\":\"task_complete\",\"t\":{time},\"group\":{group},\"request\":{request},\"network\":{network},\"subgraph\":{subgraph},\"processor\":\"{}\",\"elapsed\":{elapsed}}}",
+                processor.name()
+            ),
+            TelemetryEvent::Retry { time, group, request, network, subgraph, attempt, backoff } => {
+                format!(
+                    "{{\"event\":\"retry\",\"t\":{time},\"group\":{group},\"request\":{request},\"network\":{network},\"subgraph\":{subgraph},\"attempt\":{attempt},\"backoff\":{backoff}}}"
+                )
+            }
+            TelemetryEvent::Remap { time, group, request, network, subgraph, from, to } => format!(
+                "{{\"event\":\"remap\",\"t\":{time},\"group\":{group},\"request\":{request},\"network\":{network},\"subgraph\":{subgraph},\"from\":\"{}\",\"to\":\"{}\"}}",
+                from.name(),
+                to.name()
+            ),
+            TelemetryEvent::Served {
+                time,
+                group,
+                request,
+                arrival,
+                makespan,
+                deadline,
+                violated,
+                retries,
+                remaps,
+                degraded,
+            } => format!(
+                "{{\"event\":\"served\",\"t\":{time},\"group\":{group},\"request\":{request},\"arrival\":{arrival},\"makespan\":{makespan},\"deadline\":{},\"violated\":{violated},\"retries\":{retries},\"remaps\":{remaps},\"degraded\":{degraded}}}",
+                opt(deadline)
+            ),
+            TelemetryEvent::DeadlineViolation { time, group, request, makespan, deadline } => {
+                format!(
+                    "{{\"event\":\"deadline_violation\",\"t\":{time},\"group\":{group},\"request\":{request},\"makespan\":{makespan},\"deadline\":{deadline}}}"
+                )
+            }
+            TelemetryEvent::Heartbeat { time, rho, queue, busy, in_flight } => format!(
+                "{{\"event\":\"heartbeat\",\"t\":{time},\"rho\":[{},{},{}],\"queue\":[{},{},{}],\"busy\":{busy},\"in_flight\":{in_flight}}}",
+                rho[0], rho[1], rho[2], queue[0], queue[1], queue[2]
+            ),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The ring
+
+/// One pre-initialized ring slot. `Sync` is sound because slot access is
+/// coordinated through the ring's head/tail counters: the producer writes a
+/// slot only while it is invisible to the consumer (index ≥ head) and
+/// published slots are read-only until the consumer retires them
+/// (tail release / head acquire pairs order the accesses).
+struct Slot(UnsafeCell<TelemetryEvent>);
+
+// SAFETY: see the `Slot` doc comment — the head/tail protocol guarantees a
+// slot is never written and read concurrently.
+unsafe impl Sync for Slot {}
+
+/// The shared ring state behind a [`TelemetryBus`] and its subscribers.
+struct Ring {
+    slots: Box<[Slot]>,
+    /// Events ever published (producer-owned; consumer reads with acquire).
+    head: AtomicU64,
+    /// Events ever consumed (consumer-owned; producer reads with acquire).
+    tail: AtomicU64,
+    /// Events discarded because the ring was full (drop-on-full, counted).
+    dropped: AtomicU64,
+    /// Live subscriber count; 0 disarms every emission site.
+    subscribers: AtomicU32,
+    /// Serializes consumers (drains and cursor resets). Never touched by
+    /// the producer.
+    drain_lock: Mutex<()>,
+}
+
+impl Ring {
+    fn with_capacity(capacity: usize) -> Ring {
+        let filler = TelemetryEvent::Admitted { time: 0.0, group: 0, request: 0 };
+        Ring {
+            slots: (0..capacity.max(1)).map(|_| Slot(UnsafeCell::new(filler))).collect(),
+            head: AtomicU64::new(0),
+            tail: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            subscribers: AtomicU32::new(0),
+            drain_lock: Mutex::new(()),
+        }
+    }
+
+    /// Single-producer publish: write the next slot or count a drop when
+    /// the ring is full. Never blocks, never allocates.
+    fn publish(&self, ev: TelemetryEvent) {
+        let head = self.head.load(Ordering::Relaxed); // producer-owned
+        let tail = self.tail.load(Ordering::Acquire);
+        if head - tail >= self.slots.len() as u64 {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let idx = (head % self.slots.len() as u64) as usize;
+        // SAFETY: this slot is outside [tail, head), so no consumer reads
+        // it; the release store below publishes the write.
+        unsafe { *self.slots[idx].0.get() = ev };
+        self.head.store(head + 1, Ordering::Release);
+    }
+
+    /// Consumer drain: move every published event into `out`. Returns the
+    /// number drained. Serialized across consumers by `drain_lock`.
+    fn drain_into(&self, out: &mut Vec<TelemetryEvent>) -> usize {
+        let _guard = self.drain_lock.lock().expect("telemetry drain lock");
+        let head = self.head.load(Ordering::Acquire);
+        let mut tail = self.tail.load(Ordering::Relaxed);
+        let n = (head - tail) as usize;
+        out.reserve(n);
+        while tail < head {
+            let idx = (tail % self.slots.len() as u64) as usize;
+            // SAFETY: slots in [tail, head) were published by the acquire
+            // load above and are not rewritten until the tail store below
+            // retires them.
+            out.push(unsafe { *self.slots[idx].0.get() });
+            tail += 1;
+            // Retire the slot immediately so the producer regains capacity
+            // as the drain progresses.
+            self.tail.store(tail, Ordering::Release);
+        }
+        n
+    }
+}
+
+/// Producer-side handle of the event ring, embedded in the Coordinator.
+///
+/// Emission ([`TelemetryBus::emit`]) is a single relaxed atomic load and a
+/// branch while no subscriber is attached, and a bounded lock-free ring
+/// write (drop-on-full, counted) while one is. The producer never blocks
+/// and never allocates; all emission must happen from one thread at a time
+/// (the coordinator-driving thread — guaranteed by the Coordinator's
+/// `&mut` drivers).
+pub struct TelemetryBus {
+    ring: Arc<Ring>,
+}
+
+impl TelemetryBus {
+    /// A bus with the default ring capacity
+    /// ([`DEFAULT_RING_CAPACITY`] events).
+    pub fn new() -> TelemetryBus {
+        TelemetryBus::with_capacity(DEFAULT_RING_CAPACITY)
+    }
+
+    /// A bus whose ring holds `capacity` events (allocated now, never on
+    /// the dispatch path).
+    pub fn with_capacity(capacity: usize) -> TelemetryBus {
+        TelemetryBus { ring: Arc::new(Ring::with_capacity(capacity)) }
+    }
+
+    /// True while at least one subscriber is attached. One relaxed atomic
+    /// load — the entire cost of the telemetry plane when disarmed.
+    #[inline]
+    pub fn armed(&self) -> bool {
+        self.ring.subscribers.load(Ordering::Relaxed) > 0
+    }
+
+    /// Publish an event if a subscriber is attached; otherwise do nothing.
+    #[inline]
+    pub fn emit(&self, ev: TelemetryEvent) {
+        if self.armed() {
+            self.ring.publish(ev);
+        }
+    }
+
+    /// Attach a subscriber and arm the bus. The new subscription starts
+    /// from *now*: events already in the ring are discarded and the
+    /// drop-on-full counter restarts. Subscribers share one cursor (a
+    /// drained event is delivered to exactly one of them), so a single
+    /// subscriber per deployment is the intended shape.
+    pub fn subscribe(&self) -> TelemetryRx {
+        {
+            let _guard = self.ring.drain_lock.lock().expect("telemetry drain lock");
+            let head = self.ring.head.load(Ordering::Acquire);
+            self.ring.tail.store(head, Ordering::Release);
+            self.ring.dropped.store(0, Ordering::Relaxed);
+        }
+        self.ring.subscribers.fetch_add(1, Ordering::Relaxed);
+        TelemetryRx { ring: self.ring.clone() }
+    }
+
+    /// Events discarded because the ring was full since the last
+    /// [`TelemetryBus::subscribe`].
+    pub fn dropped(&self) -> u64 {
+        self.ring.dropped.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for TelemetryBus {
+    fn default() -> Self {
+        TelemetryBus::new()
+    }
+}
+
+/// Subscriber handle: non-blocking drains of the event ring. Dropping the
+/// handle detaches the subscription; when the last subscriber detaches the
+/// bus disarms and emission returns to the one-atomic-load fast path.
+pub struct TelemetryRx {
+    ring: Arc<Ring>,
+}
+
+impl TelemetryRx {
+    /// Drain every published event (non-blocking; empty when none are
+    /// pending).
+    pub fn drain(&mut self) -> Vec<TelemetryEvent> {
+        let mut out = Vec::new();
+        self.ring.drain_into(&mut out);
+        out
+    }
+
+    /// Drain into an existing buffer (appends). Returns the number drained.
+    pub fn drain_into(&mut self, out: &mut Vec<TelemetryEvent>) -> usize {
+        self.ring.drain_into(out)
+    }
+
+    /// Events the producer discarded because the ring was full (slow
+    /// subscriber) since this subscription was created.
+    pub fn dropped(&self) -> u64 {
+        self.ring.dropped.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for TelemetryRx {
+    fn drop(&mut self) {
+        self.ring.subscribers.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator-side state (bus + heartbeat bookkeeping)
+
+/// The Coordinator's telemetry state: the event bus plus the per-load
+/// heartbeat bookkeeping (per-processor completed busy seconds and the
+/// next heartbeat due time). Reset at the start of every load window so
+/// warm replays emit the same heartbeats as fresh deployments.
+pub struct Telemetry {
+    bus: TelemetryBus,
+    /// Completed busy seconds per processor since the load window started.
+    busy: [f64; 3],
+    /// Next heartbeat due time, clock seconds.
+    next_heartbeat: f64,
+    period: f64,
+}
+
+impl Telemetry {
+    /// Telemetry state with a default-capacity bus and the default
+    /// heartbeat period.
+    pub fn new() -> Telemetry {
+        Telemetry {
+            bus: TelemetryBus::new(),
+            busy: [0.0; 3],
+            next_heartbeat: DEFAULT_HEARTBEAT_PERIOD,
+            period: DEFAULT_HEARTBEAT_PERIOD,
+        }
+    }
+
+    /// The underlying bus (emission and subscription).
+    pub fn bus(&self) -> &TelemetryBus {
+        &self.bus
+    }
+
+    /// True while a subscriber is attached (delegates to
+    /// [`TelemetryBus::armed`]).
+    #[inline]
+    pub fn armed(&self) -> bool {
+        self.bus.armed()
+    }
+
+    /// Publish an event if armed ([`TelemetryBus::emit`]).
+    #[inline]
+    pub fn emit(&self, ev: TelemetryEvent) {
+        self.bus.emit(ev);
+    }
+
+    /// Attach a subscriber ([`TelemetryBus::subscribe`]).
+    pub fn subscribe(&self) -> TelemetryRx {
+        self.bus.subscribe()
+    }
+
+    /// Change the heartbeat period (clock seconds; clamped to ≥ 1 µs).
+    /// Takes effect at the next load window.
+    pub fn set_heartbeat_period(&mut self, period: f64) {
+        self.period = period.max(1e-6);
+    }
+
+    /// Start a new load window: zero the busy accumulators and re-arm the
+    /// heartbeat schedule at one period from the window's t = 0.
+    pub fn begin_window(&mut self) {
+        self.busy = [0.0; 3];
+        self.next_heartbeat = self.period;
+    }
+
+    /// Account completed busy time on a processor (heartbeat ρ numerator).
+    /// Gated on the armed flag so the disarmed path stays a load + branch.
+    #[inline]
+    pub fn on_busy(&mut self, p: Processor, seconds: f64) {
+        if self.bus.armed() {
+            self.busy[p.index()] += seconds;
+        }
+    }
+
+    /// True when at least one heartbeat is due at clock time `now` (armed
+    /// and past the schedule). The caller gathers the gauge snapshot and
+    /// calls [`Telemetry::emit_heartbeats`] only when this returns true, so
+    /// the disarmed cost stays one load + branch.
+    #[inline]
+    pub fn heartbeat_due(&self, now: f64) -> bool {
+        self.bus.armed() && now >= self.next_heartbeat
+    }
+
+    /// Emit every heartbeat due at clock time `now`, carrying the given
+    /// gauge snapshot (ready-queue depths, busy workers, in-flight group
+    /// requests). Heartbeat times are schedule multiples — derived from the
+    /// event times, not the OS — so virtual replays are bit-identical.
+    pub fn emit_heartbeats(&mut self, now: f64, queue: [u32; 3], busy: u32, in_flight: u32) {
+        while self.next_heartbeat <= now {
+            let t = self.next_heartbeat;
+            let mut rho = [0.0f64; 3];
+            for (r, b) in rho.iter_mut().zip(self.busy.iter()) {
+                *r = if t > 0.0 { b / t } else { 0.0 };
+            }
+            self.bus.emit(TelemetryEvent::Heartbeat { time: t, rho, queue, busy, in_flight });
+            self.next_heartbeat += self.period;
+        }
+    }
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Telemetry::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Aggregation
+
+/// Folds a drained event stream into running totals that mirror the final
+/// [`crate::serve::ServeReport`] of the same load — the in-process sink.
+///
+/// The consistency contract ([`MetricsAggregator::consistent_with`],
+/// tested): after folding every event of one load window, `submitted`,
+/// `served`, `dropped`, `violations`, `fault_shed`, `retries`, `remaps`,
+/// `degraded_time`, and the derived attainment equal the report's fields
+/// exactly (bit-equal floats — the fold order matches the report's
+/// completion-order fold).
+#[derive(Debug, Clone, Default)]
+pub struct MetricsAggregator {
+    /// Requests that passed admission.
+    pub admitted: usize,
+    /// Requests served to completion.
+    pub served: usize,
+    /// Requests dropped at admission (overload).
+    pub overload_drops: usize,
+    /// Requests shed by recovery.
+    pub fault_shed: usize,
+    /// Served requests that missed their deadline.
+    pub violations: usize,
+    /// Retries folded from served requests (matches the report, which
+    /// counts only requests that eventually completed).
+    pub retries: u64,
+    /// Remaps folded from served requests.
+    pub remaps: u64,
+    /// Degraded processor-seconds folded from served requests.
+    pub degraded_time: f64,
+    /// Retry decisions observed live (includes requests later shed — a
+    /// superset of `retries`).
+    pub retry_events: u64,
+    /// Remap decisions observed live (includes requests later shed).
+    pub remap_events: u64,
+    /// Tasks dispatched per processor.
+    pub dispatches: [u64; 3],
+    /// Tasks completed per processor.
+    pub completions: [u64; 3],
+    /// Completed busy seconds per processor.
+    pub busy_seconds: [f64; 3],
+    /// Heartbeats observed.
+    pub heartbeats: usize,
+    /// The most recent heartbeat, when any was observed.
+    pub last_heartbeat: Option<TelemetryEvent>,
+    /// Sum of served makespans, seconds.
+    pub makespan_sum: f64,
+    /// Largest served makespan, seconds.
+    pub max_makespan: f64,
+}
+
+impl MetricsAggregator {
+    /// An empty aggregator.
+    pub fn new() -> MetricsAggregator {
+        MetricsAggregator::default()
+    }
+
+    /// Fold one event into the totals.
+    pub fn fold(&mut self, ev: &TelemetryEvent) {
+        match *ev {
+            TelemetryEvent::Admitted { .. } => self.admitted += 1,
+            TelemetryEvent::Dropped { reason, .. } => match reason {
+                DropReason::Overload => self.overload_drops += 1,
+                DropReason::FaultShed => self.fault_shed += 1,
+            },
+            TelemetryEvent::TaskDispatch { processor, .. } => {
+                self.dispatches[processor.index()] += 1;
+            }
+            TelemetryEvent::TaskComplete { processor, elapsed, .. } => {
+                self.completions[processor.index()] += 1;
+                self.busy_seconds[processor.index()] += elapsed.max(0.0);
+            }
+            TelemetryEvent::Retry { .. } => self.retry_events += 1,
+            TelemetryEvent::Remap { .. } => self.remap_events += 1,
+            TelemetryEvent::Served { makespan, violated, retries, remaps, degraded, .. } => {
+                self.served += 1;
+                if violated {
+                    self.violations += 1;
+                }
+                self.retries += retries as u64;
+                self.remaps += remaps as u64;
+                self.degraded_time += degraded;
+                self.makespan_sum += makespan;
+                self.max_makespan = self.max_makespan.max(makespan);
+            }
+            TelemetryEvent::DeadlineViolation { .. } => {}
+            TelemetryEvent::Heartbeat { .. } => {
+                self.heartbeats += 1;
+                self.last_heartbeat = Some(*ev);
+            }
+        }
+    }
+
+    /// Fold a whole drained stream.
+    pub fn fold_all(&mut self, events: &[TelemetryEvent]) {
+        for ev in events {
+            self.fold(ev);
+        }
+    }
+
+    /// Total requests submitted to admission (admitted + overload drops).
+    pub fn submitted(&self) -> usize {
+        self.admitted + self.overload_drops
+    }
+
+    /// Total requests dropped (overload + fault-shed) — the report's
+    /// `dropped`.
+    pub fn dropped(&self) -> usize {
+        self.overload_drops + self.fault_shed
+    }
+
+    /// Check the folded totals against the final report of the same load.
+    /// Returns every mismatching field, or `Ok` when the stream exactly
+    /// reproduces the report (the consistency contract).
+    pub fn consistent_with(&self, report: &crate::serve::ServeReport) -> Result<(), String> {
+        let mut mismatches: Vec<String> = Vec::new();
+        let mut check = |name: &str, stream: String, report: String| {
+            if stream != report {
+                mismatches.push(format!("{name}: stream {stream} vs report {report}"));
+            }
+        };
+        check("submitted", self.submitted().to_string(), report.submitted.to_string());
+        check("served", self.served.to_string(), report.served.to_string());
+        check("dropped", self.dropped().to_string(), report.dropped.to_string());
+        check("violations", self.violations.to_string(), report.violations.to_string());
+        check("fault_shed", self.fault_shed.to_string(), report.fault_shed.to_string());
+        check("retries", self.retries.to_string(), report.retries.to_string());
+        check("remaps", self.remaps.to_string(), report.remaps.to_string());
+        check(
+            "degraded_time",
+            self.degraded_time.to_bits().to_string(),
+            report.degraded_time.to_bits().to_string(),
+        );
+        let met = self.served - self.violations;
+        let attainment =
+            if self.submitted() == 0 { 1.0 } else { met as f64 / self.submitted() as f64 };
+        check(
+            "attainment",
+            attainment.to_bits().to_string(),
+            report.attainment.to_bits().to_string(),
+        );
+        if mismatches.is_empty() {
+            Ok(())
+        } else {
+            Err(mismatches.join("; "))
+        }
+    }
+
+    /// One-line human summary (the TTY monitor's aggregate line).
+    pub fn summary_line(&self) -> String {
+        format!(
+            "submitted {} served {} dropped {} (overload {}, shed {}) violations {} retries {} remaps {} heartbeats {}",
+            self.submitted(),
+            self.served,
+            self.dropped(),
+            self.overload_drops,
+            self.fault_shed,
+            self.violations,
+            self.retry_events,
+            self.remap_events,
+            self.heartbeats,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(i: u64) -> TelemetryEvent {
+        TelemetryEvent::Admitted { time: i as f64, group: 0, request: i }
+    }
+
+    #[test]
+    fn disarmed_emission_is_free_and_invisible() {
+        let bus = TelemetryBus::with_capacity(8);
+        assert!(!bus.armed());
+        let before = crate::util::alloc::thread_allocations();
+        for i in 0..1000 {
+            bus.emit(ev(i));
+        }
+        assert_eq!(
+            crate::util::alloc::thread_allocations() - before,
+            0,
+            "disarmed emission must not allocate"
+        );
+        // Nothing was published: a new subscriber sees an empty ring.
+        let mut rx = bus.subscribe();
+        assert!(rx.drain().is_empty());
+    }
+
+    #[test]
+    fn armed_publish_is_allocation_free_and_drops_on_full() {
+        let bus = TelemetryBus::with_capacity(16);
+        let mut rx = bus.subscribe();
+        let before = crate::util::alloc::thread_allocations();
+        for i in 0..64 {
+            bus.emit(ev(i));
+        }
+        assert_eq!(
+            crate::util::alloc::thread_allocations() - before,
+            0,
+            "armed publish must not allocate (pre-sized ring)"
+        );
+        assert_eq!(rx.dropped(), 48, "overflow must be counted, not blocked on");
+        let got = rx.drain();
+        assert_eq!(got.len(), 16);
+        // The oldest 16: drop-on-full discards the *new* event.
+        assert_eq!(got[0], ev(0));
+        assert_eq!(got[15], ev(15));
+    }
+
+    #[test]
+    fn drain_frees_capacity_and_preserves_order() {
+        let bus = TelemetryBus::with_capacity(4);
+        let mut rx = bus.subscribe();
+        let mut seen = Vec::new();
+        for round in 0..5u64 {
+            for i in 0..4 {
+                bus.emit(ev(round * 4 + i));
+            }
+            rx.drain_into(&mut seen);
+        }
+        assert_eq!(rx.dropped(), 0);
+        assert_eq!(seen.len(), 20);
+        for (i, e) in seen.iter().enumerate() {
+            assert_eq!(*e, ev(i as u64), "order broken at {i}");
+        }
+    }
+
+    #[test]
+    fn subscriber_drop_disarms_and_resubscribe_starts_fresh() {
+        let bus = TelemetryBus::with_capacity(8);
+        let rx = bus.subscribe();
+        assert!(bus.armed());
+        bus.emit(ev(1));
+        drop(rx);
+        assert!(!bus.armed());
+        bus.emit(ev(2)); // disarmed: discarded without counting
+        let mut rx = bus.subscribe();
+        assert_eq!(bus.dropped(), 0, "subscribe restarts the drop counter");
+        assert!(rx.drain().is_empty(), "a new subscription starts from now");
+        bus.emit(ev(3));
+        assert_eq!(rx.drain(), vec![ev(3)]);
+    }
+
+    #[test]
+    fn cross_thread_drain_sees_every_event() {
+        let bus = TelemetryBus::with_capacity(1024);
+        let mut rx = bus.subscribe();
+        let consumer = std::thread::spawn(move || {
+            let mut seen = Vec::new();
+            while seen.len() < 10_000 {
+                rx.drain_into(&mut seen);
+            }
+            (seen, rx)
+        });
+        for i in 0..10_000 {
+            loop {
+                // The producer never blocks in the runtime; here we retry
+                // on full so the test asserts lossless transfer.
+                let before = bus.dropped();
+                bus.emit(ev(i));
+                if bus.dropped() == before {
+                    break;
+                }
+            }
+        }
+        let (seen, _rx) = consumer.join().expect("consumer thread");
+        assert_eq!(seen.len(), 10_000);
+        for (i, e) in seen.iter().enumerate() {
+            assert_eq!(*e, ev(i as u64));
+        }
+    }
+
+    #[test]
+    fn heartbeat_schedule_and_rho_accounting() {
+        let mut t = Telemetry::new();
+        t.set_heartbeat_period(0.5);
+        t.begin_window();
+        let mut rx = t.subscribe();
+        t.on_busy(Processor::Npu, 0.25);
+        assert!(!t.heartbeat_due(0.4));
+        assert!(t.heartbeat_due(1.1));
+        t.emit_heartbeats(1.1, [1, 0, 2], 1, 3);
+        let evs = rx.drain();
+        assert_eq!(evs.len(), 2, "two periods elapsed: two heartbeats");
+        match evs[0] {
+            TelemetryEvent::Heartbeat { time, rho, queue, busy, in_flight } => {
+                assert_eq!(time, 0.5);
+                assert!((rho[Processor::Npu.index()] - 0.5).abs() < 1e-12);
+                assert_eq!(queue, [1, 0, 2]);
+                assert_eq!((busy, in_flight), (1, 3));
+            }
+            other => panic!("expected heartbeat, got {other:?}"),
+        }
+        assert_eq!(evs[1].time(), 1.0);
+        // begin_window rewinds the schedule and the accumulators.
+        t.begin_window();
+        assert!(!t.heartbeat_due(0.4));
+        t.emit_heartbeats(0.5, [0, 0, 0], 0, 0);
+        match rx.drain()[0] {
+            TelemetryEvent::Heartbeat { rho, .. } => {
+                assert_eq!(rho, [0.0; 3], "busy accumulators must reset per window");
+            }
+            other => panic!("expected heartbeat, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn json_lines_are_well_formed_for_every_variant() {
+        let variants = vec![
+            ev(3),
+            TelemetryEvent::Dropped {
+                time: 0.5,
+                group: 1,
+                request: 2,
+                reason: DropReason::FaultShed,
+            },
+            TelemetryEvent::TaskDispatch {
+                time: 0.1,
+                group: 0,
+                request: 1,
+                network: 2,
+                subgraph: 3,
+                processor: Processor::Gpu,
+            },
+            TelemetryEvent::TaskComplete {
+                time: 0.2,
+                group: 0,
+                request: 1,
+                network: 2,
+                subgraph: 3,
+                processor: Processor::Gpu,
+                elapsed: 0.01,
+            },
+            TelemetryEvent::Retry {
+                time: 0.3,
+                group: 0,
+                request: 1,
+                network: 0,
+                subgraph: 0,
+                attempt: 2,
+                backoff: 0.004,
+            },
+            TelemetryEvent::Remap {
+                time: 0.4,
+                group: 0,
+                request: 1,
+                network: 0,
+                subgraph: 0,
+                from: Processor::Npu,
+                to: Processor::Gpu,
+            },
+            TelemetryEvent::Served {
+                time: 0.6,
+                group: 0,
+                request: 1,
+                arrival: 0.0,
+                makespan: 0.6,
+                deadline: Some(0.5),
+                violated: true,
+                retries: 1,
+                remaps: 0,
+                degraded: 0.02,
+            },
+            TelemetryEvent::Served {
+                time: 0.6,
+                group: 0,
+                request: 1,
+                arrival: 0.0,
+                makespan: 0.6,
+                deadline: None,
+                violated: false,
+                retries: 0,
+                remaps: 0,
+                degraded: 0.0,
+            },
+            TelemetryEvent::DeadlineViolation {
+                time: 0.6,
+                group: 0,
+                request: 1,
+                makespan: 0.6,
+                deadline: 0.5,
+            },
+            TelemetryEvent::Heartbeat {
+                time: 0.5,
+                rho: [0.25, 0.0, 1.5],
+                queue: [0, 1, 2],
+                busy: 2,
+                in_flight: 4,
+            },
+        ];
+        for v in &variants {
+            let line = v.to_json_line();
+            assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
+            assert!(line.contains(&format!("\"event\":\"{}\"", v.kind())), "{line}");
+            assert!(!line.contains('\n'), "one line per event: {line}");
+            // Balanced braces/brackets and no bare NaN/inf tokens.
+            assert_eq!(line.matches('{').count(), line.matches('}').count(), "{line}");
+            assert_eq!(line.matches('[').count(), line.matches(']').count(), "{line}");
+            assert!(!line.contains("NaN") && !line.contains("inf"), "{line}");
+        }
+    }
+
+    #[test]
+    fn aggregator_folds_and_checks_consistency() {
+        let mut agg = MetricsAggregator::new();
+        agg.fold_all(&[
+            ev(0),
+            ev(1),
+            TelemetryEvent::Dropped {
+                time: 0.1,
+                group: 0,
+                request: 2,
+                reason: DropReason::Overload,
+            },
+            TelemetryEvent::Served {
+                time: 0.2,
+                group: 0,
+                request: 0,
+                arrival: 0.0,
+                makespan: 0.2,
+                deadline: Some(0.5),
+                violated: false,
+                retries: 1,
+                remaps: 0,
+                degraded: 0.05,
+            },
+            TelemetryEvent::Served {
+                time: 0.9,
+                group: 0,
+                request: 1,
+                arrival: 0.1,
+                makespan: 0.8,
+                deadline: Some(0.5),
+                violated: true,
+                retries: 0,
+                remaps: 1,
+                degraded: 0.01,
+            },
+            TelemetryEvent::DeadlineViolation {
+                time: 0.9,
+                group: 0,
+                request: 1,
+                makespan: 0.8,
+                deadline: 0.5,
+            },
+        ]);
+        assert_eq!(agg.submitted(), 3);
+        assert_eq!((agg.served, agg.dropped(), agg.violations), (2, 1, 1));
+        assert_eq!((agg.retries, agg.remaps), (1, 1));
+        assert!((agg.degraded_time - 0.06).abs() < 1e-12);
+        assert!((agg.max_makespan - 0.8).abs() < 1e-12);
+
+        // Against a matching hand-built report fold.
+        let served = vec![
+            crate::coordinator::ServedRequest {
+                group: 0,
+                request: 0,
+                arrival: 0.0,
+                completion: 0.2,
+                makespan: 0.2,
+                deadline: Some(0.5),
+                violated: false,
+                retries: 1,
+                remaps: 0,
+                degraded: 0.05,
+            },
+            crate::coordinator::ServedRequest {
+                group: 0,
+                request: 1,
+                arrival: 0.1,
+                completion: 0.9,
+                makespan: 0.8,
+                deadline: Some(0.5),
+                violated: true,
+                retries: 0,
+                remaps: 1,
+                degraded: 0.01,
+            },
+        ];
+        let report =
+            crate::serve::ServeReport::from_log(&served, 1, 3, &[Some(0.5)], 1.0, 0.0);
+        agg.consistent_with(&report).expect("stream must reproduce the report");
+        // And a deliberate mismatch is caught.
+        let mut wrong = agg.clone();
+        wrong.admitted += 1;
+        let err = wrong.consistent_with(&report).unwrap_err();
+        assert!(err.contains("submitted"), "{err}");
+    }
+}

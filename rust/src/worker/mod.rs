@@ -4,6 +4,7 @@
 //! (de-)quantization in parallel, we use two separate threads, each polling
 //! items from its dedicated queue").
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use std::sync::mpsc::{Receiver, Sender};
@@ -18,6 +19,8 @@ use crate::Processor;
 pub struct Worker {
     pub processor: Processor,
     quant_tx: Sender<TaskMsg>,
+    /// Tasks submitted but not yet finished executing (monitoring gauge).
+    depth: Arc<AtomicUsize>,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -32,6 +35,8 @@ impl Worker {
     ) -> Worker {
         let (quant_tx, quant_rx) = std::sync::mpsc::channel::<TaskMsg>();
         let (exec_tx, exec_rx) = std::sync::mpsc::channel::<TaskMsg>();
+        let depth = Arc::new(AtomicUsize::new(0));
+        let exec_depth = depth.clone();
 
         // Dequantization thread: convert inputs whose dtype mismatches the
         // task's config, then forward to the execution queue.
@@ -110,6 +115,7 @@ impl Worker {
                                 error: Some(e.to_string()),
                             },
                         };
+                        exec_depth.fetch_sub(1, Ordering::Relaxed);
                         if completion_tx.send(msg).is_err() {
                             break;
                         }
@@ -121,13 +127,23 @@ impl Worker {
         Worker {
             processor,
             quant_tx,
+            depth,
             handles: vec![quant_handle, exec_handle],
         }
     }
 
     /// Queue a task on this worker (enters via the quant thread).
     pub fn submit(&self, task: TaskMsg) {
+        self.depth.fetch_add(1, Ordering::Relaxed);
         let _ = self.quant_tx.send(task);
+    }
+
+    /// Tasks submitted to this worker and not yet executed — a **racy
+    /// monitoring gauge** (the worker threads decrement it asynchronously),
+    /// for dashboards and debugging only. The coordinator's own dispatch
+    /// state, not this gauge, feeds the deterministic telemetry heartbeats.
+    pub fn pending(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
     }
 
     /// Close the queues and join both threads.
@@ -226,6 +242,27 @@ mod tests {
         let done = drain_completions(&rx, 5, std::time::Duration::from_secs(5));
         let ids: Vec<u64> = done.iter().map(|d| d.request).collect();
         assert_eq!(ids, vec![0, 1, 2, 3, 4], "FIFO violated");
+        worker.shutdown();
+    }
+
+    #[test]
+    fn pending_gauge_tracks_submissions_and_drains_to_zero() {
+        let pm = Arc::new(PerfModel::paper_calibrated());
+        let engine: Arc<dyn Engine> = Arc::new(SimEngine::new(pm, 0.0, false, 4));
+        let pool = TensorPool::new(true);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let worker = Worker::spawn(Processor::Npu, engine, pool, tx);
+        assert_eq!(worker.pending(), 0);
+        let net = Arc::new(build_model(0, 0));
+        for i in 0..4 {
+            worker.submit(mk_task(net.clone(), 0, i));
+        }
+        // The gauge is racy (threads drain it concurrently) but bounded by
+        // what was submitted, and it reaches zero once everything reported.
+        assert!(worker.pending() <= 4);
+        let done = drain_completions(&rx, 4, std::time::Duration::from_secs(5));
+        assert_eq!(done.len(), 4);
+        assert_eq!(worker.pending(), 0);
         worker.shutdown();
     }
 

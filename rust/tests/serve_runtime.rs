@@ -4,7 +4,10 @@
 //! reuse (warm probes bit-identical to fresh deploys; one deployment per
 //! solution set in the saturation search; the ρ-seeded bisection bracket),
 //! chaos injection (deterministic fault replay, watchdog/retry/remap
-//! recovery, the empty-plan zero-overhead contract, robust-α*), and the
+//! recovery, the empty-plan zero-overhead contract, robust-α*), the
+//! telemetry plane (bit-identical fresh-vs-warm event streams including
+//! chaos recovery, aggregation == ServeReport, the no-subscriber
+//! invisibility contract, wall-driver release precision), and the
 //! `Deployment::serve_load` api surface.
 
 use std::ops::ControlFlow;
@@ -20,6 +23,7 @@ use puzzle::serve::{
     self, materialize_solutions, offered_utilization, rho_bracket_floor, ClockMode, FaultPlan,
     RuntimeHarness, SaturationOptions, ServeReport,
 };
+use puzzle::telemetry::{MetricsAggregator, TelemetryEvent};
 use puzzle::Processor;
 
 /// Bitwise equality of one served-log entry (every field, every f64 bit,
@@ -608,6 +612,206 @@ fn mem_deltas_attribute_pool_traffic_per_load() {
     let again = d2.probe(&spec, 41);
     d2.shutdown();
     assert_eq!(again.mem.pool.mallocs, second.mem.pool.mallocs);
+}
+
+#[test]
+fn telemetry_streams_bit_identical_fresh_vs_warm() {
+    // Telemetry determinism contract: under the virtual clock the event
+    // stream is part of the replay — a warm deployment re-probing the same
+    // (spec, seed), even after intervening traffic, emits a byte-identical
+    // JSON-lines stream to a fresh deployment's first probe.
+    let scenario = Scenario::from_groups("tel-replay", &[vec![0, 1]]);
+    let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+    let harness = harness_for(&scenario, &genome, 11);
+    let perf = PerfModel::paper_calibrated();
+    let spec = LoadSpec::for_scenario(&scenario, &perf, 1.0, 10);
+
+    let mut fresh = harness.deploy(ClockMode::Virtual);
+    let mut fresh_rx = fresh.subscribe();
+    fresh.probe(&spec, 41);
+    let fresh_lines: Vec<String> =
+        fresh_rx.drain().iter().map(TelemetryEvent::to_json_line).collect();
+    assert_eq!(fresh_rx.dropped(), 0, "ring overflowed");
+    fresh.shutdown();
+
+    let mut warm = harness.deploy(ClockMode::Virtual);
+    let mut warm_rx = warm.subscribe();
+    warm.probe(&spec, 99); // intervening traffic with a different seed
+    warm_rx.drain();
+    warm.probe(&spec, 41);
+    let warm_lines: Vec<String> =
+        warm_rx.drain().iter().map(TelemetryEvent::to_json_line).collect();
+    warm.shutdown();
+
+    assert!(!fresh_lines.is_empty());
+    for kind in ["admitted", "task_dispatch", "task_complete", "served", "heartbeat"] {
+        let tag = format!("\"event\":\"{kind}\"");
+        assert!(
+            fresh_lines.iter().any(|l| l.contains(&tag)),
+            "stream is missing {kind} events: {fresh_lines:?}"
+        );
+    }
+    assert_eq!(fresh_lines, warm_lines, "fresh and warm telemetry streams diverged");
+}
+
+#[test]
+fn chaos_telemetry_streams_replay_bit_identically() {
+    // The stream identity contract extends to the recovery machinery: under
+    // a fault plan the retry/remap events (and under a flap plan the
+    // duty-cycled transient failures they recover from) replay
+    // byte-identically for the same seed, and the folded aggregation still
+    // reproduces the chaos-accounted report exactly.
+    let scenario = Scenario::from_groups("tel-chaos", &[vec![0], vec![1]]);
+    let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+    let perf = PerfModel::paper_calibrated();
+    let spec = LoadSpec::for_scenario(&scenario, &perf, 20.0, 6);
+    let run = |plan: FaultPlan, seed: u64| -> (Vec<TelemetryEvent>, ServeReport) {
+        let harness = harness_for(&scenario, &genome, seed).with_fault_plan(plan);
+        let mut d = harness.deploy(ClockMode::Virtual);
+        let mut rx = d.subscribe();
+        let report = d.probe(&spec, seed);
+        let events = rx.drain();
+        assert_eq!(rx.dropped(), 0, "ring overflowed");
+        d.shutdown();
+        (events, report)
+    };
+    let lines = |events: &[TelemetryEvent]| -> Vec<String> {
+        events.iter().map(TelemetryEvent::to_json_line).collect()
+    };
+
+    // Persistent NPU stall: every request walks the watchdog → retry →
+    // remap ladder, all of it visible in the stream.
+    let stall = FaultPlan::new(3).stall(Processor::Npu, 0.0, 1e3);
+    let (ev_a, report_a) = run(stall.clone(), 7);
+    let (ev_b, _) = run(stall, 7);
+    assert_eq!(lines(&ev_a), lines(&ev_b), "stall streams diverged");
+    assert!(report_a.retries > 0 && report_a.remaps > 0, "{report_a:?}");
+    assert!(ev_a.iter().any(|e| e.kind() == "retry"), "no retry events in stream");
+    assert!(ev_a.iter().any(|e| e.kind() == "remap"), "no remap events in stream");
+    let mut agg = MetricsAggregator::new();
+    agg.fold_all(&ev_a);
+    agg.consistent_with(&report_a).expect("chaos aggregation must match the report");
+    // No request is shed in this scenario, so every raw Retry event ends up
+    // accounted on a served request: the two counters must agree.
+    assert_eq!(agg.retry_events, report_a.retries, "raw retry events vs report");
+
+    // Flap plan: duty-cycled transient windows draw from the same replayed
+    // fault stream.
+    let flap = FaultPlan::new(11).flap(Processor::Npu, 0.01, 0.4).transient(0.1);
+    let (fl_a, fr_a) = run(flap.clone(), 13);
+    let (fl_b, _) = run(flap, 13);
+    assert_eq!(lines(&fl_a), lines(&fl_b), "flap streams diverged");
+    let mut flap_agg = MetricsAggregator::new();
+    flap_agg.fold_all(&fl_a);
+    flap_agg.consistent_with(&fr_a).expect("flap aggregation must match the report");
+}
+
+#[test]
+fn telemetry_aggregation_reproduces_serve_reports() {
+    // Aggregation consistency, property-style: across random genomes,
+    // loads, arrival patterns, and an occasional drop policy, folding the
+    // drained event stream reproduces the probe's ServeReport exactly
+    // (counts equal, f64 totals bit-equal).
+    let scenario = Scenario::from_groups("tel-agg", &[vec![0, 1]]);
+    let perf = PerfModel::paper_calibrated();
+    puzzle::util::prop::check("telemetry aggregation == report", 10, |rng| {
+        let genome = Genome::random(&scenario.networks, 0.3, rng);
+        let seed = rng.gen_range(1, 1 << 16) as u64;
+        let alpha = 0.6 + 1.9 * rng.gen_f64();
+        let requests = rng.gen_range(4, 10);
+        let periods = scenario.periods(alpha, &perf);
+        let mut spec = match rng.gen_range(0, 3) {
+            0 => LoadSpec::periodic(&periods, requests),
+            1 => LoadSpec::poisson(&periods, requests, seed ^ 0x5A5A),
+            _ => LoadSpec::bursty(&periods, 3, requests),
+        };
+        if rng.gen_bool(0.3) {
+            // Exercise the overload-drop accounting path too.
+            spec = spec.with_policy(OverloadPolicy::DropAfter { max_inflight: 2 });
+        }
+        let harness = harness_for(&scenario, &genome, seed);
+        let mut d = harness.deploy(ClockMode::Virtual);
+        let mut rx = d.subscribe();
+        let report = d.probe(&spec, seed);
+        let mut agg = MetricsAggregator::new();
+        agg.fold_all(&rx.drain());
+        let verdict = agg.consistent_with(&report);
+        d.shutdown();
+        puzzle::prop_assert!(
+            verdict.is_ok(),
+            "aggregation mismatch (seed {seed}, alpha {alpha:.3}): {verdict:?}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn telemetry_no_subscriber_is_invisible_and_armed_publish_is_alloc_free() {
+    // The no-subscriber invisibility contract, allocation half: with no
+    // subscriber a probe's dispatch-thread allocation count is the
+    // steady-state baseline, and because the event ring is pre-allocated
+    // and events are Copy, *arming* a subscriber must not change that count
+    // either (draining happens outside the measured window). Behavioral
+    // half: the armed probe's report is bit-identical to the disarmed one —
+    // observation never perturbs the schedule.
+    let scenario = Scenario::from_groups("tel-alloc", &[vec![0, 1]]);
+    let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+    let harness = harness_for(&scenario, &genome, 29);
+    let perf = PerfModel::paper_calibrated();
+    let spec = LoadSpec::for_scenario(&scenario, &perf, 1.2, 10);
+
+    let mut d = harness.deploy(ClockMode::Virtual);
+    let _cold = d.probe(&spec, 41); // warm the pool, maps, and log capacity
+    let before = puzzle::util::alloc::thread_allocations();
+    let off_report = d.probe(&spec, 41);
+    let off_allocs = puzzle::util::alloc::thread_allocations() - before;
+
+    let mut rx = d.subscribe();
+    let _warm_armed = d.probe(&spec, 41);
+    rx.drain();
+    let before = puzzle::util::alloc::thread_allocations();
+    let on_report = d.probe(&spec, 41);
+    let on_allocs = puzzle::util::alloc::thread_allocations() - before;
+    let events = rx.drain();
+    d.shutdown();
+
+    assert!(!events.is_empty(), "armed probe emitted nothing");
+    assert_eq!(
+        on_allocs, off_allocs,
+        "an armed subscriber changed the dispatch thread's allocation count"
+    );
+    assert_reports_identical(&off_report, &on_report);
+}
+
+#[test]
+fn wall_driver_releases_arrivals_within_tight_error_bounds() {
+    // Wall-mode release precision: the park-to-spin-tail sleeper must place
+    // each arrival release within a tight error of its schedule. Errors are
+    // measured between arrivals (arrival stamps and release targets share
+    // the same clock up to a constant offset, which differencing cancels);
+    // bounds are loose enough for a shared CI runner.
+    let scenario = Scenario::from_groups("wall-precise", &[vec![0]]);
+    let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+    let mut harness = harness_for(&scenario, &genome, 13);
+    harness.noisy = false;
+    harness.time_scale = 1.0;
+    let period = 0.02;
+    let spec = LoadSpec::periodic(&[period], 8).wall(std::time::Duration::from_secs(10));
+    let (report, mut log) = harness.run_with_log(&spec);
+    assert_eq!(report.served, 8);
+    log.sort_by_key(|s| s.request);
+    let t0 = log[0].arrival;
+    let errors: Vec<f64> = log
+        .iter()
+        .enumerate()
+        .map(|(j, s)| ((s.arrival - t0) - j as f64 * period).abs())
+        .collect();
+    let mut sorted = errors.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = sorted[sorted.len() / 2];
+    let max = *sorted.last().unwrap();
+    assert!(median < 1.5e-3, "median release error {median:.6}s too large: {errors:?}");
+    assert!(max < 10e-3, "worst release error {max:.6}s too large: {errors:?}");
 }
 
 #[test]
