@@ -21,7 +21,10 @@ use puzzle::mem::TensorPool;
 use puzzle::perf::PerfModel;
 use puzzle::profiler::Profiler;
 use puzzle::scenario::Scenario;
-use puzzle::serve::{probe_seed, ClockMode, FaultPlan, LoadSpec, RuntimeHarness};
+use puzzle::serve::{
+    materialize_solutions, probe_seed, saturation_via_runtime, ClockMode, FaultPlan, LoadSpec,
+    RuntimeHarness, SaturationOptions,
+};
 use puzzle::sim::{compile_plans, simulate, ExecutionPlan, GroupSpec, SimOptions, SimWorkspace};
 use puzzle::util::bench::{bench, black_box, write_json, BenchStats};
 use puzzle::util::rng::Rng;
@@ -356,6 +359,50 @@ fn main() {
         }
         warm.shutdown();
     }));
+
+    // Saturation probe fleet: the full multi-set bisection search, serial
+    // (probe_threads = 1) vs the scoped fleet (probe_threads = 0, all
+    // cores). Identical probe schedule and bit-identical results either
+    // way (tested in serve_runtime); bench_guard asserts fleet <= serial ×
+    // 1.05 as a same-run invariant — parallel probing must never cost
+    // wall-clock, and on multi-core hosts it should approach a
+    // sets-per-core speedup.
+    let fleet_sets: Vec<Vec<puzzle::serve::NetworkSolution>> = [
+        Processor::Npu,
+        Processor::Gpu,
+        Processor::Npu,
+        Processor::Gpu,
+    ]
+    .iter()
+    .enumerate()
+    .map(|(i, &p)| {
+        let mut genome = puzzle::ga::Genome::all_on(&lt_scenario.networks, p);
+        if i >= 2 {
+            genome.priority.reverse();
+        }
+        materialize_solutions(&lt_scenario.networks, &genome, &lt_perf)
+    })
+    .collect();
+    let fleet_opts = |probe_threads: usize| SaturationOptions {
+        requests: 6,
+        tolerance: 0.2,
+        probe_threads,
+        ..Default::default()
+    };
+    let sat_serial = bench("serve/saturation_serial", 4.0, 3, || {
+        black_box(saturation_via_runtime(&fleet_sets, &lt_scenario, &lt_perf, &fleet_opts(1)));
+    });
+    let sat_fleet = bench("serve/saturation_fleet", 4.0, 3, || {
+        black_box(saturation_via_runtime(&fleet_sets, &lt_scenario, &lt_perf, &fleet_opts(0)));
+    });
+    println!(
+        "serve/saturation_fleet speedup over serial: {:.2}x ({} sets, {} logical cores)",
+        sat_serial.mean_s / sat_fleet.mean_s,
+        fleet_sets.len(),
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    all.push(sat_serial);
+    all.push(sat_fleet);
 
     // Machine-readable trajectory for future PRs.
     let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))

@@ -43,7 +43,13 @@
 //! sorting + binary-heap niching, bit-identical to `nsga3_select` — with
 //! the flattened objective matrix and survivor index list kept in reusable
 //! master-thread buffers, so per-generation selection allocates nothing in
-//! steady state.
+//! steady state. The solutions replacement drops donate their genome and
+//! objectives buffers to a free-list slab; the next generation's pair jobs
+//! pop those buffers and breed into them ([`crate::ga::breed_pair_into`],
+//! identical RNG stream to the cloning path), so once the search is warm a
+//! generation's reproduction and retention recycle the previous
+//! generation's casualties instead of allocating fresh genome storage
+//! (tested allocation-free by `recycled_breed_and_eval_is_allocation_free`).
 //!
 //! The measurement tier is **vectorized across repetitions**: nominal
 //! durations and processors are flattened once per candidate, each rep
@@ -73,7 +79,7 @@ use crate::util::rng::Rng;
 
 use crate::comm::CommModel;
 use crate::ga::{
-    breed_pair_with, decode, fast_non_dominated_sort, merge_neighbors_into,
+    breed_pair_into, decode, fast_non_dominated_sort, merge_neighbors_into,
     reposition_adjacent_into, DecodeScratch, DecodedPlanCache, Genome, MutationRates, PlanSet,
     SelectionWorkspace, UpmxScratch,
 };
@@ -218,9 +224,11 @@ impl AnalysisResult {
 /// are drawn sequentially from the master stream *before* the parallel
 /// fan-out, which is what makes results thread-count independent. The
 /// genome is *moved* into the resulting [`Solution`] (via `mem::take`), so
-/// scoring a job never copies it.
+/// scoring a job never copies it; `obj` is the recycled objectives buffer
+/// the resulting [`Solution`] takes over.
 struct EvalJob {
     genome: Genome,
+    obj: Vec<f64>,
     seed: u64,
     local_search: bool,
     measure: bool,
@@ -233,6 +241,15 @@ struct EvalJob {
 /// master stream before the fan-out, so the children are a pure function of
 /// `(parents, seeds)` whatever the thread count. `emit_b` is false only for
 /// the surplus child of an odd-population last pair.
+///
+/// The job carries the buffers its children will live in: `out_a`/`out_b`
+/// genomes and `obj_a`/`obj_b` objective vectors, popped from the
+/// replacement slab (survivors of the last NSGA-III replacement recycled
+/// via [`take_by_index_into`]). Breeding writes into them with the
+/// buffer-reusing [`breed_pair_into`], so steady-state reproduction
+/// allocates no genome or objective storage at all. An unused `out_b` /
+/// `obj_b` (the `!emit_b` pair) stays in the job for the master thread to
+/// harvest back into the slab.
 struct PairJob {
     a: usize,
     b: usize,
@@ -241,6 +258,10 @@ struct PairJob {
     seed_b: u64,
     emit_b: bool,
     measure: bool,
+    out_a: Genome,
+    out_b: Genome,
+    obj_a: Vec<f64>,
+    obj_b: Vec<f64>,
 }
 
 /// Per-worker evaluation scratch: simulation arena, first-touch decode
@@ -268,7 +289,7 @@ struct EvalScratch {
     cand_objectives: Vec<f64>,
     /// Local-search candidate clone target (buffer-reusing `clone_from`).
     cand: Genome,
-    /// UPMX position-index buffers for [`crate::ga::breed_pair_with`] (the
+    /// UPMX position-index buffers for [`crate::ga::breed_pair_into`] (the
     /// last per-pair allocations of the offspring fan-out).
     upmx: UpmxScratch,
 }
@@ -433,10 +454,15 @@ impl<'a> StaticAnalyzer<'a> {
     /// job touches is either its own (`rng` from the derived seed, the
     /// thread-local scratch) or value-deterministic shared state (profile
     /// DB, plan memo), so the result is a pure function of (genome, seed).
-    /// The genome is owned and moves into the returned [`Solution`].
+    /// The genome is owned and moves into the returned [`Solution`], as
+    /// does `obj_out` — a recycled objectives buffer (cleared and refilled
+    /// here) so scoring a job with slab-recycled inputs allocates nothing
+    /// for the solution's own storage.
+    #[allow(clippy::too_many_arguments)]
     fn eval_one(
         &self,
         genome: Genome,
+        mut obj_out: Vec<f64>,
         seed: u64,
         local_search: bool,
         measure: bool,
@@ -487,35 +513,46 @@ impl<'a> StaticAnalyzer<'a> {
                 objectives.extend_from_slice(worst);
             }
         }
-        Solution { genome, objectives: objectives.clone(), plan_set: set }
+        obj_out.clear();
+        obj_out.extend_from_slice(objectives);
+        Solution { genome, objectives: obj_out, plan_set: set }
     }
 
     /// Breed one pair job and evaluate its children on the calling worker
-    /// thread: derive the pair RNG, clone + crossover + mutate the parents,
-    /// apply the ablation switches, then score each emitted child with its
-    /// own derived seed.
+    /// thread: derive the pair RNG, breed the parents into the job's
+    /// recycled genome buffers (copy-into → crossover → mutation), apply
+    /// the ablation switches, then score each emitted child with its own
+    /// derived seed. The `!emit_b` surplus child's buffers go back into the
+    /// job for the master thread to return to the slab.
     fn breed_and_eval(
         &self,
         parents: &[Solution],
-        job: &PairJob,
+        job: &mut PairJob,
         rates: MutationRates,
         ctx: &EvalCtx<'_, '_>,
         scratch: &mut EvalScratch,
     ) -> (Solution, Option<Solution>) {
         let mut rng = Rng::seed_from_u64(job.pair_seed);
-        let (mut a, mut b) = breed_pair_with(
+        let mut a = std::mem::take(&mut job.out_a);
+        let mut b = std::mem::take(&mut job.out_b);
+        breed_pair_into(
             &parents[job.a].genome,
             &parents[job.b].genome,
             rates,
             &mut rng,
             &mut scratch.upmx,
+            &mut a,
+            &mut b,
         );
         self.enforce_ablation_switches(&mut a);
         self.enforce_ablation_switches(&mut b);
-        let sol_a = self.eval_one(a, job.seed_a, true, job.measure, ctx, scratch);
+        let obj_a = std::mem::take(&mut job.obj_a);
+        let sol_a = self.eval_one(a, obj_a, job.seed_a, true, job.measure, ctx, scratch);
         let sol_b = if job.emit_b {
-            Some(self.eval_one(b, job.seed_b, true, job.measure, ctx, scratch))
+            let obj_b = std::mem::take(&mut job.obj_b);
+            Some(self.eval_one(b, obj_b, job.seed_b, true, job.measure, ctx, scratch))
         } else {
+            job.out_b = b;
             None
         };
         (sol_a, sol_b)
@@ -577,8 +614,9 @@ impl<'a> StaticAnalyzer<'a> {
     ) -> Vec<Solution> {
         self.fan_out(&mut jobs, scratches, &|job, scratch| {
             let genome = std::mem::take(&mut job.genome);
+            let obj = std::mem::take(&mut job.obj);
             let (seed, ls, measure) = (job.seed, job.local_search, job.measure);
-            self.eval_one(genome, seed, ls, measure, ctx, scratch)
+            self.eval_one(genome, obj, seed, ls, measure, ctx, scratch)
         })
     }
 
@@ -610,12 +648,7 @@ impl<'a> StaticAnalyzer<'a> {
     }
 
     fn effective_threads(&self, jobs: usize) -> usize {
-        let configured = if self.config.threads == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            self.config.threads
-        };
-        configured.clamp(1, jobs.max(1))
+        crate::util::threads::effective_threads(self.config.threads, jobs)
     }
 
     /// Deprecated silent run. Prefer [`crate::api::AnalysisSession::run`]
@@ -693,6 +726,7 @@ impl<'a> StaticAnalyzer<'a> {
             .map(|g| EvalJob {
                 seed: rng.next_u64(),
                 genome: g,
+                obj: Vec::new(),
                 local_search: false,
                 measure: false,
             })
@@ -703,12 +737,23 @@ impl<'a> StaticAnalyzer<'a> {
         let mut evaluated: Vec<Solution> = self.evaluate_batch(init_jobs, &mut scratches, &ctx);
 
         // Master-thread per-generation scratch, reused across generations:
-        // the ENS selection workspace, the flattened objective matrix, and
-        // the survivor index list. Steady-state replacement allocates
+        // the ENS selection workspace, the flattened objective matrix, the
+        // survivor index list, the shuffle order, the pair-job list, and
+        // the parent+children pool. Steady-state replacement allocates
         // nothing beyond the pooled Solution moves.
         let mut selection = SelectionWorkspace::new();
         let mut flat_objs: Vec<f64> = Vec::new();
         let mut keep: Vec<usize> = Vec::new();
+        let mut order: Vec<usize> = Vec::new();
+        let mut pairs: Vec<PairJob> = Vec::new();
+        let mut pool: Vec<Solution> = Vec::new();
+        // Free list of (genome, objectives) buffers harvested from the
+        // solutions NSGA-III replacement drops. Pair jobs pop their child
+        // buffers from here, so once the search is warm a generation's
+        // reproduction recycles the previous generation's casualties
+        // instead of allocating fresh genome/objective storage
+        // (ROADMAP: generation-zero-alloc).
+        let mut slab: Vec<(Genome, Vec<f64>)> = Vec::new();
 
         let avg_score = |sols: &[Solution]| -> f64 {
             sols.iter()
@@ -733,14 +778,15 @@ impl<'a> StaticAnalyzer<'a> {
             // master thread only draws the shuffle and the per-pair /
             // per-child seeds, sequentially, so results are independent of
             // the thread count.
-            let mut order: Vec<usize> = (0..evaluated.len()).collect();
+            order.clear();
+            order.extend(0..evaluated.len());
             for i in (1..order.len()).rev() {
                 let j = rng.gen_range_inclusive(0, i);
                 order.swap(i, j);
             }
             let measure = self.config.measure_reps > 0;
             let mut remaining = evaluated.len();
-            let mut pairs: Vec<PairJob> = Vec::with_capacity(order.len().div_ceil(2));
+            pairs.clear();
             for pair in order.chunks(2) {
                 if remaining == 0 {
                     break;
@@ -751,6 +797,10 @@ impl<'a> StaticAnalyzer<'a> {
                 let pair_seed = rng.next_u64();
                 let seed_a = rng.next_u64();
                 let seed_b = if emit_b { rng.next_u64() } else { 0 };
+                // Child buffers come off the free-list slab (empty defaults
+                // until replacement has fed it).
+                let (out_a, obj_a) = slab.pop().unwrap_or_default();
+                let (out_b, obj_b) = slab.pop().unwrap_or_default();
                 pairs.push(PairJob {
                     a: pair[0],
                     b: pair[pair.len() - 1],
@@ -759,6 +809,10 @@ impl<'a> StaticAnalyzer<'a> {
                     seed_b,
                     emit_b,
                     measure,
+                    out_a,
+                    out_b,
+                    obj_a,
+                    obj_b,
                 });
                 remaining -= if emit_b { 2 } else { 1 };
             }
@@ -768,6 +822,13 @@ impl<'a> StaticAnalyzer<'a> {
             // improvement) and the measurement tier (brief noisy execution)
             // before replacement.
             let children = self.evaluate_offspring(&evaluated, &mut pairs, &mut scratches, &ctx);
+            // Harvest the buffers an odd population's last pair bred for
+            // its surplus child but never emitted.
+            for job in &mut pairs {
+                if !job.emit_b {
+                    slab.push((std::mem::take(&mut job.out_b), std::mem::take(&mut job.obj_b)));
+                }
+            }
             // Mid-generation (post-batch, pre-replacement) progress: the
             // cancellation point for long searches. A Break still performs
             // this generation's replacement so the returned front reflects
@@ -779,10 +840,12 @@ impl<'a> StaticAnalyzer<'a> {
             // *moved* out of the pool, never cloned, so retention copies no
             // genomes and no plans (`tests/batch_eval.rs` asserts the
             // underlying operations — Solution moves and plan-handle clones
-            // — are plan-copy-free), and the selection scratch (flattened
+            // — are plan-copy-free), the selection scratch (flattened
             // objectives, ENS fronts, niching heaps, survivor indices) lives
-            // in reusable buffers.
-            let mut pool = std::mem::take(&mut evaluated);
+            // in reusable buffers, and the dropped solutions' genome and
+            // objectives buffers go back to the slab for the next
+            // generation's pair jobs.
+            std::mem::swap(&mut pool, &mut evaluated);
             pool.extend(children);
             let m = pool.first().map(|s| s.objectives.len()).unwrap_or(1);
             flat_objs.clear();
@@ -793,7 +856,7 @@ impl<'a> StaticAnalyzer<'a> {
             keep.extend_from_slice(selection.select(&flat_objs, m, self.config.population));
             keep.sort_unstable();
             keep.dedup();
-            evaluated = take_by_index(pool, &keep);
+            take_by_index_into(&mut pool, &keep, &mut evaluated, &mut slab);
 
             // Convergence check on the average aggregate.
             let avg = avg_score(&evaluated);
@@ -879,6 +942,32 @@ fn take_by_index(pool: Vec<Solution>, indices: &[usize]) -> Vec<Solution> {
         }
     }
     out
+}
+
+/// [`take_by_index`] with full buffer recycling: survivors are drained from
+/// `pool` into `out` (cleared first; both keep their capacity), and every
+/// dropped solution's genome and objectives buffers are pushed onto the
+/// `slab` free list for the next generation's pair jobs to reuse. The
+/// dropped solution's plan handle (`Arc<PlanSet>`) is simply released — the
+/// decode memo keeps plans alive, so nothing is deep-freed here either.
+fn take_by_index_into(
+    pool: &mut Vec<Solution>,
+    indices: &[usize],
+    out: &mut Vec<Solution>,
+    slab: &mut Vec<(Genome, Vec<f64>)>,
+) {
+    out.clear();
+    let mut next = indices.iter().copied().peekable();
+    for (i, sol) in pool.drain(..).enumerate() {
+        if next.peek() == Some(&i) {
+            next.next();
+            out.push(sol);
+        } else {
+            let Solution { genome, objectives, plan_set } = sol;
+            drop(plan_set);
+            slab.push((genome, objectives));
+        }
+    }
 }
 
 /// Send one [`crate::api::BatchProgress`] snapshot (after a batch of
@@ -994,6 +1083,100 @@ mod tests {
             "merkle cache ineffective: {} hits vs {} measures",
             result.profile_cache_hits, result.profile_measurements
         );
+    }
+
+    #[test]
+    fn take_by_index_recycling_matches_and_recycles() {
+        let mk = |i: usize| Solution {
+            genome: Genome { networks: Vec::new(), priority: vec![i] },
+            objectives: vec![i as f64],
+            plan_set: Arc::new(PlanSet { plans: Vec::new(), compiled: Vec::new() }),
+        };
+        let expect = take_by_index((0..6).map(mk).collect(), &[1, 3, 4]);
+        let mut pool: Vec<Solution> = (0..6).map(mk).collect();
+        let mut out = Vec::new();
+        let mut slab: Vec<(Genome, Vec<f64>)> = Vec::new();
+        take_by_index_into(&mut pool, &[1, 3, 4], &mut out, &mut slab);
+        assert!(pool.is_empty(), "pool must be drained");
+        assert_eq!(
+            out.iter().map(|s| s.objectives[0]).collect::<Vec<_>>(),
+            expect.iter().map(|s| s.objectives[0]).collect::<Vec<_>>(),
+            "survivors must match take_by_index"
+        );
+        // Dropped solutions' genome + objectives buffers land on the free
+        // list, in pool order.
+        let dropped: Vec<usize> = slab.iter().map(|(g, _)| g.priority[0]).collect();
+        assert_eq!(dropped, vec![0, 2, 5]);
+        assert_eq!(slab.iter().map(|(_, o)| o[0]).collect::<Vec<_>>(), vec![0.0, 2.0, 5.0]);
+    }
+
+    #[test]
+    fn recycled_breed_and_eval_is_allocation_free() {
+        // The steady-state reproduction path: once the decode memo holds the
+        // children and every scratch/recycled buffer is warm, breeding and
+        // scoring a pair job must not touch the allocator at all. Run the
+        // exact same pair job twice — same parents and seeds mean the second
+        // run's children are decode-memo hits — feeding the second job the
+        // first run's solution buffers, exactly as the slab does between
+        // generations.
+        let s = tiny_scenario();
+        let pm = PerfModel::paper_calibrated();
+        let analyzer = StaticAnalyzer::engine(&s, &pm, GaConfig::quick(5));
+        let profiler = Profiler::new(&pm);
+        let plan_cache = DecodedPlanCache::new();
+        let groups = analyzer.groups();
+        let evals = AtomicUsize::new(0);
+        let ctx = EvalCtx {
+            profiler: &profiler,
+            cache: &plan_cache,
+            groups: &groups,
+            evals: &evals,
+        };
+        let mut scratch = EvalScratch::default();
+        let mut rng = Rng::seed_from_u64(77);
+        let parents: Vec<Solution> = (0..2)
+            .map(|i| {
+                let g = Genome::random(&s.networks, 0.3, &mut rng);
+                analyzer.eval_one(g, Vec::new(), 100 + i, false, false, &ctx, &mut scratch)
+            })
+            .collect();
+        let rates = MutationRates {
+            cut: analyzer.config.p_mutate_cut,
+            map: analyzer.config.p_mutate_map,
+            prio: analyzer.config.p_mutate_prio,
+        };
+        let job = |out_a: Genome, out_b: Genome, obj_a: Vec<f64>, obj_b: Vec<f64>| PairJob {
+            a: 0,
+            b: 1,
+            pair_seed: 41,
+            seed_a: 42,
+            seed_b: 43,
+            emit_b: true,
+            measure: true,
+            out_a,
+            out_b,
+            obj_a,
+            obj_b,
+        };
+        let mut cold = job(Genome::default(), Genome::default(), Vec::new(), Vec::new());
+        let (warm_a, warm_b) =
+            analyzer.breed_and_eval(&parents, &mut cold, rates, &ctx, &mut scratch);
+        let warm_b = warm_b.expect("emit_b");
+        // Second run: recycled buffers, warm caches, same seeds.
+        let mut recycled = job(
+            warm_a.genome,
+            warm_b.genome,
+            warm_a.objectives.clone(),
+            warm_b.objectives.clone(),
+        );
+        let before = crate::util::alloc::thread_allocations();
+        let (sol_a, sol_b) =
+            analyzer.breed_and_eval(&parents, &mut recycled, rates, &ctx, &mut scratch);
+        let allocs = crate::util::alloc::thread_allocations() - before;
+        assert_eq!(allocs, 0, "warm recycled breed+eval must not allocate");
+        // And recycling changes nothing about the result.
+        assert_eq!(sol_a.objectives, warm_a.objectives);
+        assert_eq!(sol_b.expect("emit_b").objectives, warm_b.objectives);
     }
 
     #[test]

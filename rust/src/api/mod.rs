@@ -61,9 +61,12 @@ use crate::util::error::Result;
 
 pub use crate::analyzer::{GaConfig, Solution};
 pub use crate::coordinator::{OverloadPolicy, RecoveryOptions, RuntimeOptions};
+pub use crate::experiments::serving::{
+    FigureReport, FigureSelection, Method, ProtocolProgress, ServingBudget,
+};
 pub use crate::serve::{
     Admission, ArrivalProcess, ClockMode, FaultEvent, FaultPlan, GroupLoad, LoadSpec,
-    SaturationOptions, ServeReport,
+    ProbeProgress, SaturationOptions, ServeReport,
 };
 pub use crate::telemetry::{MetricsAggregator, TelemetryEvent, TelemetryRx};
 

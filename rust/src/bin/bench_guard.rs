@@ -87,7 +87,7 @@ fn main() {
     }
 
     // Layer 2: same-run invariants (machine-independent).
-    let invariants: [(&str, &str, f64); 11] = [
+    let invariants: [(&str, &str, f64); 12] = [
         // Parallel must not lose to serial by more than scheduling jitter
         // (on a single-core runner both take the same path).
         ("analyzer/parallel_generation", "analyzer/serial_generation", 1.10),
@@ -124,6 +124,11 @@ fn main() {
         // per-probe Coordinator/Worker spawn: it must never lose to fresh
         // deploys running the identical probe sequence.
         ("serve/saturation_reused_deploy", "serve/saturation_fresh_deploys", 1.00),
+        // The scoped probe fleet runs the identical multi-set bisection
+        // (bit-identical results, determinism contract #6): whatever the
+        // core count, going parallel must never cost wall-clock beyond
+        // jitter. On a single-core runner both take the serial path.
+        ("serve/saturation_fleet", "serve/saturation_serial", 1.05),
     ];
     for (fast, slow, margin) in invariants {
         match (get(&fresh, fast), get(&fresh, slow)) {

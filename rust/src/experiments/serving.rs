@@ -12,7 +12,8 @@
 //! [`super::score_at_alpha`]) remains available for the ablation drivers
 //! and quick estimates, but the figures no longer use it.
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
 
 use crate::analyzer::GaConfig;
 use crate::api::SessionBuilder;
@@ -45,6 +46,14 @@ pub struct ServingBudget {
     /// protocol; [`Admission::LittleCap`] bounds probe backlog with a
     /// Little's-law in-flight cap).
     pub admission: Admission,
+    /// Width of the figure-protocol work-stealing shard: how many
+    /// `(scenario, method)` jobs run concurrently (`0` = all cores,
+    /// clamped to the job count). `1` — the default — runs the protocol
+    /// serially with the per-set probe fleet inside each saturation
+    /// search instead; above 1, each job's inner fleet drops to one
+    /// thread so the two layers never oversubscribe. Either way the
+    /// report is bit-identical: thread counts change scheduling only.
+    pub protocol_threads: usize,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -60,6 +69,7 @@ impl ServingBudget {
             sim_requests: 30,
             scenarios: 10,
             admission: Admission::Queue,
+            protocol_threads: 1,
         }
     }
 
@@ -69,14 +79,22 @@ impl ServingBudget {
             sim_requests: 12,
             scenarios: 3,
             admission: Admission::Queue,
+            protocol_threads: 1,
         }
     }
 
     fn ga_config(&self, seed: u64) -> GaConfig {
-        match self.ga {
+        let mut config = match self.ga {
             GaSize::Quick => GaConfig::quick(seed),
             GaSize::Full => GaConfig { seed, ..Default::default() },
+        };
+        if self.protocol_threads > 1 {
+            // The protocol shard already fans out across jobs; one GA
+            // worker per job avoids nested oversubscription (GA results
+            // are thread-count invariant, so this changes nothing else).
+            config.threads = 1;
         }
+        config
     }
 }
 
@@ -153,38 +171,194 @@ pub fn solve_scenario_runtime(
     ScenarioMethods { puzzle, best_mapping, npu_only }
 }
 
+/// Inner-fleet width under one protocol job: all cores when the protocol
+/// layer itself is serial, one thread once the protocol shard is fanned
+/// out — nested oversubscription changes scheduling only (results are
+/// thread-count invariant by contract) but wastes context switches.
+fn inner_threads(budget: &ServingBudget) -> usize {
+    if budget.protocol_threads > 1 {
+        1
+    } else {
+        0
+    }
+}
+
 fn sat_opts(budget: &ServingBudget, seed: u64) -> SaturationOptions {
     SaturationOptions {
         requests: budget.sim_requests,
         seed,
         admission: budget.admission,
+        probe_threads: inner_threads(budget),
         ..Default::default()
     }
 }
 
+/// The three measured methods of the paper's serving protocol. A
+/// `(scenario, method)` pair is the unit of work the protocol shard
+/// steals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// Puzzle's Pareto solution sets.
+    Puzzle,
+    /// The best-static-mapping baseline's front.
+    BestMapping,
+    /// The all-on-NPU baseline.
+    NpuOnly,
+}
+
+impl Method {
+    /// All methods, in the fixed protocol (and report) order.
+    pub const ALL: [Method; 3] = [Method::Puzzle, Method::BestMapping, Method::NpuOnly];
+
+    /// The method's report label.
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Puzzle => "puzzle",
+            Method::BestMapping => "best_mapping",
+            Method::NpuOnly => "npu_only",
+        }
+    }
+
+    fn pick(self, methods: &ScenarioMethods) -> &Vec<Vec<NetworkSolution>> {
+        match self {
+            Method::Puzzle => &methods.puzzle,
+            Method::BestMapping => &methods.best_mapping,
+            Method::NpuOnly => &methods.npu_only,
+        }
+    }
+
+    fn set(self, row: &mut SaturationRow, alpha: Option<f64>) {
+        match self {
+            Method::Puzzle => row.puzzle = alpha,
+            Method::BestMapping => row.best_mapping = alpha,
+            Method::NpuOnly => row.npu_only = alpha,
+        }
+    }
+}
+
+/// One scenario's lazily-shared GA solve: the first protocol job needing
+/// its methods runs the solve, concurrent jobs of the same scenario block
+/// on the [`OnceLock`] instead of re-solving. The GA seed is part of the
+/// cell, so a shared cell always reproduces the serial protocol's solve.
+struct SolveCell {
+    scenario: Scenario,
+    ga_seed: u64,
+    methods: OnceLock<ScenarioMethods>,
+}
+
+impl SolveCell {
+    fn new(scenario: Scenario, ga_seed: u64) -> SolveCell {
+        SolveCell { scenario, ga_seed, methods: OnceLock::new() }
+    }
+
+    fn methods(&self, pm: &PerfModel, budget: &ServingBudget) -> &ScenarioMethods {
+        self.methods.get_or_init(|| solve_scenario_runtime(&self.scenario, pm, budget, self.ga_seed))
+    }
+}
+
+/// Work-stealing shard over an indexed job list, with a completion
+/// fan-in. Workers pull the next job off a shared atomic cursor (no
+/// per-thread chunking: one slow scenario cannot strand the rest of its
+/// chunk), push `(index, result)` under a lock, and send the finished
+/// index through an [`mpsc`] channel; the *calling* thread drains that
+/// channel while the workers run, so `on_done` — the protocol's streaming
+/// observer — needs neither `Send` nor `Sync`. Results are merged **by
+/// job index, never completion order**, which is what keeps the folded
+/// report bit-identical to a serial run of the same jobs.
+fn shard_observed<J: Sync, R: Send>(
+    jobs: &[J],
+    threads: usize,
+    run: &(impl Fn(usize, &J) -> R + Sync),
+    on_done: &mut dyn FnMut(usize),
+) -> Vec<R> {
+    if threads <= 1 || jobs.len() <= 1 {
+        return jobs
+            .iter()
+            .enumerate()
+            .map(|(i, job)| {
+                let r = run(i, job);
+                on_done(i);
+                r
+            })
+            .collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(jobs.len()));
+    let (tx, rx) = mpsc::channel::<usize>();
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(jobs.len()) {
+            let tx = tx.clone();
+            let (cursor, done) = (&cursor, &done);
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let r = run(i, &jobs[i]);
+                done.lock().expect("shard worker panicked").push((i, r));
+                let _ = tx.send(i);
+            });
+        }
+        // The workers hold the remaining senders; iteration ends when the
+        // last worker finishes and drops its clone.
+        drop(tx);
+        for i in rx {
+            on_done(i);
+        }
+    });
+    let mut done = done.into_inner().expect("shard worker panicked");
+    done.sort_unstable_by_key(|&(i, _)| i);
+    done.into_iter().map(|(_, r)| r).collect()
+}
+
+/// [`shard_observed`] without a completion observer.
+fn shard<J: Sync, R: Send>(
+    jobs: &[J],
+    threads: usize,
+    run: &(impl Fn(usize, &J) -> R + Sync),
+) -> Vec<R> {
+    shard_observed(jobs, threads, run, &mut |_| {})
+}
+
 /// Figure 12 / 15 core: runtime-measured saturation multiplier per scenario
-/// per method (the [`crate::serve::saturation_via_runtime`] driver).
+/// per method (the [`crate::serve::saturation_via_runtime`] driver), run as
+/// a work-stealing shard of `(scenario, method)` jobs at
+/// [`ServingBudget::protocol_threads`] width. Jobs of one scenario share
+/// the GA solve through a [`SolveCell`]; rows are folded by scenario
+/// index, so the table is identical to the serial sweep for any width.
 fn saturation_sweep(
     scenarios: &[Scenario],
     pm: &PerfModel,
     budget: &ServingBudget,
 ) -> Vec<SaturationRow> {
     let perf = Arc::new(pm.clone());
-    scenarios
+    let cells: Vec<SolveCell> = scenarios
         .iter()
         .take(budget.scenarios)
         .enumerate()
-        .map(|(i, s)| {
-            let methods = solve_scenario_runtime(s, pm, budget, 23 + i as u64);
-            let opts = sat_opts(budget, 29 + i as u64);
-            SaturationRow {
-                scenario: s.name.clone(),
-                puzzle: serve::saturation_via_runtime(&methods.puzzle, s, &perf, &opts),
-                best_mapping: serve::saturation_via_runtime(&methods.best_mapping, s, &perf, &opts),
-                npu_only: serve::saturation_via_runtime(&methods.npu_only, s, &perf, &opts),
-            }
+        .map(|(i, s)| SolveCell::new(s.clone(), 23 + i as u64))
+        .collect();
+    let jobs: Vec<(usize, Method)> =
+        (0..cells.len()).flat_map(|i| Method::ALL.map(|m| (i, m))).collect();
+    let threads = crate::util::threads::effective_threads(budget.protocol_threads, jobs.len());
+    let alphas = shard(&jobs, threads, &|_, &(i, m)| {
+        let methods = cells[i].methods(pm, budget);
+        let opts = sat_opts(budget, 29 + i as u64);
+        serve::saturation_via_runtime(m.pick(methods), &cells[i].scenario, &perf, &opts)
+    });
+    let mut rows: Vec<SaturationRow> = cells
+        .iter()
+        .map(|c| SaturationRow {
+            scenario: c.scenario.name.clone(),
+            puzzle: None,
+            best_mapping: None,
+            npu_only: None,
         })
-        .collect()
+        .collect();
+    for (&(i, m), alpha) in jobs.iter().zip(alphas) {
+        m.set(&mut rows[i], alpha);
+    }
+    rows
 }
 
 /// Figure 12 — single model group saturation multipliers
@@ -219,7 +393,11 @@ pub struct MethodCurve {
 /// whole α grid: periodic open-loop load at Φ(α) through **one warm
 /// virtual-clock deployment per solution** (reset + re-seeded between
 /// probes — bit-identical to fresh deployments, at one deploy per set
-/// instead of one per (set, α) pair). Deterministic per seed.
+/// instead of one per (set, α) pair). The sets ride the same per-set
+/// fleet as the saturation driver — one [`shard`] job per set, each
+/// owning its deployment (and its whole α loop) for the job's lifetime —
+/// and the solutions are `Arc`-shared into each harness rather than
+/// cloned per deployment. Deterministic per seed, for any `threads`.
 fn runtime_score_bands(
     sets: &[Vec<NetworkSolution>],
     scenario: &Scenario,
@@ -227,26 +405,42 @@ fn runtime_score_bands(
     perf: &Arc<PerfModel>,
     requests: usize,
     seed: u64,
+    threads: usize,
 ) -> Vec<(f64, f64, f64)> {
     if sets.is_empty() {
         return alphas.iter().map(|_| (0.0, 0.0, 0.0)).collect();
     }
-    let groups: Vec<Vec<usize>> = scenario.groups.iter().map(|g| g.members.clone()).collect();
-    // per_alpha[k][i] = score of set i at alphas[k].
-    let mut per_alpha: Vec<Vec<f64>> = vec![Vec::with_capacity(sets.len()); alphas.len()];
-    for (i, sols) in sets.iter().enumerate() {
-        let harness =
-            RuntimeHarness::for_solutions(sols.clone(), groups.clone(), perf.clone(), seed);
-        let mut deployment = harness.deploy(ClockMode::Virtual);
-        for (k, &alpha) in alphas.iter().enumerate() {
-            let spec = LoadSpec::for_scenario(scenario, perf, alpha, requests);
-            per_alpha[k].push(deployment.probe(&spec, serve::probe_seed(seed, i, alpha)).score);
-        }
-        deployment.shutdown();
-    }
-    per_alpha
-        .into_iter()
-        .map(|mut scores| {
+    let groups: Arc<Vec<Vec<usize>>> =
+        Arc::new(scenario.groups.iter().map(|g| g.members.clone()).collect());
+    let jobs: Vec<usize> = (0..sets.len()).collect();
+    // per_set[i][k] = score of set i at alphas[k].
+    let per_set: Vec<Vec<f64>> = shard(
+        &jobs,
+        crate::util::threads::effective_threads(threads, jobs.len()),
+        &|_, &i| {
+            let harness = RuntimeHarness::for_shared(
+                Arc::new(sets[i].clone()),
+                groups.clone(),
+                perf.clone(),
+                seed,
+            );
+            let mut deployment = harness.deploy(ClockMode::Virtual);
+            let scores: Vec<f64> = alphas
+                .iter()
+                .map(|&alpha| {
+                    let spec = LoadSpec::for_scenario(scenario, perf, alpha, requests);
+                    deployment.probe(&spec, serve::probe_seed(seed, i, alpha)).score
+                })
+                .collect();
+            deployment.shutdown();
+            scores
+        },
+    );
+    alphas
+        .iter()
+        .enumerate()
+        .map(|(k, _)| {
+            let mut scores: Vec<f64> = per_set.iter().map(|s| s[k]).collect();
             scores.sort_by(|a, b| a.partial_cmp(b).unwrap());
             (scores[0], scores[scores.len() / 2], scores[scores.len() - 1])
         })
@@ -254,7 +448,9 @@ fn runtime_score_bands(
 }
 
 /// Score-vs-α curves for a scenario (Figure 13 for single-group scenarios,
-/// Figure 16 for multi-group), measured through the runtime.
+/// Figure 16 for multi-group), measured through the runtime. The per-set
+/// band sweeps run on the probe fleet — all cores when the protocol layer
+/// is serial, one thread per protocol job otherwise.
 pub fn score_curves(
     scenario: &Scenario,
     pm: &PerfModel,
@@ -264,18 +460,24 @@ pub fn score_curves(
 ) -> MethodCurve {
     let methods = solve_scenario_runtime(scenario, pm, budget, seed);
     let perf = Arc::new(pm.clone());
-    let make = |name: &str, sets: &[Vec<NetworkSolution>]| ScoreCurve {
-        method: name.to_string(),
-        alphas: alphas.to_vec(),
-        scores: runtime_score_bands(sets, scenario, alphas, &perf, budget.sim_requests, seed),
-    };
     MethodCurve {
         scenario: scenario.name.clone(),
-        curves: vec![
-            make("puzzle", &methods.puzzle),
-            make("best_mapping", &methods.best_mapping),
-            make("npu_only", &methods.npu_only),
-        ],
+        curves: Method::ALL
+            .iter()
+            .map(|m| ScoreCurve {
+                method: m.name().to_string(),
+                alphas: alphas.to_vec(),
+                scores: runtime_score_bands(
+                    m.pick(&methods),
+                    scenario,
+                    alphas,
+                    &perf,
+                    budget.sim_requests,
+                    seed,
+                    inner_threads(budget),
+                ),
+            })
+            .collect(),
     }
 }
 
@@ -309,46 +511,416 @@ pub fn fig14_makespan_distribution(
     let scenario = scenario10_analog();
     let methods = solve_scenario_runtime(&scenario, pm, budget, 210);
     let perf = Arc::new(pm.clone());
-    let groups: Vec<Vec<usize>> = scenario.groups.iter().map(|g| g.members.clone()).collect();
-    let named: Vec<(&str, Option<&Vec<NetworkSolution>>)> = vec![
-        ("puzzle", methods.puzzle.first()),
-        ("best_mapping", methods.best_mapping.first()),
-        ("npu_only", methods.npu_only.first()),
-    ];
+    Method::ALL
+        .iter()
+        .flat_map(|m| fig14_method_rows(&scenario, m.name(), m.pick(&methods).first(), &perf, budget))
+        .collect()
+}
+
+/// One method's Figure-14 rows — the unit the protocol shard steals. The
+/// deployment, its telemetry subscription, and the aggregation
+/// cross-check all live on the calling (worker) thread: per-deployment
+/// subscribers stay isolated per job, so sharded methods never share a
+/// telemetry ring.
+fn fig14_method_rows(
+    scenario: &Scenario,
+    name: &str,
+    sols: Option<&Vec<NetworkSolution>>,
+    perf: &Arc<PerfModel>,
+    budget: &ServingBudget,
+) -> Vec<(String, f64, Vec<f64>)> {
+    let Some(sols) = sols else { return Vec::new() };
+    let groups: Arc<Vec<Vec<usize>>> =
+        Arc::new(scenario.groups.iter().map(|g| g.members.clone()).collect());
+    // One warm deployment per method, probed at every α: reset +
+    // re-seeded between probes, so each row is bit-identical to the
+    // fresh-deployment-per-(method, α) protocol at half the deploys.
+    let mut deployment =
+        RuntimeHarness::for_shared(Arc::new(sols.clone()), groups.clone(), perf.clone(), 41)
+            .deploy(ClockMode::Virtual);
+    // Telemetry cross-check: one subscription across every probe of
+    // this deployment; each probe's drained events, folded on their
+    // own, must reproduce that probe's ServeReport exactly (the
+    // aggregation-consistency contract, exercised here on a production
+    // figure path rather than only in tests).
+    let mut telemetry = deployment.subscribe();
     let mut rows = Vec::new();
-    for (name, sols) in named {
-        let Some(sols) = sols else { continue };
-        // One warm deployment per method, probed at every α: reset +
-        // re-seeded between probes, so each row is bit-identical to the
-        // fresh-deployment-per-(method, α) protocol at half the deploys.
-        let mut deployment =
-            RuntimeHarness::for_solutions(sols.clone(), groups.clone(), perf.clone(), 41)
-                .deploy(ClockMode::Virtual);
-        // Telemetry cross-check: one subscription across every probe of
-        // this deployment; each probe's drained events, folded on their
-        // own, must reproduce that probe's ServeReport exactly (the
-        // aggregation-consistency contract, exercised here on a production
-        // figure path rather than only in tests).
-        let mut telemetry = deployment.subscribe();
-        for &alpha in &[1.4, 0.9] {
-            // Paper omits NPU Only at tight periods (system failure from
-            // accumulated tasks); we keep it at the lenient period only.
-            if name == "npu_only" && alpha < 1.0 {
-                continue;
-            }
-            let spec = LoadSpec::for_scenario(&scenario, pm, alpha, budget.sim_requests);
-            let report = deployment.probe(&spec, serve::probe_seed(41, 0, alpha));
-            let mut agg = crate::telemetry::MetricsAggregator::new();
-            agg.fold_all(&telemetry.drain());
-            agg.consistent_with(&report)
-                .expect("fig14 telemetry aggregation must match the probe's serve report");
-            let avgs: Vec<f64> = (0..groups.len()).map(|g| report.avg_makespan(g)).collect();
-            rows.push((name.to_string(), alpha, avgs));
+    for &alpha in &[1.4, 0.9] {
+        // Paper omits NPU Only at tight periods (system failure from
+        // accumulated tasks); we keep it at the lenient period only.
+        if name == "npu_only" && alpha < 1.0 {
+            continue;
         }
-        drop(telemetry);
-        deployment.shutdown();
+        let spec = LoadSpec::for_scenario(scenario, perf, alpha, budget.sim_requests);
+        let report = deployment.probe(&spec, serve::probe_seed(41, 0, alpha));
+        let mut agg = crate::telemetry::MetricsAggregator::new();
+        agg.fold_all(&telemetry.drain());
+        agg.consistent_with(&report)
+            .expect("fig14 telemetry aggregation must match the probe's serve report");
+        let avgs: Vec<f64> = (0..groups.len()).map(|g| report.avg_makespan(g)).collect();
+        rows.push((name.to_string(), alpha, avgs));
     }
+    drop(telemetry);
+    deployment.shutdown();
     rows
+}
+
+/// Which figures the protocol queue should produce.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[allow(missing_docs)]
+pub struct FigureSelection {
+    pub fig12: bool,
+    pub fig13: bool,
+    pub fig14: bool,
+    pub fig15: bool,
+    pub fig16: bool,
+}
+
+impl FigureSelection {
+    /// Every figure (the paper's full evaluation protocol).
+    pub fn all() -> FigureSelection {
+        FigureSelection { fig12: true, fig13: true, fig14: true, fig15: true, fig16: true }
+    }
+
+    /// No figures — the starting point for [`FigureSelection::parse`].
+    pub fn none() -> FigureSelection {
+        FigureSelection { fig12: false, fig13: false, fig14: false, fig15: false, fig16: false }
+    }
+
+    /// Parse a comma-separated list like `"fig12,fig14"` (bare numbers
+    /// accepted: `"12,14"`).
+    pub fn parse(spec: &str) -> Result<FigureSelection, String> {
+        let mut sel = FigureSelection::none();
+        for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            match tok {
+                "fig12" | "12" => sel.fig12 = true,
+                "fig13" | "13" => sel.fig13 = true,
+                "fig14" | "14" => sel.fig14 = true,
+                "fig15" | "15" => sel.fig15 = true,
+                "fig16" | "16" => sel.fig16 = true,
+                other => return Err(format!("unknown figure {other:?} (expected fig12..fig16)")),
+            }
+        }
+        Ok(sel)
+    }
+}
+
+/// The merged output of [`figure_protocol`]: one field per selected
+/// figure (`None` = not selected), plus the headline ratios when both
+/// saturation tables were produced.
+#[derive(Debug, Clone, Default)]
+pub struct FigureReport {
+    /// Figure 12 — single-group saturation multipliers.
+    pub fig12: Option<Vec<SaturationRow>>,
+    /// Figure 13 — single-group score-vs-α curves.
+    pub fig13: Option<Vec<MethodCurve>>,
+    /// Figure 14 — per-group average makespans.
+    pub fig14: Option<Vec<(String, f64, Vec<f64>)>>,
+    /// Figure 15 — multi-group saturation multipliers.
+    pub fig15: Option<Vec<SaturationRow>>,
+    /// Figure 16 — multi-group score-vs-α curves.
+    pub fig16: Option<Vec<MethodCurve>>,
+    /// `(npu_only, best_mapping)` mean saturation ratios vs Puzzle over
+    /// fig12 + fig15 combined ([`headline_ratios`]); requires both.
+    pub headline: Option<(f64, f64)>,
+}
+
+/// One finished protocol job, streamed to the [`figure_protocol_observed`]
+/// observer **in completion order** (the report itself is merged by job
+/// index, so completion order never leaks into the output).
+#[derive(Debug, Clone)]
+pub struct ProtocolProgress {
+    /// Jobs finished so far, including this one.
+    pub done: usize,
+    /// Total jobs in the queue.
+    pub total: usize,
+    /// Human label of the finished job (`"fig12 scenario3 puzzle"`).
+    pub label: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Fig {
+    F12,
+    F13,
+    F15,
+    F16,
+}
+
+impl Fig {
+    fn name(self) -> &'static str {
+        match self {
+            Fig::F12 => "fig12",
+            Fig::F13 => "fig13",
+            Fig::F15 => "fig15",
+            Fig::F16 => "fig16",
+        }
+    }
+}
+
+/// One unit of the figure protocol: a `(scenario, method)` pair plus
+/// where its output lands in the report. Jobs reference their scenario's
+/// [`SolveCell`] by index, so two jobs (even across figures — fig16's
+/// scenario-10 curves and fig14 share one solve) never duplicate a GA
+/// run.
+enum ProtocolJob {
+    Sat { fig: Fig, row: usize, cell: usize, method: Method, sat_seed: u64 },
+    Curve { fig: Fig, row: usize, cell: usize, method: Method, seed: u64, alphas: Vec<f64> },
+    Makespan { cell: usize, method: Method },
+}
+
+enum ProtocolOut {
+    Sat(Option<f64>),
+    Curve(ScoreCurve),
+    Makespan(Vec<(String, f64, Vec<f64>)>),
+}
+
+impl ProtocolJob {
+    fn label(&self, cells: &[SolveCell]) -> String {
+        match self {
+            ProtocolJob::Sat { fig, cell, method, .. } => {
+                format!("{} {} {}", fig.name(), cells[*cell].scenario.name, method.name())
+            }
+            ProtocolJob::Curve { fig, cell, method, .. } => {
+                format!("{} {} {}", fig.name(), cells[*cell].scenario.name, method.name())
+            }
+            ProtocolJob::Makespan { cell, method } => {
+                format!("fig14 {} {}", cells[*cell].scenario.name, method.name())
+            }
+        }
+    }
+
+    fn run(
+        &self,
+        cells: &[SolveCell],
+        perf: &Arc<PerfModel>,
+        pm: &PerfModel,
+        budget: &ServingBudget,
+    ) -> ProtocolOut {
+        match self {
+            ProtocolJob::Sat { cell, method, sat_seed, .. } => {
+                let methods = cells[*cell].methods(pm, budget);
+                let opts = sat_opts(budget, *sat_seed);
+                ProtocolOut::Sat(serve::saturation_via_runtime(
+                    method.pick(methods),
+                    &cells[*cell].scenario,
+                    perf,
+                    &opts,
+                ))
+            }
+            ProtocolJob::Curve { cell, method, seed, alphas, .. } => {
+                let methods = cells[*cell].methods(pm, budget);
+                ProtocolOut::Curve(ScoreCurve {
+                    method: method.name().to_string(),
+                    alphas: alphas.clone(),
+                    scores: runtime_score_bands(
+                        method.pick(methods),
+                        &cells[*cell].scenario,
+                        alphas,
+                        perf,
+                        budget.sim_requests,
+                        *seed,
+                        inner_threads(budget),
+                    ),
+                })
+            }
+            ProtocolJob::Makespan { cell, method } => {
+                let methods = cells[*cell].methods(pm, budget);
+                ProtocolOut::Makespan(fig14_method_rows(
+                    &cells[*cell].scenario,
+                    method.name(),
+                    method.pick(methods).first(),
+                    perf,
+                    budget,
+                ))
+            }
+        }
+    }
+}
+
+/// The whole figure protocol (Figs 12–16 + headline) as **one flattened
+/// work-stealing queue** of `(scenario, method)` jobs at
+/// [`ServingBudget::protocol_threads`] width — full-protocol wall-clock
+/// is bounded by the slowest single scenario, not the slowest figure.
+/// Seeds, job bodies, and fold order are exactly the serial per-figure
+/// drivers' ([`fig12_single_group`], [`fig13_score_curves`],
+/// [`fig14_makespan_distribution`], [`fig15_multi_group`],
+/// [`fig16_multi_score_curves`]), so the merged report is bit-identical
+/// to running those five in sequence, for any thread count.
+pub fn figure_protocol(
+    pm: &PerfModel,
+    budget: &ServingBudget,
+    select: FigureSelection,
+) -> FigureReport {
+    figure_protocol_observed(pm, budget, select, &mut |_| {})
+}
+
+/// [`figure_protocol`] with a per-job completion observer (CLI progress).
+/// The observer runs on the calling thread — job completions fan in over
+/// a channel — so it needs neither `Send` nor `Sync`.
+pub fn figure_protocol_observed(
+    pm: &PerfModel,
+    budget: &ServingBudget,
+    select: FigureSelection,
+    on_job: &mut dyn FnMut(&ProtocolProgress),
+) -> FigureReport {
+    let mut cells: Vec<SolveCell> = Vec::new();
+    let mut jobs: Vec<ProtocolJob> = Vec::new();
+
+    // Saturation tables (fig12 single-group, fig15 multi-group): GA seed
+    // 23+i, saturation seed 29+i per scenario — the serial sweep's seeds.
+    let mut fig12_rows: Vec<SaturationRow> = Vec::new();
+    let mut fig15_rows: Vec<SaturationRow> = Vec::new();
+    for (fig, on, scenarios, rows) in [
+        (Fig::F12, select.fig12, single_group_scenarios(23), &mut fig12_rows),
+        (Fig::F15, select.fig15, multi_group_scenarios(23), &mut fig15_rows),
+    ] {
+        if !on {
+            continue;
+        }
+        for (i, s) in scenarios.into_iter().take(budget.scenarios).enumerate() {
+            let cell = cells.len();
+            rows.push(SaturationRow {
+                scenario: s.name.clone(),
+                puzzle: None,
+                best_mapping: None,
+                npu_only: None,
+            });
+            cells.push(SolveCell::new(s, 23 + i as u64));
+            for method in Method::ALL {
+                jobs.push(ProtocolJob::Sat {
+                    fig,
+                    row: i,
+                    cell,
+                    method,
+                    sat_seed: 29 + i as u64,
+                });
+            }
+        }
+    }
+
+    // Score curves (fig13 single-group scenarios 1 & 8, fig16 multi-group
+    // analogs): per-scenario GA/probe seeds as in the serial drivers.
+    let mut fig13_rows: Vec<MethodCurve> = Vec::new();
+    let mut fig16_rows: Vec<MethodCurve> = Vec::new();
+    let mut s10_cell: Option<usize> = None;
+    if select.fig13 {
+        let single = single_group_scenarios(23);
+        let alphas: Vec<f64> = (2..=20).map(|i| i as f64 * 0.1).collect();
+        for (row, (idx, seed)) in [(0usize, 101u64), (7, 108)].into_iter().enumerate() {
+            let s = single[idx].clone();
+            let cell = cells.len();
+            fig13_rows.push(MethodCurve { scenario: s.name.clone(), curves: Vec::new() });
+            cells.push(SolveCell::new(s, seed));
+            for method in Method::ALL {
+                jobs.push(ProtocolJob::Curve {
+                    fig: Fig::F13,
+                    row,
+                    cell,
+                    method,
+                    seed,
+                    alphas: alphas.clone(),
+                });
+            }
+        }
+    }
+    if select.fig16 {
+        let alphas: Vec<f64> = (2..=30).map(|i| i as f64 * 0.1).collect();
+        for (row, (s, seed)) in
+            [(crate::scenario::scenario6_analog(), 206u64), (scenario10_analog(), 210)]
+                .into_iter()
+                .enumerate()
+        {
+            let cell = cells.len();
+            if seed == 210 {
+                s10_cell = Some(cell);
+            }
+            fig16_rows.push(MethodCurve { scenario: s.name.clone(), curves: Vec::new() });
+            cells.push(SolveCell::new(s, seed));
+            for method in Method::ALL {
+                jobs.push(ProtocolJob::Curve {
+                    fig: Fig::F16,
+                    row,
+                    cell,
+                    method,
+                    seed,
+                    alphas: alphas.clone(),
+                });
+            }
+        }
+    }
+
+    // Fig 14 rides fig16's scenario-10 solve when both are selected (same
+    // scenario, same GA seed 210 — the solve is deterministic, so sharing
+    // the cell cannot change either figure).
+    if select.fig14 {
+        let cell = s10_cell.unwrap_or_else(|| {
+            let cell = cells.len();
+            cells.push(SolveCell::new(scenario10_analog(), 210));
+            cell
+        });
+        for method in Method::ALL {
+            jobs.push(ProtocolJob::Makespan { cell, method });
+        }
+    }
+
+    let perf = Arc::new(pm.clone());
+    let threads = crate::util::threads::effective_threads(budget.protocol_threads, jobs.len());
+    let labels: Vec<String> = jobs.iter().map(|j| j.label(&cells)).collect();
+    let total = jobs.len();
+    let mut completed = 0usize;
+    let results = shard_observed(
+        &jobs,
+        threads,
+        &|_, job: &ProtocolJob| job.run(&cells, &perf, pm, budget),
+        &mut |i| {
+            completed += 1;
+            on_job(&ProtocolProgress { done: completed, total, label: labels[i].clone() });
+        },
+    );
+
+    // Merge by job index: `results` is already in job order, and jobs are
+    // generated figure-major / scenario-major / method-minor, so pushing
+    // curves and extending fig14 rows reproduces the serial drivers'
+    // output exactly.
+    let mut fig14_rows: Vec<(String, f64, Vec<f64>)> = Vec::new();
+    for (job, out) in jobs.iter().zip(results) {
+        match (job, out) {
+            (ProtocolJob::Sat { fig, row, method, .. }, ProtocolOut::Sat(alpha)) => {
+                let rows = match fig {
+                    Fig::F12 => &mut fig12_rows,
+                    Fig::F15 => &mut fig15_rows,
+                    _ => unreachable!("saturation jobs belong to fig12/fig15"),
+                };
+                method.set(&mut rows[*row], alpha);
+            }
+            (ProtocolJob::Curve { fig, row, .. }, ProtocolOut::Curve(curve)) => {
+                let rows = match fig {
+                    Fig::F13 => &mut fig13_rows,
+                    Fig::F16 => &mut fig16_rows,
+                    _ => unreachable!("curve jobs belong to fig13/fig16"),
+                };
+                rows[*row].curves.push(curve);
+            }
+            (ProtocolJob::Makespan { .. }, ProtocolOut::Makespan(rows)) => {
+                fig14_rows.extend(rows);
+            }
+            _ => unreachable!("job and output kinds are produced 1:1"),
+        }
+    }
+
+    let headline = (select.fig12 && select.fig15).then(|| {
+        let mut all = fig12_rows.clone();
+        all.extend(fig15_rows.iter().cloned());
+        headline_ratios(&all)
+    });
+    FigureReport {
+        fig12: select.fig12.then_some(fig12_rows),
+        fig13: select.fig13.then_some(fig13_rows),
+        fig14: select.fig14.then_some(fig14_rows),
+        fig15: select.fig15.then_some(fig15_rows),
+        fig16: select.fig16.then_some(fig16_rows),
+        headline,
+    }
 }
 
 /// Headline: mean saturation-multiplier ratios vs Puzzle
@@ -461,6 +1033,61 @@ mod tests {
         // NPU-only row exists at 1.4 but not at 0.9.
         assert!(rows.iter().any(|(m, a, _)| m == "npu_only" && *a == 1.4));
         assert!(!rows.iter().any(|(m, a, _)| m == "npu_only" && *a == 0.9));
+    }
+
+    #[test]
+    fn shard_merges_by_index_for_any_width() {
+        let jobs: Vec<usize> = (0..23).collect();
+        for threads in [1, 2, 4, 8] {
+            let mut done: Vec<usize> = Vec::new();
+            let out = shard_observed(
+                &jobs,
+                threads,
+                &|i, &j| {
+                    assert_eq!(i, j, "jobs are dispatched with their own index");
+                    j * 10
+                },
+                &mut |i| done.push(i),
+            );
+            // Results in job order regardless of completion order…
+            assert_eq!(out, (0..23).map(|j| j * 10).collect::<Vec<_>>(), "threads={threads}");
+            // …and the fan-in reported every job exactly once.
+            done.sort_unstable();
+            assert_eq!(done, jobs, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn sharded_protocol_matches_serial_sweep() {
+        // The protocol-shard determinism contract: the same budget at
+        // protocol_threads 1 vs 2 yields bit-identical saturation rows,
+        // both through the figure driver and the flattened protocol queue.
+        let pm = PerfModel::paper_calibrated();
+        let serial_budget = ServingBudget { scenarios: 1, ..ServingBudget::quick() };
+        let sharded_budget = ServingBudget { protocol_threads: 2, ..serial_budget };
+        let serial = fig12_single_group(&pm, &serial_budget);
+        let sharded = fig12_single_group(&pm, &sharded_budget);
+        let assert_rows_eq = |a: &[SaturationRow], b: &[SaturationRow]| {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.scenario, y.scenario);
+                assert_eq!(x.puzzle.map(f64::to_bits), y.puzzle.map(f64::to_bits));
+                assert_eq!(
+                    x.best_mapping.map(f64::to_bits),
+                    y.best_mapping.map(f64::to_bits)
+                );
+                assert_eq!(x.npu_only.map(f64::to_bits), y.npu_only.map(f64::to_bits));
+            }
+        };
+        assert_rows_eq(&serial, &sharded);
+
+        let select = FigureSelection::parse("fig12").expect("valid selection");
+        let report = figure_protocol(&pm, &sharded_budget, select);
+        assert_rows_eq(&serial, report.fig12.as_deref().expect("fig12 selected"));
+        assert!(report.fig13.is_none() && report.fig14.is_none());
+        assert!(report.fig15.is_none() && report.fig16.is_none());
+        assert!(report.headline.is_none(), "headline needs fig12 AND fig15");
+        assert!(FigureSelection::parse("fig12,bogus").is_err());
     }
 
     #[test]

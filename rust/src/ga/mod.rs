@@ -31,6 +31,6 @@ pub use nsga3::{
     fast_non_dominated_sort, nsga3_select, reference_points, Dominance, SelectionWorkspace,
 };
 pub use operators::{
-    breed_pair, breed_pair_with, mutate, one_point_crossover, one_point_crossover_with, upmx,
-    upmx_with, MutationRates, UpmxScratch,
+    breed_pair, breed_pair_into, breed_pair_with, mutate, one_point_crossover,
+    one_point_crossover_with, upmx, upmx_with, MutationRates, UpmxScratch,
 };

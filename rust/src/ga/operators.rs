@@ -139,6 +139,30 @@ pub fn breed_pair_with(
     (ca, cb)
 }
 
+/// [`breed_pair_with`] writing the children into caller-owned genome
+/// buffers (`Genome::clone_from` reuses their chromosome `Vec`s): identical
+/// RNG draws and bit-identical children (tested). With output genomes
+/// recycled from replaced survivors of the same scenario — every genome of
+/// one search has the same shape — a warm breed performs zero heap
+/// allocation, which is what lets the analyzer's steady-state reproduction
+/// run out of its free-list slab.
+#[allow(clippy::too_many_arguments)]
+pub fn breed_pair_into(
+    a: &Genome,
+    b: &Genome,
+    rates: MutationRates,
+    rng: &mut Rng,
+    scratch: &mut UpmxScratch,
+    out_a: &mut Genome,
+    out_b: &mut Genome,
+) {
+    out_a.clone_from(a);
+    out_b.clone_from(b);
+    one_point_crossover_with(out_a, out_b, rng, scratch);
+    mutate(out_a, rates.cut, rates.map, rates.prio, rng);
+    mutate(out_b, rates.cut, rates.map, rates.prio, rng);
+}
+
 /// Mutation: each partition bit flips with `p_cut`, each mapping gene
 /// re-draws with `p_map`, and the priority permutation swaps a random pair
 /// with `p_prio`.
@@ -319,6 +343,29 @@ mod tests {
         // Reuse across pairs keeps the purity contract.
         let again = breed_pair_with(&a, &b, rates, &mut Rng::seed_from_u64(55), &mut scratch);
         assert_eq!(owned, again);
+    }
+
+    #[test]
+    fn breed_pair_into_is_bit_identical_and_allocation_free() {
+        let nets = vec![build_model(0, 1), build_model(1, 6), build_model(2, 3)];
+        let mut rng = Rng::seed_from_u64(8);
+        let a = Genome::random(&nets, 0.3, &mut rng);
+        let b = Genome::random(&nets, 0.3, &mut rng);
+        let rates = MutationRates { cut: 0.05, map: 0.05, prio: 0.3 };
+        let owned = breed_pair(&a, &b, rates, &mut Rng::seed_from_u64(55));
+        let mut scratch = UpmxScratch::default();
+        let (mut ca, mut cb) = (Genome::default(), Genome::default());
+        let mut rng55 = Rng::seed_from_u64(55);
+        breed_pair_into(&a, &b, rates, &mut rng55, &mut scratch, &mut ca, &mut cb);
+        assert_eq!(owned, (ca.clone(), cb.clone()));
+        // Recycled same-shape outputs + warm scratch: zero heap allocation.
+        let mut rng56 = Rng::seed_from_u64(56);
+        let before = crate::util::alloc::thread_allocations();
+        breed_pair_into(&a, &b, rates, &mut rng56, &mut scratch, &mut ca, &mut cb);
+        let allocs = crate::util::alloc::thread_allocations() - before;
+        assert_eq!(allocs, 0, "warm breed_pair_into must not allocate");
+        // And the recycled outputs still match a fresh owned breed.
+        assert_eq!(breed_pair(&a, &b, rates, &mut Rng::seed_from_u64(56)), (ca, cb));
     }
 
     #[test]

@@ -10,6 +10,8 @@
 //! * `comm-bench`  — run the RPC/STREAM microbenchmarks and print the fit
 //! * `scenario-gen`— print the random scenario configurations (Fig 11)
 //! * `experiment`  — regenerate a paper table/figure (`all` for everything)
+//! * `figures`     — the serving figures (12–16) as one work-stealing
+//!   queue of (scenario, method) jobs (`--threads N`, 0 = cores)
 //!
 //! Argument parsing is hand-rolled (`--key value` / `--flag`): the build
 //! environment is offline and clap is not vendored.
@@ -72,18 +74,19 @@ impl Args {
     }
 }
 
-const USAGE: &str = "usage: puzzle <analyze|serve|loadtest|profile|comm-bench|scenario-gen|experiment> [options]
+const USAGE: &str = "usage: puzzle <analyze|serve|loadtest|profile|comm-bench|scenario-gen|experiment|figures> [options]
   analyze      --models 0,1,6 --population 48 --generations 40 --seed 23 [--save sol.txt] [--quiet]
   serve        --models 0,1,6 --requests 30 --time-scale 0.05 [--solution sol.txt]
   loadtest     --models 0,1,6 --alpha 1.0 --requests 40 --pattern periodic|poisson|bursty
                [--burst 4] [--max-inflight N] [--admission queue|little] [--all-patterns]
                [--wall] [--time-scale 0.05] [--quick] [--no-saturation] [--seed 23]
-               [--chaos slowdown:npu:2.0:0:0.5,stall:gpu:0.1:0.05,transient:0.02]
+               [--probe-threads N] [--chaos slowdown:npu:2.0:0:0.5,stall:gpu:0.1:0.05,transient:0.02]
                [--monitor] [--monitor-json FILE]
   profile
   comm-bench
   scenario-gen --seed 23
-  experiment   <table2|table3|table4|table5|fig5|fig10|fig12|fig13|fig14|fig15|fig16|headline|all> [--full]";
+  experiment   <table2|table3|table4|table5|fig5|fig10|fig12|fig13|fig14|fig15|fig16|headline|all> [--full]
+  figures      [--threads N] [--only fig12,fig14] [--scenarios N] [--requests N] [--full]";
 
 fn parse_models(s: &str) -> Vec<usize> {
     s.split(',')
@@ -193,6 +196,24 @@ fn main() -> Result<()> {
                 ServingBudget::quick()
             };
             run_experiment(&pm, &id, &budget)?;
+        }
+        "figures" => {
+            let mut budget = if args.flags.contains("full") {
+                ServingBudget::full()
+            } else {
+                ServingBudget::quick()
+            };
+            budget.protocol_threads = args.get("threads", 0usize);
+            budget.scenarios = args.get("scenarios", budget.scenarios);
+            budget.sim_requests = args.get("requests", budget.sim_requests);
+            let select = match args.options.get("only") {
+                Some(spec) => match experiments::serving::FigureSelection::parse(spec) {
+                    Ok(sel) => sel,
+                    Err(e) => puzzle::bail!("--only: {e}"),
+                },
+                None => experiments::serving::FigureSelection::all(),
+            };
+            figures_cmd(&pm, &budget, select)?;
         }
         other => {
             println!("unknown command: {other}\n{USAGE}");
@@ -476,6 +497,7 @@ fn loadtest_cmd(pm: &PerfModel, args: &Args) -> Result<()> {
             tolerance: if quick { 0.05 } else { 0.01 },
             seed,
             admission,
+            probe_threads: args.get("probe-threads", 0usize),
             ..Default::default()
         };
         let sat = puzzle::serve::saturation_via_runtime_observed(
@@ -629,6 +651,52 @@ fn run_experiment(pm: &PerfModel, id: &str, budget: &ServingBudget) -> Result<()
         }
         other => puzzle::bail!("unknown experiment id: {other}"),
     }
+    Ok(())
+}
+
+/// The serving figures as one flattened work-stealing queue of
+/// `(scenario, method)` jobs ([`experiments::serving::figure_protocol`]):
+/// wall-clock is bounded by the slowest single scenario rather than the
+/// slowest figure, and the merged report is bit-identical to the serial
+/// per-figure drivers for any `--threads`.
+fn figures_cmd(
+    pm: &PerfModel,
+    budget: &ServingBudget,
+    select: experiments::serving::FigureSelection,
+) -> Result<()> {
+    use experiments::serving::{figure_protocol_observed, print_saturation};
+    let t0 = std::time::Instant::now();
+    let report = figure_protocol_observed(pm, budget, select, &mut |p| {
+        println!("[{:>3}/{}] {}", p.done, p.total, p.label);
+    });
+    if let Some(rows) = &report.fig12 {
+        print_saturation("Fig 12 — single model group saturation multipliers", rows);
+    }
+    if let Some(curves) = &report.fig13 {
+        for mc in curves {
+            print_curves(mc);
+        }
+    }
+    if let Some(rows) = &report.fig14 {
+        for (method, alpha, avgs) in rows {
+            println!(
+                "{method:<13} α={alpha}: group makespans {:?}",
+                avgs.iter().map(|a| format!("{:.1}ms", a * 1e3)).collect::<Vec<_>>()
+            );
+        }
+    }
+    if let Some(rows) = &report.fig15 {
+        print_saturation("Fig 15 — multi model group saturation multipliers", rows);
+    }
+    if let Some(curves) = &report.fig16 {
+        for mc in curves {
+            print_curves(mc);
+        }
+    }
+    if let Some((npu, bm)) = report.headline {
+        println!("headline: NPU Only {npu:.1}x (paper 3.7x), Best Mapping {bm:.1}x (paper 2.2x)");
+    }
+    println!("figure protocol finished in {:.2}s wall", t0.elapsed().as_secs_f64());
     Ok(())
 }
 

@@ -809,10 +809,14 @@ pub fn materialize_solutions(
 /// replay every probe against the resulting [`WarmDeployment`].
 #[derive(Clone)]
 pub struct RuntimeHarness {
-    /// Runtime solutions, one per network of the scenario.
-    pub solutions: Vec<NetworkSolution>,
-    /// Member network indices per model group.
-    pub groups: Vec<Vec<usize>>,
+    /// Runtime solutions, one per network of the scenario. Shared — a
+    /// figure sweep deploying one harness per solution set per α-band
+    /// bumps a refcount instead of copying every plan
+    /// ([`RuntimeHarness::for_shared`]).
+    pub solutions: Arc<Vec<NetworkSolution>>,
+    /// Member network indices per model group (shared, like
+    /// [`RuntimeHarness::solutions`]).
+    pub groups: Arc<Vec<Vec<usize>>>,
     /// The calibrated device model backing the simulated engine.
     pub perf: Arc<PerfModel>,
     /// Runtime ablation switches (tensor pool, zero-copy).
@@ -863,6 +867,19 @@ impl RuntimeHarness {
     pub fn for_solutions(
         solutions: Vec<NetworkSolution>,
         groups: Vec<Vec<usize>>,
+        perf: Arc<PerfModel>,
+        seed: u64,
+    ) -> RuntimeHarness {
+        RuntimeHarness::for_shared(Arc::new(solutions), Arc::new(groups), perf, seed)
+    }
+
+    /// [`RuntimeHarness::for_solutions`] over already-shared solutions:
+    /// the harness holds the `Arc`s as-is, so callers deploying many
+    /// harnesses over one solution set (the score-band sweeps, the probe
+    /// fleet) never duplicate the plans.
+    pub fn for_shared(
+        solutions: Arc<Vec<NetworkSolution>>,
+        groups: Arc<Vec<Vec<usize>>>,
         perf: Arc<PerfModel>,
         seed: u64,
     ) -> RuntimeHarness {
@@ -926,7 +943,7 @@ impl RuntimeHarness {
             }
         };
         let mut coordinator =
-            Coordinator::new(self.solutions.clone(), engine, self.options.clone());
+            Coordinator::new((*self.solutions).clone(), engine, self.options.clone());
         if self.fault_plan.is_some() {
             coordinator.enable_recovery(self.perf.clone(), RecoveryOptions::default());
         }
@@ -967,7 +984,7 @@ impl RuntimeHarness {
 /// search pay one deployment per solution set instead of one per α-probe.
 pub struct WarmDeployment {
     coordinator: Coordinator,
-    groups: Vec<Vec<usize>>,
+    groups: Arc<Vec<Vec<usize>>>,
     perf: Arc<PerfModel>,
     time_scale: f64,
 }
@@ -1084,6 +1101,13 @@ pub struct SaturationOptions {
     /// fault scenario, with the coordinator's recovery active — instead of
     /// nominal α*. `None` (the default) measures on pristine processors.
     pub fault_plan: Option<FaultPlan>,
+    /// Probe-fleet width: how many solution sets of one α to probe
+    /// concurrently (`0` = all cores, clamped to the set count). Each
+    /// fleet worker owns its sets' [`WarmDeployment`]s for the whole
+    /// search and probes them with the serial path's [`probe_seed`]
+    /// derivation, so results are **bit-identical to the serial path for
+    /// any thread count** (determinism contract #6, property-tested).
+    pub probe_threads: usize,
 }
 
 impl Default for SaturationOptions {
@@ -1099,6 +1123,7 @@ impl Default for SaturationOptions {
             options: RuntimeOptions::default(),
             admission: Admission::Queue,
             fault_plan: None,
+            probe_threads: 0,
         }
     }
 }
@@ -1154,9 +1179,79 @@ pub fn saturation_via_runtime(
     })
 }
 
+/// Per-set outcome of one α-probe: the runtime score plus the bookkeeping
+/// flags the driver folds after the fleet joins. Every field is a pure
+/// function of (solution set, α, seed), which is what lets the fold be
+/// order-independent.
+struct SetProbe {
+    score: f64,
+    skipped: bool,
+    deployed: bool,
+}
+
+/// Probe one solution set at one α, lazily deploying its warm stack into
+/// `slot` on the set's first non-certified probe. The serial loop and the
+/// fleet workers share this exact body — same [`probe_seed`] derivation,
+/// same certificate, same admission policy — so the parallel path is
+/// bit-identical to the serial one by construction.
+#[allow(clippy::too_many_arguments)]
+fn probe_set(
+    i: usize,
+    sols: &[NetworkSolution],
+    slot: &mut Option<WarmDeployment>,
+    alpha: f64,
+    spec: &LoadSpec,
+    rates: &[f64],
+    groups: &Arc<Vec<Vec<usize>>>,
+    perf: &Arc<PerfModel>,
+    opts: &SaturationOptions,
+) -> SetProbe {
+    // Utilization certificate: ρ > 1 on any processor means the offered
+    // work exceeds capacity before any overhead — sustained load is
+    // unservable, so score 0 without touching the runtime.
+    let rho = offered_utilization(sols, groups, rates, perf);
+    if rho.iter().any(|&r| r > 1.0) {
+        return SetProbe { score: 0.0, skipped: true, deployed: false };
+    }
+    let mut deployed = false;
+    if slot.is_none() {
+        deployed = true;
+        let mut harness = RuntimeHarness::for_shared(
+            Arc::new(sols.to_vec()),
+            groups.clone(),
+            perf.clone(),
+            opts.seed,
+        );
+        harness.options = opts.options.clone();
+        harness.noisy = opts.noisy;
+        harness.fault_plan = opts.fault_plan.clone();
+        *slot = Some(harness.deploy(ClockMode::Virtual));
+    }
+    let deployment = slot.as_mut().expect("deployed above");
+    let spec_i = match opts.admission {
+        Admission::Queue => spec.clone(),
+        Admission::LittleCap { slack } => spec.clone().with_policy(OverloadPolicy::DropAfter {
+            max_inflight: little_inflight_cap(sols, groups, rates, perf, slack),
+        }),
+    };
+    SetProbe {
+        score: deployment.probe(&spec_i, probe_seed(opts.seed, i, alpha)).score,
+        skipped: false,
+        deployed,
+    }
+}
+
 /// [`saturation_via_runtime`] with a per-probe observer; returning
 /// [`ControlFlow::Break`] cancels the search (→ `None`), which is how the
 /// CLI keeps long load tests interruptible.
+///
+/// With [`SaturationOptions::probe_threads`] resolved above 1, the
+/// solution sets of each α are probed by a scoped fleet of workers —
+/// deployments stay pinned to their set index across probes, per-set
+/// scores land at their set index before the median fold, and the
+/// observer still fires exactly once per α on the calling thread, so the
+/// streamed [`ProbeProgress`] sequence and the returned α* are
+/// bit-identical to the serial path.
 pub fn saturation_via_runtime_observed(
     solution_sets: &[Vec<NetworkSolution>],
     scenario: &Scenario,
@@ -1167,7 +1262,8 @@ pub fn saturation_via_runtime_observed(
     if solution_sets.is_empty() {
         return None;
     }
-    let groups: Vec<Vec<usize>> = scenario.groups.iter().map(|g| g.members.clone()).collect();
+    let groups: Arc<Vec<Vec<usize>>> =
+        Arc::new(scenario.groups.iter().map(|g| g.members.clone()).collect());
     // ρ-seeded bracket: below this point the certificate alone forces the
     // median score to zero, so the bisection never probes there.
     let alpha_min = opts
@@ -1175,9 +1271,12 @@ pub fn saturation_via_runtime_observed(
         .max(rho_bracket_floor(solution_sets, scenario, perf))
         .min(opts.alpha_max);
     // One warm deployment per solution set, created lazily at the set's
-    // first non-certified probe and reused for every probe after it.
+    // first non-certified probe and reused for every probe after it. The
+    // fleet keeps each deployment pinned to its set index, so a set's
+    // engine-noise stream never depends on which worker probes it.
     let mut deployments: Vec<Option<WarmDeployment>> =
         solution_sets.iter().map(|_| None).collect();
+    let threads = crate::util::threads::effective_threads(opts.probe_threads, solution_sets.len());
     let mut probes = 0usize;
     let mut deploys = 0usize;
 
@@ -1186,42 +1285,60 @@ pub fn saturation_via_runtime_observed(
         let mut score_at = |alpha: f64, deployments: &mut [Option<WarmDeployment>]| -> Option<f64> {
             let spec = LoadSpec::periodic(&scenario.periods(alpha, perf), opts.requests);
             let rates = spec.mean_rates();
-            let mut skipped = 0usize;
-            let mut scores: Vec<f64> = Vec::with_capacity(solution_sets.len());
-            for (i, sols) in solution_sets.iter().enumerate() {
-                // Utilization certificate: ρ > 1 on any processor means the
-                // offered work exceeds capacity before any overhead —
-                // sustained load is unservable, so score 0 without touching
-                // the runtime.
-                let rho = offered_utilization(sols, &groups, &rates, perf);
-                if rho.iter().any(|&r| r > 1.0) {
-                    skipped += 1;
-                    scores.push(0.0);
-                    continue;
-                }
-                if deployments[i].is_none() {
-                    deploys += 1;
-                    let mut harness = RuntimeHarness::for_solutions(
-                        sols.clone(),
-                        groups.clone(),
-                        perf.clone(),
-                        opts.seed,
-                    );
-                    harness.options = opts.options.clone();
-                    harness.noisy = opts.noisy;
-                    harness.fault_plan = opts.fault_plan.clone();
-                    deployments[i] = Some(harness.deploy(ClockMode::Virtual));
-                }
-                let deployment = deployments[i].as_mut().expect("deployed above");
-                let spec_i = match opts.admission {
-                    Admission::Queue => spec.clone(),
-                    Admission::LittleCap { slack } => {
-                        spec.clone().with_policy(OverloadPolicy::DropAfter {
-                            max_inflight: little_inflight_cap(sols, &groups, &rates, perf, slack),
-                        })
+            let results: Vec<SetProbe> = if threads <= 1 {
+                solution_sets
+                    .iter()
+                    .zip(deployments.iter_mut())
+                    .enumerate()
+                    .map(|(i, (sols, slot))| {
+                        probe_set(i, sols, slot, alpha, &spec, &rates, &groups, perf, opts)
+                    })
+                    .collect()
+            } else {
+                // Fleet: chunk the per-set deployment slots across a
+                // scoped pool. Chunks carry their base index, so every
+                // probe still derives `probe_seed(seed, i, alpha)` from
+                // the set's global index and every outcome lands at its
+                // set's position — the fold below cannot observe the
+                // thread count.
+                let chunk = solution_sets.len().div_ceil(threads);
+                let mut out: Vec<Option<SetProbe>> = Vec::new();
+                out.resize_with(solution_sets.len(), || None);
+                std::thread::scope(|scope| {
+                    for ((base, sets), (slots, outs)) in solution_sets
+                        .chunks(chunk)
+                        .enumerate()
+                        .map(|(c, sets)| (c * chunk, sets))
+                        .zip(deployments.chunks_mut(chunk).zip(out.chunks_mut(chunk)))
+                    {
+                        let (spec, rates, groups) = (&spec, &rates, &groups);
+                        scope.spawn(move || {
+                            for (j, (sols, (slot, o))) in
+                                sets.iter().zip(slots.iter_mut().zip(outs.iter_mut())).enumerate()
+                            {
+                                *o = Some(probe_set(
+                                    base + j,
+                                    sols,
+                                    slot,
+                                    alpha,
+                                    spec,
+                                    rates,
+                                    groups,
+                                    perf,
+                                    opts,
+                                ));
+                            }
+                        });
                     }
-                };
-                scores.push(deployment.probe(&spec_i, probe_seed(opts.seed, i, alpha)).score);
+                });
+                out.into_iter().map(|r| r.expect("every set probed")).collect()
+            };
+            let mut skipped = 0usize;
+            let mut scores: Vec<f64> = Vec::with_capacity(results.len());
+            for r in &results {
+                skipped += r.skipped as usize;
+                deploys += r.deployed as usize;
+                scores.push(r.score);
             }
             scores.sort_by(|a, b| a.partial_cmp(b).expect("finite scores"));
             let median = scores[scores.len() / 2];

@@ -4,11 +4,13 @@
 //! criterion, proptest, clap, crossbeam, anyhow) are rebuilt here at the
 //! size this project needs: a deterministic PRNG ([`rng`]), a micro bench
 //! harness ([`bench`]), a tiny property-testing loop ([`prop`]), an
-//! `anyhow`-style error type ([`error`]), and a counting global allocator
-//! ([`alloc`]) backing the simulator's zero-allocation guarantee.
+//! `anyhow`-style error type ([`error`]), a counting global allocator
+//! ([`alloc`]) backing the simulator's zero-allocation guarantee, and the
+//! shared thread-count resolution ([`threads`]) behind every fan-out.
 
 pub mod alloc;
 pub mod bench;
 pub mod error;
 pub mod prop;
 pub mod rng;
+pub mod threads;

@@ -1,0 +1,33 @@
+//! Thread-count resolution shared by every fan-out substrate (the GA's
+//! offspring batch evaluator, the saturation probe fleet, the figure
+//! protocol shard).
+
+/// Resolve a requested thread count against a job count.
+///
+/// `0` means "use the machine" ([`std::thread::available_parallelism`]);
+/// the result is clamped to `1..=jobs.max(1)` so empty or tiny job lists
+/// never spawn idle workers. Every caller holds the same contract: the
+/// resolved count changes *scheduling only* — results are bit-identical
+/// for any value.
+pub fn effective_threads(requested: usize, jobs: usize) -> usize {
+    let threads = if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    };
+    threads.clamp(1, jobs.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_resolves_to_machine_and_clamps_to_jobs() {
+        assert_eq!(effective_threads(4, 2), 2);
+        assert_eq!(effective_threads(4, 100), 4);
+        assert_eq!(effective_threads(1, 0), 1);
+        assert_eq!(effective_threads(0, 0), 1);
+        assert!(effective_threads(0, 64) >= 1);
+    }
+}

@@ -7,8 +7,11 @@
 //! recovery, the empty-plan zero-overhead contract, robust-α*), the
 //! telemetry plane (bit-identical fresh-vs-warm event streams including
 //! chaos recovery, aggregation == ServeReport, the no-subscriber
-//! invisibility contract, wall-driver release precision), and the
-//! `Deployment::serve_load` api surface.
+//! invisibility contract, wall-driver release precision), the
+//! `Deployment::serve_load` api surface, and the probe fleet (saturation
+//! results bit-identical to serial for any `probe_threads`, including
+//! under chaos plans; thread-isolated warm probes across arrival
+//! patterns — determinism contract #6).
 
 use std::ops::ControlFlow;
 use std::sync::Arc;
@@ -812,6 +815,135 @@ fn wall_driver_releases_arrivals_within_tight_error_bounds() {
     let max = *sorted.last().unwrap();
     assert!(median < 1.5e-3, "median release error {median:.6}s too large: {errors:?}");
     assert!(max < 10e-3, "worst release error {max:.6}s too large: {errors:?}");
+}
+
+/// Run the fleet saturation search at one width and capture everything the
+/// thread-count-invariance contract covers: the full bit-level
+/// [`serve::ProbeProgress`] stream and the final α*.
+fn fleet_run(
+    sets: &[Vec<puzzle::serve::NetworkSolution>],
+    scenario: &Scenario,
+    perf: &Arc<PerfModel>,
+    opts: &SaturationOptions,
+    probe_threads: usize,
+) -> (Option<u64>, Vec<(u64, u64, usize, usize, usize)>) {
+    let opts = SaturationOptions { probe_threads, ..opts.clone() };
+    let mut stream: Vec<(u64, u64, usize, usize, usize)> = Vec::new();
+    let alpha = serve::saturation_via_runtime_observed(sets, scenario, perf, &opts, &mut |p| {
+        stream.push((
+            p.alpha.to_bits(),
+            p.score.to_bits(),
+            p.probes,
+            p.certified_infeasible,
+            p.deploys,
+        ));
+        ControlFlow::Continue(())
+    });
+    (alpha.map(f64::to_bits), stream)
+}
+
+#[test]
+fn fleet_saturation_bit_identical_across_probe_threads() {
+    // Determinism contract #6 (thread-count invariance): the fleet-probed
+    // saturation search streams the exact per-probe sequence — every α
+    // bit, every median-score bit, every certificate and deploy count —
+    // and returns the same α* as the serial path, whatever the width.
+    let scenario = Scenario::from_groups("fleet", &[vec![0, 1]]);
+    let perf = Arc::new(PerfModel::paper_calibrated());
+    let mut rng = puzzle::util::rng::Rng::seed_from_u64(61);
+    let mut sets = vec![materialize_solutions(
+        &scenario.networks,
+        &Genome::all_on(&scenario.networks, Processor::Npu),
+        &perf,
+    )];
+    sets.extend((0..4).map(|_| {
+        let genome = Genome::random(&scenario.networks, 0.3, &mut rng);
+        materialize_solutions(&scenario.networks, &genome, &perf)
+    }));
+    let opts = SaturationOptions { requests: 6, tolerance: 0.1, ..Default::default() };
+    let serial = fleet_run(&sets, &scenario, &perf, &opts, 1);
+    assert!(!serial.1.is_empty(), "search must stream at least one probe");
+    for threads in [2, 4, 8] {
+        let fleet = fleet_run(&sets, &scenario, &perf, &opts, threads);
+        assert_eq!(fleet, serial, "fleet width {threads} diverged from serial");
+    }
+}
+
+#[test]
+fn fleet_chaos_saturation_matches_serial_robust_alpha() {
+    // The invariance contract extends to chaos probing: with a FaultPlan
+    // threaded through every fleet deployment, the robust-α* search and
+    // its probe stream replay bit-identically at every width.
+    let scenario = Scenario::from_groups("fleet-chaos", &[vec![0], vec![1]]);
+    let perf = Arc::new(PerfModel::paper_calibrated());
+    let genome_a = Genome::all_on(&scenario.networks, Processor::Npu);
+    let mut genome_b = genome_a.clone();
+    genome_b.priority.reverse();
+    let sets = vec![
+        materialize_solutions(&scenario.networks, &genome_a, &perf),
+        materialize_solutions(&scenario.networks, &genome_b, &perf),
+    ];
+    let opts = SaturationOptions {
+        requests: 6,
+        alpha_max: 40.0,
+        tolerance: 0.5,
+        threshold: 0.5,
+        fault_plan: Some(FaultPlan::new(3).stall(Processor::Npu, 0.0, 1e3)),
+        ..Default::default()
+    };
+    let serial = fleet_run(&sets, &scenario, &perf, &opts, 1);
+    assert!(serial.0.is_some(), "the stall scenario must still yield a robust α*");
+    for threads in [2, 4, 8] {
+        let fleet = fleet_run(&sets, &scenario, &perf, &opts, threads);
+        assert_eq!(fleet, serial, "chaos fleet width {threads} diverged from serial");
+    }
+}
+
+#[test]
+fn concurrent_warm_probes_bit_identical_to_serial_across_arrival_patterns() {
+    // The isolation contract underneath the fleet: deployments probed on
+    // scoped worker threads replay bit-identically to the same probes run
+    // serially — per-deployment noise and telemetry state never leak
+    // across threads — for periodic, Poisson, and bursty load alike.
+    let scenario = Scenario::from_groups("fleet-iso", &[vec![0, 1]]);
+    let perf = PerfModel::paper_calibrated();
+    let periods = scenario.periods(1.0, &perf);
+    let specs = [
+        LoadSpec::periodic(&periods, 10),
+        LoadSpec::poisson(&periods, 10, 5),
+        LoadSpec::bursty(&periods, 3, 10),
+    ];
+    let mut rng = puzzle::util::rng::Rng::seed_from_u64(67);
+    let genomes: Vec<Genome> =
+        (0..3).map(|_| Genome::random(&scenario.networks, 0.3, &mut rng)).collect();
+    let probe_all = |genome: &Genome| -> Vec<(ServeReport, Vec<ServedRequest>)> {
+        let mut d = harness_for(&scenario, genome, 11).deploy(ClockMode::Virtual);
+        let out = specs
+            .iter()
+            .enumerate()
+            .map(|(k, spec)| d.probe_with_log(spec, serve::probe_seed(11, k, 1.0)))
+            .collect();
+        d.shutdown();
+        out
+    };
+    let serial: Vec<Vec<(ServeReport, Vec<ServedRequest>)>> =
+        genomes.iter().map(probe_all).collect();
+    let mut parallel: Vec<Option<Vec<(ServeReport, Vec<ServedRequest>)>>> = Vec::new();
+    parallel.resize_with(genomes.len(), || None);
+    std::thread::scope(|scope| {
+        for (genome, out) in genomes.iter().zip(parallel.iter_mut()) {
+            let probe_all = &probe_all;
+            scope.spawn(move || *out = Some(probe_all(genome)));
+        }
+    });
+    for (s_runs, p_runs) in serial.iter().zip(&parallel) {
+        let p_runs = p_runs.as_ref().expect("every worker finished");
+        for ((sr, sl), (pr, pl)) in s_runs.iter().zip(p_runs) {
+            assert!(!sl.is_empty());
+            assert_logs_identical(sl, pl);
+            assert_reports_identical(sr, pr);
+        }
+    }
 }
 
 #[test]
