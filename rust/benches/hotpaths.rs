@@ -15,6 +15,7 @@
 use puzzle::analyzer::GaConfig;
 use puzzle::api::SessionBuilder;
 use puzzle::comm::CommModel;
+use puzzle::experiments::{saturation_protocol, ServingBudget};
 use puzzle::ga::{decode, nsga3_select, DecodedPlanCache, Genome, SelectionWorkspace};
 use puzzle::graph::{merkle_hash_subgraph, partition, PartitionWorkspace};
 use puzzle::mem::TensorPool;
@@ -28,6 +29,7 @@ use puzzle::serve::{
 use puzzle::sim::{compile_plans, simulate, ExecutionPlan, GroupSpec, SimOptions, SimWorkspace};
 use puzzle::util::bench::{bench, black_box, write_json, BenchStats};
 use puzzle::util::rng::Rng;
+use puzzle::util::threads::CoreBudget;
 use puzzle::Processor;
 
 fn main() {
@@ -176,6 +178,26 @@ fn main() {
     let _ = sel_ws.select(&big_flat, 4, 512); // warm: the analyzer's steady state
     all.push(bench("ga/ens_select_pop512", 5.0, 10, || {
         black_box(sel_ws.select(&big_flat, 4, 512).len());
+    }));
+
+    // ENS degenerate shape: a 1024-candidate pool where *every* point is
+    // mutually nondominated (constant objective sum: any all-≤ relation
+    // with one strict < would force a smaller sum), so front sorting
+    // collapses to one giant front — the O(n²) comparison worst case
+    // late-convergence GA runs actually hit. Trajectory-only: measured so
+    // the next selection optimization has its number on record.
+    let single_front: Vec<Vec<f64>> = (0..1024)
+        .map(|_| {
+            let raw: Vec<f64> = (0..4).map(|_| rng.gen_f64() + 0.05).collect();
+            let sum: f64 = raw.iter().sum();
+            raw.into_iter().map(|x| x / sum).collect()
+        })
+        .collect();
+    let single_flat: Vec<f64> = single_front.iter().flatten().copied().collect();
+    let mut sf_ws = SelectionWorkspace::new();
+    let _ = sf_ws.select(&single_flat, 4, 512); // warm
+    all.push(bench("ga/ens_single_front_pop512", 5.0, 10, || {
+        black_box(sf_ws.select(&single_flat, 4, 512).len());
     }));
 
     // Tensor pool.
@@ -403,6 +425,49 @@ fn main() {
     );
     all.push(sat_serial);
     all.push(sat_fleet);
+
+    // Imbalanced protocol: one giant scenario plus several one-network
+    // scenarios. The static two-level rule pins each shard worker's inner
+    // fan-out to a single thread, so after the small jobs drain the giant
+    // job limps along on one core while the rest idle. The shared
+    // CoreBudget lets retiring workers return their slots and the giant
+    // job's GA fan-out / probe fleet reclaim them at the next generation
+    // or α-probe. Bit-identical rows either way (tested in serving);
+    // bench_guard asserts budgeted <= static × 1.05 as a same-run
+    // invariant — dynamic reclamation must never cost wall-clock.
+    let imbalanced = vec![
+        Scenario::from_groups("giant", &[vec![0, 4, 6], vec![1, 5, 8]]),
+        Scenario::from_groups("small-a", &[vec![0]]),
+        Scenario::from_groups("small-b", &[vec![1]]),
+        Scenario::from_groups("small-c", &[vec![2]]),
+    ];
+    let proto_budget = |threads: usize, core: Option<CoreBudget>| ServingBudget {
+        sim_requests: 6,
+        scenarios: 4,
+        protocol_threads: threads,
+        core_budget: core,
+        ..ServingBudget::quick()
+    };
+    let proto_serial = bench("serve/protocol_serial", 10.0, 2, || {
+        black_box(saturation_protocol(&imbalanced, &pm, &proto_budget(1, None)).len());
+    });
+    let proto_static = bench("serve/protocol_static_shard", 10.0, 2, || {
+        black_box(saturation_protocol(&imbalanced, &pm, &proto_budget(0, None)).len());
+    });
+    let proto_budgeted = bench("serve/protocol_budgeted_shard", 10.0, 2, || {
+        black_box(
+            saturation_protocol(&imbalanced, &pm, &proto_budget(0, Some(CoreBudget::new(0))))
+                .len(),
+        );
+    });
+    println!(
+        "serve/protocol_budgeted_shard speedup: {:.2}x over serial, {:.2}x over static shard",
+        proto_serial.mean_s / proto_budgeted.mean_s,
+        proto_static.mean_s / proto_budgeted.mean_s,
+    );
+    all.push(proto_serial);
+    all.push(proto_static);
+    all.push(proto_budgeted);
 
     // Machine-readable trajectory for future PRs.
     let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))

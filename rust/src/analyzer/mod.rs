@@ -120,6 +120,13 @@ pub struct GaConfig {
     /// available core. Results are identical for every value (the
     /// determinism contract above); `1` forces the serial path.
     pub threads: usize,
+    /// Shared core budget for the evaluation fan-out. When set, every
+    /// generation leases its worker count from the budget (superseding
+    /// `threads` — the lease alone bounds the width, so freed cores from
+    /// sibling fan-outs are reclaimed generation by generation). Results
+    /// are bit-identical for any budget: the width changes scheduling
+    /// only, exactly as with `threads`.
+    pub core_budget: Option<crate::util::threads::CoreBudget>,
 }
 
 impl Default for GaConfig {
@@ -139,6 +146,7 @@ impl Default for GaConfig {
             explore_partition: true,
             explore_priority: true,
             threads: 0,
+            core_budget: None,
         }
     }
 }
@@ -575,7 +583,17 @@ impl<'a> StaticAnalyzer<'a> {
         scratches: &mut Vec<EvalScratch>,
         per_job: &(impl Fn(&mut J, &mut EvalScratch) -> R + Sync),
     ) -> Vec<R> {
-        let threads = self.effective_threads(jobs.len());
+        // Re-resolved per fan-out (i.e. per generation phase): with a
+        // shared core budget the width tracks what is free *right now* —
+        // the lease is held for this fan-out only and returned at the end
+        // of the call, so cores freed by finished sibling jobs are
+        // reclaimed at the next generation. The lease alone bounds the
+        // width (no re-clamp against `config.threads`).
+        let (threads, _lease) = crate::util::threads::leased_threads(
+            self.config.core_budget.as_ref(),
+            self.config.threads,
+            jobs.len(),
+        );
         if scratches.len() < threads {
             scratches.resize_with(threads, EvalScratch::default);
         }
@@ -645,10 +663,6 @@ impl<'a> StaticAnalyzer<'a> {
             children.extend(b);
         }
         children
-    }
-
-    fn effective_threads(&self, jobs: usize) -> usize {
-        crate::util::threads::effective_threads(self.config.threads, jobs)
     }
 
     /// Deprecated silent run. Prefer [`crate::api::AnalysisSession::run`]

@@ -87,7 +87,7 @@ fn main() {
     }
 
     // Layer 2: same-run invariants (machine-independent).
-    let invariants: [(&str, &str, f64); 12] = [
+    let invariants: [(&str, &str, f64); 13] = [
         // Parallel must not lose to serial by more than scheduling jitter
         // (on a single-core runner both take the same path).
         ("analyzer/parallel_generation", "analyzer/serial_generation", 1.10),
@@ -129,6 +129,13 @@ fn main() {
         // core count, going parallel must never cost wall-clock beyond
         // jitter. On a single-core runner both take the serial path.
         ("serve/saturation_fleet", "serve/saturation_serial", 1.05),
+        // The shared-CoreBudget shard runs the identical protocol jobs as
+        // the static two-level shard (bit-identical rows, contract #6);
+        // dynamic core reclamation on the imbalanced workload must never
+        // cost wall-clock beyond jitter — and on multi-core hosts it
+        // should win, because retiring small-scenario workers hand their
+        // slots to the giant scenario's GA/probe fan-outs.
+        ("serve/protocol_budgeted_shard", "serve/protocol_static_shard", 1.05),
     ];
     for (fast, slow, margin) in invariants {
         match (get(&fresh, fast), get(&fresh, slow)) {

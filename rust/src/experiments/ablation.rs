@@ -123,16 +123,25 @@ pub fn fig10_ablation(pm: &PerfModel, n_scenarios: usize, requests: usize) -> Ve
             // invisible; see EXPERIMENTS.md for the scale discussion.
             let scale = 0.0;
             let (baseline, _) = serve_with_options(
-                sols.clone(), &members, requests,
-                RuntimeOptions { tensor_pool: false, zero_copy: false }, scale,
+                sols.clone(),
+                &members,
+                requests,
+                RuntimeOptions { tensor_pool: false, zero_copy: false, ..Default::default() },
+                scale,
             );
             let (pool, _) = serve_with_options(
-                sols.clone(), &members, requests,
-                RuntimeOptions { tensor_pool: true, zero_copy: false }, scale,
+                sols.clone(),
+                &members,
+                requests,
+                RuntimeOptions { tensor_pool: true, zero_copy: false, ..Default::default() },
+                scale,
             );
             let (pool_shared, _) = serve_with_options(
-                sols, &members, requests,
-                RuntimeOptions { tensor_pool: true, zero_copy: true }, scale,
+                sols,
+                &members,
+                requests,
+                RuntimeOptions { tensor_pool: true, zero_copy: true, ..Default::default() },
+                scale,
             );
             AblationRow { scenario: s.name.clone(), baseline, pool, pool_shared }
         })
@@ -147,9 +156,9 @@ pub fn table5_breakdown(pm: &PerfModel, requests: usize) -> Vec<Table5Row> {
     let s = &scenarios[4];
     let members: Vec<usize> = s.groups[0].members.clone();
     let settings = [
-        RuntimeOptions { tensor_pool: false, zero_copy: false },
-        RuntimeOptions { tensor_pool: true, zero_copy: false },
-        RuntimeOptions { tensor_pool: true, zero_copy: true },
+        RuntimeOptions { tensor_pool: false, zero_copy: false, ..Default::default() },
+        RuntimeOptions { tensor_pool: true, zero_copy: false, ..Default::default() },
+        RuntimeOptions { tensor_pool: true, zero_copy: true, ..Default::default() },
     ];
     settings
         .into_iter()

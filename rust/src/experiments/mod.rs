@@ -11,7 +11,8 @@ pub use ablation::{fig10_ablation, ga_ablation, table5_breakdown, AblationRow, T
 pub use serving::{
     fig12_single_group, fig13_score_curves, fig14_makespan_distribution, fig15_multi_group,
     fig16_multi_score_curves, figure_protocol, figure_protocol_observed, headline_ratios,
-    solve_scenario, solve_scenario_budgeted, solve_scenario_runtime, FigureReport,
+    saturation_protocol, solve_scenario, solve_scenario_budgeted, solve_scenario_runtime,
+    FigureReport,
     FigureSelection, GaSize, Method, MethodCurve, ProtocolProgress, SaturationRow,
     ScenarioMethods, ScoreCurve, ServingBudget,
 };

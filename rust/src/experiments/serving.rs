@@ -24,6 +24,7 @@ use crate::perf::PerfModel;
 use crate::scenario::{multi_group_scenarios, scenario10_analog, single_group_scenarios, Scenario};
 use crate::serve::{self, Admission, ClockMode, LoadSpec, RuntimeHarness, SaturationOptions};
 use crate::sim::ExecutionPlan;
+use crate::util::threads::{leased_threads, CoreBudget, CoreLease};
 
 /// Per-scenario saturation multipliers for the three methods.
 #[derive(Debug, Clone)]
@@ -36,7 +37,7 @@ pub struct SaturationRow {
 
 /// Budget knobs for the serving experiments (the full paper protocol is
 /// expensive; benches use the reduced budget).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ServingBudget {
     pub ga: GaSize,
     pub sim_requests: usize,
@@ -47,13 +48,35 @@ pub struct ServingBudget {
     /// Little's-law in-flight cap).
     pub admission: Admission,
     /// Width of the figure-protocol work-stealing shard: how many
-    /// `(scenario, method)` jobs run concurrently (`0` = all cores,
-    /// clamped to the job count). `1` — the default — runs the protocol
-    /// serially with the per-set probe fleet inside each saturation
-    /// search instead; above 1, each job's inner fleet drops to one
-    /// thread so the two layers never oversubscribe. Either way the
-    /// report is bit-identical: thread counts change scheduling only.
+    /// protocol jobs run concurrently (`0` = all cores, clamped to the
+    /// job count). `1` — the default — runs the protocol serially with
+    /// the per-set probe fleet inside each saturation search instead;
+    /// above 1, each job's inner fleet drops to one thread so the two
+    /// layers never oversubscribe (unless a [`ServingBudget::core_budget`]
+    /// replaces that static rule). Either way the report is bit-identical:
+    /// thread counts change scheduling only.
     pub protocol_threads: usize,
+    /// Shared [`CoreBudget`] replacing the static two-level thread rule.
+    /// When set, the protocol shard, each job's inner GA fan-out, and
+    /// each saturation search's probe fleet all lease their widths from
+    /// this one semaphore (`protocol_threads` and the forced inner
+    /// `threads = 1` are superseded): a retiring protocol worker releases
+    /// its slot, and still-running jobs' inner fan-outs reclaim it at
+    /// their next generation or α-probe. Scheduling only — the report is
+    /// bit-identical for any capacity (contract #6, property-tested).
+    pub core_budget: Option<CoreBudget>,
+    /// α-sweep chunk width of the score-curve protocol jobs (fig13 /
+    /// fig16): each `(scenario, method)` sweep is split into
+    /// independently stealable `(scenario, method, α-chunk)` jobs of this
+    /// many grid points, merged back by job index. `0` — the default —
+    /// picks automatically: the whole sweep as one job when the protocol
+    /// runs serially without a core budget (one warm deployment per set
+    /// across the whole grid), chunks of [`ServingBudget::AUTO_ALPHA_CHUNK`]
+    /// otherwise. Any width yields a bit-identical report: probes are
+    /// reset + re-seeded per (set, α), so a chunk-boundary re-deploy
+    /// replays the exact fresh-deployment schedule (the warm-probe
+    /// identity contract).
+    pub alpha_chunk: usize,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -63,6 +86,12 @@ pub enum GaSize {
 }
 
 impl ServingBudget {
+    /// Auto α-chunk width of the score-curve jobs when the protocol runs
+    /// parallel (see [`ServingBudget::alpha_chunk`]): small enough that
+    /// one giant scenario's sweep splits across several stealable jobs,
+    /// large enough that each job amortizes its per-set deployments.
+    pub const AUTO_ALPHA_CHUNK: usize = 8;
+
     pub fn full() -> Self {
         ServingBudget {
             ga: GaSize::Full,
@@ -70,6 +99,8 @@ impl ServingBudget {
             scenarios: 10,
             admission: Admission::Queue,
             protocol_threads: 1,
+            core_budget: None,
+            alpha_chunk: 0,
         }
     }
 
@@ -80,6 +111,8 @@ impl ServingBudget {
             scenarios: 3,
             admission: Admission::Queue,
             protocol_threads: 1,
+            core_budget: None,
+            alpha_chunk: 0,
         }
     }
 
@@ -88,13 +121,29 @@ impl ServingBudget {
             GaSize::Quick => GaConfig::quick(seed),
             GaSize::Full => GaConfig { seed, ..Default::default() },
         };
-        if self.protocol_threads > 1 {
-            // The protocol shard already fans out across jobs; one GA
-            // worker per job avoids nested oversubscription (GA results
-            // are thread-count invariant, so this changes nothing else).
+        if let Some(core) = &self.core_budget {
+            // Dynamic rule: the GA fan-out leases from the shared budget
+            // every generation, reclaiming cores as sibling protocol jobs
+            // retire (bit-identical for any width by contract).
+            config.core_budget = Some(core.clone());
+        } else if self.protocol_threads > 1 {
+            // Static rule: the protocol shard already fans out across
+            // jobs; one GA worker per job avoids nested oversubscription
+            // (GA results are thread-count invariant, so this changes
+            // nothing else).
             config.threads = 1;
         }
         config
+    }
+
+    /// Resolved α-chunk width for a sweep of `n_alphas` grid points (see
+    /// [`ServingBudget::alpha_chunk`]).
+    fn alpha_chunk_width(&self, n_alphas: usize) -> usize {
+        match self.alpha_chunk {
+            0 if self.protocol_threads == 1 && self.core_budget.is_none() => n_alphas.max(1),
+            0 => Self::AUTO_ALPHA_CHUNK,
+            w => w,
+        }
     }
 }
 
@@ -189,6 +238,9 @@ fn sat_opts(budget: &ServingBudget, seed: u64) -> SaturationOptions {
         seed,
         admission: budget.admission,
         probe_threads: inner_threads(budget),
+        // With a shared core budget the probe fleet leases its width per
+        // α-probe (superseding probe_threads) — late-phase reclamation.
+        core_budget: budget.core_budget.clone(),
         ..Default::default()
     }
 }
@@ -267,11 +319,17 @@ impl SolveCell {
 /// report bit-identical to a serial run of the same jobs.
 fn shard_observed<J: Sync, R: Send>(
     jobs: &[J],
-    threads: usize,
+    requested: usize,
+    core: Option<&CoreBudget>,
     run: &(impl Fn(usize, &J) -> R + Sync),
     on_done: &mut dyn FnMut(usize),
 ) -> Vec<R> {
+    let (threads, lease) = leased_threads(core, requested, jobs.len());
     if threads <= 1 || jobs.len() <= 1 {
+        // Serial path. Keep the (≤ 1-slot) lease for its duration: the
+        // calling thread is charged to the budget like any worker, so
+        // nested fan-outs below see an honestly-decremented pool.
+        let _lease = lease;
         return jobs
             .iter()
             .enumerate()
@@ -285,18 +343,30 @@ fn shard_observed<J: Sync, R: Send>(
     let cursor = AtomicUsize::new(0);
     let done: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(jobs.len()));
     let (tx, rx) = mpsc::channel::<usize>();
+    // One single-slot token per worker (when leased from a core budget):
+    // a worker that finds the cursor exhausted drops its token as it
+    // exits, releasing its core *while its siblings still run* — the
+    // late-phase reclamation that lets a surviving giant job's inner
+    // fan-outs widen as the queue drains.
+    let mut tokens: Vec<Option<CoreLease>> = match lease {
+        Some(lease) => lease.split().into_iter().map(Some).collect(),
+        None => (0..threads).map(|_| None).collect(),
+    };
     std::thread::scope(|scope| {
-        for _ in 0..threads.min(jobs.len()) {
+        for token in tokens.drain(..) {
             let tx = tx.clone();
             let (cursor, done) = (&cursor, &done);
-            scope.spawn(move || loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= jobs.len() {
-                    break;
+            scope.spawn(move || {
+                let _token = token;
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    let r = run(i, &jobs[i]);
+                    done.lock().expect("shard worker panicked").push((i, r));
+                    let _ = tx.send(i);
                 }
-                let r = run(i, &jobs[i]);
-                done.lock().expect("shard worker panicked").push((i, r));
-                let _ = tx.send(i);
             });
         }
         // The workers hold the remaining senders; iteration ends when the
@@ -314,19 +384,23 @@ fn shard_observed<J: Sync, R: Send>(
 /// [`shard_observed`] without a completion observer.
 fn shard<J: Sync, R: Send>(
     jobs: &[J],
-    threads: usize,
+    requested: usize,
+    core: Option<&CoreBudget>,
     run: &(impl Fn(usize, &J) -> R + Sync),
 ) -> Vec<R> {
-    shard_observed(jobs, threads, run, &mut |_| {})
+    shard_observed(jobs, requested, core, run, &mut |_| {})
 }
 
 /// Figure 12 / 15 core: runtime-measured saturation multiplier per scenario
 /// per method (the [`crate::serve::saturation_via_runtime`] driver), run as
 /// a work-stealing shard of `(scenario, method)` jobs at
-/// [`ServingBudget::protocol_threads`] width. Jobs of one scenario share
+/// [`ServingBudget::protocol_threads`] width (or leased from
+/// [`ServingBudget::core_budget`] when set). Jobs of one scenario share
 /// the GA solve through a [`SolveCell`]; rows are folded by scenario
 /// index, so the table is identical to the serial sweep for any width.
-fn saturation_sweep(
+/// Public as the imbalanced-protocol bench surface: callers hand it any
+/// scenario list (e.g. one giant + several small) and any budget.
+pub fn saturation_protocol(
     scenarios: &[Scenario],
     pm: &PerfModel,
     budget: &ServingBudget,
@@ -340,12 +414,12 @@ fn saturation_sweep(
         .collect();
     let jobs: Vec<(usize, Method)> =
         (0..cells.len()).flat_map(|i| Method::ALL.map(|m| (i, m))).collect();
-    let threads = crate::util::threads::effective_threads(budget.protocol_threads, jobs.len());
-    let alphas = shard(&jobs, threads, &|_, &(i, m)| {
-        let methods = cells[i].methods(pm, budget);
-        let opts = sat_opts(budget, 29 + i as u64);
-        serve::saturation_via_runtime(m.pick(methods), &cells[i].scenario, &perf, &opts)
-    });
+    let alphas =
+        shard(&jobs, budget.protocol_threads, budget.core_budget.as_ref(), &|_, &(i, m)| {
+            let methods = cells[i].methods(pm, budget);
+            let opts = sat_opts(budget, 29 + i as u64);
+            serve::saturation_via_runtime(m.pick(methods), &cells[i].scenario, &perf, &opts)
+        });
     let mut rows: Vec<SaturationRow> = cells
         .iter()
         .map(|c| SaturationRow {
@@ -364,13 +438,13 @@ fn saturation_sweep(
 /// Figure 12 — single model group saturation multipliers
 /// (paper: Puzzle 0.78±0.08, Best Mapping 1.17±0.27, NPU Only 1.56±0.35).
 pub fn fig12_single_group(pm: &PerfModel, budget: &ServingBudget) -> Vec<SaturationRow> {
-    saturation_sweep(&single_group_scenarios(23), pm, budget)
+    saturation_protocol(&single_group_scenarios(23), pm, budget)
 }
 
 /// Figure 15 — multi model group saturation multipliers
 /// (paper: 0.95±0.27 / 2.24±1.90 / 3.45±2.12).
 pub fn fig15_multi_group(pm: &PerfModel, budget: &ServingBudget) -> Vec<SaturationRow> {
-    saturation_sweep(&multi_group_scenarios(23), pm, budget)
+    saturation_protocol(&multi_group_scenarios(23), pm, budget)
 }
 
 /// XRBench score as a function of the period multiplier for one method.
@@ -397,15 +471,15 @@ pub struct MethodCurve {
 /// fleet as the saturation driver — one [`shard`] job per set, each
 /// owning its deployment (and its whole α loop) for the job's lifetime —
 /// and the solutions are `Arc`-shared into each harness rather than
-/// cloned per deployment. Deterministic per seed, for any `threads`.
+/// cloned per deployment. Deterministic per seed, for any fleet width —
+/// static ([`inner_threads`]) or leased from the budget's [`CoreBudget`].
 fn runtime_score_bands(
     sets: &[Vec<NetworkSolution>],
     scenario: &Scenario,
     alphas: &[f64],
     perf: &Arc<PerfModel>,
-    requests: usize,
     seed: u64,
-    threads: usize,
+    budget: &ServingBudget,
 ) -> Vec<(f64, f64, f64)> {
     if sets.is_empty() {
         return alphas.iter().map(|_| (0.0, 0.0, 0.0)).collect();
@@ -416,7 +490,8 @@ fn runtime_score_bands(
     // per_set[i][k] = score of set i at alphas[k].
     let per_set: Vec<Vec<f64>> = shard(
         &jobs,
-        crate::util::threads::effective_threads(threads, jobs.len()),
+        inner_threads(budget),
+        budget.core_budget.as_ref(),
         &|_, &i| {
             let harness = RuntimeHarness::for_shared(
                 Arc::new(sets[i].clone()),
@@ -428,7 +503,8 @@ fn runtime_score_bands(
             let scores: Vec<f64> = alphas
                 .iter()
                 .map(|&alpha| {
-                    let spec = LoadSpec::for_scenario(scenario, perf, alpha, requests);
+                    let spec =
+                        LoadSpec::for_scenario(scenario, perf, alpha, budget.sim_requests);
                     deployment.probe(&spec, serve::probe_seed(seed, i, alpha)).score
                 })
                 .collect();
@@ -472,32 +548,47 @@ pub fn score_curves(
                     scenario,
                     alphas,
                     &perf,
-                    budget.sim_requests,
                     seed,
-                    inner_threads(budget),
+                    budget,
                 ),
             })
             .collect(),
     }
 }
 
-/// Figure 13 — two single-group scenarios' score curves.
+/// Figure 13 — two single-group scenarios' score curves (trimmed to
+/// [`ServingBudget::scenarios`], floor 1, like the saturation sweeps).
 pub fn fig13_score_curves(pm: &PerfModel, budget: &ServingBudget) -> Vec<MethodCurve> {
     let scenarios = single_group_scenarios(23);
-    let alphas: Vec<f64> = (2..=20).map(|i| i as f64 * 0.1).collect();
-    vec![
-        score_curves(&scenarios[0], pm, budget, &alphas, 101),
-        score_curves(&scenarios[7], pm, budget, &alphas, 108),
-    ]
+    let alphas = fig13_alphas();
+    [(0usize, 101u64), (7, 108)]
+        .into_iter()
+        .take(budget.scenarios.max(1))
+        .map(|(idx, seed)| score_curves(&scenarios[idx], pm, budget, &alphas, seed))
+        .collect()
 }
 
-/// Figure 16 — scenarios 6 & 10 analogs' score curves (multi-group).
+/// Figure 16 — scenarios 6 & 10 analogs' score curves (multi-group,
+/// trimmed to [`ServingBudget::scenarios`], floor 1).
 pub fn fig16_multi_score_curves(pm: &PerfModel, budget: &ServingBudget) -> Vec<MethodCurve> {
-    let alphas: Vec<f64> = (2..=30).map(|i| i as f64 * 0.1).collect();
-    vec![
-        score_curves(&crate::scenario::scenario6_analog(), pm, budget, &alphas, 206),
-        score_curves(&scenario10_analog(), pm, budget, &alphas, 210),
-    ]
+    let alphas = fig16_alphas();
+    [(crate::scenario::scenario6_analog(), 206u64), (scenario10_analog(), 210)]
+        .into_iter()
+        .take(budget.scenarios.max(1))
+        .map(|(s, seed)| score_curves(&s, pm, budget, &alphas, seed))
+        .collect()
+}
+
+/// Figure 13's α grid (0.2..=2.0, step 0.1) — one definition shared by
+/// the serial driver and the chunked protocol builder, so their merged
+/// curves always carry the same axis.
+fn fig13_alphas() -> Vec<f64> {
+    (2..=20).map(|i| i as f64 * 0.1).collect()
+}
+
+/// Figure 16's α grid (0.2..=3.0, step 0.1); see [`fig13_alphas`].
+fn fig16_alphas() -> Vec<f64> {
+    (2..=30).map(|i| i as f64 * 0.1).collect()
 }
 
 /// Figure 14 — per-group average makespan of scenario 10's solutions at a
@@ -657,20 +748,34 @@ impl Fig {
     }
 }
 
-/// One unit of the figure protocol: a `(scenario, method)` pair plus
-/// where its output lands in the report. Jobs reference their scenario's
-/// [`SolveCell`] by index, so two jobs (even across figures — fig16's
-/// scenario-10 curves and fig14 share one solve) never duplicate a GA
-/// run.
+/// One unit of the figure protocol: a `(scenario, method)` pair — or,
+/// for the score-curve figures, a `(scenario, method, α-chunk)` triple
+/// (see [`ServingBudget::alpha_chunk`]) — plus where its output lands in
+/// the report. Jobs reference their scenario's [`SolveCell`] by index, so
+/// two jobs (even across figures — fig16's scenario-10 curves and fig14
+/// share one solve) never duplicate a GA run.
 enum ProtocolJob {
     Sat { fig: Fig, row: usize, cell: usize, method: Method, sat_seed: u64 },
-    Curve { fig: Fig, row: usize, cell: usize, method: Method, seed: u64, alphas: Vec<f64> },
+    /// `alphas` holds only this chunk's grid points; `lo` is the chunk's
+    /// offset into the figure's full α grid (0 = the curve's first
+    /// chunk), which is all the merge needs to stitch curves back in
+    /// grid order.
+    Curve {
+        fig: Fig,
+        row: usize,
+        cell: usize,
+        method: Method,
+        seed: u64,
+        lo: usize,
+        alphas: Vec<f64>,
+    },
     Makespan { cell: usize, method: Method },
 }
 
 enum ProtocolOut {
     Sat(Option<f64>),
-    Curve(ScoreCurve),
+    /// One α-chunk's `(min, median, max)` score bands, in grid order.
+    Curve(Vec<(f64, f64, f64)>),
     Makespan(Vec<(String, f64, Vec<f64>)>),
 }
 
@@ -680,8 +785,22 @@ impl ProtocolJob {
             ProtocolJob::Sat { fig, cell, method, .. } => {
                 format!("{} {} {}", fig.name(), cells[*cell].scenario.name, method.name())
             }
-            ProtocolJob::Curve { fig, cell, method, .. } => {
-                format!("{} {} {}", fig.name(), cells[*cell].scenario.name, method.name())
+            ProtocolJob::Curve { fig, cell, method, lo, alphas, .. } => {
+                let name = cells[*cell].scenario.name.as_str();
+                if *lo == 0 {
+                    format!("{} {} {}", fig.name(), name, method.name())
+                } else {
+                    // Non-leading chunks carry their α window so progress
+                    // lines distinguish the stolen pieces of one sweep.
+                    format!(
+                        "{} {} {} α[{}..{}]",
+                        fig.name(),
+                        name,
+                        method.name(),
+                        lo,
+                        lo + alphas.len()
+                    )
+                }
             }
             ProtocolJob::Makespan { cell, method } => {
                 format!("fig14 {} {}", cells[*cell].scenario.name, method.name())
@@ -709,19 +828,14 @@ impl ProtocolJob {
             }
             ProtocolJob::Curve { cell, method, seed, alphas, .. } => {
                 let methods = cells[*cell].methods(pm, budget);
-                ProtocolOut::Curve(ScoreCurve {
-                    method: method.name().to_string(),
-                    alphas: alphas.clone(),
-                    scores: runtime_score_bands(
-                        method.pick(methods),
-                        &cells[*cell].scenario,
-                        alphas,
-                        perf,
-                        budget.sim_requests,
-                        *seed,
-                        inner_threads(budget),
-                    ),
-                })
+                ProtocolOut::Curve(runtime_score_bands(
+                    method.pick(methods),
+                    &cells[*cell].scenario,
+                    alphas,
+                    perf,
+                    *seed,
+                    budget,
+                ))
             }
             ProtocolJob::Makespan { cell, method } => {
                 let methods = cells[*cell].methods(pm, budget);
@@ -799,35 +913,51 @@ pub fn figure_protocol_observed(
     }
 
     // Score curves (fig13 single-group scenarios 1 & 8, fig16 multi-group
-    // analogs): per-scenario GA/probe seeds as in the serial drivers.
+    // analogs): per-scenario GA/probe seeds as in the serial drivers. Each
+    // `(scenario, method)` sweep is cut into α-chunk jobs of
+    // `alpha_chunk_width` grid points — chunk-minor within method-major
+    // order, so the index-merge below can push a curve at its first chunk
+    // and extend it with the rest. Probes are reset + re-seeded per
+    // `(set, α)`, so the chunk boundaries never show in the scores.
+    let fig13_grid = fig13_alphas();
+    let fig16_grid = fig16_alphas();
     let mut fig13_rows: Vec<MethodCurve> = Vec::new();
     let mut fig16_rows: Vec<MethodCurve> = Vec::new();
     let mut s10_cell: Option<usize> = None;
     if select.fig13 {
         let single = single_group_scenarios(23);
-        let alphas: Vec<f64> = (2..=20).map(|i| i as f64 * 0.1).collect();
-        for (row, (idx, seed)) in [(0usize, 101u64), (7, 108)].into_iter().enumerate() {
+        let chunk = budget.alpha_chunk_width(fig13_grid.len());
+        for (row, (idx, seed)) in [(0usize, 101u64), (7, 108)]
+            .into_iter()
+            .take(budget.scenarios.max(1))
+            .enumerate()
+        {
             let s = single[idx].clone();
             let cell = cells.len();
             fig13_rows.push(MethodCurve { scenario: s.name.clone(), curves: Vec::new() });
             cells.push(SolveCell::new(s, seed));
             for method in Method::ALL {
-                jobs.push(ProtocolJob::Curve {
-                    fig: Fig::F13,
-                    row,
-                    cell,
-                    method,
-                    seed,
-                    alphas: alphas.clone(),
-                });
+                for lo in (0..fig13_grid.len()).step_by(chunk) {
+                    let hi = (lo + chunk).min(fig13_grid.len());
+                    jobs.push(ProtocolJob::Curve {
+                        fig: Fig::F13,
+                        row,
+                        cell,
+                        method,
+                        seed,
+                        lo,
+                        alphas: fig13_grid[lo..hi].to_vec(),
+                    });
+                }
             }
         }
     }
     if select.fig16 {
-        let alphas: Vec<f64> = (2..=30).map(|i| i as f64 * 0.1).collect();
+        let chunk = budget.alpha_chunk_width(fig16_grid.len());
         for (row, (s, seed)) in
             [(crate::scenario::scenario6_analog(), 206u64), (scenario10_analog(), 210)]
                 .into_iter()
+                .take(budget.scenarios.max(1))
                 .enumerate()
         {
             let cell = cells.len();
@@ -837,14 +967,18 @@ pub fn figure_protocol_observed(
             fig16_rows.push(MethodCurve { scenario: s.name.clone(), curves: Vec::new() });
             cells.push(SolveCell::new(s, seed));
             for method in Method::ALL {
-                jobs.push(ProtocolJob::Curve {
-                    fig: Fig::F16,
-                    row,
-                    cell,
-                    method,
-                    seed,
-                    alphas: alphas.clone(),
-                });
+                for lo in (0..fig16_grid.len()).step_by(chunk) {
+                    let hi = (lo + chunk).min(fig16_grid.len());
+                    jobs.push(ProtocolJob::Curve {
+                        fig: Fig::F16,
+                        row,
+                        cell,
+                        method,
+                        seed,
+                        lo,
+                        alphas: fig16_grid[lo..hi].to_vec(),
+                    });
+                }
             }
         }
     }
@@ -864,13 +998,13 @@ pub fn figure_protocol_observed(
     }
 
     let perf = Arc::new(pm.clone());
-    let threads = crate::util::threads::effective_threads(budget.protocol_threads, jobs.len());
     let labels: Vec<String> = jobs.iter().map(|j| j.label(&cells)).collect();
     let total = jobs.len();
     let mut completed = 0usize;
     let results = shard_observed(
         &jobs,
-        threads,
+        budget.protocol_threads,
+        budget.core_budget.as_ref(),
         &|_, job: &ProtocolJob| job.run(&cells, &perf, pm, budget),
         &mut |i| {
             completed += 1;
@@ -879,9 +1013,10 @@ pub fn figure_protocol_observed(
     );
 
     // Merge by job index: `results` is already in job order, and jobs are
-    // generated figure-major / scenario-major / method-minor, so pushing
-    // curves and extending fig14 rows reproduces the serial drivers'
-    // output exactly.
+    // generated figure-major / scenario-major / method-major / α-chunk-
+    // minor, so pushing a curve at its `lo == 0` chunk (with the figure's
+    // full α grid), extending it with the following chunks, and extending
+    // fig14 rows reproduces the serial drivers' output exactly.
     let mut fig14_rows: Vec<(String, f64, Vec<f64>)> = Vec::new();
     for (job, out) in jobs.iter().zip(results) {
         match (job, out) {
@@ -893,13 +1028,25 @@ pub fn figure_protocol_observed(
                 };
                 method.set(&mut rows[*row], alpha);
             }
-            (ProtocolJob::Curve { fig, row, .. }, ProtocolOut::Curve(curve)) => {
-                let rows = match fig {
-                    Fig::F13 => &mut fig13_rows,
-                    Fig::F16 => &mut fig16_rows,
+            (ProtocolJob::Curve { fig, row, method, lo, .. }, ProtocolOut::Curve(scores)) => {
+                let (rows, grid) = match fig {
+                    Fig::F13 => (&mut fig13_rows, &fig13_grid),
+                    Fig::F16 => (&mut fig16_rows, &fig16_grid),
                     _ => unreachable!("curve jobs belong to fig13/fig16"),
                 };
-                rows[*row].curves.push(curve);
+                if *lo == 0 {
+                    rows[*row].curves.push(ScoreCurve {
+                        method: method.name().to_string(),
+                        alphas: grid.clone(),
+                        scores: Vec::new(),
+                    });
+                }
+                rows[*row]
+                    .curves
+                    .last_mut()
+                    .expect("the lo == 0 chunk pushed this method's curve")
+                    .scores
+                    .extend(scores);
             }
             (ProtocolJob::Makespan { .. }, ProtocolOut::Makespan(rows)) => {
                 fig14_rows.extend(rows);
@@ -1043,6 +1190,7 @@ mod tests {
             let out = shard_observed(
                 &jobs,
                 threads,
+                None,
                 &|i, &j| {
                     assert_eq!(i, j, "jobs are dispatched with their own index");
                     j * 10
@@ -1064,7 +1212,7 @@ mod tests {
         // both through the figure driver and the flattened protocol queue.
         let pm = PerfModel::paper_calibrated();
         let serial_budget = ServingBudget { scenarios: 1, ..ServingBudget::quick() };
-        let sharded_budget = ServingBudget { protocol_threads: 2, ..serial_budget };
+        let sharded_budget = ServingBudget { protocol_threads: 2, ..serial_budget.clone() };
         let serial = fig12_single_group(&pm, &serial_budget);
         let sharded = fig12_single_group(&pm, &sharded_budget);
         let assert_rows_eq = |a: &[SaturationRow], b: &[SaturationRow]| {
@@ -1088,6 +1236,77 @@ mod tests {
         assert!(report.fig15.is_none() && report.fig16.is_none());
         assert!(report.headline.is_none(), "headline needs fig12 AND fig15");
         assert!(FigureSelection::parse("fig12,bogus").is_err());
+    }
+
+    #[test]
+    fn shard_respects_core_budget_capacity() {
+        // The shard leases its width from the budget — the `requested`
+        // knob is superseded (no double-clamp): asking for 8 workers on
+        // a 2-core budget runs exactly 2 at a time.
+        use std::sync::atomic::AtomicIsize;
+        let jobs: Vec<usize> = (0..16).collect();
+        let budget = CoreBudget::new(2);
+        let live = AtomicIsize::new(0);
+        let peak = AtomicIsize::new(0);
+        let out = shard(&jobs, 8, Some(&budget), &|_, &j| {
+            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            live.fetch_sub(1, Ordering::SeqCst);
+            j
+        });
+        assert_eq!(out, jobs);
+        let peak = peak.load(Ordering::SeqCst);
+        assert!((1..=2).contains(&peak), "peak concurrency {peak} vs 2-core budget");
+        assert_eq!(budget.available(), 2, "shard returned every leased slot");
+    }
+
+    #[test]
+    fn chunked_budgeted_protocol_matches_serial_curves() {
+        // Contract #6 on the score-curve (bands) path: any core-budget
+        // capacity × α-chunk width reproduces the serial fig13 curves
+        // bit-for-bit. Chunk boundaries re-deploy, but probes are reset +
+        // re-seeded per (set, α), so the schedule replays exactly; the
+        // budget changes worker counts only.
+        let pm = PerfModel::paper_calibrated();
+        let serial_budget = ServingBudget { scenarios: 1, ..ServingBudget::quick() };
+        let select = FigureSelection::parse("fig13").expect("valid selection");
+        let serial =
+            figure_protocol(&pm, &serial_budget, select).fig13.expect("fig13 selected");
+        assert_eq!(serial.len(), 1, "scenarios: 1 trims fig13 to one scenario");
+        // Protocol ≡ serial per-figure driver at the same budget.
+        let driver = fig13_score_curves(&pm, &serial_budget);
+        assert_curves_eq(&driver, &serial, "serial driver");
+        for (capacity, chunk) in [(1usize, 4usize), (2, 19), (4, 7), (8, 4)] {
+            let budget = ServingBudget {
+                core_budget: Some(CoreBudget::new(capacity)),
+                alpha_chunk: chunk,
+                ..serial_budget.clone()
+            };
+            let curves = figure_protocol(&pm, &budget, select).fig13.expect("fig13 selected");
+            assert_curves_eq(&serial, &curves, &format!("capacity={capacity} chunk={chunk}"));
+        }
+    }
+
+    fn assert_curves_eq(a: &[MethodCurve], b: &[MethodCurve], what: &str) {
+        let bits = |s: &[(f64, f64, f64)]| -> Vec<(u64, u64, u64)> {
+            s.iter().map(|&(l, m, h)| (l.to_bits(), m.to_bits(), h.to_bits())).collect()
+        };
+        assert_eq!(a.len(), b.len(), "{what}");
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.scenario, y.scenario, "{what}");
+            assert_eq!(x.curves.len(), y.curves.len(), "{what}");
+            for (cx, cy) in x.curves.iter().zip(&y.curves) {
+                assert_eq!(cx.method, cy.method, "{what}");
+                assert_eq!(
+                    cx.alphas.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    cy.alphas.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{what} {}",
+                    cx.method
+                );
+                assert_eq!(bits(&cx.scores), bits(&cy.scores), "{what} {}", cx.method);
+            }
+        }
     }
 
     #[test]

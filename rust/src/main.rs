@@ -80,13 +80,15 @@ const USAGE: &str = "usage: puzzle <analyze|serve|loadtest|profile|comm-bench|sc
   loadtest     --models 0,1,6 --alpha 1.0 --requests 40 --pattern periodic|poisson|bursty
                [--burst 4] [--max-inflight N] [--admission queue|little] [--all-patterns]
                [--wall] [--time-scale 0.05] [--quick] [--no-saturation] [--seed 23]
-               [--probe-threads N] [--chaos slowdown:npu:2.0:0:0.5,stall:gpu:0.1:0.05,transient:0.02]
+               [--probe-threads N] [--core-budget N]
+               [--chaos slowdown:npu:2.0:0:0.5,stall:gpu:0.1:0.05,transient:0.02]
                [--monitor] [--monitor-json FILE]
   profile
   comm-bench
   scenario-gen --seed 23
   experiment   <table2|table3|table4|table5|fig5|fig10|fig12|fig13|fig14|fig15|fig16|headline|all> [--full]
-  figures      [--threads N] [--only fig12,fig14] [--scenarios N] [--requests N] [--full]";
+  figures      [--threads N] [--core-budget N] [--alpha-chunk W] [--only fig12,fig14]
+               [--scenarios N] [--requests N] [--full]";
 
 fn parse_models(s: &str) -> Vec<usize> {
     s.split(',')
@@ -206,6 +208,16 @@ fn main() -> Result<()> {
             budget.protocol_threads = args.get("threads", 0usize);
             budget.scenarios = args.get("scenarios", budget.scenarios);
             budget.sim_requests = args.get("requests", budget.sim_requests);
+            budget.alpha_chunk = args.get("alpha-chunk", budget.alpha_chunk);
+            // `--core-budget N` replaces the static two-level thread rule
+            // with one shared N-slot semaphore (0 = machine cores); see
+            // ServingBudget::core_budget. Scheduling only — the report
+            // stays bit-identical.
+            budget.core_budget = args
+                .options
+                .get("core-budget")
+                .and_then(|v| v.parse::<usize>().ok())
+                .map(puzzle::util::threads::CoreBudget::new);
             let select = match args.options.get("only") {
                 Some(spec) => match experiments::serving::FigureSelection::parse(spec) {
                     Ok(sel) => sel,
@@ -498,6 +510,14 @@ fn loadtest_cmd(pm: &PerfModel, args: &Args) -> Result<()> {
             seed,
             admission,
             probe_threads: args.get("probe-threads", 0usize),
+            // `--core-budget N` leases the probe fleet's width per α from
+            // a shared N-slot semaphore instead of the fixed
+            // `--probe-threads` count (0 = machine cores).
+            core_budget: args
+                .options
+                .get("core-budget")
+                .and_then(|v| v.parse::<usize>().ok())
+                .map(puzzle::util::threads::CoreBudget::new),
             ..Default::default()
         };
         let sat = puzzle::serve::saturation_via_runtime_observed(

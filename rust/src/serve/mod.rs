@@ -1108,6 +1108,15 @@ pub struct SaturationOptions {
     /// derivation, so results are **bit-identical to the serial path for
     /// any thread count** (determinism contract #6, property-tested).
     pub probe_threads: usize,
+    /// Shared core budget for the probe fleet. When set, every α-probe
+    /// leases its fleet width from the budget instead of `probe_threads`
+    /// (the lease alone bounds the width — no double clamp), so the
+    /// search dynamically reclaims cores freed by sibling searches and
+    /// shrinks to the caller's own thread when the pool is dry. Pure
+    /// scheduling: deployments stay pinned to set indices and seeds stay
+    /// positional, so α* and the probe stream are bit-identical for any
+    /// budget (contract #6, property-tested nominal and under chaos).
+    pub core_budget: Option<crate::util::threads::CoreBudget>,
 }
 
 impl Default for SaturationOptions {
@@ -1124,6 +1133,7 @@ impl Default for SaturationOptions {
             admission: Admission::Queue,
             fault_plan: None,
             probe_threads: 0,
+            core_budget: None,
         }
     }
 }
@@ -1276,7 +1286,6 @@ pub fn saturation_via_runtime_observed(
     // engine-noise stream never depends on which worker probes it.
     let mut deployments: Vec<Option<WarmDeployment>> =
         solution_sets.iter().map(|_| None).collect();
-    let threads = crate::util::threads::effective_threads(opts.probe_threads, solution_sets.len());
     let mut probes = 0usize;
     let mut deploys = 0usize;
 
@@ -1285,6 +1294,16 @@ pub fn saturation_via_runtime_observed(
         let mut score_at = |alpha: f64, deployments: &mut [Option<WarmDeployment>]| -> Option<f64> {
             let spec = LoadSpec::periodic(&scenario.periods(alpha, perf), opts.requests);
             let rates = spec.mean_rates();
+            // Fleet width, re-resolved per α-probe: with a shared core
+            // budget the lease tracks what is free *right now* (freed
+            // sibling cores are reclaimed probe by probe) and is the sole
+            // bound on the width; without one, the static probe_threads
+            // rule. Either way the width changes scheduling only.
+            let (threads, _lease) = crate::util::threads::leased_threads(
+                opts.core_budget.as_ref(),
+                opts.probe_threads,
+                solution_sets.len(),
+            );
             let results: Vec<SetProbe> = if threads <= 1 {
                 solution_sets
                     .iter()

@@ -1,6 +1,9 @@
 //! Thread-count resolution shared by every fan-out substrate (the GA's
 //! offspring batch evaluator, the saturation probe fleet, the figure
-//! protocol shard).
+//! protocol shard), plus the process-shareable [`CoreBudget`] that lets
+//! those substrates *reclaim* cores from each other dynamically.
+
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Resolve a requested thread count against a job count.
 ///
@@ -18,6 +21,176 @@ pub fn effective_threads(requested: usize, jobs: usize) -> usize {
     threads.clamp(1, jobs.max(1))
 }
 
+/// A process-shareable counting semaphore of worker-core slots.
+///
+/// One budget is sized to the logical cores (or an explicit override) and
+/// cloned into every nested fan-out substrate — the figure-protocol shard,
+/// the GA offspring/eval fan-out, the saturation probe fleet. Each
+/// substrate [`CoreBudget::acquire`]s a [`CoreLease`] of `1..=max` slots
+/// sized to what is *currently free*, and the lease returns its slots on
+/// drop. The effect is dynamic core reclamation: when early protocol jobs
+/// finish and their workers retire, the freed slots are picked up by the
+/// still-running jobs' inner fan-outs at their next lease (every GA
+/// generation and every α-probe re-acquires) instead of staying pinned to
+/// a static one-thread-per-inner-level rule.
+///
+/// The budget bounds *scheduling only*. Every substrate that leases from
+/// it gathers results by job index with positionally-derived seeds, so
+/// outputs are bit-identical for any capacity (determinism contract #6).
+#[derive(Clone)]
+pub struct CoreBudget {
+    inner: Arc<BudgetInner>,
+}
+
+struct BudgetInner {
+    capacity: usize,
+    available: Mutex<usize>,
+    freed: Condvar,
+}
+
+impl std::fmt::Debug for CoreBudget {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CoreBudget")
+            .field("capacity", &self.capacity())
+            .field("available", &self.available())
+            .finish()
+    }
+}
+
+impl CoreBudget {
+    /// A budget of `capacity` worker slots; `0` sizes it to the machine
+    /// ([`std::thread::available_parallelism`]). Capacity is at least 1.
+    pub fn new(capacity: usize) -> CoreBudget {
+        let capacity = if capacity == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            capacity
+        }
+        .max(1);
+        CoreBudget {
+            inner: Arc::new(BudgetInner {
+                capacity,
+                available: Mutex::new(capacity),
+                freed: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Total slots this budget was created with.
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity
+    }
+
+    /// Slots currently unleased (a racy snapshot — informational only).
+    pub fn available(&self) -> usize {
+        *self.inner.available.lock().expect("core budget poisoned")
+    }
+
+    /// Lease between `min` and `max` worker slots, blocking until at least
+    /// `min` are free. The lease takes *everything currently free* up to
+    /// `max` and returns it on drop.
+    ///
+    /// `min = 0` never blocks — the non-blocking form every *nested*
+    /// fan-out must use (its calling thread is already charged to the
+    /// budget by an outer lease, so blocking here could deadlock the
+    /// whole pool; running on the caller's own thread is always legal).
+    /// Even a zero-slot grant resolves to one worker
+    /// ([`CoreLease::workers`]): the caller's thread itself.
+    pub fn acquire(&self, min: usize, max: usize) -> CoreLease {
+        let max = max.clamp(1, self.inner.capacity);
+        let min = min.min(max);
+        let mut available = self.inner.available.lock().expect("core budget poisoned");
+        while *available < min {
+            available = self.inner.freed.wait(available).expect("core budget poisoned");
+        }
+        let granted = (*available).min(max);
+        *available -= granted;
+        drop(available);
+        CoreLease { budget: Some(self.clone()), granted }
+    }
+
+    fn release(&self, slots: usize) {
+        if slots == 0 {
+            return;
+        }
+        let mut available = self.inner.available.lock().expect("core budget poisoned");
+        *available = (*available + slots).min(self.inner.capacity);
+        drop(available);
+        self.inner.freed.notify_all();
+    }
+}
+
+/// A granted allocation of worker slots, returned to its [`CoreBudget`]
+/// on drop. Obtained from [`CoreBudget::acquire`].
+#[derive(Debug)]
+pub struct CoreLease {
+    budget: Option<CoreBudget>,
+    granted: usize,
+}
+
+impl CoreLease {
+    /// How many workers this lease entitles the holder to run: the granted
+    /// slots, but never less than 1 — a zero-slot grant still runs on the
+    /// calling thread (which an outer lease already paid for).
+    pub fn workers(&self) -> usize {
+        self.granted.max(1)
+    }
+
+    /// Slots actually charged to the budget (0 when the pool was dry and
+    /// the lease covers only the caller's own thread).
+    pub fn granted(&self) -> usize {
+        self.granted
+    }
+
+    /// Split this lease into one single-slot token per worker
+    /// ([`CoreLease::workers`] of them). Each token releases its slot back
+    /// to the budget *individually* when dropped — the mechanism that lets
+    /// a retiring shard worker hand its core to still-running jobs' inner
+    /// fan-outs while its siblings keep stealing. When the lease holds
+    /// fewer granted slots than workers (the dry-pool case), the excess
+    /// tokens own nothing and release nothing.
+    pub fn split(mut self) -> Vec<CoreLease> {
+        let budget = self.budget.take();
+        let (granted, workers) = (self.granted, self.workers());
+        (0..workers)
+            .map(|i| CoreLease {
+                budget: budget.clone(),
+                granted: usize::from(i < granted),
+            })
+            .collect()
+    }
+}
+
+impl Drop for CoreLease {
+    fn drop(&mut self) {
+        if let Some(budget) = self.budget.take() {
+            budget.release(self.granted);
+        }
+    }
+}
+
+/// Resolve one fan-out's worker count, leasing from `budget` when present.
+///
+/// With a budget, the lease is the *sole* authority on width: the fan-out
+/// asks for up to `jobs` slots (never blocking — `min = 0`) and runs with
+/// exactly [`CoreLease::workers`], so the static `requested` knob is
+/// superseded and never double-clamps the grant. Without a budget this is
+/// [`effective_threads`] unchanged. Hold the returned lease for the
+/// fan-out's lifetime; drop it to return the slots.
+pub fn leased_threads(
+    budget: Option<&CoreBudget>,
+    requested: usize,
+    jobs: usize,
+) -> (usize, Option<CoreLease>) {
+    match budget {
+        Some(b) => {
+            let lease = b.acquire(0, jobs.max(1));
+            (lease.workers().min(jobs.max(1)), Some(lease))
+        }
+        None => (effective_threads(requested, jobs), None),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -29,5 +202,96 @@ mod tests {
         assert_eq!(effective_threads(1, 0), 1);
         assert_eq!(effective_threads(0, 0), 1);
         assert!(effective_threads(0, 64) >= 1);
+    }
+
+    #[test]
+    fn acquire_takes_whats_free_and_drop_returns_it() {
+        let budget = CoreBudget::new(4);
+        assert_eq!(budget.capacity(), 4);
+        let a = budget.acquire(0, 3);
+        assert_eq!((a.workers(), a.granted()), (3, 3));
+        assert_eq!(budget.available(), 1);
+        // Pool nearly dry: a second lease takes the remainder.
+        let b = budget.acquire(0, 3);
+        assert_eq!((b.workers(), b.granted()), (1, 1));
+        assert_eq!(budget.available(), 0);
+        // Fully dry: min = 0 never blocks, grant 0 → 1 caller-thread worker.
+        let c = budget.acquire(0, 8);
+        assert_eq!((c.workers(), c.granted()), (1, 0));
+        drop(a);
+        assert_eq!(budget.available(), 3);
+        drop(b);
+        drop(c);
+        assert_eq!(budget.available(), 4);
+    }
+
+    #[test]
+    fn blocking_acquire_wakes_on_release() {
+        let budget = CoreBudget::new(2);
+        let held = budget.acquire(0, 2);
+        assert_eq!(budget.available(), 0);
+        let waiter = {
+            let budget = budget.clone();
+            std::thread::spawn(move || budget.acquire(2, 2).granted())
+        };
+        // Give the waiter time to park, then free the slots it needs.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        drop(held);
+        assert_eq!(waiter.join().expect("waiter survives"), 2);
+    }
+
+    #[test]
+    fn split_releases_per_token() {
+        let budget = CoreBudget::new(3);
+        let tokens = budget.acquire(0, 3).split();
+        assert_eq!(tokens.len(), 3);
+        assert_eq!(budget.available(), 0);
+        let mut tokens = tokens.into_iter();
+        drop(tokens.next());
+        assert_eq!(budget.available(), 1, "each dropped token frees one slot");
+        drop(tokens.next());
+        assert_eq!(budget.available(), 2);
+        drop(tokens.next());
+        assert_eq!(budget.available(), 3);
+
+        // Dry-pool split: the excess tokens own nothing.
+        let all = budget.acquire(0, 3);
+        let dry = budget.acquire(0, 2);
+        assert_eq!(dry.workers(), 1);
+        let dry_tokens = dry.split();
+        assert_eq!(dry_tokens.len(), 1);
+        drop(dry_tokens);
+        assert_eq!(budget.available(), 0, "a zero-granted token releases nothing");
+        drop(all);
+        assert_eq!(budget.available(), 3);
+    }
+
+    #[test]
+    fn lease_of_k_resolves_to_exactly_k_workers_for_any_requested_knob() {
+        // The no-double-clamp contract: with a budget present, the lease is
+        // the sole authority — the `requested` knob (GA threads,
+        // probe_threads, protocol_threads) must not re-clamp the grant.
+        for requested in [0usize, 1, 2, 8, 64] {
+            let budget = CoreBudget::new(3);
+            let (workers, lease) = leased_threads(Some(&budget), requested, 10);
+            assert_eq!(workers, 3, "requested={requested} must not affect the grant");
+            assert_eq!(lease.expect("budget leases").granted(), 3);
+        }
+        // Still clamped by the job count (never spawn idle workers)…
+        let budget = CoreBudget::new(8);
+        let (workers, _lease) = leased_threads(Some(&budget), 0, 2);
+        assert_eq!(workers, 2);
+        // …and the unleased remainder stays available to siblings.
+        assert!(budget.available() >= 6);
+        // Without a budget, the static rule is unchanged.
+        assert_eq!(leased_threads(None, 4, 100).0, 4);
+        assert!(leased_threads(None, 4, 100).1.is_none());
+    }
+
+    #[test]
+    fn machine_sized_budget_has_at_least_one_slot() {
+        let budget = CoreBudget::new(0);
+        assert!(budget.capacity() >= 1);
+        assert_eq!(budget.available(), budget.capacity());
     }
 }

@@ -104,8 +104,9 @@ fn runtime_ablation_accounting_direction_holds() {
     };
 
     let (_, copy_bytes, copy_allocs) =
-        run(RuntimeOptions { tensor_pool: false, zero_copy: false });
-    let (_, zc_bytes, zc_allocs) = run(RuntimeOptions { tensor_pool: true, zero_copy: true });
+        run(RuntimeOptions { tensor_pool: false, zero_copy: false, ..Default::default() });
+    let (_, zc_bytes, zc_allocs) =
+        run(RuntimeOptions { tensor_pool: true, zero_copy: true, ..Default::default() });
     // Copying mode marshals every cross-processor tensor; zero-copy moves none.
     assert!(copy_bytes > 0, "copying mode recorded no memcpy");
     assert_eq!(zc_bytes, 0, "zero-copy mode still copied {zc_bytes} bytes");

@@ -94,6 +94,48 @@ fn deterministic_across_thread_counts() {
 }
 
 #[test]
+fn deterministic_under_core_budget_leases() {
+    // The core-budget extension of the thread-invariance contract: a GA
+    // whose fan-out leases its width per generation from a shared
+    // CoreBudget — any capacity, with the static `threads` knob
+    // superseded — reproduces the serial search bit-for-bit. Two
+    // sessions sharing ONE budget concurrently also both reproduce it
+    // (the semaphore changes scheduling, never results).
+    use puzzle::util::threads::CoreBudget;
+    let scenario = Scenario::from_groups("budget", &[vec![0, 1, 6]]);
+    let pm = PerfModel::paper_calibrated();
+    let serial = run_session(&scenario, &pm, quick_cfg(7, 1));
+    let sig = pareto_signature(&serial);
+    for (capacity, threads) in [(1usize, 8usize), (2, 0), (4, 1), (8, 2)] {
+        let mut cfg = quick_cfg(7, threads);
+        cfg.core_budget = Some(CoreBudget::new(capacity));
+        let par = run_session(&scenario, &pm, cfg);
+        assert_eq!(serial.evaluations, par.evaluations, "capacity {capacity}");
+        assert_eq!(sig, pareto_signature(&par), "capacity {capacity} diverged");
+    }
+    // Contention: two concurrent sessions on one 3-slot budget.
+    let shared = CoreBudget::new(3);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let shared = shared.clone();
+                let (scenario, pm) = (&scenario, &pm);
+                scope.spawn(move || {
+                    let mut cfg = quick_cfg(7, 0);
+                    cfg.core_budget = Some(shared);
+                    run_session(scenario, pm, cfg)
+                })
+            })
+            .collect();
+        for h in handles {
+            let par = h.join().expect("budgeted session panicked");
+            assert_eq!(sig, pareto_signature(&par), "shared-budget session diverged");
+        }
+    });
+    assert_eq!(shared.available(), 3, "every generation lease was returned");
+}
+
+#[test]
 fn offspring_fanout_deterministic_with_odd_population() {
     // An odd population exercises the surplus-child truncation (the last
     // pair emits only one child); results must still be thread-count

@@ -900,6 +900,73 @@ fn fleet_chaos_saturation_matches_serial_robust_alpha() {
 }
 
 #[test]
+fn budgeted_fleet_saturation_bit_identical_for_any_capacity() {
+    // Determinism contract #6 under the dynamic core budget: leasing the
+    // probe fleet's width per α-probe from a shared semaphore — whatever
+    // its capacity — must replay the serial probe stream bit-for-bit.
+    // The `probe_threads` knob is superseded by the lease (no
+    // double-clamp), so it is deliberately varied alongside the capacity.
+    use puzzle::util::threads::CoreBudget;
+    let scenario = Scenario::from_groups("fleet-budget", &[vec![0, 1]]);
+    let perf = Arc::new(PerfModel::paper_calibrated());
+    let mut rng = puzzle::util::rng::Rng::seed_from_u64(61);
+    let mut sets = vec![materialize_solutions(
+        &scenario.networks,
+        &Genome::all_on(&scenario.networks, Processor::Npu),
+        &perf,
+    )];
+    sets.extend((0..4).map(|_| {
+        let genome = Genome::random(&scenario.networks, 0.3, &mut rng);
+        materialize_solutions(&scenario.networks, &genome, &perf)
+    }));
+    let base = SaturationOptions { requests: 6, tolerance: 0.1, ..Default::default() };
+    let serial = fleet_run(&sets, &scenario, &perf, &base, 1);
+    assert!(!serial.1.is_empty(), "search must stream at least one probe");
+    for (capacity, requested) in [(1usize, 0usize), (2, 1), (4, 8), (8, 2)] {
+        let opts =
+            SaturationOptions { core_budget: Some(CoreBudget::new(capacity)), ..base.clone() };
+        let budgeted = fleet_run(&sets, &scenario, &perf, &opts, requested);
+        assert_eq!(
+            budgeted, serial,
+            "core budget {capacity} (requested {requested}) diverged from serial"
+        );
+    }
+}
+
+#[test]
+fn budgeted_chaos_fleet_matches_serial_robust_alpha() {
+    // The budget-invariance contract extends to chaos probing: the
+    // robust-α* search with a FaultPlan on every deployment replays
+    // bit-identically for any core-budget capacity.
+    use puzzle::util::threads::CoreBudget;
+    let scenario = Scenario::from_groups("fleet-chaos-budget", &[vec![0], vec![1]]);
+    let perf = Arc::new(PerfModel::paper_calibrated());
+    let genome_a = Genome::all_on(&scenario.networks, Processor::Npu);
+    let mut genome_b = genome_a.clone();
+    genome_b.priority.reverse();
+    let sets = vec![
+        materialize_solutions(&scenario.networks, &genome_a, &perf),
+        materialize_solutions(&scenario.networks, &genome_b, &perf),
+    ];
+    let base = SaturationOptions {
+        requests: 6,
+        alpha_max: 40.0,
+        tolerance: 0.5,
+        threshold: 0.5,
+        fault_plan: Some(FaultPlan::new(3).stall(Processor::Npu, 0.0, 1e3)),
+        ..Default::default()
+    };
+    let serial = fleet_run(&sets, &scenario, &perf, &base, 1);
+    assert!(serial.0.is_some(), "the stall scenario must still yield a robust α*");
+    for capacity in [1usize, 2, 4, 8] {
+        let opts =
+            SaturationOptions { core_budget: Some(CoreBudget::new(capacity)), ..base.clone() };
+        let budgeted = fleet_run(&sets, &scenario, &perf, &opts, 0);
+        assert_eq!(budgeted, serial, "chaos core budget {capacity} diverged from serial");
+    }
+}
+
+#[test]
 fn concurrent_warm_probes_bit_identical_to_serial_across_arrival_patterns() {
     // The isolation contract underneath the fleet: deployments probed on
     // scoped worker threads replay bit-identically to the same probes run
@@ -943,6 +1010,45 @@ fn concurrent_warm_probes_bit_identical_to_serial_across_arrival_patterns() {
             assert_logs_identical(sl, pl);
             assert_reports_identical(sr, pr);
         }
+    }
+}
+
+#[test]
+fn dispatch_overhead_zero_is_bit_identical_and_positive_inflates_makespans() {
+    // RuntimeOptions::dispatch_overhead: the default 0.0 replays the
+    // uncalibrated virtual schedule bit-for-bit, while positive values —
+    // priced per task into run_virtual — inflate every makespan
+    // monotonically. A single NPU-pinned network keeps the queue FIFO,
+    // so per-request monotonicity is exact (no priority overtaking).
+    let scenario = Scenario::from_groups("overhead", &[vec![0]]);
+    let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+    let perf = PerfModel::paper_calibrated();
+    let spec = LoadSpec::periodic(&scenario.periods(1.5, &perf), 8);
+    let run = |options: RuntimeOptions| -> Vec<ServedRequest> {
+        let mut harness = harness_for(&scenario, &genome, 17);
+        harness.options = options;
+        let (_, mut log) = harness.run_with_log(&spec);
+        log.sort_by_key(|s| (s.group, s.request));
+        log
+    };
+    let base = run(RuntimeOptions { dispatch_overhead: 0.0, ..Default::default() });
+    assert!(!base.is_empty());
+    assert_logs_identical(&base, &run(RuntimeOptions::default()));
+    let mut last = base;
+    for overhead in [1e-5, 1e-4, 1e-3] {
+        let inflated = run(RuntimeOptions { dispatch_overhead: overhead, ..Default::default() });
+        assert_eq!(inflated.len(), last.len());
+        for (lo, hi) in last.iter().zip(&inflated) {
+            assert_eq!((lo.group, lo.request), (hi.group, hi.request));
+            assert!(
+                hi.makespan > lo.makespan,
+                "overhead {overhead}: request {} makespan did not grow ({} vs {})",
+                hi.request,
+                lo.makespan,
+                hi.makespan
+            );
+        }
+        last = inflated;
     }
 }
 

@@ -1,0 +1,75 @@
+#!/usr/bin/env bash
+# Profile-guided-optimization lane for the hotpaths bench (opt-in CI job,
+# also runnable locally). Classic two-pass cargo PGO:
+#
+#   1. plain release run of `benches/hotpaths.rs` → baseline numbers;
+#   2. `-Cprofile-generate` instrumented build, same bench as the profiling
+#      workload (it IS the workload we optimize for);
+#   3. `llvm-profdata merge` of the emitted .profraw shards;
+#   4. `-Cprofile-use` rebuild, bench again → PGO numbers.
+#
+# Artifacts:
+#   BENCH_hotpaths.json      — plain numbers (regenerated, step 1);
+#   BENCH_hotpaths.pgo.json  — per-bench {plain_min_ns, pgo_min_ns, speedup}
+#                              plus the geometric-mean speedup, printed too.
+#
+# Needs the rustup `llvm-tools` component (for llvm-profdata) or an
+# llvm-profdata on PATH. No new crates, no cargo plugins.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PROF_DIR="$(pwd)/target/pgo-profiles"
+rm -rf "$PROF_DIR"
+mkdir -p "$PROF_DIR"
+
+# Locate llvm-profdata: rustup's llvm-tools ships it inside the sysroot.
+HOST="$(rustc -vV | sed -n 's/^host: //p')"
+SYSROOT="$(rustc --print sysroot)"
+PROFDATA="$SYSROOT/lib/rustlib/$HOST/bin/llvm-profdata"
+if [ ! -x "$PROFDATA" ]; then
+  PROFDATA="$(command -v llvm-profdata || true)"
+fi
+if [ -z "$PROFDATA" ]; then
+  echo "pgo.sh: llvm-profdata not found (rustup component add llvm-tools)" >&2
+  exit 2
+fi
+
+echo "== pass 1/3: plain release bench (baseline) =="
+cargo bench --bench hotpaths
+cp BENCH_hotpaths.json "$PROF_DIR/plain.json"
+
+echo "== pass 2/3: instrumented build + profiling run =="
+RUSTFLAGS="-Cprofile-generate=$PROF_DIR" cargo bench --bench hotpaths
+"$PROFDATA" merge -o "$PROF_DIR/merged.profdata" "$PROF_DIR"/*.profraw
+
+echo "== pass 3/3: profile-guided rebuild + bench =="
+RUSTFLAGS="-Cprofile-use=$PROF_DIR/merged.profdata" cargo bench --bench hotpaths
+cp BENCH_hotpaths.json "$PROF_DIR/pgo.json"
+
+# Leave the repo-root file holding the PLAIN numbers (the regression
+# baseline other lanes compare against); the PGO comparison goes next to it.
+cp "$PROF_DIR/plain.json" BENCH_hotpaths.json
+
+python3 - "$PROF_DIR/plain.json" "$PROF_DIR/pgo.json" BENCH_hotpaths.pgo.json <<'EOF'
+import json, math, sys
+plain = json.load(open(sys.argv[1]))
+pgo = json.load(open(sys.argv[2]))
+rows, logs = {}, []
+for name, p in plain.items():
+    g = pgo.get(name)
+    if not g:
+        continue
+    speedup = p["min_ns"] / max(g["min_ns"], 1e-9)
+    rows[name] = {
+        "plain_min_ns": p["min_ns"],
+        "pgo_min_ns": g["min_ns"],
+        "speedup": round(speedup, 4),
+    }
+    logs.append(math.log(max(speedup, 1e-9)))
+    print(f"  {name}: {p['min_ns']:.0f}ns -> {g['min_ns']:.0f}ns ({speedup:.3f}x)")
+geomean = math.exp(sum(logs) / len(logs)) if logs else 1.0
+rows["_geomean_speedup"] = round(geomean, 4)
+json.dump(rows, open(sys.argv[3], "w"), indent=2)
+print(f"pgo.sh: geometric-mean speedup {geomean:.3f}x over {len(logs)} benches")
+print(f"pgo.sh: wrote {sys.argv[3]}")
+EOF
