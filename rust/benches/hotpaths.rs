@@ -15,12 +15,13 @@
 use puzzle::analyzer::GaConfig;
 use puzzle::api::SessionBuilder;
 use puzzle::comm::CommModel;
-use puzzle::experiments::{saturation_protocol, ServingBudget};
+use puzzle::experiments::{run_fuzz_corpus, saturation_protocol, FuzzOptions, ServingBudget};
 use puzzle::ga::{decode, nsga3_select, DecodedPlanCache, Genome, SelectionWorkspace};
 use puzzle::graph::{merkle_hash_subgraph, partition, PartitionWorkspace};
 use puzzle::mem::TensorPool;
 use puzzle::perf::PerfModel;
 use puzzle::profiler::Profiler;
+use puzzle::scenario::fuzz::{corpus as fuzz_corpus_of, FuzzConfig};
 use puzzle::scenario::Scenario;
 use puzzle::serve::{
     materialize_solutions, probe_seed, saturation_via_runtime, ClockMode, FaultPlan, LoadSpec,
@@ -468,6 +469,35 @@ fn main() {
     all.push(proto_serial);
     all.push(proto_static);
     all.push(proto_budgeted);
+
+    // Fuzz-corpus runner: 16-group fuzzed scenarios through the warm
+    // runtime with envelope checks, serial (probe_threads = 1) vs the
+    // scoped case fleet (probe_threads = 0, all cores). Bit-identical
+    // outcomes either way (tested in fuzz_envelope); bench_guard asserts
+    // fleet <= serial × 1.05 as a same-run invariant.
+    let fuzz_perf = std::sync::Arc::new(pm.clone());
+    let fuzz_config = FuzzConfig {
+        groups: (16, 16),
+        members: (1, 1),
+        requests: (2, 4),
+        generated_prob: 0.0,
+        ..FuzzConfig::default()
+    };
+    let fuzz_corpus = fuzz_corpus_of(13, 6, &fuzz_config, &fuzz_perf);
+    let fuzz_opts = |probe_threads: usize| FuzzOptions { probe_threads, ..Default::default() };
+    let fuzz_serial = bench("fuzz/corpus_16_groups_serial", 4.0, 2, || {
+        black_box(run_fuzz_corpus(&fuzz_corpus, &fuzz_perf, &fuzz_opts(1)).len());
+    });
+    let fuzz_fleet = bench("fuzz/corpus_16_groups_fleet", 4.0, 2, || {
+        black_box(run_fuzz_corpus(&fuzz_corpus, &fuzz_perf, &fuzz_opts(0)).len());
+    });
+    println!(
+        "fuzz/corpus_16_groups_fleet speedup over serial: {:.2}x ({} cases)",
+        fuzz_serial.mean_s / fuzz_fleet.mean_s,
+        fuzz_corpus.len(),
+    );
+    all.push(fuzz_serial);
+    all.push(fuzz_fleet);
 
     // Machine-readable trajectory for future PRs.
     let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))

@@ -61,12 +61,19 @@ use crate::util::error::Result;
 
 pub use crate::analyzer::{GaConfig, Solution};
 pub use crate::coordinator::{OverloadPolicy, RecoveryOptions, RuntimeOptions};
+pub use crate::experiments::fuzz::{
+    calibrate_slack, run_fuzz_corpus, FuzzCaseOutcome, FuzzOptions, SlackSweepRow,
+};
 pub use crate::experiments::serving::{
     FigureReport, FigureSelection, Method, ProtocolProgress, ServingBudget,
 };
+pub use crate::scenario::fuzz::{
+    ArrivalKind, ChurnEvent, ChurnKind, FuzzConfig, FuzzedScenario, ScenarioFuzzer,
+};
+pub use crate::serve::envelope::{certificate_corroborated, Envelope, EnvelopeBreach};
 pub use crate::serve::{
-    Admission, ArrivalProcess, ClockMode, FaultEvent, FaultPlan, GroupLoad, LoadSpec,
-    ProbeProgress, SaturationOptions, ServeReport,
+    envelope_for, Admission, ArrivalProcess, ClockMode, FaultEvent, FaultPlan, GroupLoad,
+    LoadError, LoadSpec, ProbeProgress, RateSegment, SaturationOptions, ServeReport,
 };
 pub use crate::telemetry::{MetricsAggregator, TelemetryEvent, TelemetryRx};
 

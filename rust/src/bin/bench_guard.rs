@@ -87,7 +87,7 @@ fn main() {
     }
 
     // Layer 2: same-run invariants (machine-independent).
-    let invariants: [(&str, &str, f64); 13] = [
+    let invariants: [(&str, &str, f64); 14] = [
         // Parallel must not lose to serial by more than scheduling jitter
         // (on a single-core runner both take the same path).
         ("analyzer/parallel_generation", "analyzer/serial_generation", 1.10),
@@ -136,6 +136,11 @@ fn main() {
         // should win, because retiring small-scenario workers hand their
         // slots to the giant scenario's GA/probe fan-outs.
         ("serve/protocol_budgeted_shard", "serve/protocol_static_shard", 1.05),
+        // The fuzz-corpus case fleet runs the identical 16-group corpus as
+        // the serial runner (bit-identical outcomes, contracts #6/#7):
+        // fanning cases across cores must never cost wall-clock beyond
+        // jitter. On a single-core runner both take the serial path.
+        ("fuzz/corpus_16_groups_fleet", "fuzz/corpus_16_groups_serial", 1.05),
     ];
     for (fast, slow, margin) in invariants {
         match (get(&fresh, fast), get(&fresh, slow)) {

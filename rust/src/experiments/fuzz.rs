@@ -1,0 +1,268 @@
+//! Fuzz-corpus serving driver: push a seeded corpus of fuzzed scenarios
+//! ([`crate::scenario::fuzz`]) through the warm-deployment runtime and
+//! cross-check every measured [`ServeReport`] against its analytic
+//! envelope ([`crate::serve::envelope`]).
+//!
+//! The fan-out reuses the probe fleet's machinery: cases are chunked
+//! across scoped threads at a width resolved by
+//! [`crate::util::threads::leased_threads`] (the `probe_threads` knob, or
+//! a [`CoreBudget`] lease), results land by case index, and every
+//! deployment's noise seed derives positionally from `(seed, index, α)` —
+//! so the outcome vector is **bit-identical for any thread count or core
+//! budget** (determinism contract #6) and replayable from the corpus seed
+//! alone (contract #7).
+
+use std::sync::Arc;
+
+use crate::coordinator::OverloadPolicy;
+use crate::ga::Genome;
+use crate::perf::PerfModel;
+use crate::scenario::fuzz::FuzzedScenario;
+use crate::serve::envelope::{certificate_corroborated, envelope_for, Envelope};
+use crate::serve::{little_inflight_cap, probe_seed, Admission, RuntimeHarness, ServeReport};
+use crate::util::rng::Rng;
+use crate::util::threads::{leased_threads, CoreBudget};
+
+/// Genome cut probability of the per-case random solution draw.
+const FUZZ_CUT_PROB: f64 = 0.3;
+
+/// ρ_max at or below which a case counts as *feasible load* for the
+/// [`calibrate_slack`] sweep (comfortably inside the stationary regime,
+/// where the Little's-law cap must never engage).
+pub const FEASIBLE_RHO: f64 = 0.85;
+
+/// Knobs of the corpus runner.
+#[derive(Debug, Clone)]
+pub struct FuzzOptions {
+    /// Fleet width: concurrent cases (`0` = all cores, clamped to the
+    /// corpus size). Scheduling only — outcomes are bit-identical for any
+    /// value.
+    pub probe_threads: usize,
+    /// Shared core budget: when set, the fleet width is leased from it
+    /// instead of `probe_threads` (scheduling only, like the probe fleet).
+    pub core_budget: Option<CoreBudget>,
+    /// Check each measured report against its analytic envelope.
+    pub envelope: bool,
+    /// Base seed of the per-case engine-noise schedule.
+    pub seed: u64,
+    /// Admission applied to every case's load (the envelope band assumes
+    /// [`Admission::Queue`]; capped runs skip the breach check).
+    pub admission: Admission,
+}
+
+impl Default for FuzzOptions {
+    fn default() -> FuzzOptions {
+        FuzzOptions {
+            probe_threads: 0,
+            core_budget: None,
+            envelope: true,
+            seed: 23,
+            admission: Admission::Queue,
+        }
+    }
+}
+
+/// Outcome of one corpus case.
+#[derive(Debug, Clone)]
+pub struct FuzzCaseOutcome {
+    /// Case position in the corpus.
+    pub index: usize,
+    /// The case's derived seed (replay anchor).
+    pub seed: u64,
+    /// Scenario name.
+    pub name: String,
+    /// Model-group count.
+    pub groups: usize,
+    /// The case's analytic envelope.
+    pub envelope: Envelope,
+    /// The certificate fired (ρ > 1 from long-run mean rates).
+    pub certified_infeasible: bool,
+    /// The certificate fired but its rates are contradicted by the
+    /// generated arrival schedule — a queueing-model bug
+    /// ([`certificate_corroborated`]).
+    pub false_certificate: bool,
+    /// Envelope breach, if the measured report landed outside its band.
+    pub breach: Option<String>,
+    /// FNV-1a hash of the report's deterministic fields ([`report_hash`]).
+    pub report_hash: u64,
+    /// The measured report.
+    pub report: ServeReport,
+}
+
+/// FNV-1a over the deterministic fields of a report — every count and
+/// every f64 bit that the bit-identity contracts cover (wall time and the
+/// wall-measured `mem` block stay out). Golden values of this hash anchor
+/// the committed fixture corpus.
+pub fn report_hash(report: &ServeReport) -> u64 {
+    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    let mut put = |value: u64| {
+        for byte in value.to_le_bytes() {
+            hash ^= byte as u64;
+            hash = hash.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    put(report.submitted as u64);
+    put(report.served as u64);
+    put(report.dropped as u64);
+    put(report.unfinished as u64);
+    put(report.violations as u64);
+    put(report.retries);
+    put(report.remaps);
+    put(report.fault_shed as u64);
+    put(report.score.to_bits());
+    put(report.attainment.to_bits());
+    put(report.degraded_time.to_bits());
+    for group in &report.group_makespans {
+        put(group.len() as u64);
+        for makespan in group {
+            put(makespan.to_bits());
+        }
+    }
+    if let Some(rho) = report.rho {
+        for r in rho {
+            put(r.to_bits());
+        }
+    }
+    hash
+}
+
+/// Run one case: draw its solution genome from the case seed, deploy,
+/// serve the fuzzed load, and envelope-check the measured report.
+fn run_case(
+    index: usize,
+    case: &FuzzedScenario,
+    perf: &Arc<PerfModel>,
+    opts: &FuzzOptions,
+) -> FuzzCaseOutcome {
+    let mut rng = Rng::seed_from_u64(case.seed ^ 0xA55A_5AA5_A55A_5AA5);
+    let genome = Genome::random(&case.scenario.networks, FUZZ_CUT_PROB, &mut rng);
+    let noise_seed = probe_seed(opts.seed, index, case.alpha);
+    let harness = RuntimeHarness::for_genome(&case.scenario, &genome, perf, noise_seed);
+
+    let envelope = envelope_for(&harness.solutions, &harness.groups, &case.spec, perf)
+        .expect("fuzzer corpora validate by construction");
+
+    let spec = match opts.admission {
+        Admission::Queue => case.spec.clone(),
+        Admission::LittleCap { slack } => {
+            let cap = little_inflight_cap(
+                &harness.solutions,
+                &harness.groups,
+                &case.spec.mean_rates(),
+                perf,
+                slack,
+            );
+            case.spec.clone().with_policy(OverloadPolicy::DropAfter { max_inflight: cap })
+        }
+    };
+    let report = harness.run(&spec);
+
+    let queue_admission = matches!(opts.admission, Admission::Queue);
+    let breach = if opts.envelope && queue_admission {
+        envelope.check(&report).err().map(|b| b.to_string())
+    } else {
+        None
+    };
+    let certified_infeasible = envelope.certified_infeasible;
+    let false_certificate = certified_infeasible && !certificate_corroborated(&case.spec);
+
+    FuzzCaseOutcome {
+        index,
+        seed: case.seed,
+        name: case.scenario.name.clone(),
+        groups: case.scenario.groups.len(),
+        envelope,
+        certified_infeasible,
+        false_certificate,
+        breach,
+        report_hash: report_hash(&report),
+        report,
+    }
+}
+
+/// Run a whole corpus through the fleet. Outcomes are ordered by case
+/// index and bit-identical for any `probe_threads` / core budget.
+pub fn run_fuzz_corpus(
+    corpus: &[FuzzedScenario],
+    perf: &Arc<PerfModel>,
+    opts: &FuzzOptions,
+) -> Vec<FuzzCaseOutcome> {
+    let jobs = corpus.len();
+    if jobs == 0 {
+        return Vec::new();
+    }
+    let (threads, _lease) = leased_threads(opts.core_budget.as_ref(), opts.probe_threads, jobs);
+    let mut results: Vec<Option<FuzzCaseOutcome>> = (0..jobs).map(|_| None).collect();
+    if threads <= 1 {
+        for (i, case) in corpus.iter().enumerate() {
+            results[i] = Some(run_case(i, case, perf, opts));
+        }
+    } else {
+        let chunk = jobs.div_ceil(threads);
+        std::thread::scope(|scope| {
+            for (chunk_idx, (cases, slots)) in
+                corpus.chunks(chunk).zip(results.chunks_mut(chunk)).enumerate()
+            {
+                let base = chunk_idx * chunk;
+                scope.spawn(move || {
+                    for (j, (case, slot)) in cases.iter().zip(slots.iter_mut()).enumerate() {
+                        *slot = Some(run_case(base + j, case, perf, opts));
+                    }
+                });
+            }
+        });
+    }
+    results.into_iter().map(|r| r.expect("every case ran")).collect()
+}
+
+/// One row of the [`calibrate_slack`] sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct SlackSweepRow {
+    /// The [`Admission::LittleCap`] slack swept.
+    pub slack: f64,
+    /// Corpus cases at feasible load (ρ_max ≤ [`FEASIBLE_RHO`]).
+    pub feasible_cases: usize,
+    /// Requests dropped across those feasible cases — the calibration
+    /// target is the smallest slack where this is zero.
+    pub feasible_drops: usize,
+    /// Requests dropped across the whole corpus (overload cases included;
+    /// informational — dropping there is the cap doing its job).
+    pub total_drops: usize,
+}
+
+/// Sweep [`Admission::LittleCap`] slacks over a corpus: for each slack,
+/// run every case under the cap and count drops at feasible load. The
+/// calibrated `DEFAULT_SLACK` is the smallest swept slack whose
+/// `feasible_drops` is zero (pinned by a regression test).
+pub fn calibrate_slack(
+    corpus: &[FuzzedScenario],
+    perf: &Arc<PerfModel>,
+    opts: &FuzzOptions,
+    slacks: &[f64],
+) -> Vec<SlackSweepRow> {
+    slacks
+        .iter()
+        .map(|&slack| {
+            let capped = FuzzOptions {
+                admission: Admission::LittleCap { slack },
+                envelope: false,
+                ..opts.clone()
+            };
+            let outcomes = run_fuzz_corpus(corpus, perf, &capped);
+            let mut row = SlackSweepRow {
+                slack,
+                feasible_cases: 0,
+                feasible_drops: 0,
+                total_drops: 0,
+            };
+            for outcome in &outcomes {
+                row.total_drops += outcome.report.dropped;
+                if outcome.envelope.rho_max <= FEASIBLE_RHO {
+                    row.feasible_cases += 1;
+                    row.feasible_drops += outcome.report.dropped;
+                }
+            }
+            row
+        })
+        .collect()
+}

@@ -4,10 +4,14 @@
 //! records paper-vs-measured for each.
 
 pub mod ablation;
+pub mod fuzz;
 pub mod serving;
 pub mod tables;
 
 pub use ablation::{fig10_ablation, ga_ablation, table5_breakdown, AblationRow, Table5Row};
+pub use fuzz::{
+    calibrate_slack, report_hash, run_fuzz_corpus, FuzzCaseOutcome, FuzzOptions, SlackSweepRow,
+};
 pub use serving::{
     fig12_single_group, fig13_score_curves, fig14_makespan_distribution, fig15_multi_group,
     fig16_multi_score_curves, figure_protocol, figure_protocol_observed, headline_ratios,

@@ -12,6 +12,10 @@
 //! * `experiment`  — regenerate a paper table/figure (`all` for everything)
 //! * `figures`     — the serving figures (12–16) as one work-stealing
 //!   queue of (scenario, method) jobs (`--threads N`, 0 = cores)
+//! * `fuzz`        — run a seeded corpus of fuzzed scenarios (group/SLA/
+//!   arrival mixes far beyond the nine-model zoo) through the
+//!   warm-deployment fleet and cross-check every measured report against
+//!   its analytic queueing envelope
 //!
 //! Argument parsing is hand-rolled (`--key value` / `--flag`): the build
 //! environment is offline and clap is not vendored.
@@ -88,7 +92,9 @@ const USAGE: &str = "usage: puzzle <analyze|serve|loadtest|profile|comm-bench|sc
   scenario-gen --seed 23
   experiment   <table2|table3|table4|table5|fig5|fig10|fig12|fig13|fig14|fig15|fig16|headline|all> [--full]
   figures      [--threads N] [--core-budget N] [--alpha-chunk W] [--only fig12,fig14]
-               [--scenarios N] [--requests N] [--full]";
+               [--scenarios N] [--requests N] [--full]
+  fuzz         --seed 23 --count 16 [--quick] [--stress] [--envelope]
+               [--probe-threads N] [--core-budget N] [--calibrate]";
 
 fn parse_models(s: &str) -> Vec<usize> {
     s.split(',')
@@ -227,6 +233,7 @@ fn main() -> Result<()> {
             };
             figures_cmd(&pm, &budget, select)?;
         }
+        "fuzz" => fuzz_cmd(&pm, &args)?,
         other => {
             println!("unknown command: {other}\n{USAGE}");
             std::process::exit(2);
@@ -275,6 +282,98 @@ fn serve_cmd(
         puzzle::sim::percentile(&makespans, 0.9) * 1e3
     );
     deployment.shutdown();
+    Ok(())
+}
+
+/// Seeded scenario-fuzzer corpus through the warm-deployment fleet: draw
+/// `--count` scenarios (group counts, model mixes including generated
+/// networks, SLA classes, periodic/Poisson/bursty/diurnal/flash-crowd
+/// arrivals, optional churn) from `--seed`, serve each on a per-case
+/// random solution, and — with `--envelope` — cross-check every measured
+/// report against its analytic queueing envelope, failing on any breach
+/// or false infeasibility certificate. `--calibrate` additionally sweeps
+/// the `Admission::LittleCap` slack over the corpus.
+fn fuzz_cmd(pm: &PerfModel, args: &Args) -> Result<()> {
+    use puzzle::api::{calibrate_slack, run_fuzz_corpus, FuzzConfig, FuzzOptions};
+    use puzzle::scenario::fuzz::corpus;
+    use std::sync::Arc;
+
+    let seed = args.get("seed", 23u64);
+    let quick = args.flags.contains("quick");
+    let stress = args.flags.contains("stress");
+    let count = args.get("count", if quick { 8 } else { 16 });
+    let config = if stress {
+        FuzzConfig::stress()
+    } else if quick {
+        FuzzConfig::quick()
+    } else {
+        FuzzConfig::default()
+    };
+    let cases = corpus(seed, count, &config, pm);
+    let opts = FuzzOptions {
+        probe_threads: args.get("probe-threads", 0usize),
+        core_budget: args
+            .options
+            .get("core-budget")
+            .and_then(|v| v.parse::<usize>().ok())
+            .map(puzzle::util::threads::CoreBudget::new),
+        envelope: args.flags.contains("envelope"),
+        seed,
+        ..Default::default()
+    };
+    let perf = Arc::new(pm.clone());
+    let t0 = std::time::Instant::now();
+    let outcomes = run_fuzz_corpus(&cases, &perf, &opts);
+    println!(
+        "{:>4} {:>18} {:>6} {:>6} {:>8} {:>8} {:>9}  verdict",
+        "case", "seed", "groups", "rho", "served", "violate", "band"
+    );
+    let mut breaches = 0usize;
+    let mut false_certs = 0usize;
+    let mut certified = 0usize;
+    for o in &outcomes {
+        certified += usize::from(o.certified_infeasible);
+        false_certs += usize::from(o.false_certificate);
+        breaches += usize::from(o.breach.is_some());
+        let verdict = if o.false_certificate {
+            "FALSE-CERT".to_string()
+        } else if let Some(b) = &o.breach {
+            format!("BREACH: {b}")
+        } else if o.certified_infeasible {
+            "certified ρ>1".to_string()
+        } else {
+            "in envelope".to_string()
+        };
+        println!(
+            "{:>4} {:>18x} {:>6} {:>6.2} {:>8} {:>8} [{:.2},{:.2}]  {verdict}",
+            o.index,
+            o.seed,
+            o.groups,
+            o.envelope.rho_max,
+            o.report.served,
+            o.report.violations,
+            o.envelope.band.0,
+            o.envelope.band.1,
+        );
+    }
+    println!(
+        "{} cases in {:.2}s: {certified} certified infeasible, {breaches} envelope \
+         breach(es), {false_certs} false certificate(s)",
+        outcomes.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    if args.flags.contains("calibrate") {
+        println!("LittleCap slack sweep (feasible-load drops must be zero):");
+        for row in calibrate_slack(&cases, &perf, &opts, &[1.0, 1.5, 2.0, 2.5, 3.0, 4.0]) {
+            println!(
+                "  slack {:>4.1}: {:>2} feasible cases, {:>3} feasible-load drops, {:>3} total",
+                row.slack, row.feasible_cases, row.feasible_drops, row.total_drops
+            );
+        }
+    }
+    if opts.envelope && (breaches > 0 || false_certs > 0) {
+        puzzle::bail!("{breaches} envelope breach(es), {false_certs} false certificate(s)");
+    }
     Ok(())
 }
 

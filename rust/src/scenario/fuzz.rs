@@ -1,0 +1,534 @@
+//! Seeded scenario fuzzer: generalizes the Fig-11 generator far beyond
+//! the nine-model zoo.
+//!
+//! A [`ScenarioFuzzer`] draws [`FuzzedScenario`]s — scenario structure
+//! *and* a matching [`LoadSpec`] — from a seeded [`Rng`], controlled by a
+//! [`FuzzConfig`]:
+//!
+//! * **group counts** up to 10–100 groups ([`FuzzConfig::stress`]) to
+//!   stress the coordinator's heaps;
+//! * **model mixes** over the zoo plus small *generated* networks
+//!   (random conv/dwconv/pointwise/pool chains outside the zoo);
+//! * **SLA classes**: per-group deadlines at distinct multiples of the
+//!   group period;
+//! * **arrival mixes**: periodic, Poisson, bursty, plus time-varying λ
+//!   schedules — diurnal ramps and flash-crowd spikes expressed as
+//!   [`ArrivalProcess::Schedule`] segments; the family mix is a knob
+//!   ([`FuzzConfig::patterns`] — e.g. [`FuzzConfig::calibration`] is
+//!   periodic-only);
+//! * **model churn**: with probability [`FuzzConfig::churn_prob`] one
+//!   group joins late (its whole schedule offset to a seeded time) or
+//!   leaves early (its request stream truncated at a seeded time).
+//!
+//! Determinism contract #7 (fuzz-corpus replay): the same `(seed, index,
+//! config)` reproduces a bit-identical [`FuzzedScenario`] — every zoo
+//! draw, generated layer, arrival time and deadline — so a corpus is
+//! replayable across sessions and its measured reports anchor golden
+//! hashes (`tests/fixtures/fuzz_corpus_v1.txt`). Every draw satisfies
+//! [`LoadSpec::validate`] by construction (checked at generation time).
+
+use crate::comm::CommModel;
+use crate::coordinator::OverloadPolicy;
+use crate::graph::{Layer, Network};
+use crate::models;
+use crate::perf::PerfModel;
+use crate::serve::{ArrivalProcess, ClockMode, GroupLoad, LoadSpec, RateSegment};
+use crate::util::rng::Rng;
+
+use super::{ModelGroup, Scenario, CUSTOM_ZOO_INDEX};
+
+/// An arrival-pattern family the fuzzer can draw for a group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Fixed-spacing arrivals at the group period.
+    Periodic,
+    /// Poisson arrivals at the same mean rate.
+    Poisson,
+    /// Burst clumps at the same long-run rate.
+    Bursty,
+    /// Diurnal ramp expressed as an [`ArrivalProcess::Schedule`].
+    Diurnal,
+    /// Flash-crowd spike expressed as an [`ArrivalProcess::Schedule`].
+    FlashCrowd,
+}
+
+impl ArrivalKind {
+    /// All five families — the default mix.
+    pub const ALL: [ArrivalKind; 5] = [
+        ArrivalKind::Periodic,
+        ArrivalKind::Poisson,
+        ArrivalKind::Bursty,
+        ArrivalKind::Diurnal,
+        ArrivalKind::FlashCrowd,
+    ];
+}
+
+/// Knobs of the scenario fuzzer. All ranges are inclusive.
+#[derive(Debug, Clone)]
+pub struct FuzzConfig {
+    /// Model-group count range per scenario.
+    pub groups: (usize, usize),
+    /// Members per group.
+    pub members: (usize, usize),
+    /// Probability a member is a generated network instead of a zoo model.
+    pub generated_prob: f64,
+    /// SLA classes: each group's deadline is a drawn class × its period.
+    pub sla_classes: Vec<f64>,
+    /// Period-multiplier range (α of the Fig-11 protocol): values below 1
+    /// produce infeasible draws that exercise the certificate path.
+    pub alpha: (f64, f64),
+    /// Requests per group.
+    pub requests: (usize, usize),
+    /// Probability the scenario carries a churn event (group join/leave).
+    pub churn_prob: f64,
+    /// Arrival-pattern families drawn uniformly per group. Restricting the
+    /// mix carves calibration corpora out of the same seeded stream (e.g.
+    /// periodic-only for the admission-slack sweep).
+    pub patterns: Vec<ArrivalKind>,
+}
+
+impl Default for FuzzConfig {
+    fn default() -> FuzzConfig {
+        FuzzConfig {
+            groups: (1, 12),
+            members: (1, 3),
+            generated_prob: 0.25,
+            sla_classes: vec![0.8, 1.0, 1.5, 2.5],
+            alpha: (0.8, 4.0),
+            requests: (4, 12),
+            churn_prob: 0.25,
+            patterns: ArrivalKind::ALL.to_vec(),
+        }
+    }
+}
+
+impl FuzzConfig {
+    /// Heap-stress preset: 10–100 small groups per scenario.
+    pub fn stress() -> FuzzConfig {
+        FuzzConfig {
+            groups: (10, 100),
+            members: (1, 2),
+            generated_prob: 0.15,
+            requests: (2, 6),
+            ..FuzzConfig::default()
+        }
+    }
+
+    /// Smoke-test preset: small scenarios, short loads.
+    pub fn quick() -> FuzzConfig {
+        FuzzConfig { groups: (1, 4), members: (1, 2), requests: (3, 6), ..FuzzConfig::default() }
+    }
+
+    /// Admission-calibration preset: periodic-only arrivals at comfortably
+    /// feasible α, no churn — the [`crate::serve::Admission::LittleCap`]
+    /// design domain, where the slack sweep must measure zero drops.
+    pub fn calibration() -> FuzzConfig {
+        FuzzConfig {
+            groups: (1, 8),
+            members: (1, 2),
+            alpha: (2.0, 4.0),
+            requests: (6, 12),
+            churn_prob: 0.0,
+            patterns: vec![ArrivalKind::Periodic],
+            ..FuzzConfig::default()
+        }
+    }
+}
+
+/// Which way a churn event changes a group's traffic.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ChurnKind {
+    /// The group joins mid-run: its whole arrival schedule starts at the
+    /// churn time (an [`ArrivalProcess::Schedule`] offset).
+    Join,
+    /// The group leaves mid-run: requests after the churn time are
+    /// dropped from its stream (at least one request remains).
+    Leave,
+}
+
+/// A seeded mid-run model-churn event applied to one group's load.
+#[derive(Debug, Clone, Copy)]
+pub struct ChurnEvent {
+    /// Group whose traffic churns.
+    pub group: usize,
+    /// Join or leave.
+    pub kind: ChurnKind,
+    /// When it happens, simulated seconds from the load's start.
+    pub time: f64,
+}
+
+/// One fuzzer draw: a scenario, the α it is loaded at, the resulting
+/// [`LoadSpec`] (arrival mixes + SLA deadlines, churn already applied),
+/// and the churn event for reporting.
+#[derive(Debug, Clone)]
+pub struct FuzzedScenario {
+    /// The per-case seed every draw derives from ([`case_seed`]).
+    pub seed: u64,
+    /// Position of this case in its corpus.
+    pub index: usize,
+    /// The generated scenario (zoo + generated networks, model groups).
+    pub scenario: Scenario,
+    /// Period multiplier the load was drawn at.
+    pub alpha: f64,
+    /// The complete load (virtual clock, queue-all admission).
+    pub spec: LoadSpec,
+    /// Churn event applied to `spec`, if any.
+    pub churn: Option<ChurnEvent>,
+}
+
+/// Per-case seed: a splitmix-style spread of the corpus base seed, stable
+/// in `(base, index)` so corpora share a prefix when only `count` grows.
+pub fn case_seed(base: u64, index: usize) -> u64 {
+    base ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x5CE0_FA22
+}
+
+/// Streaming fuzzer: draws successive corpus cases.
+#[derive(Debug, Clone)]
+pub struct ScenarioFuzzer {
+    seed: u64,
+    config: FuzzConfig,
+    next_index: usize,
+}
+
+impl ScenarioFuzzer {
+    /// A fuzzer over `config`, deterministic in `seed`.
+    pub fn new(seed: u64, config: FuzzConfig) -> ScenarioFuzzer {
+        ScenarioFuzzer { seed, config, next_index: 0 }
+    }
+
+    /// Draw the next case (equals `corpus(seed, ..)[next_index]`).
+    pub fn draw(&mut self, perf: &PerfModel) -> FuzzedScenario {
+        let case = FuzzedScenario::generate(self.seed, self.next_index, &self.config, perf);
+        self.next_index += 1;
+        case
+    }
+}
+
+/// Generate a whole corpus: `count` cases of `config` from `seed`.
+pub fn corpus(
+    seed: u64,
+    count: usize,
+    config: &FuzzConfig,
+    perf: &PerfModel,
+) -> Vec<FuzzedScenario> {
+    (0..count).map(|i| FuzzedScenario::generate(seed, i, config, perf)).collect()
+}
+
+impl FuzzedScenario {
+    /// Generate case `index` of the corpus rooted at `base_seed`.
+    /// Bit-identical in `(base_seed, index, config)` — contract #7.
+    pub fn generate(
+        base_seed: u64,
+        index: usize,
+        config: &FuzzConfig,
+        perf: &PerfModel,
+    ) -> FuzzedScenario {
+        let seed = case_seed(base_seed, index);
+        let mut rng = Rng::seed_from_u64(seed);
+        let scenario = draw_scenario(&mut rng, seed, index, config);
+        let alpha = rng.gen_f64_range(config.alpha.0, config.alpha.1);
+        let periods = scenario.periods(alpha, perf);
+
+        let mut loads: Vec<GroupLoad> = periods
+            .iter()
+            .map(|&period| {
+                let process = draw_process(&mut rng, period, &config.patterns);
+                let class = *rng.choose(&config.sla_classes).unwrap_or(&1.0);
+                let requests =
+                    rng.gen_range_inclusive(config.requests.0.max(1), config.requests.1.max(1));
+                GroupLoad { process, deadline: Some(period * class), requests }
+            })
+            .collect();
+
+        let churn = draw_churn(&mut rng, config, &loads, &periods);
+        if let Some(event) = churn {
+            apply_churn(&mut loads, &periods, event);
+        }
+
+        let spec = LoadSpec {
+            groups: loads,
+            mode: ClockMode::Virtual,
+            policy: OverloadPolicy::Queue,
+            comm: CommModel::paper_calibrated(),
+        };
+        spec.validate().expect("fuzzer draws are valid by construction");
+        FuzzedScenario { seed, index, scenario, alpha, spec, churn }
+    }
+}
+
+/// Draw the scenario structure (groups, zoo/generated members).
+fn draw_scenario(rng: &mut Rng, seed: u64, index: usize, config: &FuzzConfig) -> Scenario {
+    let (g_lo, g_hi) = (config.groups.0.max(1), config.groups.1.max(config.groups.0).max(1));
+    let n_groups = rng.gen_range_inclusive(g_lo, g_hi);
+    let mut networks = Vec::new();
+    let mut zoo_indices = Vec::new();
+    let mut groups = Vec::new();
+    for _ in 0..n_groups {
+        let n_members =
+            rng.gen_range_inclusive(config.members.0.max(1), config.members.1.max(1));
+        let mut members = Vec::new();
+        for _ in 0..n_members {
+            let id = networks.len();
+            if rng.gen_bool(config.generated_prob) {
+                // Names key the profiler's per-network statistics, so a
+                // generated net's name carries the case seed: structurally
+                // different nets never share one.
+                let name = format!("fz{seed:016x}n{id}");
+                networks.push(generated_network(id, &name, rng));
+                zoo_indices.push(CUSTOM_ZOO_INDEX);
+            } else {
+                let zoo = rng.gen_range(0, models::MODEL_COUNT);
+                networks.push(models::build_model(id, zoo));
+                zoo_indices.push(zoo);
+            }
+            members.push(id);
+        }
+        groups.push(ModelGroup { members });
+    }
+    Scenario { name: format!("fuzz-{index}"), networks, zoo_indices, groups }
+}
+
+/// A small random chain network outside the zoo: stem conv, then 3–6
+/// pointwise/depthwise/strided-conv/plain-conv stages.
+fn generated_network(id: usize, name: &str, rng: &mut Rng) -> Network {
+    let mut net = Network::new(id, name);
+    let mut size = *rng.choose(&[32usize, 64]).expect("non-empty");
+    let mut channels = *rng.choose(&[8usize, 16, 24]).expect("non-empty");
+    let mut prev = net.add_layer(Layer::conv("stem", size, 3, channels, 3, 1));
+    let depth = rng.gen_range_inclusive(3, 6);
+    for i in 0..depth {
+        let lname = format!("l{i}");
+        let layer = match rng.gen_range(0, 4) {
+            0 => {
+                let out = (channels * 2).min(64);
+                let l = Layer::pointwise(&lname, size, channels, out);
+                channels = out;
+                l
+            }
+            1 => Layer::dwconv(&lname, size, channels, 3, 1),
+            2 if size >= 16 => {
+                let l = Layer::conv(&lname, size, channels, channels, 3, 2);
+                size /= 2;
+                l
+            }
+            _ => Layer::conv(&lname, size, channels, channels, 3, 1),
+        };
+        let lid = net.add_layer(layer);
+        net.connect(prev, lid);
+        prev = lid;
+    }
+    let pool = net.add_layer(Layer::pool("head", size, channels));
+    net.connect(prev, pool);
+    net.finalize();
+    net
+}
+
+/// Draw one group's arrival process around its period: uniform over the
+/// configured [`ArrivalKind`] families.
+fn draw_process(rng: &mut Rng, period: f64, patterns: &[ArrivalKind]) -> ArrivalProcess {
+    let kind = rng.choose(patterns).copied().unwrap_or(ArrivalKind::Periodic);
+    match kind {
+        ArrivalKind::Periodic => ArrivalProcess::Periodic { period },
+        ArrivalKind::Poisson => ArrivalProcess::Poisson { mean: period, seed: rng.next_u64() },
+        ArrivalKind::Bursty => {
+            ArrivalProcess::Bursty { period, burst: rng.gen_range_inclusive(2, 5) }
+        }
+        ArrivalKind::Diurnal => diurnal(rng, period),
+        ArrivalKind::FlashCrowd => flash_crowd(rng, period),
+    }
+}
+
+/// Diurnal ramp: four phases — off-peak, shoulder, peak (up to 2× the
+/// base rate), shoulder — cycled.
+fn diurnal(rng: &mut Rng, period: f64) -> ArrivalProcess {
+    let peak = rng.gen_f64_range(1.3, 2.0);
+    let phase = period * rng.gen_range_inclusive(2, 4) as f64;
+    ArrivalProcess::Schedule {
+        segments: vec![
+            RateSegment::new(phase, period * 1.5),
+            RateSegment::new(phase, period),
+            RateSegment::new(phase, period / peak),
+            RateSegment::new(phase, period),
+        ],
+        offset: 0.0,
+    }
+}
+
+/// Flash crowd: a long quiet stretch slightly under the base rate, then a
+/// short spike at 2–4× the base rate.
+fn flash_crowd(rng: &mut Rng, period: f64) -> ArrivalProcess {
+    let spike = rng.gen_f64_range(2.0, 4.0);
+    let quiet = period * rng.gen_range_inclusive(4, 8) as f64;
+    let crowd = period * rng.gen_range_inclusive(1, 2) as f64;
+    ArrivalProcess::Schedule {
+        segments: vec![
+            RateSegment::new(quiet, period * 1.25),
+            RateSegment::new(crowd, period / spike),
+        ],
+        offset: 0.0,
+    }
+}
+
+/// Draw an optional churn event: multi-group scenarios only, landing in
+/// the middle half of the load's horizon.
+fn draw_churn(
+    rng: &mut Rng,
+    config: &FuzzConfig,
+    loads: &[GroupLoad],
+    periods: &[f64],
+) -> Option<ChurnEvent> {
+    if loads.len() < 2 || !rng.gen_bool(config.churn_prob) {
+        return None;
+    }
+    let horizon = loads
+        .iter()
+        .zip(periods)
+        .map(|(l, &p)| l.requests as f64 * p)
+        .fold(0.0f64, f64::max);
+    let group = rng.gen_range(0, loads.len());
+    let kind = if rng.gen_bool(0.5) { ChurnKind::Join } else { ChurnKind::Leave };
+    let time = rng.gen_f64_range(0.25, 0.75) * horizon;
+    Some(ChurnEvent { group, kind, time })
+}
+
+/// Apply a churn event to the drawn loads: a join re-expresses the
+/// group's stream as a schedule offset to the churn time; a leave
+/// truncates its request count to the arrivals before it.
+fn apply_churn(loads: &mut [GroupLoad], periods: &[f64], event: ChurnEvent) {
+    let load = &mut loads[event.group];
+    let period = periods[event.group];
+    match event.kind {
+        ChurnKind::Join => {
+            let span = (load.requests as f64 * period).max(period);
+            load.process = ArrivalProcess::Schedule {
+                segments: vec![RateSegment::new(span, period)],
+                offset: event.time,
+            };
+        }
+        ChurnKind::Leave => {
+            let kept =
+                load.process.times(load.requests).iter().filter(|&&t| t < event.time).count();
+            load.requests = kept.max(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_draw() {
+        let pm = PerfModel::paper_calibrated();
+        let config = FuzzConfig::quick();
+        let a = FuzzedScenario::generate(7, 3, &config, &pm);
+        let b = FuzzedScenario::generate(7, 3, &config, &pm);
+        assert_eq!(a.scenario.zoo_indices, b.scenario.zoo_indices);
+        assert_eq!(a.alpha.to_bits(), b.alpha.to_bits());
+        for (x, y) in a.spec.groups.iter().zip(&b.spec.groups) {
+            assert_eq!(x.requests, y.requests);
+            assert_eq!(x.deadline.map(f64::to_bits), y.deadline.map(f64::to_bits));
+            let (tx, ty) = (x.process.times(x.requests), y.process.times(y.requests));
+            assert_eq!(tx.len(), ty.len());
+            for (s, t) in tx.iter().zip(&ty) {
+                assert_eq!(s.to_bits(), t.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn corpus_is_prefix_stable() {
+        let pm = PerfModel::paper_calibrated();
+        let config = FuzzConfig::quick();
+        let small = corpus(11, 3, &config, &pm);
+        let large = corpus(11, 5, &config, &pm);
+        for (a, b) in small.iter().zip(&large) {
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.scenario.zoo_indices, b.scenario.zoo_indices);
+            assert_eq!(a.alpha.to_bits(), b.alpha.to_bits());
+        }
+    }
+
+    #[test]
+    fn draws_respect_config_ranges_and_validate() {
+        let pm = PerfModel::paper_calibrated();
+        let config = FuzzConfig {
+            groups: (2, 5),
+            members: (1, 2),
+            requests: (3, 6),
+            ..FuzzConfig::default()
+        };
+        for i in 0..12 {
+            let case = FuzzedScenario::generate(23, i, &config, &pm);
+            let n = case.scenario.groups.len();
+            assert!((2..=5).contains(&n), "group count {n} outside configured range");
+            for g in &case.scenario.groups {
+                assert!((1..=2).contains(&g.members.len()));
+            }
+            assert!(case.spec.validate().is_ok());
+            assert!(case.alpha >= config.alpha.0 && case.alpha <= config.alpha.1);
+            for load in &case.spec.groups {
+                assert!((3..=6).contains(&load.requests) || case.churn.is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn pattern_knob_restricts_the_arrival_mix() {
+        let pm = PerfModel::paper_calibrated();
+        let config = FuzzConfig::calibration();
+        for i in 0..8 {
+            let case = FuzzedScenario::generate(41, i, &config, &pm);
+            for load in &case.spec.groups {
+                assert!(
+                    matches!(load.process, ArrivalProcess::Periodic { .. }),
+                    "calibration preset drew a non-periodic process"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stress_preset_reaches_large_group_counts() {
+        let pm = PerfModel::paper_calibrated();
+        let config = FuzzConfig { generated_prob: 0.0, ..FuzzConfig::stress() };
+        let max = (0..6)
+            .map(|i| FuzzedScenario::generate(5, i, &config, &pm).scenario.groups.len())
+            .max()
+            .expect("non-empty");
+        assert!(max >= 10, "stress preset never exceeded 10 groups (max {max})");
+    }
+
+    #[test]
+    fn leave_churn_truncates_and_join_churn_offsets() {
+        let pm = PerfModel::paper_calibrated();
+        let config = FuzzConfig { churn_prob: 1.0, groups: (2, 4), ..FuzzConfig::quick() };
+        let mut seen_join = false;
+        let mut seen_leave = false;
+        for i in 0..24 {
+            let case = FuzzedScenario::generate(99, i, &config, &pm);
+            let Some(event) = case.churn else { continue };
+            let load = &case.spec.groups[event.group];
+            match event.kind {
+                ChurnKind::Join => {
+                    seen_join = true;
+                    let first = load.process.times(1)[0];
+                    assert!(
+                        (first - event.time).abs() < 1e-9,
+                        "joined group must start at the churn time"
+                    );
+                }
+                ChurnKind::Leave => {
+                    seen_leave = true;
+                    let times = load.process.times(load.requests);
+                    let late = times.iter().filter(|&&t| t >= event.time).count();
+                    assert!(
+                        late == 0 || load.requests == 1,
+                        "left group still arrives after the churn time"
+                    );
+                }
+            }
+        }
+        assert!(seen_join && seen_leave, "24 churn draws never produced both kinds");
+    }
+}

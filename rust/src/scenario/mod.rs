@@ -12,6 +12,8 @@
 //!
 //! scaled by a *period multiplier* α to tighten/relax the SLO.
 
+pub mod fuzz;
+
 use crate::util::rng::Rng;
 use crate::graph::{LayerId, Network};
 use crate::perf::PerfModel;

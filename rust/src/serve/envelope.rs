@@ -1,0 +1,464 @@
+//! Analytic M/M/c-style queueing envelopes for the serving runtime.
+//!
+//! An [`Envelope`] is computed *before* a load runs, from the same inputs
+//! the utilization certificate uses ([`offered_utilization`]): per-group
+//! long-run arrival rates and the solution set's profiled per-request work.
+//! It predicts a band `[lo, hi]` for the deadline-violation fraction the
+//! runtime will measure:
+//!
+//! * **ρ and the infeasibility certificate** — per-processor utilization
+//!   ρ_p = Σ_g λ_g · E\[work_p per group-g request\]. ρ > 1 on any
+//!   processor certifies unbounded backlog (the saturation driver's
+//!   certificate, restated here).
+//! * **Heavy-traffic waiting time** — a Kingman/VUT approximation at the
+//!   bottleneck processor: `E[W] ≈ (Ca² + Cs²)/2 · ρ/(1−ρ) · E[S]`, with
+//!   the arrival SCV `Ca²` taken from the arrival-process mix (periodic 0,
+//!   Poisson 1, bursty ≈ burst size, schedules peak/mean) and `Cs² = 1`
+//!   (M/M/c-style service variability covering the engine noise model).
+//! * **Violation band** — the lower edge counts requests that *cannot*
+//!   meet their deadline (deadline below the profiled subgraph-time
+//!   floor); the upper edge applies a Markov tail bound
+//!   `P(W > t) ≤ E[W]/t` to each group's slack after service, charges each
+//!   group's first arrival for the t = 0 startup herd, and degenerates to
+//!   1 past [`HEAVY_TRAFFIC_RHO`] — or whenever the *peak instantaneous*
+//!   rates (burst clumps, flash-crowd spikes) transiently exceed ρ = 1 —
+//!   where stationary bounds stop being informative for short probes.
+//!
+//! The property the fuzz harness enforces ([`crate::scenario::fuzz`],
+//! `tests/fuzz_envelope.rs`): every fuzzed scenario's *measured*
+//! [`ServeReport`] lands inside its envelope — one test that catches both
+//! simulator bugs (measured outside an honest band) and queueing-model
+//! bugs ([`certificate_corroborated`] cross-checks `mean_rates` against
+//! the empirical rate of the very arrival schedule it describes).
+//!
+//! The band assumes the envelope's own protocol: virtual clock, queue-all
+//! admission ([`crate::coordinator::OverloadPolicy::Queue`]), no fault
+//! plan. Capped or chaos-injected runs are outside its contract.
+
+use crate::coordinator::NetworkSolution;
+use crate::perf::PerfModel;
+
+use super::{offered_utilization, ArrivalProcess, LoadError, LoadSpec, ServeReport};
+
+/// ρ above which the stationary tail bound is treated as uninformative for
+/// finite probes: the upper band edge saturates to 1 (honest near α*,
+/// where backlog growth dominates any heavy-traffic approximation).
+pub const HEAVY_TRAFFIC_RHO: f64 = 0.85;
+
+/// Safety multiplier on the Kingman mean wait inside the Markov tail
+/// bound — covers the approximation error of treating the three-processor
+/// pipeline as one bottleneck queue.
+const WAIT_MARGIN: f64 = 3.0;
+
+/// Inflation on a group's profiled serial work when computing its
+/// post-service deadline slack: covers execution noise, transfer staging,
+/// and dispatch overheads the profile omits.
+const SERVICE_MARGIN: f64 = 1.5;
+
+/// Deflation on the serial-work makespan floor for the *sure-violation*
+/// lower edge: execution noise can only shrink a request's makespan so
+/// far, so deadlines below `floor × FLOOR_SAFETY` are violated with
+/// certainty.
+const FLOOR_SAFETY: f64 = 0.5;
+
+/// Arrivals of the long prefix [`certificate_corroborated`] samples when
+/// cross-checking analytic mean rates against the generated schedule.
+const CORROBORATION_PREFIX: usize = 512;
+
+/// A pre-run analytic envelope for one (solution set, load) pair.
+#[derive(Debug, Clone)]
+pub struct Envelope {
+    /// Offered per-processor utilization ρ (lower bound on true load).
+    pub rho: [f64; 3],
+    /// Largest per-processor ρ — the bottleneck utilization.
+    pub rho_max: f64,
+    /// Bottleneck utilization at *peak instantaneous* arrival rates (burst
+    /// clumps, flash-crowd spikes). Above 1, the load is transiently
+    /// overloaded even when `rho_max` is comfortable: backlog grows for
+    /// the length of the clump, so the upper band edge saturates to 1 —
+    /// stationary tail bounds are not informative for such probes.
+    pub peak_rho_max: f64,
+    /// ρ > 1 on some processor: queueing-theoretic infeasibility (backlog
+    /// grows without bound; the violation band is `[lo, 1]`).
+    pub certified_infeasible: bool,
+    /// Largest arrival squared-coefficient-of-variation over the groups
+    /// (the `Ca²` of the Kingman term).
+    pub arrival_scv: f64,
+    /// Heavy-traffic mean waiting time at the bottleneck, seconds
+    /// (infinite when certified infeasible).
+    pub mean_wait: f64,
+    /// Predicted band `[lo, hi]` for the measured violation fraction
+    /// (violations / served).
+    pub band: (f64, f64),
+    /// Per-group profiled serial work (seconds of compute one group
+    /// request schedules, summed over member networks).
+    pub group_work: Vec<f64>,
+}
+
+/// A measured report that landed outside its envelope.
+#[derive(Debug, Clone)]
+pub struct EnvelopeBreach {
+    /// Measured violation fraction (violations / served).
+    pub measured: f64,
+    /// The predicted band the measurement missed.
+    pub band: (f64, f64),
+    /// Human-readable description of the breach.
+    pub detail: String,
+}
+
+impl std::fmt::Display for EnvelopeBreach {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "measured violation fraction {:.4} outside [{:.4}, {:.4}]: {}",
+            self.measured, self.band.0, self.band.1, self.detail
+        )
+    }
+}
+
+/// Squared coefficient of variation of inter-arrival times, per process:
+/// periodic is deterministic (0), Poisson is memoryless (1), bursty clumps
+/// `burst` back-to-back arrivals (index of dispersion ≈ burst), and a
+/// piecewise schedule is scored by its peak-to-mean rate ratio (≥ 1 when
+/// genuinely time-varying) — all conservative from the envelope's side,
+/// since a larger Ca² only widens the band.
+fn arrival_scv(process: &ArrivalProcess) -> f64 {
+    match process {
+        ArrivalProcess::Periodic { .. } => 0.0,
+        ArrivalProcess::Poisson { .. } => 1.0,
+        ArrivalProcess::Bursty { burst, .. } => (*burst).max(1) as f64,
+        ArrivalProcess::Schedule { segments, .. } => {
+            let peak = segments
+                .iter()
+                .map(|s| if s.period > 0.0 { 1.0 / s.period } else { 0.0 })
+                .fold(0.0f64, f64::max);
+            let cycle: f64 = segments.iter().map(|s| s.duration).sum();
+            let per_cycle: f64 = segments
+                .iter()
+                .map(|s| (s.duration / s.period.max(1e-12)).ceil().max(1.0))
+                .sum();
+            let mean = if cycle > 0.0 { per_cycle / cycle } else { 0.0 };
+            if mean > 0.0 {
+                (peak / mean).max(1.0)
+            } else {
+                1.0
+            }
+        }
+    }
+}
+
+/// Peak *instantaneous* arrival rate of a process, as generated: the
+/// tightest spacing its schedule actually emits. Periodic and Poisson peak
+/// at their mean (Poisson bunching is priced by `Ca² = 1` instead); bursty
+/// clumps arrivals at `period / 10` spacing; a piecewise schedule peaks at
+/// its fastest segment. Feeding these through [`offered_utilization`]
+/// yields the *transient* bottleneck load — above 1, backlog grows during
+/// the clump/spike even when the long-run ρ is comfortable, and short
+/// probes can legitimately violate en masse.
+fn peak_rate(process: &ArrivalProcess) -> f64 {
+    match process {
+        ArrivalProcess::Periodic { period } => {
+            if *period > 0.0 {
+                1.0 / period
+            } else {
+                0.0
+            }
+        }
+        ArrivalProcess::Poisson { mean, .. } => {
+            if *mean > 0.0 {
+                1.0 / mean
+            } else {
+                0.0
+            }
+        }
+        ArrivalProcess::Bursty { period, burst } => {
+            if *period > 0.0 && *burst > 1 {
+                10.0 / period
+            } else if *period > 0.0 {
+                1.0 / period
+            } else {
+                0.0
+            }
+        }
+        ArrivalProcess::Schedule { segments, .. } => segments
+            .iter()
+            .map(|s| if s.period > 0.0 { 1.0 / s.period } else { 0.0 })
+            .fold(0.0f64, f64::max),
+    }
+}
+
+/// Per-group profiled serial work: seconds of compute one group request
+/// schedules, summed over the group's member networks' subgraphs (the
+/// same per-request work the utilization certificate charges).
+fn per_group_work(
+    solutions: &[NetworkSolution],
+    groups: &[Vec<usize>],
+    perf: &PerfModel,
+) -> Vec<f64> {
+    groups
+        .iter()
+        .map(|members| {
+            members
+                .iter()
+                .map(|&n| {
+                    let sol = &solutions[n];
+                    sol.partition
+                        .subgraphs
+                        .iter()
+                        .zip(&sol.configs)
+                        .map(|(sg, cfg)| perf.subgraph_time(&sol.network, &sg.layers, *cfg))
+                        .sum::<f64>()
+                })
+                .sum()
+        })
+        .collect()
+}
+
+/// Per-group makespan floor: the largest *single subgraph* time over the
+/// group's members, deflated by [`FLOOR_SAFETY`] for favorable execution
+/// noise. Deliberately weak — subgraphs of a branchy member can overlap
+/// across processors, so the member's serial sum is **not** a lower bound,
+/// but its longest subgraph must still execute somewhere inside the
+/// request's makespan.
+fn per_group_floor(
+    solutions: &[NetworkSolution],
+    groups: &[Vec<usize>],
+    perf: &PerfModel,
+) -> Vec<f64> {
+    groups
+        .iter()
+        .map(|members| {
+            members
+                .iter()
+                .map(|&n| {
+                    let sol = &solutions[n];
+                    sol.partition
+                        .subgraphs
+                        .iter()
+                        .zip(&sol.configs)
+                        .map(|(sg, cfg)| perf.subgraph_time(&sol.network, &sg.layers, *cfg))
+                        .fold(0.0f64, f64::max)
+                })
+                .fold(0.0f64, f64::max)
+                * FLOOR_SAFETY
+        })
+        .collect()
+}
+
+/// Compute the analytic envelope for one (solution set, load) pair. The
+/// spec is [`LoadSpec::validate`]d first — malformed loads surface as a
+/// typed [`LoadError`] here rather than NaN bands.
+pub fn envelope_for(
+    solutions: &[NetworkSolution],
+    groups: &[Vec<usize>],
+    spec: &LoadSpec,
+    perf: &PerfModel,
+) -> Result<Envelope, LoadError> {
+    spec.validate()?;
+    let rates = spec.mean_rates();
+    let rho = offered_utilization(solutions, groups, &rates, perf);
+    let rho_max = rho.iter().fold(0.0f64, |a, &b| a.max(b));
+    let certified_infeasible = rho.iter().any(|&r| r > 1.0);
+    let peak_rates: Vec<f64> = spec.groups.iter().map(|g| peak_rate(&g.process)).collect();
+    let peak_rho = offered_utilization(solutions, groups, &peak_rates, perf);
+    let peak_rho_max = peak_rho.iter().fold(0.0f64, |a, &b| a.max(b));
+    let lambda_tot: f64 = rates.iter().sum();
+    let arrival_scv_max =
+        spec.groups.iter().map(|g| arrival_scv(&g.process)).fold(0.0f64, f64::max);
+
+    // Kingman/VUT at the bottleneck: E[S] is the bottleneck seconds one
+    // *average* group request schedules (ρ_max / λ_total).
+    let bottleneck_service = if lambda_tot > 0.0 { rho_max / lambda_tot } else { 0.0 };
+    let mean_wait = if rho_max >= 1.0 {
+        f64::INFINITY
+    } else {
+        (arrival_scv_max + 1.0) / 2.0 * rho_max / (1.0 - rho_max) * bottleneck_service
+    };
+
+    let group_work = per_group_work(solutions, groups, perf);
+    let group_floor = per_group_floor(solutions, groups, perf);
+    let total_requests: f64 = spec.groups.iter().map(|g| g.requests as f64).sum();
+
+    // Startup herd: every group's schedule can open at (or near) t = 0, so
+    // the first request of a group may queue behind one request of every
+    // other group regardless of the long-run rates.
+    let herd: f64 = group_work.iter().sum::<f64>() * SERVICE_MARGIN;
+
+    let mut lo = 0.0f64;
+    let mut hi = 0.0f64;
+    for (g, load) in spec.groups.iter().enumerate() {
+        let Some(deadline) = load.deadline else { continue };
+        let weight = load.requests as f64 / total_requests.max(1.0);
+        if deadline < group_floor[g] {
+            // No execution can beat the subgraph-time floor: every request
+            // of this group violates, whatever the queueing.
+            lo += weight;
+            hi += weight;
+            continue;
+        }
+        let room = deadline - group_work[g] * SERVICE_MARGIN;
+        let tail = if !mean_wait.is_finite() {
+            1.0
+        } else if room <= 0.0 {
+            1.0
+        } else {
+            (WAIT_MARGIN * mean_wait / room).min(1.0)
+        };
+        hi += weight * tail;
+        if deadline < herd {
+            // The group's first arrival may ride the t = 0 herd even when
+            // the stationary wait is negligible.
+            hi += weight * (1.0 / load.requests.max(1) as f64).min(1.0);
+        }
+    }
+    if rho_max > HEAVY_TRAFFIC_RHO || peak_rho_max > 1.0 {
+        hi = 1.0;
+    }
+    let lo = lo.min(1.0);
+    let band = (lo, hi.clamp(lo, 1.0));
+
+    Ok(Envelope {
+        rho,
+        rho_max,
+        peak_rho_max,
+        certified_infeasible,
+        arrival_scv: arrival_scv_max,
+        mean_wait,
+        band,
+        group_work,
+    })
+}
+
+impl Envelope {
+    /// The measured violation fraction of a report: violations over served
+    /// requests (the band's denominator).
+    pub fn measured_fraction(report: &ServeReport) -> f64 {
+        report.violations as f64 / report.served.max(1) as f64
+    }
+
+    /// Check a measured report against the band. The upper edge gets a
+    /// finite-sample allowance (`max(3σ, 2/n)` around the predicted
+    /// fraction) — the band predicts an expectation, the report measures
+    /// `n = served` Bernoulli draws of it.
+    pub fn check(&self, report: &ServeReport) -> Result<(), EnvelopeBreach> {
+        let measured = Self::measured_fraction(report);
+        let n = report.served.max(1) as f64;
+        let (lo, hi) = self.band;
+        let sigma = (hi * (1.0 - hi) / n).sqrt();
+        let hi_allow = (hi + (3.0 * sigma).max(2.0 / n)).min(1.0);
+        let lo_allow = (lo - 2.0 / n).max(0.0);
+        if measured < lo_allow {
+            return Err(EnvelopeBreach {
+                measured,
+                band: self.band,
+                detail: format!(
+                    "below the sure-violation floor (≥ {lo_allow:.4} after sampling allowance)"
+                ),
+            });
+        }
+        if measured > hi_allow {
+            return Err(EnvelopeBreach {
+                measured,
+                band: self.band,
+                detail: format!(
+                    "above the tail bound ({hi_allow:.4} after sampling allowance), \
+                     rho_max {:.3}, mean wait {:.4}s",
+                    self.rho_max, self.mean_wait
+                ),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Cross-check an infeasibility certificate against the arrival schedule
+/// it claims to describe: for every group, the empirical rate of a long
+/// generated prefix (`(n−1)/span` over [`CORROBORATION_PREFIX`] arrivals)
+/// must agree with [`LoadSpec::mean_rates`] within 20 % — Poisson sample
+/// noise over 512 draws stays well inside that, and a genuine mismatch
+/// means the certificate's λ (hence its ρ > 1 verdict) was computed from a
+/// rate the load never offers: a **false certificate**, exactly the
+/// queueing-model bug class the fuzz property hunts.
+pub fn certificate_corroborated(spec: &LoadSpec) -> bool {
+    spec.groups.iter().zip(spec.mean_rates()).all(|(load, rate)| {
+        let times = load.process.times(CORROBORATION_PREFIX);
+        let n = times.len();
+        if n < 2 || rate <= 0.0 {
+            return true;
+        }
+        let span = times[n - 1] - times[0];
+        if span <= 0.0 {
+            return true;
+        }
+        let empirical = (n - 1) as f64 / span;
+        (empirical - rate).abs() <= 0.20 * rate
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ga::Genome;
+    use crate::scenario::Scenario;
+    use crate::serve::materialize_solutions;
+    use crate::Processor;
+    use std::sync::Arc;
+
+    fn fixture() -> (Scenario, Vec<NetworkSolution>, Vec<Vec<usize>>, Arc<PerfModel>) {
+        let scenario = Scenario::from_groups("env", &[vec![0, 1]]);
+        let perf = Arc::new(PerfModel::paper_calibrated());
+        let genome = Genome::all_on(&scenario.networks, Processor::Npu);
+        let sols = materialize_solutions(&scenario.networks, &genome, &perf);
+        let groups: Vec<Vec<usize>> = scenario.groups.iter().map(|g| g.members.clone()).collect();
+        (scenario, sols, groups, perf)
+    }
+
+    #[test]
+    fn feasible_load_gets_a_narrow_band() {
+        let (scenario, sols, groups, perf) = fixture();
+        let spec = LoadSpec::for_scenario(&scenario, &perf, 4.0, 8);
+        let env = envelope_for(&sols, &groups, &spec, &perf).expect("valid spec");
+        assert!(!env.certified_infeasible);
+        assert!(env.rho_max < 1.0);
+        assert!(env.mean_wait.is_finite());
+        assert_eq!(env.band.0, 0.0);
+        assert!(env.band.1 < 1.0, "comfortable load must not predict certain violations");
+    }
+
+    #[test]
+    fn overload_certifies_and_band_tops_out() {
+        let (scenario, sols, groups, perf) = fixture();
+        let spec = LoadSpec::for_scenario(&scenario, &perf, 0.01, 8);
+        let env = envelope_for(&sols, &groups, &spec, &perf).expect("valid spec");
+        assert!(env.certified_infeasible);
+        assert!(env.mean_wait.is_infinite());
+        assert_eq!(env.band.1, 1.0);
+        assert!(certificate_corroborated(&spec), "periodic rates are exact");
+    }
+
+    #[test]
+    fn invalid_spec_is_a_typed_error() {
+        let (_, sols, groups, perf) = fixture();
+        let spec = LoadSpec::periodic(&[f64::NAN, 1.0], 4);
+        let err = envelope_for(&sols, &groups, &spec, &perf).unwrap_err();
+        assert!(matches!(err, LoadError::BadRate { group: 0, .. }));
+    }
+
+    #[test]
+    fn corroboration_rejects_a_lying_rate() {
+        // A schedule whose generated arrivals are twice as fast as any
+        // mean_rates claim would be caught — simulate by comparing the
+        // empirical rate of a periodic load against a doctored spec: the
+        // cross-check passes for honest specs and is exercised end-to-end
+        // by the fuzz property; here we pin the arithmetic on the honest
+        // side for every built-in process.
+        let periods = [0.01, 0.025];
+        for spec in [
+            LoadSpec::periodic(&periods, 4),
+            LoadSpec::poisson(&periods, 4, 7),
+            LoadSpec::bursty(&periods, 3, 4),
+        ] {
+            assert!(certificate_corroborated(&spec), "honest process flagged false");
+        }
+    }
+}

@@ -1,15 +1,31 @@
 //! Minimal property-testing loop (proptest is unavailable offline):
 //! run a closure over `n` seeded random cases; on failure, report the seed
-//! so the case reproduces exactly.
+//! so the case reproduces exactly. The `PUZZLE_PROP_CASES` environment
+//! variable multiplies every property's case count — CI's elevated lane
+//! runs the same properties deeper with no code changes.
 
 use super::rng::Rng;
 
-/// Run `cases` random test cases. The closure returns `Err(msg)` to fail;
-/// the panic message includes the failing seed for reproduction.
+/// The effective case count for a property with base count `base`:
+/// scaled by the integer `PUZZLE_PROP_CASES` multiplier when set (values
+/// below 1 and unparsable values are ignored).
+pub fn effective_cases(base: usize) -> usize {
+    let multiplier = std::env::var("PUZZLE_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&m| m >= 1)
+        .unwrap_or(1);
+    base.saturating_mul(multiplier)
+}
+
+/// Run `cases` random test cases (scaled by [`effective_cases`]). The
+/// closure returns `Err(msg)` to fail; the panic message includes the
+/// failing seed for reproduction.
 pub fn check<F>(name: &str, cases: usize, mut f: F)
 where
     F: FnMut(&mut Rng) -> Result<(), String>,
 {
+    let cases = effective_cases(cases);
     for case in 0..cases {
         let seed = 0x5eed_0000 + case as u64;
         let mut rng = Rng::seed_from_u64(seed);
@@ -32,6 +48,15 @@ macro_rules! prop_assert {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn effective_cases_scales_by_at_least_one() {
+        // Never sets the env var (other tests in this process read it
+        // concurrently through `check`): with it unset the base count
+        // passes through; with a CI multiplier it can only grow.
+        assert!(effective_cases(5) >= 5);
+        assert_eq!(effective_cases(0), 0);
+    }
 
     #[test]
     fn passing_property_runs_all_cases() {
